@@ -1,0 +1,65 @@
+//! Bring-your-own-circuit: parse a Verilog spec, approximate it with the
+//! SHARED template, and write the approximation back out — the workflow
+//! a downstream user of the open-source tool follows.
+//!
+//!     cargo run --offline --example custom_circuit [file.v] [ET]
+
+use sxpat::circuit::sim::{error_stats, TruthTables};
+use sxpat::circuit::verilog::{parse_verilog, write_verilog};
+use sxpat::search::{search_shared, SearchConfig};
+use sxpat::synth::synthesize_area;
+
+/// A 3-input majority-plus-parity unit, as a user might hand-write it.
+const DEMO: &str = "
+module majpar (in0, in1, in2, out0, out1);
+  input in0, in1, in2;
+  output out0, out1;
+  wire ab, ac, bc, mj;
+  and g1 (ab, in0, in1);
+  and g2 (ac, in0, in2);
+  and g3 (bc, in1, in2);
+  or  g4 (mj, ab, ac, bc);
+  wire px;
+  xor g5 (px, in0, in1, in2);
+  assign out0 = mj;
+  assign out1 = px;
+endmodule";
+
+fn main() {
+    let (src, et) = match std::env::args().nth(1) {
+        Some(path) => (
+            std::fs::read_to_string(&path).expect("reading verilog file"),
+            std::env::args()
+                .nth(2)
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(1),
+        ),
+        None => (DEMO.to_string(), 1),
+    };
+
+    let nl = parse_verilog(&src).expect("parse failed");
+    println!(
+        "parsed `{}`: {} inputs, {} outputs, {} gates, exact area {:.3} µm²",
+        nl.name,
+        nl.n_inputs(),
+        nl.n_outputs(),
+        nl.n_logic_gates(),
+        synthesize_area(&nl)
+    );
+
+    let cfg = SearchConfig { pool: 8, ..Default::default() };
+    let outcome = search_shared(&nl, et, &cfg);
+    match outcome.best() {
+        None => println!("no approximation found within budget at ET={et}"),
+        Some(best) => {
+            let exact = TruthTables::simulate(&nl).output_values(&nl);
+            let (mx, mean) = error_stats(&exact, &best.params.output_values());
+            println!(
+                "SHARED @ ET={et}: area {:.3} µm², PIT={}, ITS={}, max|err|={mx}, mean {mean:.3}",
+                best.area, best.proxy.0, best.proxy.1
+            );
+            let out = best.params.to_netlist(&format!("{}_approx", nl.name));
+            println!("\n{}", write_verilog(&out));
+        }
+    }
+}

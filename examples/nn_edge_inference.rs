@@ -1,0 +1,45 @@
+//! End-to-end driver (the paper's motivating workload, §I): quantised
+//! NN inference on an edge-style datapath where the 4x4-bit multiplier
+//! is approximated by each ALS method, trading multiplier area against
+//! classification accuracy. This run is recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --offline --example nn_edge_inference
+
+use sxpat::baselines::{mecals, muscat};
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::nn::{synthetic_digits, MultLut, QuantMlp};
+use sxpat::synth::synthesize_area;
+
+fn main() {
+    let bench = benchmark_by_name("mult_i8").unwrap();
+    let nl = bench.netlist();
+    let exact_area = synthesize_area(&nl);
+
+    // Train once on the synthetic digits workload; inference is pure
+    // integer and swaps only the multiplier LUT.
+    let train = synthetic_digits(300, 11);
+    let test = synthetic_digits(200, 77);
+    let mlp = QuantMlp::train(&train, 12, 15, 5);
+    let exact_acc = mlp.accuracy(&test, &MultLut::exact());
+    println!("exact 4x4 multiplier: area {exact_area:.2} µm², accuracy {exact_acc:.3}\n");
+    println!("{:<8} {:>4} {:>9} {:>8} {:>8} {:>9}", "method", "ET", "area", "saving%", "max|err|", "accuracy");
+
+    for et in [1u64, 2, 4, 8, 16, 32] {
+        for (label, res) in [
+            ("MUSCAT", muscat(&nl, et)),
+            ("MECALS", mecals(&nl, et)),
+        ] {
+            let lut = MultLut::from_netlist(&res.netlist);
+            let acc = mlp.accuracy(&test, &lut);
+            println!(
+                "{label:<8} {et:>4} {:>9.3} {:>8.1} {:>8} {acc:>9.3}",
+                res.area,
+                100.0 * (1.0 - res.area / exact_area),
+                lut.max_error(),
+            );
+        }
+    }
+    println!("\ntake-away: small ET buys large multiplier-area savings at \
+              negligible accuracy loss — the edge-inference tradeoff the \
+              paper targets.");
+}

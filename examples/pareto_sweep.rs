@@ -1,0 +1,46 @@
+//! Pareto sweep (Fig. 5 in miniature): all four methods across the ET
+//! range of one benchmark, on the parallel coordinator.
+//!
+//!     cargo run --release --offline --example pareto_sweep [bench]
+
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::coordinator::{run_sweep, Method, SweepPlan};
+use sxpat::report::fig5_markdown;
+use sxpat::search::SearchConfig;
+use sxpat::synth::synthesize_area;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "mult_i4".into());
+    let bench = benchmark_by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown benchmark {name}");
+        std::process::exit(1);
+    });
+    let exact_area = synthesize_area(&bench.netlist());
+    println!("{name}: exact area {exact_area:.3} µm²; sweeping ET ∈ {:?}", bench.et_sweep());
+
+    let plan = SweepPlan {
+        benches: vec![bench],
+        methods: Method::all_compared().to_vec(),
+        ets: None, // paper sweep for this benchmark
+        search: SearchConfig { pool: 8, ..Default::default() },
+        workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    };
+    let records = run_sweep(&plan);
+    println!("{}", fig5_markdown(&records));
+
+    // Pareto frontier (ET, area) for SHARED.
+    println!("SHARED Pareto frontier:");
+    let mut frontier: Vec<(u64, f64)> = records
+        .iter()
+        .filter(|r| r.method == Method::Shared && r.area.is_finite())
+        .map(|r| (r.et, r.area))
+        .collect();
+    frontier.sort_by_key(|&(et, _)| et);
+    let mut best = f64::INFINITY;
+    for (et, area) in frontier {
+        if area < best {
+            best = area;
+            println!("  ET {et:>3}: {area:.3} µm² ({:.1}% of exact)", 100.0 * area / exact_area);
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! Quickstart: approximate one adder with the SHARED template and
+//! inspect the result.
+//!
+//!     cargo run --offline --example quickstart
+
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::circuit::sim::{error_stats, TruthTables};
+use sxpat::circuit::verilog::write_verilog;
+use sxpat::search::{search_shared, SearchConfig};
+use sxpat::synth::synthesize_area;
+
+fn main() {
+    // 1. Pick a benchmark (a 2+2-bit adder) and an error threshold.
+    let bench = benchmark_by_name("adder_i4").unwrap();
+    let nl = bench.netlist();
+    let et = 1;
+    let exact_area = synthesize_area(&nl);
+    println!("exact {}: area {exact_area:.3} µm²", bench.name);
+
+    // 2. Run the SHARED-template search (paper §II-C / §III).
+    let cfg = SearchConfig { pool: 8, ..Default::default() };
+    let outcome = search_shared(&nl, et, &cfg);
+    println!(
+        "search: {} cells tried, {} SAT, {} solutions, {} ms",
+        outcome.cells_tried,
+        outcome.cells_sat,
+        outcome.solutions.len(),
+        outcome.elapsed_ms
+    );
+
+    // 3. The best solution: proxies, area, and a soundness re-check.
+    let best = outcome.best().expect("search found no solution");
+    let exact = TruthTables::simulate(&nl).output_values(&nl);
+    let (max_err, mean_err) = error_stats(&exact, &best.params.output_values());
+    println!(
+        "best: PIT={} ITS={} -> area {:.3} µm² ({:.1}% saving), max|err|={max_err} (ET {et}), mean {mean_err:.3}",
+        best.proxy.0,
+        best.proxy.1,
+        best.area,
+        100.0 * (1.0 - best.area / exact_area)
+    );
+    assert!(max_err <= et, "sound by construction");
+
+    // 4. Export the approximate circuit as Verilog.
+    let approx = best.params.to_netlist("adder_i4_approx");
+    println!("\n{}", write_verilog(&approx));
+}

@@ -1,0 +1,79 @@
+"""AOT lowering: L2 evaluator -> HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT `lowered.compile().serialize()`:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one `sop_eval_<bench>.hlo.txt` per geometry plus `manifest.json`
+describing the shape contract the rust side (runtime/artifacts.rs) checks.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import GEOMETRIES, evaluate_batch, example_args
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_geometry(geom) -> str:
+    fn = evaluate_batch(geom)
+    lowered = jax.jit(fn).lower(*example_args(geom))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="lower a single geometry by name (e.g. adder_i4)")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {}
+    for geom in GEOMETRIES:
+        if args.only and geom.name != args.only:
+            continue
+        text = lower_geometry(geom)
+        path = out_dir / f"sop_eval_{geom.name}.hlo.txt"
+        path.write_text(text)
+        manifest[geom.name] = {
+            "file": path.name,
+            "n": geom.n,
+            "m": geom.m,
+            "t": geom.t,
+            "b": geom.b,
+            "npoints": geom.npoints,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path = out_dir / "manifest.json"
+    # Merge so `--only` refreshes one entry without dropping the rest.
+    if args.only and manifest_path.exists():
+        old = json.loads(manifest_path.read_text())
+        old.update(manifest)
+        manifest = old
+    manifest_path.write_text(json.dumps(manifest, indent=2, sort_keys=True))
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

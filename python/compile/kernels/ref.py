@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the sop_eval Pallas kernel.
+
+Implements eq. (1)/(2) of the paper with direct boolean semantics — no
+affine tricks, no pallas — so any disagreement with kernels/sop_eval.py
+points at the kernel. Kept deliberately naive.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def truth_table(n: int) -> jnp.ndarray:
+    """[2^n, n] {0,1} f32; row x = bits of integer x, LSB in column 0."""
+    x = jnp.arange(2**n, dtype=jnp.uint32)
+    bits = (x[:, None] >> jnp.arange(n, dtype=jnp.uint32)[None, :]) & 1
+    return bits.astype(jnp.float32)
+
+
+def sop_eval_ref(use_mask, neg_mask, out_sel, out_const, exact):
+    """Reference semantics of sop_eval; same signature and returns.
+
+    For every input point x and candidate b:
+      lit[j]  = X[x,j] XOR neg[b,t,j]
+      prod[t] = AND over {j : use[b,t,j]=1} of lit[j]   (empty AND = 1)
+      bit[i]  = OR  over {t : out_sel[b,i,t]=1} of prod[t], OR out_const[b,i]
+      V       = sum_i bit[i] * 2^i
+    """
+    b, t, n = use_mask.shape
+    m = out_sel.shape[1]
+    x = truth_table(n)  # [N, n]
+
+    lit = jnp.abs(x[None, None, :, :] - neg_mask[:, :, None, :])  # XOR
+    # A selected literal that is 0 kills the product; unselected -> treat as 1.
+    lit_or_one = jnp.where(use_mask[:, :, None, :] > 0.5, lit, 1.0)
+    prod = jnp.prod(lit_or_one, axis=3)  # [B, T, N]
+
+    fired = jnp.einsum("bit,btx->bix", out_sel, prod)
+    bit = jnp.maximum((fired > 0.5).astype(jnp.float32),
+                      out_const[:, :, None])  # [B, m, N]
+
+    weights = (2.0 ** jnp.arange(m, dtype=jnp.float32))[None, :, None]
+    val = jnp.sum(bit * weights, axis=1)  # [B, N]
+    err = jnp.abs(val - exact[None, :])
+    return jnp.max(err, axis=1), jnp.mean(err, axis=1), val

@@ -1,0 +1,152 @@
+"""L1 Pallas kernel: batched SOP-template evaluation over a full truth table.
+
+The paper's hot numeric path is exhaustive error evaluation of candidate
+sum-of-products (SOP) template instantiations: given B candidate parameter
+assignments for a template with T products over n inputs and m outputs,
+compute each candidate's output value on *all* 2^n input assignments and
+reduce to max/mean error distance against the exact circuit.
+
+TPU-idiomatic formulation (see DESIGN.md §Hardware-Adaptation): instead of
+evaluating AND/OR trees per input point, we encode each product's
+"violation count" affinely so the inner loop is a matmul shaped for the MXU:
+
+    fail_j      = use_j AND (X_j == neg_j)              (literal selected, 0)
+    viol[b,t,x] = c[b,t] + sum_j w[b,t,j] * X[x,j]
+      with  c = sum_j use*(1-neg),  w = use*(2*neg - 1)
+    P[b,t,x]    = viol < 0.5                            (product fires)
+    acc[b,i,x]  = sum_t out_sel[b,i,t] * P[b,t,x]       (second matmul)
+    bit[b,i,x]  = (acc > 0.5) OR out_const[b,i]
+    V[b,x]      = sum_i bit * 2^i
+    err         = |V - exact[x]|  ->  max_x, mean_x
+
+Both heavy contractions ((B*T, n) x (n, 2^n) and per-b (m, T) x (T, 2^n))
+stream through VMEM once; the truth table X is a compile-time constant that
+stays resident. interpret=True throughout: real-TPU lowering would emit a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile: candidates processed per grid step. 64 keeps the largest
+# geometry's working set (i8: T=16, 2^n=256) around 2 MiB of VMEM.
+DEFAULT_BLOCK_B = 64
+
+
+def _truth_table(n: int) -> jnp.ndarray:
+    """[2^n, n] float32 matrix of all input assignments; column j is in_j.
+
+    Row x encodes the integer x with bit 0 in column 0 (LSB-first), matching
+    the rust evaluator's packing (rust/src/evaluator/pack.rs).
+    """
+    x = jnp.arange(2**n, dtype=jnp.uint32)
+    bits = (x[:, None] >> jnp.arange(n, dtype=jnp.uint32)[None, :]) & 1
+    return bits.astype(jnp.float32)
+
+
+def _sop_eval_kernel(
+    w_ref,          # [Bb, T, n]  affine literal weights
+    c_ref,          # [Bb, T]     affine literal constants
+    out_sel_ref,    # [Bb, m, T]  product -> sum selection
+    out_const_ref,  # [Bb, m]     output forced to constant 1
+    exact_ref,      # [N]         exact integer value per input point
+    xt_ref,         # [n, N]      truth table, transposed (constant input)
+    max_ref,        # [Bb]        out: max error distance
+    mean_ref,       # [Bb]        out: mean error distance
+    val_ref,        # [Bb, N]     out: approximate output values
+):
+    w = w_ref[...]
+    c = c_ref[...]
+    out_sel = out_sel_ref[...]
+    out_const = out_const_ref[...]
+    exact = exact_ref[...]
+    xt = xt_ref[...]
+
+    bb, t, n = w.shape
+    m = out_sel.shape[1]
+    npoints = xt.shape[1]
+
+    # First matmul: violation counts for every (candidate, product, point).
+    viol = jnp.dot(w.reshape(bb * t, n), xt) + c.reshape(bb * t, 1)
+    prod = (viol < 0.5).astype(jnp.float32).reshape(bb, t, npoints)
+
+    # Second (batched) matmul: how many selected products fire per output.
+    acc = jax.lax.dot_general(
+        out_sel, prod, dimension_numbers=(((2,), (1,)), ((0,), (0,)))
+    )  # [Bb, m, N]
+    bit = jnp.maximum(
+        (acc > 0.5).astype(jnp.float32), out_const[:, :, None]
+    )
+
+    # Integer interpretation of the output bus (LSB-first) and error.
+    weights = (2.0 ** jnp.arange(m, dtype=jnp.float32))[None, :, None]
+    val = jnp.sum(bit * weights, axis=1)  # [Bb, N]
+    err = jnp.abs(val - exact[None, :])
+
+    max_ref[...] = jnp.max(err, axis=1)
+    mean_ref[...] = jnp.mean(err, axis=1)
+    val_ref[...] = val
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def sop_eval(use_mask, neg_mask, out_sel, out_const, exact,
+             block_b: int = DEFAULT_BLOCK_B):
+    """Evaluate a batch of SOP template instantiations exhaustively.
+
+    Args:
+      use_mask:  [B, T, n] {0,1} f32 — literal j participates in product t.
+      neg_mask:  [B, T, n] {0,1} f32 — literal appears negated.
+      out_sel:   [B, m, T] {0,1} f32 — product t feeds output sum i.
+      out_const: [B, m]    {0,1} f32 — output i is the constant 1.
+      exact:     [2^n]     f32      — exact circuit's integer output value.
+
+    Returns:
+      (max_err [B], mean_err [B], values [B, 2^n]) — error distances and the
+      approximate integer output value per input point (LSB-first input
+      ordering; see _truth_table).
+
+    Note: a product with *no* selected literal is the constant 1 (empty AND),
+    and an output with no selected product and out_const=0 is the constant 0
+    (empty OR) — matching eq. (1)/(2) of the paper.
+    """
+    b, t, n = use_mask.shape
+    m = out_sel.shape[1]
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} must be a multiple of block_b {block_b}")
+
+    # Affine encoding of "selected literal evaluates to 0" (see module doc).
+    w = use_mask * (2.0 * neg_mask - 1.0)
+    c = jnp.sum(use_mask * (1.0 - neg_mask), axis=2)
+    xt = _truth_table(n).T  # [n, 2^n], compile-time constant
+
+    npoints = 2**n
+    grid = (b // block_b,)
+    kernel = pl.pallas_call(
+        _sop_eval_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, t, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, t), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, m, t), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((npoints,), lambda i: (0,)),
+            pl.BlockSpec((n, npoints), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, npoints), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, npoints), jnp.float32),
+        ],
+        interpret=True,
+    )
+    return tuple(kernel(w, c, out_sel, out_const, exact, xt))

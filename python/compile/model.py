@@ -1,0 +1,85 @@
+"""L2 JAX model: the batched exhaustive SOP error evaluator.
+
+This is the compute graph the rust coordinator executes via PJRT. It wraps
+the L1 Pallas kernel (kernels/sop_eval.py) with the parameter packing the
+coordinator uses and fixes one geometry per AOT artifact:
+
+    geometry = (n inputs, m outputs, T products, B batch)
+
+The benchmark geometries mirror the paper's evaluation set (adders and
+multipliers at i4/i6/i8 — §IV): one artifact per geometry, any circuit with
+that shape reuses it because the exact values arrive as a runtime input.
+
+Python runs only at build time (`make artifacts`); the serving path is rust.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.sop_eval import sop_eval
+
+
+@dataclasses.dataclass(frozen=True)
+class Geometry:
+    """One AOT artifact's shape contract; mirrored in rust/src/runtime."""
+
+    name: str
+    n: int  # circuit inputs
+    m: int  # circuit outputs
+    t: int  # template product pool size (max PIT)
+    b: int  # candidate batch size
+
+    @property
+    def npoints(self) -> int:
+        return 2**self.n
+
+
+def _adder_geometry(bits: int, t: int, b: int) -> Geometry:
+    # bits-bit + bits-bit ripple-carry adder: 2*bits inputs, bits+1 outputs.
+    return Geometry(f"adder_i{2 * bits}", 2 * bits, bits + 1, t, b)
+
+
+def _mult_geometry(bits: int, t: int, b: int) -> Geometry:
+    # bits x bits array multiplier: 2*bits inputs, 2*bits outputs.
+    return Geometry(f"mult_i{2 * bits}", 2 * bits, 2 * bits, t, b)
+
+
+# The paper evaluates bitwidths 2/3/4 (benchmarks i4/i6/i8). T is sized so
+# the shared template can express every circuit the search sweeps (PIT <= T);
+# B=256 amortises PJRT dispatch without blowing VMEM (DESIGN.md §7).
+GEOMETRIES: tuple[Geometry, ...] = tuple(
+    g
+    for bits in (2, 3, 4)
+    for g in (_adder_geometry(bits, t=16, b=256),
+              _mult_geometry(bits, t=16, b=256))
+)
+
+
+def evaluate_batch(geom: Geometry):
+    """Returns the jax fn evaluating B candidates of geometry `geom`.
+
+    Signature (all f32):
+      use_mask [B,T,n], neg_mask [B,T,n], out_sel [B,m,T], out_const [B,m],
+      exact [2^n]  ->  (max_err [B], mean_err [B], values [B, 2^n])
+    """
+
+    def fn(use_mask, neg_mask, out_sel, out_const, exact):
+        return sop_eval(use_mask, neg_mask, out_sel, out_const, exact)
+
+    return fn
+
+
+def example_args(geom: Geometry):
+    """ShapeDtypeStructs for AOT lowering of evaluate_batch(geom)."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((geom.b, geom.t, geom.n), f32),
+        jax.ShapeDtypeStruct((geom.b, geom.t, geom.n), f32),
+        jax.ShapeDtypeStruct((geom.b, geom.m, geom.t), f32),
+        jax.ShapeDtypeStruct((geom.b, geom.m), f32),
+        jax.ShapeDtypeStruct((geom.npoints,), f32),
+    )

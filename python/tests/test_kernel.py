@@ -1,0 +1,139 @@
+"""Kernel-vs-reference: the core L1 correctness signal.
+
+hypothesis sweeps geometries and random {0,1} parameter tensors; every case
+asserts the Pallas kernel (interpret=True) matches the pure-jnp oracle in
+ref.py bit-for-bit (all quantities are small integers in f32, so we use
+exact comparison via assert_allclose atol=0).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import sop_eval_ref, truth_table
+from compile.kernels.sop_eval import sop_eval, _truth_table
+
+
+def _rand_case(rng, b, t, n, m):
+    use = (rng.random((b, t, n)) < 0.5).astype(np.float32)
+    neg = (rng.random((b, t, n)) < 0.5).astype(np.float32)
+    sel = (rng.random((b, m, t)) < 0.4).astype(np.float32)
+    const = (rng.random((b, m)) < 0.1).astype(np.float32)
+    exact = rng.integers(0, 2**m, size=2**n).astype(np.float32)
+    return use, neg, sel, const, exact
+
+
+def _assert_matches(use, neg, sel, const, exact, block_b):
+    got = sop_eval(use, neg, sel, const, exact, block_b=block_b)
+    want = sop_eval_ref(use, neg, sel, const, exact)
+    for g, w, name in zip(got, want, ("max", "mean", "values")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-5,
+                                   err_msg=f"mismatch in {name}")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 6),
+    m=st.integers(1, 6),
+    t=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(n, m, t, seed):
+    rng = np.random.default_rng(seed)
+    b = 8
+    _assert_matches(*_rand_case(rng, b, t, n, m), block_b=4)
+
+
+@pytest.mark.parametrize("geom_idx", range(6))
+def test_kernel_matches_ref_paper_geometries(geom_idx):
+    from compile.model import GEOMETRIES
+
+    g = GEOMETRIES[geom_idx]
+    rng = np.random.default_rng(42 + geom_idx)
+    _assert_matches(*_rand_case(rng, g.b, g.t, g.n, g.m), block_b=64)
+
+
+def test_truth_tables_agree():
+    for n in range(1, 9):
+        np.testing.assert_array_equal(
+            np.asarray(_truth_table(n)), np.asarray(truth_table(n))
+        )
+
+
+def test_empty_product_is_constant_one():
+    # A product with no selected literals must fire on every input (empty
+    # AND), so an output selecting only it is the constant 1 -> value 2^i.
+    b, t, n, m = 4, 2, 3, 2
+    use = np.zeros((b, t, n), np.float32)
+    neg = np.zeros((b, t, n), np.float32)
+    sel = np.zeros((b, m, t), np.float32)
+    sel[:, 1, 0] = 1.0  # out_1 = Prod_0 = const 1
+    const = np.zeros((b, m), np.float32)
+    exact = np.zeros(2**n, np.float32)
+    mx, mean, val = sop_eval(use, neg, sel, const, exact, block_b=2)
+    np.testing.assert_array_equal(np.asarray(val), np.full((b, 2**n), 2.0))
+    np.testing.assert_array_equal(np.asarray(mx), np.full(b, 2.0))
+
+
+def test_empty_output_is_constant_zero():
+    b, t, n, m = 2, 3, 4, 3
+    use = np.ones((b, t, n), np.float32)
+    neg = np.zeros((b, t, n), np.float32)
+    sel = np.zeros((b, m, t), np.float32)  # nothing selected anywhere
+    const = np.zeros((b, m), np.float32)
+    exact = np.arange(2**n, dtype=np.float32) % (2**m)
+    mx, mean, val = sop_eval(use, neg, sel, const, exact, block_b=2)
+    np.testing.assert_array_equal(np.asarray(val), np.zeros((b, 2**n)))
+    np.testing.assert_array_equal(
+        np.asarray(mx), np.max(np.abs(exact)) * np.ones(b)
+    )
+
+
+def test_out_const_forces_one():
+    b, t, n, m = 2, 2, 2, 2
+    use = np.ones((b, t, n), np.float32)
+    neg = np.zeros((b, t, n), np.float32)
+    sel = np.zeros((b, m, t), np.float32)
+    const = np.ones((b, m), np.float32)
+    exact = np.zeros(2**n, np.float32)
+    _, _, val = sop_eval(use, neg, sel, const, exact, block_b=2)
+    np.testing.assert_array_equal(np.asarray(val), np.full((b, 2**n), 3.0))
+
+
+def test_single_literal_identity():
+    # out_0 = in_0: product selects in_0 positively; error vs exact=bit0 is 0.
+    b, t, n, m = 2, 1, 3, 1
+    use = np.zeros((b, t, n), np.float32)
+    use[:, 0, 0] = 1.0
+    neg = np.zeros((b, t, n), np.float32)
+    sel = np.ones((b, m, t), np.float32)
+    const = np.zeros((b, m), np.float32)
+    exact = (np.arange(2**n) & 1).astype(np.float32)
+    mx, mean, val = sop_eval(use, neg, sel, const, exact, block_b=2)
+    np.testing.assert_array_equal(np.asarray(mx), np.zeros(b))
+
+
+def test_negated_literal():
+    # out_0 = NOT in_1 over n=2 inputs.
+    b, t, n, m = 2, 1, 2, 1
+    use = np.zeros((b, t, n), np.float32)
+    use[:, 0, 1] = 1.0
+    neg = np.zeros((b, t, n), np.float32)
+    neg[:, 0, 1] = 1.0
+    sel = np.ones((b, m, t), np.float32)
+    const = np.zeros((b, m), np.float32)
+    exact = np.zeros(4, np.float32)
+    _, _, val = sop_eval(use, neg, sel, const, exact, block_b=2)
+    # inputs x = 0,1,2,3 -> in_1 = 0,0,1,1 -> NOT in_1 = 1,1,0,0
+    np.testing.assert_array_equal(
+        np.asarray(val), np.tile([1.0, 1.0, 0.0, 0.0], (b, 1))
+    )
+
+
+def test_block_b_mismatch_raises():
+    rng = np.random.default_rng(0)
+    case = _rand_case(rng, 6, 2, 3, 2)
+    with pytest.raises(ValueError):
+        sop_eval(*case, block_b=4)

@@ -1,0 +1,128 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!  (a) shared vs. nonshared encoding size (vars/clauses in the miter),
+//!  (b) totalizer vs. naive pairwise cardinality,
+//!  (c) ∀-expansion cost as n grows,
+//!  (d) proxy-ordered lattice vs. naive row-major order (cells tried
+//!      until the first SAT answer).
+//!
+//!     cargo bench --bench ablations
+
+use sxpat::bench_support::bench;
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::circuit::sim::TruthTables;
+use sxpat::sat::Lit;
+use sxpat::search::lattice::shared_cells;
+use sxpat::smt::cardinality::at_most_k;
+use sxpat::smt::cnf::CnfBuilder;
+use sxpat::template::{NonsharedMiter, SharedMiter};
+
+fn naive_at_most_k(b: &mut CnfBuilder, xs: &[Lit], k: usize) {
+    // Forbid every (k+1)-subset — exponential, fine for tiny k.
+    fn rec(b: &mut CnfBuilder, xs: &[Lit], k: usize, start: usize,
+           cur: &mut Vec<Lit>) {
+        if cur.len() == k + 1 {
+            let clause: Vec<Lit> = cur.iter().map(|&l| !l).collect();
+            b.add_clause(&clause);
+            return;
+        }
+        for i in start..xs.len() {
+            cur.push(xs[i]);
+            rec(b, xs, k, i + 1, cur);
+            cur.pop();
+        }
+    }
+    rec(b, xs, k, 0, &mut Vec::new());
+}
+
+fn main() {
+    // (a) encoding size: shared pool T vs. nonshared m*K products.
+    for name in ["adder_i4", "mult_i4", "adder_i6"] {
+        let b = benchmark_by_name(name).unwrap();
+        let nl = b.netlist();
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        let (n, m) = (nl.n_inputs(), nl.n_outputs());
+        let sh = SharedMiter::build(n, m, 8, &exact, b.fig4_et());
+        let ns = NonsharedMiter::build(n, m, 8, &exact, b.fig4_et());
+        println!(
+            "ablation(a) {name}: shared miter {} vars / {} clauses, nonshared {} vars / {} clauses",
+            sh.b.solver.n_vars(),
+            sh.b.solver.n_clauses(),
+            ns.b.solver.n_vars(),
+            ns.b.solver.n_clauses()
+        );
+    }
+
+    // (b) totalizer vs naive pairwise cardinality encoding size + time.
+    for (n, k) in [(16usize, 4usize), (24, 3), (32, 2)] {
+        let mut tot_clauses = 0;
+        bench(&format!("ablation_b/totalizer_n{n}_k{k}"), 1, 5, || {
+            let mut b = CnfBuilder::new();
+            let xs: Vec<Lit> = (0..n).map(|_| b.new_lit()).collect();
+            at_most_k(&mut b, &xs, k);
+            tot_clauses = b.solver.n_clauses();
+        });
+        let mut naive_clauses = 0;
+        bench(&format!("ablation_b/naive_n{n}_k{k}"), 1, 5, || {
+            let mut b = CnfBuilder::new();
+            let xs: Vec<Lit> = (0..n).map(|_| b.new_lit()).collect();
+            naive_at_most_k(&mut b, &xs, k);
+            naive_clauses = b.solver.n_clauses();
+        });
+        println!("  clauses: totalizer {tot_clauses} vs naive {naive_clauses}");
+    }
+
+    // (c) ∀-expansion growth: miter size vs input count.
+    println!("ablation(c) ∀-expansion growth (shared miter, T=8):");
+    for name in ["adder_i4", "adder_i6", "adder_i8"] {
+        let b = benchmark_by_name(name).unwrap();
+        let nl = b.netlist();
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        let (n, m) = (nl.n_inputs(), nl.n_outputs());
+        let stats = bench(&format!("ablation_c/build_{name}"), 0, 2, || {
+            let _ = SharedMiter::build(n, m, 8, &exact, b.fig4_et());
+        });
+        let sh = SharedMiter::build(n, m, 8, &exact, b.fig4_et());
+        println!(
+            "  n={n}: {} vars, {} clauses, build {:.1} ms",
+            sh.b.solver.n_vars(),
+            sh.b.solver.n_clauses(),
+            stats.mean_ms
+        );
+    }
+
+    // (d) lattice order: proxy-estimate order vs row-major until first SAT.
+    for name in ["adder_i4", "mult_i4"] {
+        let b = benchmark_by_name(name).unwrap();
+        let nl = b.netlist();
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        let (n, m) = (nl.n_inputs(), nl.n_outputs());
+        let et = b.fig4_et();
+        let ordered = shared_cells(8, m);
+        let mut row_major: Vec<(usize, usize)> = Vec::new();
+        for pit in 0..=8usize {
+            for its in pit..=(m * pit.max(1)) {
+                row_major.push((pit, its));
+            }
+        }
+        let count_until_sat = |cells: Vec<(usize, usize)>| {
+            let mut miter = SharedMiter::build(n, m, 8, &exact, et);
+            let mut tried = 0usize;
+            let mut area = f64::NAN;
+            for (pit, its) in cells {
+                tried += 1;
+                if let Some(sol) = miter.solve(pit, its) {
+                    area = sxpat::synth::synthesize_area(&sol.to_netlist("x"));
+                    break;
+                }
+            }
+            (tried, area)
+        };
+        let (t1, a1) =
+            count_until_sat(ordered.iter().map(|c| (c.a, c.b)).collect());
+        let (t2, a2) = count_until_sat(row_major);
+        println!(
+            "ablation(d) {name}: proxy order {t1} cells -> area {a1:.3}; \
+             row-major {t2} cells -> area {a2:.3}"
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! Evaluator throughput: candidates/second through (a) the rust
+//! bit-parallel engine and (b) the PJRT artifact (JAX + Pallas L1
+//! kernel). Feeds EXPERIMENTS.md §Perf (L1/L2 targets).
+//!
+//!     cargo bench --bench evaluator_throughput
+
+use sxpat::bench_support::{bench, black_box, throughput};
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::circuit::sim::TruthTables;
+use sxpat::evaluator::rust_eval::evaluate_batch;
+use sxpat::runtime::{find_artifacts_dir, Runtime};
+use sxpat::template::SopParams;
+use sxpat::util::Rng;
+
+fn main() {
+    let runtime = find_artifacts_dir().and_then(|d| Runtime::load(&d).ok());
+    if runtime.is_none() {
+        println!("note: artifacts missing — PJRT lane skipped (run `make artifacts`)");
+    }
+
+    for name in ["adder_i4", "mult_i6", "mult_i8"] {
+        let b = benchmark_by_name(name).unwrap();
+        let nl = b.netlist();
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        let (n, m) = (nl.n_inputs(), nl.n_outputs());
+        let t = 16;
+        let batch_size = 256;
+        let mut rng = Rng::seed_from(99);
+        let batch: Vec<SopParams> = (0..batch_size)
+            .map(|_| SopParams::random(&mut rng, n, m, t, 0.35, 0.3))
+            .collect();
+
+        let s = bench(&format!("eval/rust/{name}/b{batch_size}"), 2, 10, || {
+            black_box(evaluate_batch(&batch, &exact));
+        });
+        println!("  rust: {:.0} candidates/s", throughput(&s, batch_size));
+
+        if let Some(rt) = &runtime {
+            if rt.geometry(name).is_some() {
+                let s = bench(&format!("eval/pjrt/{name}/b{batch_size}"), 2, 10, || {
+                    black_box(rt.evaluate_batch(name, &batch, &exact).unwrap());
+                });
+                println!("  pjrt: {:.0} candidates/s", throughput(&s, batch_size));
+            }
+        }
+    }
+}

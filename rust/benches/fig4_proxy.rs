@@ -1,0 +1,86 @@
+//! Fig. 4 regeneration: area vs. proxy value at fixed ET for the paper's
+//! four proxy-study benchmarks, with the exact star, the random-sound
+//! cloud, and all four methods. Prints the same series the figure plots
+//! plus the proxy↔area correlation the paper's take-away (1) claims.
+//!
+//!     cargo bench --bench fig4_proxy
+
+use sxpat::baselines::random_sound_baseline;
+use sxpat::bench_support::bench;
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::coordinator::{run_job, Job, Method};
+use sxpat::report::fig4_csv;
+use sxpat::search::SearchConfig;
+use sxpat::synth::synthesize_area;
+
+fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let vx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    let vy: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    cov / (vx.sqrt() * vy.sqrt()).max(1e-12)
+}
+
+fn main() {
+    let cfg = SearchConfig {
+        pool: 8,
+        solutions_per_cell: 4,
+        max_sat_cells: 5,
+        conflict_budget: Some(120_000),
+        time_budget_ms: 30_000,
+    };
+    let random_count = 150; // paper: 1000; scaled for bench wall-time
+
+    for name in ["adder_i4", "mult_i4", "adder_i6", "mult_i6"] {
+        let b = benchmark_by_name(name).unwrap();
+        let nl = b.netlist();
+        let et = b.fig4_et();
+        let exact_area = synthesize_area(&nl);
+
+        let mut records = Vec::new();
+        let stats = bench(&format!("fig4/{name}/methods"), 0, 1, || {
+            records.clear();
+            for method in Method::all_compared() {
+                records.push(run_job(&Job { bench: b, method, et, search: cfg.clone() }));
+            }
+        });
+        let _ = stats;
+        let mut random = Vec::new();
+        bench(&format!("fig4/{name}/random{random_count}"), 0, 1, || {
+            random = random_sound_baseline(&nl, et, random_count, 8, 42, None);
+        });
+
+        // The figure's series (head of the CSV).
+        let csv = fig4_csv(name, et, exact_area, &records, &random);
+        println!("--- {name} (ET {et}) ---");
+        for line in csv.lines().take(8) {
+            println!("  {line}");
+        }
+        println!("  ... ({} rows total)", csv.lines().count());
+
+        // Take-away (1): PIT+ITS correlates strongly with area.
+        let shared = records.iter().find(|r| r.method == Method::Shared).unwrap();
+        let mut xs: Vec<f64> =
+            shared.all_points.iter().map(|&(a, b, _)| (a + b) as f64).collect();
+        let mut ys: Vec<f64> = shared.all_points.iter().map(|&(_, _, ar)| ar).collect();
+        for p in &random {
+            xs.push((p.pit + p.its) as f64);
+            ys.push(p.area);
+        }
+        let r = pearson(&xs, &ys);
+        println!("  proxy↔area correlation (SHARED pts + random cloud): r = {r:.3}");
+        // Take-away (2): SHARED has the smallest area of the methods.
+        let best_area = |m: Method| {
+            records.iter().find(|r| r.method == m).map(|r| r.area).unwrap()
+        };
+        println!(
+            "  best areas: SHARED {:.3} | XPAT {:.3} | MUSCAT {:.3} | MECALS {:.3} | exact {exact_area:.3}",
+            best_area(Method::Shared),
+            best_area(Method::Xpat),
+            best_area(Method::Muscat),
+            best_area(Method::Mecals)
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! Fig. 5 regeneration: best area per method across the ET sweep for the
+//! paper's six benchmarks, on the parallel coordinator. i8 multiplier
+//! search cells are the heavy tail; the per-cell conflict budget bounds
+//! the wall time the same way the paper's 3 h timeout does.
+//!
+//!     cargo bench --bench fig5_sweep
+//!     SXPAT_FULL=1 cargo bench --bench fig5_sweep   # include i8 grid
+
+use sxpat::bench_support::bench;
+use sxpat::circuit::generators::{benchmark_by_name, PAPER_BENCHMARKS};
+use sxpat::coordinator::{run_sweep, Method, SweepPlan};
+use sxpat::report::{fig5_csv, fig5_markdown};
+use sxpat::search::SearchConfig;
+
+fn main() {
+    let full = std::env::var("SXPAT_FULL").is_ok();
+    let benches: Vec<_> = if full {
+        PAPER_BENCHMARKS.iter().collect()
+    } else {
+        ["adder_i4", "mult_i4", "adder_i6", "mult_i6"]
+            .iter()
+            .map(|n| benchmark_by_name(n).unwrap())
+            .collect()
+    };
+    let plan = SweepPlan {
+        benches,
+        methods: Method::all_compared().to_vec(),
+        ets: None,
+        search: SearchConfig {
+            pool: 8,
+            solutions_per_cell: 2,
+            max_sat_cells: 2,
+            conflict_budget: Some(if full { 400_000 } else { 80_000 }),
+            time_budget_ms: if full { 120_000 } else { 30_000 },
+        },
+        workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    };
+
+    let mut records = Vec::new();
+    bench("fig5/sweep", 0, 1, || {
+        records = run_sweep(&plan);
+    });
+    println!("{}", fig5_markdown(&records));
+
+    // Who wins per (bench, et) — the figure's qualitative content.
+    let mut wins = std::collections::BTreeMap::<&str, usize>::new();
+    let mut cells = 0usize;
+    let mut keys: Vec<(&str, u64)> =
+        records.iter().map(|r| (r.bench, r.et)).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    for (bench_name, et) in keys {
+        let best = records
+            .iter()
+            .filter(|r| r.bench == bench_name && r.et == et && r.area.is_finite())
+            .min_by(|a, b| a.area.partial_cmp(&b.area).unwrap());
+        if let Some(b) = best {
+            *wins.entry(b.method.name()).or_default() += 1;
+            cells += 1;
+        }
+    }
+    println!("wins per method over {cells} (bench, ET) cells: {wins:?}");
+    println!("(paper: SHARED yields the best approximation for most ET values)");
+    let csv = fig5_csv(&records);
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/fig5_bench.csv", &csv).ok();
+    println!("wrote results/fig5_bench.csv ({} rows)", csv.lines().count());
+}

@@ -1,0 +1,66 @@
+//! SAT-substrate microbenchmarks: propagation rate on miter CNFs and on
+//! pigeonhole instances. Feeds EXPERIMENTS.md §Perf (L3 targets).
+//!
+//!     cargo bench --bench sat_solver
+
+use sxpat::bench_support::{bench, black_box};
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::circuit::sim::TruthTables;
+use sxpat::sat::{Lit, SatResult, Solver};
+use sxpat::template::SharedMiter;
+
+fn php(pigeons: usize, holes: usize) -> Solver {
+    let mut s = Solver::new();
+    let mut v = vec![vec![Lit(0); holes]; pigeons];
+    for p in 0..pigeons {
+        for h in 0..holes {
+            v[p][h] = Lit::pos(s.new_var());
+        }
+    }
+    for p in 0..pigeons {
+        s.add_clause(&v[p]);
+    }
+    for h in 0..holes {
+        for p1 in 0..pigeons {
+            for p2 in p1 + 1..pigeons {
+                s.add_clause(&[!v[p1][h], !v[p2][h]]);
+            }
+        }
+    }
+    s
+}
+
+fn main() {
+    // Pigeonhole: conflict-analysis stress.
+    for n in [7usize, 8] {
+        let mut props = 0u64;
+        let stats = bench(&format!("sat/php_{}_{n}", n + 1), 1, 3, || {
+            let mut s = php(n + 1, n);
+            assert_eq!(s.solve(&[]), SatResult::Unsat);
+            props = s.stats.propagations;
+        });
+        let rate = props as f64 / (stats.mean_ms / 1e3) / 1e6;
+        println!("  {:.1} M props/s ({props} propagations)", rate);
+    }
+
+    // Miter solving: the workload the search actually runs.
+    for (name, et) in [("adder_i4", 1u64), ("mult_i4", 2), ("adder_i6", 8)] {
+        let b = benchmark_by_name(name).unwrap();
+        let nl = b.netlist();
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        let (n, m) = (nl.n_inputs(), nl.n_outputs());
+        bench(&format!("sat/miter_build_{name}"), 1, 3, || {
+            black_box(SharedMiter::build(n, m, 8, &exact, et));
+        });
+        let mut miter = SharedMiter::build(n, m, 8, &exact, et);
+        bench(&format!("sat/miter_solve_{name}_et{et}"), 1, 3, || {
+            // Re-solve the same lattice prefix each iteration: the
+            // solver is incremental, so this measures warm solving.
+            for pit in 1..=4usize {
+                if miter.solve(pit, 3 * pit).is_some() {
+                    break;
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,168 @@
+//! Netlist <-> AIG conversion.
+
+use crate::circuit::netlist::{GateKind, Netlist, NodeId};
+
+use super::graph::{self, Aig, Lit};
+
+/// Lower a gate-level netlist into a structurally-hashed AIG.
+pub fn netlist_to_aig(nl: &Netlist) -> Aig {
+    let mut g = Aig::new(nl.n_inputs());
+    let mut lit_of: Vec<Lit> = Vec::with_capacity(nl.gates.len());
+    let mut input_idx = 0usize;
+    for gate in &nl.gates {
+        let fanins: Vec<Lit> = gate.fanins.iter().map(|&f| lit_of[f as usize]).collect();
+        let l = match gate.kind {
+            GateKind::Input => {
+                let l = g.input(input_idx);
+                input_idx += 1;
+                l
+            }
+            GateKind::Const0 => graph::FALSE,
+            GateKind::Const1 => graph::TRUE,
+            GateKind::Buf => fanins[0],
+            GateKind::Not => graph::not(fanins[0]),
+            GateKind::And => g.and_many(&fanins),
+            GateKind::Nand => graph::not(g.and_many(&fanins)),
+            GateKind::Or => g.or_many(&fanins),
+            GateKind::Nor => graph::not(g.or_many(&fanins)),
+            GateKind::Xor => fanins.iter().fold(graph::FALSE, |acc, &l| g.xor(acc, l)),
+            GateKind::Xnor => {
+                graph::not(fanins.iter().fold(graph::FALSE, |acc, &l| g.xor(acc, l)))
+            }
+        };
+        lit_of.push(l);
+    }
+    g.outputs = nl.outputs.iter().map(|&o| lit_of[o as usize]).collect();
+    g
+}
+
+/// Raise an AIG back to a netlist of `And`/`Not` gates (plus constants).
+/// Inverters are cached so each literal materialises at most once.
+pub fn aig_to_netlist(g: &Aig, name: &str) -> Netlist {
+    let mut nl = Netlist::new(name);
+    // node id of the *positive* phase of each variable; u32::MAX = unset.
+    let mut pos: Vec<NodeId> = vec![u32::MAX; g.n_vars()];
+    let mut neg: Vec<NodeId> = vec![u32::MAX; g.n_vars()];
+    for j in 0..g.n_inputs {
+        pos[graph::var(g.input(j)) as usize] = nl.add_input();
+    }
+
+    let mut live = vec![false; g.n_vars()];
+    for v in g.live_vars() {
+        live[v as usize] = true;
+    }
+
+    // Lazily-created constants.
+    let mut const0: Option<NodeId> = None;
+    let mut const1: Option<NodeId> = None;
+
+    // Materialise AND nodes in creation (= topological) order.
+    for (i, nd) in g.ands.iter().enumerate() {
+        let v = 1 + g.n_inputs + i;
+        if !live[v] {
+            continue;
+        }
+        let a = resolve(&mut nl, &mut pos, &mut neg, &mut const0, &mut const1, nd.0);
+        let b = resolve(&mut nl, &mut pos, &mut neg, &mut const0, &mut const1, nd.1);
+        pos[v] = nl.push(GateKind::And, vec![a, b]);
+    }
+
+    let outs: Vec<NodeId> = g
+        .outputs
+        .clone()
+        .iter()
+        .map(|&l| resolve(&mut nl, &mut pos, &mut neg, &mut const0, &mut const1, l))
+        .collect();
+    nl.set_outputs(outs);
+    nl
+}
+
+fn resolve(
+    nl: &mut Netlist,
+    pos: &mut [NodeId],
+    neg: &mut [NodeId],
+    const0: &mut Option<NodeId>,
+    const1: &mut Option<NodeId>,
+    l: Lit,
+) -> NodeId {
+    let v = graph::var(l) as usize;
+    if v == 0 {
+        return if graph::is_compl(l) {
+            *const1.get_or_insert_with(|| nl.push(GateKind::Const1, vec![]))
+        } else {
+            *const0.get_or_insert_with(|| nl.push(GateKind::Const0, vec![]))
+        };
+    }
+    if !graph::is_compl(l) {
+        assert_ne!(pos[v], u32::MAX, "fanin materialised before its node");
+        return pos[v];
+    }
+    if neg[v] == u32::MAX {
+        let p = pos[v];
+        assert_ne!(p, u32::MAX);
+        neg[v] = nl.push(GateKind::Not, vec![p]);
+    }
+    neg[v]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::generators::PAPER_BENCHMARKS;
+    use crate::circuit::sim::TruthTables;
+
+    #[test]
+    fn netlist_aig_round_trip_preserves_function() {
+        for b in &PAPER_BENCHMARKS {
+            let nl = b.netlist();
+            let g = netlist_to_aig(&nl);
+            let tt = TruthTables::simulate(&nl);
+            assert_eq!(
+                g.output_values(),
+                tt.output_values(&nl),
+                "netlist->aig mismatch for {}",
+                b.name
+            );
+            let back = aig_to_netlist(&g, b.name);
+            assert!(back.validate().is_ok());
+            let tt2 = TruthTables::simulate(&back);
+            assert_eq!(
+                tt2.output_values(&back),
+                tt.output_values(&nl),
+                "aig->netlist mismatch for {}",
+                b.name
+            );
+        }
+    }
+
+    #[test]
+    fn constants_materialise_once() {
+        use crate::circuit::netlist::Netlist;
+        let mut nl = Netlist::new("consts");
+        let _a = nl.add_input();
+        let c0 = nl.push(GateKind::Const0, vec![]);
+        let c1 = nl.push(GateKind::Const1, vec![]);
+        nl.set_outputs(vec![c0, c1, c0]);
+        let g = netlist_to_aig(&nl);
+        assert_eq!(g.output_values(), vec![2, 2]);
+        let back = aig_to_netlist(&g, "consts");
+        let kinds: Vec<_> = back.gates.iter().map(|x| x.kind).collect();
+        let n0 = kinds.iter().filter(|k| **k == GateKind::Const0).count();
+        let n1 = kinds.iter().filter(|k| **k == GateKind::Const1).count();
+        assert_eq!((n0, n1), (1, 1));
+    }
+
+    #[test]
+    fn strash_shrinks_redundant_netlist() {
+        use crate::circuit::netlist::Netlist;
+        let mut nl = Netlist::new("dup");
+        let a = nl.add_input();
+        let b = nl.add_input();
+        let x1 = nl.push(GateKind::And, vec![a, b]);
+        let x2 = nl.push(GateKind::And, vec![a, b]); // duplicate
+        let o = nl.push(GateKind::Or, vec![x1, x2]); // = x1
+        nl.set_outputs(vec![o]);
+        let g = netlist_to_aig(&nl);
+        assert_eq!(g.live_and_count(), 1);
+    }
+}

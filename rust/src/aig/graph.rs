@@ -1,0 +1,273 @@
+//! Structurally-hashed and-inverter graph.
+//!
+//! Literal encoding: `lit = 2*var + complemented`. Variable 0 is the
+//! constant FALSE, so literal 0 is `false` and literal 1 is `true`.
+//! Variables `1..=n_inputs` are primary inputs; higher variables are
+//! two-input AND nodes created through [`Aig::and`], which structurally
+//! hashes and applies the standard local simplifications
+//! (`a&0=0, a&1=a, a&a=a, a&!a=0`).
+
+use std::collections::HashMap;
+
+/// An AIG literal: variable index shifted left once, LSB = complement.
+pub type Lit = u32;
+
+pub const FALSE: Lit = 0;
+pub const TRUE: Lit = 1;
+
+#[inline]
+pub fn var(l: Lit) -> u32 {
+    l >> 1
+}
+
+#[inline]
+pub fn is_compl(l: Lit) -> bool {
+    l & 1 == 1
+}
+
+#[inline]
+pub fn not(l: Lit) -> Lit {
+    l ^ 1
+}
+
+#[inline]
+pub fn lit(v: u32, compl: bool) -> Lit {
+    (v << 1) | compl as Lit
+}
+
+/// Fanins of an AND node, normalised so `fanin0 <= fanin1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AndNode(pub Lit, pub Lit);
+
+#[derive(Debug, Clone, Default)]
+pub struct Aig {
+    pub n_inputs: usize,
+    /// AND node i (variable `1 + n_inputs + i`) and its two fanin literals.
+    pub ands: Vec<AndNode>,
+    pub outputs: Vec<Lit>,
+    strash: HashMap<AndNode, Lit>,
+}
+
+impl Aig {
+    pub fn new(n_inputs: usize) -> Self {
+        Aig { n_inputs, ..Default::default() }
+    }
+
+    /// Literal of primary input `j` (0-based).
+    pub fn input(&self, j: usize) -> Lit {
+        assert!(j < self.n_inputs);
+        lit(1 + j as u32, false)
+    }
+
+    pub fn n_vars(&self) -> usize {
+        1 + self.n_inputs + self.ands.len()
+    }
+
+    fn and_var(&self, idx: usize) -> u32 {
+        (1 + self.n_inputs + idx) as u32
+    }
+
+    /// Index into `ands` for an AND variable, if it is one.
+    pub fn and_index(&self, v: u32) -> Option<usize> {
+        let base = 1 + self.n_inputs as u32;
+        (v >= base).then(|| (v - base) as usize)
+    }
+
+    /// Create (or reuse) the AND of two literals.
+    pub fn and(&mut self, a: Lit, b: Lit) -> Lit {
+        // Local simplification rules.
+        if a == FALSE || b == FALSE || a == not(b) {
+            return FALSE;
+        }
+        if a == TRUE {
+            return b;
+        }
+        if b == TRUE || a == b {
+            return a;
+        }
+        let key = if a <= b { AndNode(a, b) } else { AndNode(b, a) };
+        if let Some(&l) = self.strash.get(&key) {
+            return l;
+        }
+        let v = self.and_var(self.ands.len());
+        self.ands.push(key);
+        let l = lit(v, false);
+        self.strash.insert(key, l);
+        l
+    }
+
+    pub fn or(&mut self, a: Lit, b: Lit) -> Lit {
+        not(self.and(not(a), not(b)))
+    }
+
+    pub fn xor(&mut self, a: Lit, b: Lit) -> Lit {
+        let n_ab = self.and(a, not(b));
+        let n_ba = self.and(not(a), b);
+        self.or(n_ab, n_ba)
+    }
+
+    pub fn mux(&mut self, sel: Lit, t: Lit, e: Lit) -> Lit {
+        let st = self.and(sel, t);
+        let se = self.and(not(sel), e);
+        self.or(st, se)
+    }
+
+    pub fn and_many(&mut self, lits: &[Lit]) -> Lit {
+        lits.iter().fold(TRUE, |acc, &l| self.and(acc, l))
+    }
+
+    pub fn or_many(&mut self, lits: &[Lit]) -> Lit {
+        lits.iter().fold(FALSE, |acc, &l| self.or(acc, l))
+    }
+
+    /// Number of AND nodes reachable from the outputs.
+    pub fn live_and_count(&self) -> usize {
+        self.live_vars().iter().filter(|&&v| self.and_index(v).is_some()).count()
+    }
+
+    /// Variables reachable from the outputs (excluding the constant).
+    pub fn live_vars(&self) -> Vec<u32> {
+        let mut seen = vec![false; self.n_vars()];
+        let mut stack: Vec<u32> = self.outputs.iter().map(|&l| var(l)).collect();
+        let mut live = Vec::new();
+        while let Some(v) = stack.pop() {
+            if v == 0 || std::mem::replace(&mut seen[v as usize], true) {
+                continue;
+            }
+            live.push(v);
+            if let Some(i) = self.and_index(v) {
+                stack.push(var(self.ands[i].0));
+                stack.push(var(self.ands[i].1));
+            }
+        }
+        live
+    }
+
+    /// Exhaustively simulate every variable over all `2^n_inputs` points.
+    /// Returns one bit-parallel row per variable (row 0 = constant FALSE).
+    pub fn simulate_all(&self) -> Vec<Vec<u64>> {
+        let n = self.n_inputs;
+        assert!(n <= 16, "exhaustive AIG simulation capped at 16 inputs");
+        let words = (1usize << n).div_ceil(64);
+        let mask = if n < 6 { (1u64 << (1usize << n)) - 1 } else { !0 };
+        let mut rows: Vec<Vec<u64>> = Vec::with_capacity(self.n_vars());
+        rows.push(vec![0u64; words]); // constant FALSE
+        for j in 0..n {
+            rows.push(crate::circuit::sim::input_pattern(j, n, words));
+        }
+        for nd in &self.ands {
+            let mut row = vec![0u64; words];
+            for w in 0..words {
+                let a = rows[var(nd.0) as usize][w] ^ if is_compl(nd.0) { !0 } else { 0 };
+                let b = rows[var(nd.1) as usize][w] ^ if is_compl(nd.1) { !0 } else { 0 };
+                row[w] = (a & b) & mask;
+            }
+            rows.push(row);
+        }
+        rows
+    }
+
+    /// Output values (LSB-first bus) at every input point.
+    pub fn output_values(&self) -> Vec<u64> {
+        let rows = self.simulate_all();
+        let n = self.n_inputs;
+        (0..1usize << n)
+            .map(|x| {
+                self.outputs.iter().enumerate().fold(0u64, |acc, (i, &l)| {
+                    let bit =
+                        ((rows[var(l) as usize][x / 64] >> (x % 64)) & 1) ^ is_compl(l) as u64;
+                    acc | (bit << i)
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_helpers() {
+        assert_eq!(var(7), 3);
+        assert!(is_compl(7));
+        assert_eq!(not(6), 7);
+        assert_eq!(lit(3, true), 7);
+    }
+
+    #[test]
+    fn simplification_rules() {
+        let mut g = Aig::new(2);
+        let a = g.input(0);
+        assert_eq!(g.and(a, FALSE), FALSE);
+        assert_eq!(g.and(a, TRUE), a);
+        assert_eq!(g.and(a, a), a);
+        assert_eq!(g.and(a, not(a)), FALSE);
+        assert_eq!(g.ands.len(), 0);
+    }
+
+    #[test]
+    fn strash_reuses_nodes() {
+        let mut g = Aig::new(2);
+        let (a, b) = (g.input(0), g.input(1));
+        let x = g.and(a, b);
+        let y = g.and(b, a);
+        assert_eq!(x, y);
+        assert_eq!(g.ands.len(), 1);
+    }
+
+    #[test]
+    fn xor_truth_table() {
+        let mut g = Aig::new(2);
+        let (a, b) = (g.input(0), g.input(1));
+        let x = g.xor(a, b);
+        g.outputs = vec![x];
+        assert_eq!(g.output_values(), vec![0, 1, 1, 0]);
+    }
+
+    #[test]
+    fn mux_truth_table() {
+        let mut g = Aig::new(3); // in0 = sel, in1 = t, in2 = e
+        let (s, t, e) = (g.input(0), g.input(1), g.input(2));
+        let m = g.mux(s, t, e);
+        g.outputs = vec![m];
+        let vals = g.output_values();
+        for x in 0..8usize {
+            let (s, t, e) = (x & 1, (x >> 1) & 1, (x >> 2) & 1);
+            let want = if s == 1 { t } else { e } as u64;
+            assert_eq!(vals[x], want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn or_and_many() {
+        let mut g = Aig::new(3);
+        let ins: Vec<Lit> = (0..3).map(|j| g.input(j)).collect();
+        let all = g.and_many(&ins);
+        let any = g.or_many(&ins);
+        g.outputs = vec![all, any];
+        let vals = g.output_values();
+        assert_eq!(vals[0], 0);
+        assert_eq!(vals[7], 3);
+        assert_eq!(vals[3], 2);
+    }
+
+    #[test]
+    fn live_count_ignores_dead_nodes() {
+        let mut g = Aig::new(2);
+        let (a, b) = (g.input(0), g.input(1));
+        let x = g.and(a, b);
+        let _dead = g.and(not(a), b);
+        g.outputs = vec![x];
+        assert_eq!(g.live_and_count(), 1);
+        assert_eq!(g.ands.len(), 2);
+    }
+
+    #[test]
+    fn complemented_output() {
+        let mut g = Aig::new(1);
+        let a = g.input(0);
+        g.outputs = vec![not(a)];
+        assert_eq!(g.output_values(), vec![1, 0]);
+    }
+}

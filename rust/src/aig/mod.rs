@@ -1,0 +1,16 @@
+//! And-inverter-graph substrate: the optimisation IR between extracted
+//! template netlists and the technology mapper (our stand-in for the
+//! Yosys flow the paper uses — see DESIGN.md §2).
+//!
+//! Passes: structural hashing with local simplification rules (on
+//! construction), exhaustive-simulation functional reduction (complete
+//! equivalence merging for the paper's <=8-input circuits), and dead-node
+//! sweeping.
+
+pub mod build;
+pub mod graph;
+pub mod opt;
+
+pub use build::{aig_to_netlist, netlist_to_aig};
+pub use graph::{Aig, Lit};
+pub use opt::optimize;

@@ -1,0 +1,166 @@
+//! AIG optimisation: exhaustive-simulation functional reduction.
+//!
+//! For circuits with <= 16 inputs, simulating every input point is exact,
+//! so equivalence-up-to-complement merging here is *complete* (a
+//! "fraig" whose SAT oracle never gets consulted). Combined with the
+//! structural hashing performed on reconstruction, this subsumes constant
+//! propagation, duplicate-cone sharing and inverter push-through — the
+//! bulk of what `abc`'s light scripts buy on circuits of this size.
+
+use std::collections::HashMap;
+
+use super::graph::{self, Aig, Lit};
+
+/// Functionally reduce `g`: merge every pair of nodes whose exhaustive
+/// truth tables agree (possibly complemented), then rebuild and sweep.
+/// Iterates to a fixpoint on the live AND count.
+pub fn optimize(g: &Aig) -> Aig {
+    let mut cur = reduce_once(g);
+    loop {
+        let next = reduce_once(&cur);
+        if next.live_and_count() >= cur.live_and_count() {
+            return cur;
+        }
+        cur = next;
+    }
+}
+
+fn reduce_once(g: &Aig) -> Aig {
+    let rows = g.simulate_all();
+    let mut out = Aig::new(g.n_inputs);
+
+    // Canonical key per truth table: complement so the bit at input point
+    // 0 is 0; `phase` records whether we complemented.
+    let canon = |row: &[u64]| -> (Vec<u64>, bool) {
+        if row[0] & 1 == 1 {
+            (row.iter().map(|w| !w).collect(), true)
+        } else {
+            (row.to_vec(), false)
+        }
+    };
+    let mask = if g.n_inputs < 6 { (1u64 << (1usize << g.n_inputs)) - 1 } else { !0 };
+    let canon_masked = |row: &[u64]| -> (Vec<u64>, bool) {
+        let (mut key, ph) = canon(row);
+        if let Some(w0) = key.first_mut() {
+            *w0 &= mask;
+        }
+        for w in key.iter_mut().skip(1) {
+            // already full words
+            let _ = w;
+        }
+        (key, ph)
+    };
+
+    // class: canonical truth table -> NEW-graph literal computing it.
+    let mut class: HashMap<Vec<u64>, Lit> = HashMap::new();
+    class.insert(vec![0u64; rows[0].len()], graph::FALSE);
+
+    // map: old variable -> new-graph literal with the variable's function.
+    let mut map: Vec<Lit> = vec![graph::FALSE; g.n_vars()];
+    for j in 0..g.n_inputs {
+        let l = out.input(j);
+        map[1 + j] = l;
+        let (key, ph) = canon_masked(&rows[1 + j]);
+        debug_assert!(!ph, "input pattern has bit 0 set");
+        class.entry(key).or_insert(l);
+    }
+
+    for (i, nd) in g.ands.iter().enumerate() {
+        let v = 1 + g.n_inputs + i;
+        let (key, phase) = canon_masked(&rows[v]);
+        if let Some(&canon_lit) = class.get(&key) {
+            // Function (up to complement) already built: reuse it.
+            map[v] = if phase { graph::not(canon_lit) } else { canon_lit };
+            continue;
+        }
+        let a = translate(&map, nd.0);
+        let b = translate(&map, nd.1);
+        let l = out.and(a, b);
+        map[v] = l;
+        class.insert(key, if phase { graph::not(l) } else { l });
+    }
+    out.outputs = g.outputs.iter().map(|&l| translate(&map, l)).collect();
+    out
+}
+
+/// Apply the variable map to a literal from the *old* graph.
+fn translate(map: &[Lit], l: Lit) -> Lit {
+    let base = map[graph::var(l) as usize];
+    if graph::is_compl(l) {
+        graph::not(base)
+    } else {
+        base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::build::netlist_to_aig;
+    use crate::circuit::generators::PAPER_BENCHMARKS;
+    use crate::circuit::netlist::{GateKind, Netlist};
+
+    #[test]
+    fn optimize_preserves_function_on_benchmarks() {
+        for b in &PAPER_BENCHMARKS {
+            let g = netlist_to_aig(&b.netlist());
+            let opt = optimize(&g);
+            assert_eq!(g.output_values(), opt.output_values(), "{}", b.name);
+            assert!(
+                opt.live_and_count() <= g.live_and_count(),
+                "{}: optimisation grew the graph",
+                b.name
+            );
+        }
+    }
+
+    #[test]
+    fn merges_functionally_equal_cones() {
+        // x = a AND b built twice through different structures:
+        // (a & b) vs NOT(NOT a OR NOT b) — strash alone won't merge the
+        // intermediate nodes, functional reduction must.
+        let mut nl = Netlist::new("fr");
+        let a = nl.add_input();
+        let b = nl.add_input();
+        let x1 = nl.push(GateKind::And, vec![a, b]);
+        let na = nl.push(GateKind::Not, vec![a]);
+        let nb = nl.push(GateKind::Not, vec![b]);
+        let or = nl.push(GateKind::Or, vec![na, nb]);
+        let x2 = nl.push(GateKind::Not, vec![or]);
+        let y = nl.push(GateKind::Xor, vec![x1, x2]); // == 0
+        nl.set_outputs(vec![y]);
+        let g = netlist_to_aig(&nl);
+        let opt = optimize(&g);
+        assert_eq!(opt.output_values(), vec![0, 0, 0, 0]);
+        assert_eq!(opt.live_and_count(), 0, "xor of equal cones must fold to const");
+    }
+
+    #[test]
+    fn detects_complement_equivalence() {
+        // out0 = a NAND b, out1 = a AND b: one node suffices.
+        let mut nl = Netlist::new("compl");
+        let a = nl.add_input();
+        let b = nl.add_input();
+        let x = nl.push(GateKind::And, vec![a, b]);
+        let y = nl.push(GateKind::Nand, vec![a, b]);
+        nl.set_outputs(vec![x, y]);
+        let opt = optimize(&netlist_to_aig(&nl));
+        assert_eq!(opt.live_and_count(), 1);
+        assert_eq!(opt.output_values(), vec![2, 2, 2, 1]);
+    }
+
+    #[test]
+    fn constant_cones_fold() {
+        // (a OR NOT a) AND b == b.
+        let mut nl = Netlist::new("taut");
+        let a = nl.add_input();
+        let b = nl.add_input();
+        let na = nl.push(GateKind::Not, vec![a]);
+        let t = nl.push(GateKind::Or, vec![a, na]);
+        let y = nl.push(GateKind::And, vec![t, b]);
+        nl.set_outputs(vec![y]);
+        let opt = optimize(&netlist_to_aig(&nl));
+        assert_eq!(opt.live_and_count(), 0);
+        assert_eq!(opt.output_values(), vec![0, 0, 1, 1]);
+    }
+}

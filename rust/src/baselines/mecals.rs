@@ -1,0 +1,175 @@
+//! MECALS-style baseline: greedy local rewrites, each verified by a
+//! maximum-error check.
+//!
+//! Candidate rewrites on the optimised AIG: replace a node with a
+//! constant, with another existing node, or with its complement. Each
+//! round evaluates all candidates, applies the one with the best sound
+//! area reduction, and repeats until no candidate improves — the greedy
+//! descent MECALS performs with its SAT-based max-error oracle (here the
+//! exhaustive oracle, exact at these sizes; see baselines::mod).
+
+use crate::aig::graph::{self, Aig, Lit};
+use crate::aig::{aig_to_netlist, netlist_to_aig, optimize};
+use crate::circuit::sim::error_stats;
+use crate::circuit::Netlist;
+use crate::synth::synthesize_area;
+
+use super::BaselineResult;
+
+/// Rebuild `aig` with AND node `target` (index) replaced by `repl`
+/// (a literal over the *old* graph's variables).
+fn substitute(aig: &Aig, target: usize, repl: Lit) -> Aig {
+    let mut out = Aig::new(aig.n_inputs);
+    let mut map: Vec<Lit> = vec![graph::FALSE; aig.n_vars()];
+    for j in 0..aig.n_inputs {
+        map[1 + j] = out.input(j);
+    }
+    let tr = |map: &[Lit], l: Lit| {
+        let base = map[graph::var(l) as usize];
+        if graph::is_compl(l) {
+            graph::not(base)
+        } else {
+            base
+        }
+    };
+    for (i, nd) in aig.ands.iter().enumerate() {
+        let v = 1 + aig.n_inputs + i;
+        if i == target {
+            // Replacement literal must be over already-mapped variables
+            // (enforced by the candidate generator: repl var < target var).
+            map[v] = tr(&map, repl);
+            continue;
+        }
+        let a = tr(&map, nd.0);
+        let b = tr(&map, nd.1);
+        map[v] = out.and(a, b);
+    }
+    out.outputs = aig.outputs.iter().map(|&l| tr(&map, l)).collect();
+    out
+}
+
+/// One MECALS round: the best sound candidate, if any improves.
+fn best_candidate(aig: &Aig, exact: &[u64], et: u64, cur_count: usize)
+                  -> Option<(Aig, usize)> {
+    let mut best: Option<(Aig, usize)> = None;
+    let n_ands = aig.ands.len();
+    // Candidate replacement literals per target: constants, earlier
+    // nodes (both phases) and inputs. To keep rounds quadratic-not-cubic
+    // we cap the per-target candidate list using truth-table proximity.
+    let rows = aig.simulate_all();
+    for target in 0..n_ands {
+        let tvar = (1 + aig.n_inputs + target) as u32;
+        let trow = &rows[tvar as usize];
+        let mut cands: Vec<Lit> = vec![graph::FALSE, graph::TRUE];
+        for v in 1..tvar {
+            let vrow = &rows[v as usize];
+            // Quick filter: only consider close functions (<= et bits of
+            // difference is a heuristic, not a soundness condition —
+            // soundness is checked below).
+            let dist: u32 =
+                trow.iter().zip(vrow).map(|(a, b)| (a ^ b).count_ones()).sum();
+            let inv_dist: u32 = trow
+                .iter()
+                .zip(vrow)
+                .map(|(a, b)| (a ^ !b).count_ones())
+                .sum();
+            if dist <= 4 + et as u32 * 4 {
+                cands.push(graph::lit(v, false));
+            }
+            if inv_dist <= 4 + et as u32 * 4 {
+                cands.push(graph::lit(v, true));
+            }
+        }
+        for repl in cands {
+            let candidate = substitute(aig, target, repl);
+            let reduced = optimize(&candidate);
+            let count = reduced.live_and_count();
+            if count >= cur_count {
+                continue;
+            }
+            let (mx, _) = error_stats(exact, &reduced.output_values());
+            if mx > et {
+                continue;
+            }
+            match &best {
+                Some((_, c)) if *c <= count => {}
+                _ => best = Some((reduced, count)),
+            }
+        }
+    }
+    best
+}
+
+/// Run the MECALS-style greedy descent.
+pub fn mecals(nl: &Netlist, et: u64) -> BaselineResult {
+    let mut aig = optimize(&netlist_to_aig(nl));
+    let exact = aig.output_values();
+    let mut applied = 0usize;
+    let mut count = aig.live_and_count();
+    loop {
+        match best_candidate(&aig, &exact, et, count) {
+            Some((next, c)) => {
+                aig = next;
+                count = c;
+                applied += 1;
+            }
+            None => break,
+        }
+    }
+    let vals = aig.output_values();
+    let (max_err, mean_err) = error_stats(&exact, &vals);
+    debug_assert!(max_err <= et);
+    let netlist = aig_to_netlist(&aig, &format!("{}_mecals", nl.name));
+    let area = synthesize_area(&netlist);
+    BaselineResult { netlist, area, max_err, mean_err, applied }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::generators::{adder, multiplier};
+    use crate::circuit::sim::TruthTables;
+
+    #[test]
+    fn mecals_is_sound() {
+        for (nl, et) in [(adder(2), 1u64), (adder(2), 2), (multiplier(2), 2)] {
+            let res = mecals(&nl, et);
+            assert!(res.max_err <= et, "{}: {} > {et}", nl.name, res.max_err);
+            let tt = TruthTables::simulate(&res.netlist);
+            let exact = TruthTables::simulate(&nl).output_values(&nl);
+            let (mx, _) = error_stats(&exact, &tt.output_values(&res.netlist));
+            assert!(mx <= et);
+        }
+    }
+
+    #[test]
+    fn mecals_et_zero_is_exact() {
+        let nl = adder(2);
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        let res = mecals(&nl, 0);
+        let tt = TruthTables::simulate(&res.netlist);
+        assert_eq!(tt.output_values(&res.netlist), exact);
+    }
+
+    #[test]
+    fn mecals_reduces_area_with_slack() {
+        let nl = multiplier(2);
+        let exact_area = synthesize_area(&nl);
+        let res = mecals(&nl, 4);
+        assert!(res.area < exact_area, "area {} !< {exact_area}", res.area);
+        assert!(res.applied > 0);
+    }
+
+    #[test]
+    fn substitution_replaces_function() {
+        // Replace the single AND of and2 with TRUE: outputs become 1.
+        let mut nl = crate::circuit::Netlist::new("and2");
+        let a = nl.add_input();
+        let b = nl.add_input();
+        let g = nl.push(crate::circuit::GateKind::And, vec![a, b]);
+        nl.set_outputs(vec![g]);
+        let aig = netlist_to_aig(&nl);
+        let sub = substitute(&aig, 0, graph::TRUE);
+        assert_eq!(sub.output_values(), vec![1, 1, 1, 1]);
+    }
+}

@@ -1,0 +1,29 @@
+//! The comparison methods of §IV: MUSCAT (MUS-guided gate
+//! constantisation, DATE'22), MECALS (maximum-error-checked local
+//! rewrites, DATE'23) and the 1000-random-sound-approximations baseline
+//! that anchors Fig. 4.
+//!
+//! Both published baselines verify candidate approximations with a
+//! maximum-error check. At the paper's benchmark sizes (<= 8 inputs) the
+//! exhaustive bit-parallel check is exact and orders of magnitude faster
+//! than a SAT query, so it is the default engine; a SAT-based check kept
+//! in `muscat::sat_check` is differential-tested against it (DESIGN.md §2).
+
+pub mod mecals;
+pub mod muscat;
+pub mod random_sound;
+
+pub use mecals::mecals;
+pub use muscat::muscat;
+pub use random_sound::{random_sound_baseline, RandomPoint};
+
+/// Result shape shared by the baseline methods.
+#[derive(Debug, Clone)]
+pub struct BaselineResult {
+    pub netlist: crate::circuit::Netlist,
+    pub area: f64,
+    pub max_err: u64,
+    pub mean_err: f64,
+    /// Method-specific knob count (applied candidates / rewrites).
+    pub applied: usize,
+}

@@ -1,0 +1,61 @@
+//! Minimal bench harness (criterion is not vendored in this offline
+//! environment): warmup + timed iterations with mean / stddev / min
+//! reporting, and a black_box to defeat const-folding.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Statistics over per-iteration wall times (milliseconds).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub stddev_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} {:>8.3} ms/iter (±{:.3}, min {:.3}, max {:.3}, n={})",
+            self.name, self.mean_ms, self.stddev_ms, self.min_ms, self.max_ms, self.iters
+        );
+    }
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>()
+        / times.len().max(1) as f64;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean,
+        stddev_ms: var.sqrt(),
+        min_ms: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_ms: times.iter().cloned().fold(0.0, f64::max),
+    };
+    stats.report();
+    stats
+}
+
+/// Throughput helper: items/second given per-iteration item count.
+pub fn throughput(stats: &BenchStats, items_per_iter: usize) -> f64 {
+    items_per_iter as f64 / (stats.mean_ms / 1e3)
+}

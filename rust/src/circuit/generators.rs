@@ -1,0 +1,195 @@
+//! Generators for the paper's benchmark circuits (§IV): ripple-carry
+//! adders and array multipliers with 2-, 3- and 4-bit operands, named
+//! `adder_i4/i6/i8` and `mult_i4/i6/i8` after their *total input* count,
+//! exactly as in the paper.
+//!
+//! Input bus convention (shared with the python evaluator and the
+//! template layer): inputs `0..bits` are operand A (LSB first), inputs
+//! `bits..2*bits` are operand B; outputs are LSB first.
+
+use super::netlist::{GateKind, Netlist, NodeId};
+
+/// A named benchmark with its paper-conventional error-threshold sweep.
+#[derive(Debug, Clone)]
+pub struct Benchmark {
+    pub name: &'static str,
+    pub bits: usize,
+    pub is_adder: bool,
+}
+
+impl Benchmark {
+    pub fn netlist(&self) -> Netlist {
+        if self.is_adder {
+            adder(self.bits)
+        } else {
+            multiplier(self.bits)
+        }
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        2 * self.bits
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        if self.is_adder {
+            self.bits + 1
+        } else {
+            2 * self.bits
+        }
+    }
+
+    /// ET values swept in Fig. 5: powers of two up to half the output range
+    /// (the paper sweeps "varying ET values" over this scale).
+    pub fn et_sweep(&self) -> Vec<u64> {
+        let m = self.n_outputs();
+        (0..m as u32 - 1).map(|k| 1u64 << k).collect()
+    }
+
+    /// The fixed ET used for this benchmark's Fig. 4 proxy study.
+    pub fn fig4_et(&self) -> u64 {
+        match self.n_inputs() {
+            4 => 2,
+            6 => 8,
+            _ => 16,
+        }
+    }
+}
+
+/// The six benchmarks of the paper's evaluation.
+pub const PAPER_BENCHMARKS: [Benchmark; 6] = [
+    Benchmark { name: "adder_i4", bits: 2, is_adder: true },
+    Benchmark { name: "mult_i4", bits: 2, is_adder: false },
+    Benchmark { name: "adder_i6", bits: 3, is_adder: true },
+    Benchmark { name: "mult_i6", bits: 3, is_adder: false },
+    Benchmark { name: "adder_i8", bits: 4, is_adder: true },
+    Benchmark { name: "mult_i8", bits: 4, is_adder: false },
+];
+
+/// Look a benchmark up by its paper name (e.g. `"mult_i6"`).
+pub fn benchmark_by_name(name: &str) -> Option<&'static Benchmark> {
+    PAPER_BENCHMARKS.iter().find(|b| b.name == name)
+}
+
+fn full_adder(nl: &mut Netlist, a: NodeId, b: NodeId, cin: NodeId) -> (NodeId, NodeId) {
+    let axb = nl.push(GateKind::Xor, vec![a, b]);
+    let sum = nl.push(GateKind::Xor, vec![axb, cin]);
+    let ab = nl.push(GateKind::And, vec![a, b]);
+    let c_axb = nl.push(GateKind::And, vec![axb, cin]);
+    let cout = nl.push(GateKind::Or, vec![ab, c_axb]);
+    (sum, cout)
+}
+
+fn half_adder(nl: &mut Netlist, a: NodeId, b: NodeId) -> (NodeId, NodeId) {
+    let sum = nl.push(GateKind::Xor, vec![a, b]);
+    let cout = nl.push(GateKind::And, vec![a, b]);
+    (sum, cout)
+}
+
+/// `bits`-bit + `bits`-bit ripple-carry adder (2*bits inputs, bits+1 outputs).
+pub fn adder(bits: usize) -> Netlist {
+    assert!(bits >= 1);
+    let mut nl = Netlist::new(format!("adder_i{}", 2 * bits));
+    let a: Vec<_> = (0..bits).map(|_| nl.add_input()).collect();
+    let b: Vec<_> = (0..bits).map(|_| nl.add_input()).collect();
+
+    let mut outs = Vec::with_capacity(bits + 1);
+    let (s0, mut carry) = half_adder(&mut nl, a[0], b[0]);
+    outs.push(s0);
+    for k in 1..bits {
+        let (s, c) = full_adder(&mut nl, a[k], b[k], carry);
+        outs.push(s);
+        carry = c;
+    }
+    outs.push(carry);
+    nl.set_outputs(outs);
+    nl
+}
+
+/// `bits` x `bits` unsigned array multiplier (2*bits inputs, 2*bits outputs).
+///
+/// Classic carry-save array: partial products `a_i AND b_j` reduced with
+/// half/full adders row by row.
+pub fn multiplier(bits: usize) -> Netlist {
+    assert!(bits >= 1);
+    let mut nl = Netlist::new(format!("mult_i{}", 2 * bits));
+    let a: Vec<_> = (0..bits).map(|_| nl.add_input()).collect();
+    let b: Vec<_> = (0..bits).map(|_| nl.add_input()).collect();
+
+    // columns[k] = list of 1-bit signals of weight 2^k awaiting reduction.
+    let mut columns: Vec<Vec<NodeId>> = vec![Vec::new(); 2 * bits];
+    for i in 0..bits {
+        for j in 0..bits {
+            let pp = nl.push(GateKind::And, vec![a[i], b[j]]);
+            columns[i + j].push(pp);
+        }
+    }
+
+    // Column-compression: reduce each column to one bit, pushing carries
+    // rightward. Deterministic order keeps the netlist reproducible.
+    let mut outs = Vec::with_capacity(2 * bits);
+    for k in 0..2 * bits {
+        while columns[k].len() > 1 {
+            if columns[k].len() >= 3 {
+                let z = columns[k].pop().unwrap();
+                let y = columns[k].pop().unwrap();
+                let x = columns[k].pop().unwrap();
+                let (s, c) = full_adder(&mut nl, x, y, z);
+                columns[k].insert(0, s);
+                columns[k + 1].push(c);
+            } else {
+                let y = columns[k].pop().unwrap();
+                let x = columns[k].pop().unwrap();
+                let (s, c) = half_adder(&mut nl, x, y);
+                columns[k].insert(0, s);
+                columns[k + 1].push(c);
+            }
+        }
+        outs.push(match columns[k].first() {
+            Some(&bit) => bit,
+            None => nl.push(GateKind::Const0, vec![]),
+        });
+    }
+    nl.set_outputs(outs);
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::sim::TruthTables;
+
+    #[test]
+    fn paper_benchmark_shapes() {
+        for b in &PAPER_BENCHMARKS {
+            let nl = b.netlist();
+            assert!(nl.validate().is_ok(), "{}: {:?}", b.name, nl.validate());
+            assert_eq!(nl.n_inputs(), b.n_inputs(), "{}", b.name);
+            assert_eq!(nl.n_outputs(), b.n_outputs(), "{}", b.name);
+            assert_eq!(nl.name, b.name);
+        }
+    }
+
+    #[test]
+    fn benchmark_lookup() {
+        assert_eq!(benchmark_by_name("adder_i6").unwrap().bits, 3);
+        assert!(benchmark_by_name("divider_i4").is_none());
+    }
+
+    #[test]
+    fn et_sweep_covers_powers_of_two() {
+        let b = benchmark_by_name("mult_i8").unwrap();
+        assert_eq!(b.et_sweep(), vec![1, 2, 4, 8, 16, 32, 64]);
+        let a = benchmark_by_name("adder_i4").unwrap();
+        assert_eq!(a.et_sweep(), vec![1, 2]);
+    }
+
+    #[test]
+    fn one_bit_multiplier_is_an_and() {
+        let nl = multiplier(1);
+        let tt = TruthTables::simulate(&nl);
+        let vals = tt.output_values(&nl);
+        assert_eq!(vals, vec![0, 0, 0, 1]);
+    }
+
+    // Full arithmetic equivalence for all bit widths is covered in sim.rs.
+}

@@ -1,0 +1,13 @@
+//! Gate-level circuit substrate: netlist representation, bit-parallel
+//! exhaustive simulation, a Verilog-subset reader/writer, and generators
+//! for the paper's benchmark set (ripple-carry adders and array
+//! multipliers at bitwidths 2/3/4 — `adder_i4..mult_i8`, §IV).
+
+pub mod generators;
+pub mod netlist;
+pub mod sim;
+pub mod verilog;
+
+pub use generators::{adder, benchmark_by_name, multiplier, Benchmark, PAPER_BENCHMARKS};
+pub use netlist::{Gate, GateKind, Netlist, NodeId};
+pub use sim::TruthTables;

@@ -1,0 +1,248 @@
+//! Gate-level netlist in topological order.
+//!
+//! Nodes are appended after their fanins, so a single forward pass is a
+//! valid evaluation order. This is the interchange representation between
+//! the Verilog reader, the template extractor, the AIG optimiser and the
+//! exhaustive simulator.
+
+/// Index of a gate inside a [`Netlist`].
+pub type NodeId = u32;
+
+/// Primitive gate kinds. `Input` gates carry no fanins; constants carry
+/// none either. Everything else is a standard boolean function of its
+/// fanin list (`Not`/`Buf` are unary, the rest n-ary with n >= 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GateKind {
+    Input,
+    Const0,
+    Const1,
+    Buf,
+    Not,
+    And,
+    Or,
+    Nand,
+    Nor,
+    Xor,
+    Xnor,
+}
+
+impl GateKind {
+    /// Evaluate the gate over bit-parallel words (one bit per input point).
+    pub fn eval_words(self, fanins: &[u64]) -> u64 {
+        match self {
+            GateKind::Input => unreachable!("inputs are simulated directly"),
+            GateKind::Const0 => 0,
+            GateKind::Const1 => !0,
+            GateKind::Buf => fanins[0],
+            GateKind::Not => !fanins[0],
+            GateKind::And => fanins.iter().fold(!0u64, |a, &b| a & b),
+            GateKind::Or => fanins.iter().fold(0u64, |a, &b| a | b),
+            GateKind::Nand => !fanins.iter().fold(!0u64, |a, &b| a & b),
+            GateKind::Nor => !fanins.iter().fold(0u64, |a, &b| a | b),
+            GateKind::Xor => fanins.iter().fold(0u64, |a, &b| a ^ b),
+            GateKind::Xnor => !fanins.iter().fold(0u64, |a, &b| a ^ b),
+        }
+    }
+
+    /// Verilog operator / primitive name used by the writer.
+    pub fn verilog_name(self) -> &'static str {
+        match self {
+            GateKind::Input => "input",
+            GateKind::Const0 => "const0",
+            GateKind::Const1 => "const1",
+            GateKind::Buf => "buf",
+            GateKind::Not => "not",
+            GateKind::And => "and",
+            GateKind::Or => "or",
+            GateKind::Nand => "nand",
+            GateKind::Nor => "nor",
+            GateKind::Xor => "xor",
+            GateKind::Xnor => "xnor",
+        }
+    }
+}
+
+/// One gate: a kind plus fanin node ids (empty for inputs/constants).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Gate {
+    pub kind: GateKind,
+    pub fanins: Vec<NodeId>,
+}
+
+/// A combinational netlist. Invariants (checked by [`Netlist::validate`]):
+/// gates are in topological order; `inputs` lists every `Input` gate in
+/// bus order (LSB first, operand A before operand B); `outputs` lists the
+/// output bus LSB-first and may reference any node.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub name: String,
+    pub gates: Vec<Gate>,
+    pub inputs: Vec<NodeId>,
+    pub outputs: Vec<NodeId>,
+}
+
+impl Netlist {
+    pub fn new(name: impl Into<String>) -> Self {
+        Netlist { name: name.into(), ..Default::default() }
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.inputs.len()
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// Number of non-input, non-constant gates (a crude size metric; the
+    /// synthesised-area metric lives in [`crate::synth`]).
+    pub fn n_logic_gates(&self) -> usize {
+        self.gates
+            .iter()
+            .filter(|g| {
+                !matches!(g.kind, GateKind::Input | GateKind::Const0 | GateKind::Const1)
+            })
+            .count()
+    }
+
+    pub fn add_input(&mut self) -> NodeId {
+        let id = self.push(GateKind::Input, vec![]);
+        self.inputs.push(id);
+        id
+    }
+
+    pub fn push(&mut self, kind: GateKind, fanins: Vec<NodeId>) -> NodeId {
+        debug_assert!(fanins.iter().all(|&f| (f as usize) < self.gates.len()));
+        let id = self.gates.len() as NodeId;
+        self.gates.push(Gate { kind, fanins });
+        id
+    }
+
+    pub fn set_outputs(&mut self, outputs: Vec<NodeId>) {
+        self.outputs = outputs;
+    }
+
+    /// Check the structural invariants; returns a description of the first
+    /// violation, if any.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, g) in self.gates.iter().enumerate() {
+            for &f in &g.fanins {
+                if f as usize >= i {
+                    return Err(format!("gate {i} has non-topological fanin {f}"));
+                }
+            }
+            let arity_ok = match g.kind {
+                GateKind::Input | GateKind::Const0 | GateKind::Const1 => g.fanins.is_empty(),
+                GateKind::Buf | GateKind::Not => g.fanins.len() == 1,
+                _ => !g.fanins.is_empty(),
+            };
+            if !arity_ok {
+                return Err(format!("gate {i} ({:?}) has bad arity {}", g.kind, g.fanins.len()));
+            }
+        }
+        for &o in &self.outputs {
+            if o as usize >= self.gates.len() {
+                return Err(format!("dangling output {o}"));
+            }
+        }
+        for &i in &self.inputs {
+            if self.gates[i as usize].kind != GateKind::Input {
+                return Err(format!("input list entry {i} is not an Input gate"));
+            }
+        }
+        let declared = self.inputs.len();
+        let actual = self.gates.iter().filter(|g| g.kind == GateKind::Input).count();
+        if declared != actual {
+            return Err(format!("{actual} Input gates but {declared} declared inputs"));
+        }
+        Ok(())
+    }
+
+    /// Ids of gates reachable from the outputs (the "live" cone).
+    pub fn live_cone(&self) -> Vec<bool> {
+        let mut live = vec![false; self.gates.len()];
+        let mut stack: Vec<NodeId> = self.outputs.clone();
+        while let Some(id) = stack.pop() {
+            if std::mem::replace(&mut live[id as usize], true) {
+                continue;
+            }
+            stack.extend_from_slice(&self.gates[id as usize].fanins);
+        }
+        live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor2() -> Netlist {
+        let mut nl = Netlist::new("xor2");
+        let a = nl.add_input();
+        let b = nl.add_input();
+        let x = nl.push(GateKind::Xor, vec![a, b]);
+        nl.set_outputs(vec![x]);
+        nl
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let nl = xor2();
+        assert!(nl.validate().is_ok());
+        assert_eq!(nl.n_inputs(), 2);
+        assert_eq!(nl.n_outputs(), 1);
+        assert_eq!(nl.n_logic_gates(), 1);
+    }
+
+    #[test]
+    fn validate_rejects_non_topological() {
+        let mut nl = xor2();
+        nl.gates[0].fanins = vec![2]; // input gains a forward fanin
+        assert!(nl.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_arity() {
+        let mut nl = xor2();
+        nl.gates[2].kind = GateKind::Not; // Not with two fanins
+        assert!(nl.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_dangling_output() {
+        let mut nl = xor2();
+        nl.outputs = vec![99];
+        assert!(nl.validate().is_err());
+    }
+
+    #[test]
+    fn live_cone_skips_dead_gates() {
+        let mut nl = xor2();
+        let a = nl.inputs[0];
+        let dead = nl.push(GateKind::Not, vec![a]);
+        let live = nl.live_cone();
+        assert!(!live[dead as usize]);
+        assert!(live[2]); // the xor
+    }
+
+    #[test]
+    fn gate_eval_words() {
+        assert_eq!(GateKind::And.eval_words(&[0b1100, 0b1010]), 0b1000);
+        assert_eq!(GateKind::Or.eval_words(&[0b1100, 0b1010]), 0b1110);
+        assert_eq!(GateKind::Xor.eval_words(&[0b1100, 0b1010]), 0b0110);
+        assert_eq!(GateKind::Nand.eval_words(&[0b1100, 0b1010]), !0b1000u64);
+        assert_eq!(GateKind::Nor.eval_words(&[0b1100, 0b1010]), !0b1110u64);
+        assert_eq!(GateKind::Xnor.eval_words(&[0b1100, 0b1010]), !0b0110u64);
+        assert_eq!(GateKind::Not.eval_words(&[0b1]), !0b1u64);
+        assert_eq!(GateKind::Buf.eval_words(&[42]), 42);
+        assert_eq!(GateKind::Const0.eval_words(&[]), 0);
+        assert_eq!(GateKind::Const1.eval_words(&[]), !0);
+    }
+
+    #[test]
+    fn nary_gates() {
+        // 3-input AND over packed words.
+        assert_eq!(GateKind::And.eval_words(&[0b1110, 0b1101, 0b1011]), 0b1000);
+        assert_eq!(GateKind::Xor.eval_words(&[0b1, 0b1, 0b1]), 0b1);
+    }
+}

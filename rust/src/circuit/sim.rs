@@ -1,0 +1,215 @@
+//! Bit-parallel exhaustive simulation.
+//!
+//! For a circuit with `n` inputs we evaluate all `2^n` input points at
+//! once, packing 64 points per `u64` word. Input point `x` (an integer
+//! whose bit `j` is the value of input `j` — LSB-first, matching the
+//! python truth table in `compile/kernels/sop_eval.py`) lands in word
+//! `x / 64`, bit `x % 64`.
+//!
+//! This is the sound-and-complete error oracle for every circuit in the
+//! paper's benchmark set (n <= 8 means at most 4 words per signal) and the
+//! rust-side cross-check of the PJRT evaluator artifact.
+
+use super::netlist::{GateKind, Netlist, NodeId};
+
+/// Truth tables for every gate of a netlist, one `Vec<u64>` row per gate.
+#[derive(Debug, Clone)]
+pub struct TruthTables {
+    pub n_inputs: usize,
+    pub words: usize,
+    rows: Vec<Vec<u64>>,
+}
+
+/// The canonical truth-table row of input variable `j` out of `n`.
+pub fn input_pattern(j: usize, n: usize, words: usize) -> Vec<u64> {
+    let mut row = vec![0u64; words];
+    if j < 6 {
+        // Pattern repeats within a word: 2^j zeros then 2^j ones.
+        let period = 1u64 << (j + 1);
+        let mut w = 0u64;
+        for bit in 0..64 {
+            if (bit as u64) % period >= period / 2 {
+                w |= 1 << bit;
+            }
+        }
+        for r in row.iter_mut() {
+            *r = w;
+        }
+    } else {
+        // Whole words alternate.
+        let wperiod = 1usize << (j - 6 + 1);
+        for (wi, r) in row.iter_mut().enumerate() {
+            if wi % wperiod >= wperiod / 2 {
+                *r = !0;
+            }
+        }
+    }
+    // Mask out points beyond 2^n when n < 6.
+    if n < 6 {
+        let mask = (1u64 << (1usize << n)) - 1;
+        row[0] &= mask;
+    }
+    row
+}
+
+impl TruthTables {
+    /// Simulate every gate of `nl` over all `2^n` input points.
+    pub fn simulate(nl: &Netlist) -> Self {
+        let n = nl.n_inputs();
+        assert!(n <= 16, "exhaustive simulation capped at 16 inputs");
+        let words = (1usize << n).div_ceil(64);
+        let mask = if n < 6 { (1u64 << (1usize << n)) - 1 } else { !0 };
+
+        let mut rows: Vec<Vec<u64>> = Vec::with_capacity(nl.gates.len());
+        let mut input_idx = 0usize;
+        let mut fanin_buf: Vec<u64> = Vec::new();
+        for gate in &nl.gates {
+            let row = match gate.kind {
+                GateKind::Input => {
+                    let r = input_pattern(input_idx, n, words);
+                    input_idx += 1;
+                    r
+                }
+                _ => {
+                    let mut row = vec![0u64; words];
+                    for w in 0..words {
+                        fanin_buf.clear();
+                        fanin_buf
+                            .extend(gate.fanins.iter().map(|&f| rows[f as usize][w]));
+                        row[w] = gate.kind.eval_words(&fanin_buf) & mask;
+                    }
+                    row
+                }
+            };
+            rows.push(row);
+        }
+        TruthTables { n_inputs: n, words, rows }
+    }
+
+    pub fn row(&self, id: NodeId) -> &[u64] {
+        &self.rows[id as usize]
+    }
+
+    /// Value of gate `id` at input point `x`.
+    pub fn bit(&self, id: NodeId, x: usize) -> bool {
+        (self.rows[id as usize][x / 64] >> (x % 64)) & 1 == 1
+    }
+
+    /// Integer interpretation (LSB-first output bus) at input point `x`.
+    pub fn output_value(&self, nl: &Netlist, x: usize) -> u64 {
+        nl.outputs
+            .iter()
+            .enumerate()
+            .fold(0u64, |acc, (i, &o)| acc | ((self.bit(o, x) as u64) << i))
+    }
+
+    /// All output values, indexed by input point.
+    pub fn output_values(&self, nl: &Netlist) -> Vec<u64> {
+        (0..1usize << self.n_inputs)
+            .map(|x| self.output_value(nl, x))
+            .collect()
+    }
+}
+
+/// Maximum and mean absolute error distance between two same-shape circuits.
+pub fn error_stats(exact: &[u64], approx: &[u64]) -> (u64, f64) {
+    assert_eq!(exact.len(), approx.len());
+    let mut max = 0u64;
+    let mut sum = 0u128;
+    for (&e, &a) in exact.iter().zip(approx) {
+        let d = e.abs_diff(a);
+        max = max.max(d);
+        sum += d as u128;
+    }
+    (max, sum as f64 / exact.len() as f64)
+}
+
+/// `true` iff `approx` never deviates from `exact` by more than `et`.
+pub fn is_sound(exact: &[u64], approx: &[u64], et: u64) -> bool {
+    exact.iter().zip(approx).all(|(&e, &a)| e.abs_diff(a) <= et)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::generators::{adder, multiplier};
+    use crate::circuit::netlist::{GateKind, Netlist};
+
+    #[test]
+    fn input_patterns_are_binary_counting() {
+        // For every input point x, bit j of x must equal pattern j at x.
+        for n in 1..=8 {
+            let words = (1usize << n).div_ceil(64);
+            for j in 0..n {
+                let row = input_pattern(j, n, words);
+                for x in 0..1usize << n {
+                    let got = (row[x / 64] >> (x % 64)) & 1;
+                    assert_eq!(got, ((x >> j) & 1) as u64, "n={n} j={j} x={x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xor_truth_table() {
+        let mut nl = Netlist::new("xor2");
+        let a = nl.add_input();
+        let b = nl.add_input();
+        let x = nl.push(GateKind::Xor, vec![a, b]);
+        nl.set_outputs(vec![x]);
+        let tt = TruthTables::simulate(&nl);
+        assert_eq!(tt.row(x)[0], 0b0110);
+    }
+
+    #[test]
+    fn adder_values_match_arithmetic() {
+        for bits in 1..=4 {
+            let nl = adder(bits);
+            let tt = TruthTables::simulate(&nl);
+            let vals = tt.output_values(&nl);
+            for x in 0..1usize << (2 * bits) {
+                let a = x & ((1 << bits) - 1);
+                let b = x >> bits;
+                assert_eq!(vals[x], (a + b) as u64, "bits={bits} a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn multiplier_values_match_arithmetic() {
+        for bits in 1..=4 {
+            let nl = multiplier(bits);
+            let tt = TruthTables::simulate(&nl);
+            let vals = tt.output_values(&nl);
+            for x in 0..1usize << (2 * bits) {
+                let a = x & ((1 << bits) - 1);
+                let b = x >> bits;
+                assert_eq!(vals[x], (a * b) as u64, "bits={bits} a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn error_stats_basics() {
+        let exact = vec![0, 1, 2, 3];
+        let approx = vec![0, 2, 2, 1];
+        let (max, mean) = error_stats(&exact, &approx);
+        assert_eq!(max, 2);
+        assert!((mean - 0.75).abs() < 1e-12);
+        assert!(is_sound(&exact, &approx, 2));
+        assert!(!is_sound(&exact, &approx, 1));
+    }
+
+    #[test]
+    fn seven_input_sim_uses_two_words() {
+        // Cross-word correctness: 7-input AND fires only at x = 127.
+        let mut nl = Netlist::new("and7");
+        let ins: Vec<_> = (0..7).map(|_| nl.add_input()).collect();
+        let g = nl.push(GateKind::And, ins);
+        nl.set_outputs(vec![g]);
+        let tt = TruthTables::simulate(&nl);
+        assert_eq!(tt.words, 2);
+        assert_eq!(tt.row(g)[0], 0);
+        assert_eq!(tt.row(g)[1], 1u64 << 63);
+    }
+}

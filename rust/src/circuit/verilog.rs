@@ -1,0 +1,323 @@
+//! Structural-Verilog subset reader/writer.
+//!
+//! The paper consumes Verilog specifications of the benchmark circuits;
+//! we generate them (`benchmarks/*.v`), write approximate results back
+//! out, and can re-read both. The subset is primitive-gate structural
+//! Verilog: `and/or/nand/nor/xor/xnor/not/buf` instantiations plus
+//! `assign` of an identifier or a `1'b0`/`1'b1` constant. Gate
+//! instantiations may appear in any order; the reader topologically
+//! sorts while building the netlist.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::netlist::{GateKind, Netlist, NodeId};
+
+/// Render `nl` as structural Verilog. Inputs are `in0..`, outputs
+/// `out0..`, internal wires `w<id>`.
+pub fn write_verilog(nl: &Netlist) -> String {
+    let mut s = String::new();
+    let ins: Vec<String> = (0..nl.n_inputs()).map(|i| format!("in{i}")).collect();
+    let outs: Vec<String> = (0..nl.n_outputs()).map(|i| format!("out{i}")).collect();
+    s.push_str(&format!(
+        "module {} ({});\n",
+        nl.name,
+        ins.iter().chain(outs.iter()).cloned().collect::<Vec<_>>().join(", ")
+    ));
+    if !ins.is_empty() {
+        s.push_str(&format!("  input {};\n", ins.join(", ")));
+    }
+    if !outs.is_empty() {
+        s.push_str(&format!("  output {};\n", outs.join(", ")));
+    }
+
+    // Wire name per node: inputs map to their bus name, logic to w<id>.
+    let mut name: HashMap<NodeId, String> = HashMap::new();
+    for (i, &id) in nl.inputs.iter().enumerate() {
+        name.insert(id, format!("in{i}"));
+    }
+    let live = nl.live_cone();
+    let mut wires = Vec::new();
+    for (id, g) in nl.gates.iter().enumerate() {
+        if g.kind == GateKind::Input || !live[id] {
+            continue;
+        }
+        let w = format!("w{id}");
+        name.insert(id as NodeId, w.clone());
+        wires.push(w);
+    }
+    if !wires.is_empty() {
+        s.push_str(&format!("  wire {};\n", wires.join(", ")));
+    }
+
+    for (id, g) in nl.gates.iter().enumerate() {
+        if !live[id] {
+            continue;
+        }
+        match g.kind {
+            GateKind::Input => {}
+            GateKind::Const0 => {
+                s.push_str(&format!("  assign w{id} = 1'b0;\n"));
+            }
+            GateKind::Const1 => {
+                s.push_str(&format!("  assign w{id} = 1'b1;\n"));
+            }
+            _ => {
+                let fanins: Vec<&str> =
+                    g.fanins.iter().map(|f| name[f].as_str()).collect();
+                s.push_str(&format!(
+                    "  {} g{id} (w{id}, {});\n",
+                    g.kind.verilog_name(),
+                    fanins.join(", ")
+                ));
+            }
+        }
+    }
+    for (i, &o) in nl.outputs.iter().enumerate() {
+        s.push_str(&format!("  assign out{i} = {};\n", name[&o]));
+    }
+    s.push_str("endmodule\n");
+    s
+}
+
+#[derive(Debug)]
+enum Stmt {
+    Gate { kind: GateKind, out: String, ins: Vec<String> },
+    AssignWire { out: String, rhs: String },
+    AssignConst { out: String, one: bool },
+}
+
+fn gate_kind(name: &str) -> Option<GateKind> {
+    Some(match name {
+        "and" => GateKind::And,
+        "or" => GateKind::Or,
+        "nand" => GateKind::Nand,
+        "nor" => GateKind::Nor,
+        "xor" => GateKind::Xor,
+        "xnor" => GateKind::Xnor,
+        "not" => GateKind::Not,
+        "buf" => GateKind::Buf,
+        _ => return None,
+    })
+}
+
+/// Parse the structural subset back into a [`Netlist`].
+pub fn parse_verilog(src: &str) -> Result<Netlist> {
+    // Strip comments, split into ';'-terminated statements.
+    let mut clean = String::with_capacity(src.len());
+    for line in src.lines() {
+        let line = match line.find("//") {
+            Some(p) => &line[..p],
+            None => line,
+        };
+        clean.push_str(line);
+        clean.push(' ');
+    }
+
+    let mut module_name = String::from("top");
+    let mut input_order: Vec<String> = Vec::new();
+    let mut output_order: Vec<String> = Vec::new();
+    let mut stmts: Vec<Stmt> = Vec::new();
+
+    for raw in clean.split(';') {
+        let stmt = raw.trim().trim_end_matches("endmodule").trim();
+        if stmt.is_empty() {
+            continue;
+        }
+        let (head, rest) = match stmt.split_once(char::is_whitespace) {
+            Some(p) => p,
+            None => continue,
+        };
+        let rest = rest.trim();
+        match head {
+            "module" => {
+                module_name = rest
+                    .split(['(', ' '])
+                    .next()
+                    .ok_or_else(|| anyhow!("bad module header"))?
+                    .to_string();
+            }
+            "input" => {
+                input_order.extend(idents(rest));
+            }
+            "output" => {
+                output_order.extend(idents(rest));
+            }
+            "wire" => {}
+            "assign" => {
+                let (lhs, rhs) = rest
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("bad assign: {stmt}"))?;
+                let out = lhs.trim().to_string();
+                let rhs = rhs.trim();
+                match rhs {
+                    "1'b0" => stmts.push(Stmt::AssignConst { out, one: false }),
+                    "1'b1" => stmts.push(Stmt::AssignConst { out, one: true }),
+                    ident => stmts.push(Stmt::AssignWire { out, rhs: ident.to_string() }),
+                }
+            }
+            prim => {
+                let kind = gate_kind(prim)
+                    .ok_or_else(|| anyhow!("unsupported construct: {head}"))?;
+                // "name (out, in...)": instance name is optional.
+                let open = stmt.find('(').ok_or_else(|| anyhow!("bad gate: {stmt}"))?;
+                let close =
+                    stmt.rfind(')').ok_or_else(|| anyhow!("bad gate: {stmt}"))?;
+                let ports: Vec<String> = idents(&stmt[open + 1..close]);
+                if ports.len() < 2 {
+                    bail!("gate with <2 ports: {stmt}");
+                }
+                stmts.push(Stmt::Gate {
+                    kind,
+                    out: ports[0].clone(),
+                    ins: ports[1..].to_vec(),
+                });
+            }
+        }
+    }
+
+    // Build: inputs first, then Kahn-style resolution of the statements.
+    let mut nl = Netlist::new(module_name);
+    let mut node_of: HashMap<String, NodeId> = HashMap::new();
+    for name in &input_order {
+        let id = nl.add_input();
+        node_of.insert(name.clone(), id);
+    }
+
+    let mut pending: Vec<Stmt> = stmts;
+    loop {
+        let before = pending.len();
+        pending.retain(|stmt| {
+            let (out, resolved): (&str, Option<(GateKind, Vec<NodeId>)>) = match stmt {
+                Stmt::Gate { kind, out, ins } => {
+                    let fanins: Option<Vec<NodeId>> =
+                        ins.iter().map(|i| node_of.get(i).copied()).collect();
+                    (out, fanins.map(|f| (*kind, f)))
+                }
+                Stmt::AssignWire { out, rhs } => (
+                    out,
+                    node_of.get(rhs).copied().map(|id| (GateKind::Buf, vec![id])),
+                ),
+                Stmt::AssignConst { out, one } => (
+                    out,
+                    Some((if *one { GateKind::Const1 } else { GateKind::Const0 }, vec![])),
+                ),
+            };
+            match resolved {
+                Some((kind, fanins)) => {
+                    let id = nl.push(kind, fanins);
+                    node_of.insert(out.to_string(), id);
+                    false
+                }
+                None => true,
+            }
+        });
+        if pending.is_empty() {
+            break;
+        }
+        if pending.len() == before {
+            bail!("combinational cycle or undriven wires: {pending:?}");
+        }
+    }
+
+    let outputs: Result<Vec<NodeId>> = output_order
+        .iter()
+        .map(|o| node_of.get(o).copied().ok_or_else(|| anyhow!("undriven output {o}")))
+        .collect();
+    nl.set_outputs(outputs?);
+    nl.validate().map_err(|e| anyhow!(e))?;
+    Ok(nl)
+}
+
+fn idents(s: &str) -> Vec<String> {
+    s.split([',', ' ', '\t'])
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::generators::PAPER_BENCHMARKS;
+    use crate::circuit::sim::TruthTables;
+
+    #[test]
+    fn round_trip_all_benchmarks() {
+        for b in &PAPER_BENCHMARKS {
+            let nl = b.netlist();
+            let v = write_verilog(&nl);
+            let back = parse_verilog(&v).unwrap_or_else(|e| panic!("{}: {e}", b.name));
+            assert_eq!(back.n_inputs(), nl.n_inputs());
+            assert_eq!(back.n_outputs(), nl.n_outputs());
+            let tt_a = TruthTables::simulate(&nl);
+            let tt_b = TruthTables::simulate(&back);
+            assert_eq!(
+                tt_a.output_values(&nl),
+                tt_b.output_values(&back),
+                "functional mismatch after round-trip for {}",
+                b.name
+            );
+        }
+    }
+
+    #[test]
+    fn parses_out_of_order_gates() {
+        let src = "
+            module weird (in0, in1, out0);
+              input in0, in1;
+              output out0;
+              wire a, b;
+              // b depends on a but is declared first
+              not g2 (b, a);
+              and g1 (a, in0, in1);
+              assign out0 = b;
+            endmodule";
+        let nl = parse_verilog(src).unwrap();
+        let tt = TruthTables::simulate(&nl);
+        assert_eq!(tt.output_values(&nl), vec![1, 1, 1, 0]); // NAND
+    }
+
+    #[test]
+    fn parses_constants_and_buf() {
+        let src = "
+            module c (in0, out0, out1);
+              input in0;
+              output out0, out1;
+              wire k;
+              assign k = 1'b1;
+              assign out0 = k;
+              assign out1 = in0;
+            endmodule";
+        let nl = parse_verilog(src).unwrap();
+        let tt = TruthTables::simulate(&nl);
+        assert_eq!(tt.output_values(&nl), vec![1, 3]);
+    }
+
+    #[test]
+    fn rejects_cycles() {
+        let src = "
+            module cyc (in0, out0);
+              input in0; output out0;
+              wire a, b;
+              and g1 (a, b, in0);
+              and g2 (b, a, in0);
+              assign out0 = a;
+            endmodule";
+        assert!(parse_verilog(src).is_err());
+    }
+
+    #[test]
+    fn rejects_undriven_output() {
+        let src = "module u (in0, out0); input in0; output out0; endmodule";
+        assert!(parse_verilog(src).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_primitive() {
+        let src = "module u (in0, out0); input in0; output out0; frob g (out0, in0); endmodule";
+        assert!(parse_verilog(src).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! One experiment job: a (benchmark, method, ET) triple, producing the
+//! figures' raw numbers.
+
+use std::time::Instant;
+
+use crate::baselines::{mecals, muscat};
+use crate::circuit::generators::Benchmark;
+use crate::circuit::sim::TruthTables;
+use crate::search::{search_shared, search_xpat, SearchConfig};
+use crate::synth::synthesize_area;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Shared,
+    Xpat,
+    Muscat,
+    Mecals,
+    Exact,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Shared => "SHARED",
+            Method::Xpat => "XPAT",
+            Method::Muscat => "MUSCAT",
+            Method::Mecals => "MECALS",
+            Method::Exact => "EXACT",
+        }
+    }
+
+    pub fn all_compared() -> [Method; 4] {
+        [Method::Shared, Method::Xpat, Method::Muscat, Method::Mecals]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub bench: &'static Benchmark,
+    pub method: Method,
+    pub et: u64,
+    pub search: SearchConfig,
+}
+
+/// One figure point (Fig. 5 keeps the best per job; Fig. 4 additionally
+/// uses `all_points` for the multi-solution scatter).
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub bench: &'static str,
+    pub method: Method,
+    pub et: u64,
+    pub area: f64,
+    pub max_err: u64,
+    pub mean_err: f64,
+    /// (PIT, ITS) for SHARED, (LPP, PPO) for XPAT, (0, 0) otherwise.
+    pub proxy: (usize, usize),
+    pub elapsed_ms: u64,
+    /// Every enumerated solution: (proxy.0, proxy.1, area).
+    pub all_points: Vec<(usize, usize, f64)>,
+}
+
+/// Execute one job. Every produced circuit is re-verified against the
+/// exhaustive oracle before being reported (defence in depth on top of
+/// each method's own guarantee).
+pub fn run_job(job: &Job) -> RunRecord {
+    let nl = job.bench.netlist();
+    let exact = TruthTables::simulate(&nl).output_values(&nl);
+    let start = Instant::now();
+    let rec = match job.method {
+        Method::Exact => RunRecord {
+            bench: job.bench.name,
+            method: job.method,
+            et: job.et,
+            area: synthesize_area(&nl),
+            max_err: 0,
+            mean_err: 0.0,
+            proxy: (0, 0),
+            elapsed_ms: 0,
+            all_points: Vec::new(),
+        },
+        Method::Shared | Method::Xpat => {
+            let out = if job.method == Method::Shared {
+                search_shared(&nl, job.et, &job.search)
+            } else {
+                search_xpat(&nl, job.et, &job.search)
+            };
+            let all_points: Vec<(usize, usize, f64)> = out
+                .solutions
+                .iter()
+                .map(|s| (s.proxy.0, s.proxy.1, s.area))
+                .collect();
+            match out.best() {
+                Some(best) => {
+                    let vals = best.params.output_values();
+                    let sound = exact
+                        .iter()
+                        .zip(&vals)
+                        .all(|(&e, &a)| e.abs_diff(a) <= job.et);
+                    assert!(sound, "unsound solution escaped the search");
+                    RunRecord {
+                        bench: job.bench.name,
+                        method: job.method,
+                        et: job.et,
+                        area: best.area,
+                        max_err: best.max_err,
+                        mean_err: best.mean_err,
+                        proxy: best.proxy,
+                        elapsed_ms: 0,
+                        all_points,
+                    }
+                }
+                None => RunRecord {
+                    bench: job.bench.name,
+                    method: job.method,
+                    et: job.et,
+                    area: f64::INFINITY,
+                    max_err: u64::MAX,
+                    mean_err: f64::INFINITY,
+                    proxy: (0, 0),
+                    elapsed_ms: 0,
+                    all_points,
+                },
+            }
+        }
+        Method::Muscat | Method::Mecals => {
+            let res = if job.method == Method::Muscat {
+                muscat(&nl, job.et)
+            } else {
+                mecals(&nl, job.et)
+            };
+            let vals = TruthTables::simulate(&res.netlist)
+                .output_values(&res.netlist);
+            assert!(
+                exact.iter().zip(&vals).all(|(&e, &a)| e.abs_diff(a) <= job.et),
+                "unsound baseline result"
+            );
+            RunRecord {
+                bench: job.bench.name,
+                method: job.method,
+                et: job.et,
+                area: res.area,
+                max_err: res.max_err,
+                mean_err: res.mean_err,
+                proxy: (0, 0),
+                elapsed_ms: 0,
+                all_points: Vec::new(),
+            }
+        }
+    };
+    RunRecord { elapsed_ms: start.elapsed().as_millis() as u64, ..rec }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::generators::benchmark_by_name;
+
+    fn quick() -> SearchConfig {
+        SearchConfig {
+            pool: 6,
+            solutions_per_cell: 2,
+            max_sat_cells: 2,
+            conflict_budget: Some(50_000),
+            time_budget_ms: 20_000,
+        }
+    }
+
+    #[test]
+    fn all_methods_produce_sound_records_on_adder_i4() {
+        let bench = benchmark_by_name("adder_i4").unwrap();
+        for method in Method::all_compared() {
+            let rec = run_job(&Job { bench, method, et: 2, search: quick() });
+            assert!(rec.area.is_finite(), "{}", method.name());
+            assert!(rec.max_err <= 2, "{}", method.name());
+        }
+    }
+
+    #[test]
+    fn exact_method_reports_reference_area() {
+        let bench = benchmark_by_name("mult_i4").unwrap();
+        let rec = run_job(&Job { bench, method: Method::Exact, et: 0, search: quick() });
+        let direct = synthesize_area(&bench.netlist());
+        assert_eq!(rec.area, direct);
+        assert_eq!(rec.max_err, 0);
+    }
+
+    #[test]
+    fn template_methods_report_scatter_points() {
+        let bench = benchmark_by_name("adder_i4").unwrap();
+        let rec = run_job(&Job {
+            bench,
+            method: Method::Shared,
+            et: 1,
+            search: quick(),
+        });
+        assert!(!rec.all_points.is_empty());
+        assert!(rec.all_points.iter().any(|&(_, _, a)| a == rec.area));
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator: the experiment orchestrator that owns the process
+//! event loop. Jobs (benchmark × method × ET) run on a std::thread
+//! worker pool (the build environment vendors no tokio; SAT search is
+//! CPU-bound, so threads + channels are the right tool anyway — see
+//! Cargo.toml note), results stream back over a channel and are
+//! aggregated into the figure series that `report` renders.
+
+pub mod jobs;
+pub mod sweep;
+
+pub use jobs::{run_job, Job, Method, RunRecord};
+pub use sweep::{run_sweep, SweepPlan};

@@ -1,0 +1,147 @@
+//! Parallel sweep execution: fan a job list out over a worker pool and
+//! collect records in a deterministic order.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::circuit::generators::{Benchmark, PAPER_BENCHMARKS};
+use crate::search::SearchConfig;
+
+use super::jobs::{run_job, Job, Method, RunRecord};
+
+/// A declarative sweep: which benchmarks, methods and ET values to run.
+#[derive(Debug, Clone)]
+pub struct SweepPlan {
+    pub benches: Vec<&'static Benchmark>,
+    pub methods: Vec<Method>,
+    /// `None` = each benchmark's paper ET sweep; `Some(v)` = fixed list.
+    pub ets: Option<Vec<u64>>,
+    pub search: SearchConfig,
+    pub workers: usize,
+}
+
+impl Default for SweepPlan {
+    fn default() -> Self {
+        SweepPlan {
+            benches: PAPER_BENCHMARKS.iter().collect(),
+            methods: Method::all_compared().to_vec(),
+            ets: None,
+            search: SearchConfig::default(),
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        }
+    }
+}
+
+impl SweepPlan {
+    pub fn jobs(&self) -> Vec<Job> {
+        let mut jobs = Vec::new();
+        for &bench in &self.benches {
+            let ets = self.ets.clone().unwrap_or_else(|| bench.et_sweep());
+            for &method in &self.methods {
+                for &et in &ets {
+                    jobs.push(Job { bench, method, et, search: self.search.clone() });
+                }
+            }
+        }
+        jobs
+    }
+}
+
+/// Run the plan on a worker pool; records return in job order.
+pub fn run_sweep(plan: &SweepPlan) -> Vec<RunRecord> {
+    let jobs = plan.jobs();
+    let n_jobs = jobs.len();
+    if n_jobs == 0 {
+        return Vec::new();
+    }
+    let queue = Arc::new(Mutex::new(
+        jobs.into_iter().enumerate().collect::<Vec<(usize, Job)>>(),
+    ));
+    let (tx, rx) = mpsc::channel::<(usize, RunRecord)>();
+    let workers = plan.workers.clamp(1, n_jobs);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                let next = queue.lock().unwrap().pop();
+                match next {
+                    Some((idx, job)) => {
+                        let rec = run_job(&job);
+                        if tx.send((idx, rec)).is_err() {
+                            return;
+                        }
+                    }
+                    None => return,
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<RunRecord>> = (0..n_jobs).map(|_| None).collect();
+        for (idx, rec) in rx {
+            slots[idx] = Some(rec);
+        }
+        slots.into_iter().map(|s| s.expect("worker died mid-job")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::generators::benchmark_by_name;
+
+    fn tiny_plan() -> SweepPlan {
+        SweepPlan {
+            benches: vec![benchmark_by_name("adder_i4").unwrap()],
+            methods: vec![Method::Shared, Method::Muscat],
+            ets: Some(vec![1, 2]),
+            search: SearchConfig {
+                pool: 5,
+                solutions_per_cell: 1,
+                max_sat_cells: 1,
+                conflict_budget: Some(20_000),
+                time_budget_ms: 20_000,
+            },
+            workers: 2,
+        }
+    }
+
+    #[test]
+    fn sweep_returns_records_in_job_order() {
+        let plan = tiny_plan();
+        let jobs = plan.jobs();
+        let recs = run_sweep(&plan);
+        assert_eq!(recs.len(), jobs.len());
+        for (j, r) in jobs.iter().zip(&recs) {
+            assert_eq!(j.bench.name, r.bench);
+            assert_eq!(j.method, r.method);
+            assert_eq!(j.et, r.et);
+        }
+    }
+
+    #[test]
+    fn single_worker_matches_parallel_areas() {
+        let mut p1 = tiny_plan();
+        p1.workers = 1;
+        let mut p4 = tiny_plan();
+        p4.workers = 4;
+        let a: Vec<f64> = run_sweep(&p1).iter().map(|r| r.area).collect();
+        let b: Vec<f64> = run_sweep(&p4).iter().map(|r| r.area).collect();
+        assert_eq!(a, b, "sweep must be deterministic across worker counts");
+    }
+
+    #[test]
+    fn default_plan_covers_paper_grid() {
+        let plan = SweepPlan::default();
+        let jobs = plan.jobs();
+        // 6 benchmarks x 4 methods x per-bench ET count.
+        let expected: usize = PAPER_BENCHMARKS
+            .iter()
+            .map(|b| b.et_sweep().len() * 4)
+            .sum();
+        assert_eq!(jobs.len(), expected);
+    }
+}

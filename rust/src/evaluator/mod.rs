@@ -1,0 +1,16 @@
+//! Bulk exhaustive evaluation of template instantiations.
+//!
+//! Two engines with identical semantics:
+//! * [`rust_eval`] — bit-parallel host evaluation (64 input points per
+//!   word). This is the oracle for tests and the fallback path.
+//! * the PJRT artifact (see [`crate::runtime`]) — the JAX/Pallas L1
+//!   kernel, AOT-lowered, batching hundreds of candidates per dispatch.
+//!
+//! [`pack`] converts between [`SopParams`](crate::template::SopParams)
+//! and the artifact's flat f32 tensor layout.
+
+pub mod pack;
+pub mod rust_eval;
+
+pub use pack::{pack_batch, PackedBatch};
+pub use rust_eval::{evaluate, evaluate_batch, EvalResult};

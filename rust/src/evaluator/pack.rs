@@ -1,0 +1,137 @@
+//! Packing between [`SopParams`] and the PJRT artifact's tensor layout.
+//!
+//! The artifact's shape contract (see `python/compile/model.py`) is
+//! `use_mask [B,T,n], neg_mask [B,T,n], out_sel [B,m,T], out_const [B,m],
+//! exact [2^n]`, all f32 {0,1}, with a fixed batch B. Short batches are
+//! padded with empty instantiations (harmless: they evaluate to constant
+//! 0 and are sliced away on return).
+
+use crate::template::SopParams;
+
+#[derive(Debug, Clone)]
+pub struct PackedBatch {
+    pub n: usize,
+    pub m: usize,
+    pub t: usize,
+    pub b: usize,
+    /// Real (unpadded) batch entries.
+    pub len: usize,
+    pub use_mask: Vec<f32>,
+    pub neg_mask: Vec<f32>,
+    pub out_sel: Vec<f32>,
+    pub out_const: Vec<f32>,
+}
+
+/// Pack up to `b` instantiations; `params.len() <= b` is required and all
+/// entries must share the artifact geometry.
+pub fn pack_batch(params: &[SopParams], n: usize, m: usize, t: usize, b: usize)
+                  -> PackedBatch {
+    assert!(params.len() <= b, "batch overflow: {} > {b}", params.len());
+    let mut out = PackedBatch {
+        n,
+        m,
+        t,
+        b,
+        len: params.len(),
+        use_mask: vec![0.0; b * t * n],
+        neg_mask: vec![0.0; b * t * n],
+        out_sel: vec![0.0; b * m * t],
+        out_const: vec![0.0; b * m],
+    };
+    for (bi, p) in params.iter().enumerate() {
+        assert_eq!((p.n, p.m, p.t), (n, m, t), "geometry mismatch");
+        for k in 0..t {
+            for j in 0..n {
+                out.use_mask[bi * t * n + k * n + j] = p.uses(k, j) as u8 as f32;
+                out.neg_mask[bi * t * n + k * n + j] =
+                    p.negated(k, j) as u8 as f32;
+            }
+        }
+        for i in 0..m {
+            for k in 0..t {
+                out.out_sel[bi * m * t + i * t + k] = p.selects(i, k) as u8 as f32;
+            }
+            out.out_const[bi * m + i] = p.out_const[i] as u8 as f32;
+        }
+    }
+    out
+}
+
+/// Widen (or check) an instantiation to the artifact's pool size `t` by
+/// appending unused products.
+pub fn widen_to_pool(p: &SopParams, t: usize) -> SopParams {
+    assert!(p.t <= t, "pool too small: {} > {t}", p.t);
+    if p.t == t {
+        return p.clone();
+    }
+    let mut q = SopParams::empty(p.n, p.m, t);
+    for k in 0..p.t {
+        for j in 0..p.n {
+            q.use_mask[k * p.n + j] = p.use_mask[k * p.n + j];
+            q.neg_mask[k * p.n + j] = p.neg_mask[k * p.n + j];
+        }
+    }
+    for i in 0..p.m {
+        for k in 0..p.t {
+            q.out_sel[i * t + k] = p.out_sel[i * p.t + k];
+        }
+        q.out_const[i] = p.out_const[i];
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn pack_layout_roundtrip() {
+        let mut rng = Rng::seed_from(3);
+        let p = SopParams::random(&mut rng, 3, 2, 4, 0.5, 0.5);
+        let packed = pack_batch(&[p.clone()], 3, 2, 4, 2);
+        assert_eq!(packed.len, 1);
+        for k in 0..4 {
+            for j in 0..3 {
+                assert_eq!(
+                    packed.use_mask[k * 3 + j] > 0.5,
+                    p.uses(k, j)
+                );
+                assert_eq!(packed.neg_mask[k * 3 + j] > 0.5, p.negated(k, j));
+            }
+        }
+        for i in 0..2 {
+            for k in 0..4 {
+                assert_eq!(packed.out_sel[i * 4 + k] > 0.5, p.selects(i, k));
+            }
+        }
+        // Padding slot stays all-zero.
+        assert!(packed.use_mask[12..].iter().all(|&v| v == 0.0));
+        assert!(packed.out_sel[8..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn widen_preserves_function() {
+        let mut rng = Rng::seed_from(11);
+        let p = SopParams::random(&mut rng, 4, 3, 5, 0.4, 0.4);
+        let q = widen_to_pool(&p, 9);
+        assert_eq!(q.t, 9);
+        assert_eq!(p.output_values(), q.output_values());
+        assert_eq!(p.pit(), q.pit());
+        assert_eq!(p.its(), q.its());
+    }
+
+    #[test]
+    #[should_panic(expected = "batch overflow")]
+    fn overflow_panics() {
+        let p = SopParams::empty(2, 1, 2);
+        pack_batch(&[p.clone(), p.clone(), p], 2, 1, 2, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "geometry mismatch")]
+    fn geometry_mismatch_panics() {
+        let p = SopParams::empty(2, 1, 2);
+        pack_batch(&[p], 3, 1, 2, 2);
+    }
+}

@@ -1,0 +1,169 @@
+//! Bit-parallel exhaustive evaluator (the host-side oracle).
+
+use crate::circuit::sim::input_pattern;
+use crate::template::SopParams;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalResult {
+    pub max_err: u64,
+    pub mean_err: f64,
+    /// Output value per input point.
+    pub values: Vec<u64>,
+}
+
+/// Scratch space reused across candidates of one geometry — the batch
+/// path allocates it once instead of ~(t + m + n) Vecs per candidate
+/// (EXPERIMENTS.md §Perf iteration 1). Word count is capped at 16
+/// inputs -> 1024 words, but the paper geometries use at most 4.
+const MAX_WORDS: usize = 4;
+
+struct Scratch {
+    inputs: Vec<[u64; MAX_WORDS]>,
+    prods: Vec<[u64; MAX_WORDS]>,
+    bits: Vec<[u64; MAX_WORDS]>,
+}
+
+impl Scratch {
+    fn new(n: usize, t: usize, m: usize) -> Self {
+        assert!(n <= 8, "fast evaluator capped at 8 inputs (paper max)");
+        let words = (1usize << n).div_ceil(64);
+        let mut inputs = vec![[0u64; MAX_WORDS]; n];
+        for (j, row) in inputs.iter_mut().enumerate() {
+            for (w, word) in input_pattern(j, n, words).into_iter().enumerate() {
+                row[w] = word;
+            }
+        }
+        Scratch { inputs, prods: vec![[0; MAX_WORDS]; t], bits: vec![[0; MAX_WORDS]; m] }
+    }
+}
+
+fn evaluate_with(p: &SopParams, exact: &[u64], s: &mut Scratch) -> EvalResult {
+    let n = p.n;
+    let words = (1usize << n).div_ceil(64);
+    let mask = if n < 6 { (1u64 << (1usize << n)) - 1 } else { !0 };
+
+    for k in 0..p.t {
+        let row = &mut s.prods[k];
+        row[..words].fill(mask);
+        for j in 0..n {
+            if !p.uses(k, j) {
+                continue;
+            }
+            let neg = if p.negated(k, j) { !0u64 } else { 0 };
+            for w in 0..words {
+                row[w] &= s.inputs[j][w] ^ neg;
+            }
+        }
+    }
+
+    for i in 0..p.m {
+        let init = if p.out_const[i] { mask } else { 0 };
+        let mut acc = [init; MAX_WORDS];
+        for k in 0..p.t {
+            if p.selects(i, k) {
+                for w in 0..words {
+                    acc[w] |= s.prods[k][w];
+                }
+            }
+        }
+        s.bits[i] = acc;
+    }
+
+    let npoints = 1usize << n;
+    let mut values = Vec::with_capacity(npoints);
+    let mut max_err = 0u64;
+    let mut sum = 0u128;
+    for x in 0..npoints {
+        let (w, b) = (x / 64, x % 64);
+        let mut v = 0u64;
+        for (i, row) in s.bits.iter().enumerate().take(p.m) {
+            v |= ((row[w] >> b) & 1) << i;
+        }
+        let d = v.abs_diff(exact[x]);
+        max_err = max_err.max(d);
+        sum += d as u128;
+        values.push(v);
+    }
+    EvalResult { max_err, mean_err: sum as f64 / npoints as f64, values }
+}
+
+/// Evaluate one instantiation against exact values.
+pub fn evaluate(p: &SopParams, exact: &[u64]) -> EvalResult {
+    assert_eq!(exact.len(), 1usize << p.n);
+    let mut s = Scratch::new(p.n, p.t, p.m);
+    evaluate_with(p, exact, &mut s)
+}
+
+/// Evaluate many instantiations (the PJRT artifact's rust twin).
+/// Scratch buffers are shared across the batch.
+pub fn evaluate_batch(batch: &[SopParams], exact: &[u64]) -> Vec<EvalResult> {
+    let Some(first) = batch.first() else {
+        return Vec::new();
+    };
+    assert_eq!(exact.len(), 1usize << first.n);
+    let mut s = Scratch::new(first.n, first.t, first.m);
+    batch
+        .iter()
+        .map(|p| {
+            if (p.n, p.t, p.m) != (first.n, first.t, first.m) {
+                evaluate(p, exact)
+            } else {
+                evaluate_with(p, exact, &mut s)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::generators::PAPER_BENCHMARKS;
+    use crate::circuit::sim::TruthTables;
+    use crate::util::Rng;
+
+    #[test]
+    fn agrees_with_direct_semantics_on_random_params() {
+        for b in &PAPER_BENCHMARKS {
+            let nl = b.netlist();
+            let exact = TruthTables::simulate(&nl).output_values(&nl);
+            let mut rng = Rng::seed_from(0xBEEF ^ b.bits as u64);
+            for _ in 0..5 {
+                let p = SopParams::random(
+                    &mut rng, nl.n_inputs(), nl.n_outputs(), 8, 0.35, 0.3,
+                );
+                let r = evaluate(&p, &exact);
+                let direct = p.output_values();
+                assert_eq!(r.values, direct, "{}", b.name);
+                let (mx, mean) =
+                    crate::circuit::sim::error_stats(&exact, &direct);
+                assert_eq!(r.max_err, mx);
+                assert!((r.mean_err - mean).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn perfect_params_give_zero_error() {
+        // Build params computing out0 = in0 over n=2 (exact = bit0).
+        let mut p = SopParams::empty(2, 1, 1);
+        p.use_mask[0] = true;
+        p.out_sel[0] = true;
+        let exact: Vec<u64> = (0..4u64).map(|x| x & 1).collect();
+        let r = evaluate(&p, &exact);
+        assert_eq!(r.max_err, 0);
+        assert_eq!(r.mean_err, 0.0);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::seed_from(7);
+        let exact: Vec<u64> = (0..16u64).map(|x| x % 8).collect();
+        let ps: Vec<SopParams> = (0..10)
+            .map(|_| SopParams::random(&mut rng, 4, 3, 6, 0.4, 0.3))
+            .collect();
+        let batch = evaluate_batch(&ps, &exact);
+        for (p, r) in ps.iter().zip(&batch) {
+            assert_eq!(*r, evaluate(p, &exact));
+        }
+    }
+}

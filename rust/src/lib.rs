@@ -1,0 +1,30 @@
+//! # sxpat — product-sharing templates for approximate logic synthesis
+//!
+//! A full reproduction of *"An Improved Template for Approximate
+//! Computing"* (Rezaalipour et al., 2025): SMT-style template-based
+//! approximate logic synthesis with the paper's SHARED product-sharing
+//! template, the original XPAT nonshared template, and the MUSCAT /
+//! MECALS baselines, over from-scratch substrates (CDCL SAT solver,
+//! AIG optimiser, technology mapper / area model, Verilog subset I/O).
+//!
+//! Architecture (see DESIGN.md): a rust L3 coordinator owns the search
+//! and experiment orchestration; the bulk-evaluation hot path is a JAX +
+//! Pallas program AOT-lowered to HLO text and executed via PJRT
+//! (`runtime`), with a bit-parallel rust evaluator (`evaluator`) as the
+//! oracle and fallback.
+
+pub mod aig;
+pub mod baselines;
+pub mod bench_support;
+pub mod circuit;
+pub mod coordinator;
+pub mod evaluator;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod sat;
+pub mod search;
+pub mod smt;
+pub mod synth;
+pub mod template;
+pub mod util;

@@ -1,0 +1,303 @@
+//! `sxpat` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   bench-gen                      write benchmark Verilog into benchmarks/
+//!   synth      --bench B --method M --et E     one synthesis job
+//!   sweep      [--out DIR]         Fig. 5: all benches x methods x ETs
+//!   proxy-study [--out DIR]        Fig. 4: scatter + random baseline
+//!   random-baseline --bench B --et E --count N
+//!   verify     --bench B --et E    re-verify SHARED result exhaustively
+//!   nn-eval    [--et-list 0,1,2,4] NN accuracy vs multiplier area
+//!
+//! Flags: --pool, --workers, --budget (SAT conflicts), --pjrt (use the
+//! AOT artifact for bulk evaluation), --artifacts DIR.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use sxpat::baselines::random_sound_baseline;
+use sxpat::circuit::generators::{benchmark_by_name, PAPER_BENCHMARKS};
+use sxpat::circuit::sim::TruthTables;
+use sxpat::circuit::verilog::write_verilog;
+use sxpat::coordinator::{run_job, run_sweep, Job, Method, SweepPlan};
+use sxpat::evaluator::rust_eval::evaluate_batch;
+use sxpat::report::{fig4_csv, fig5_csv, fig5_markdown, records_csv};
+use sxpat::runtime::{find_artifacts_dir, Runtime};
+use sxpat::search::SearchConfig;
+use sxpat::synth::synthesize_area;
+use sxpat::template::SopParams;
+use sxpat::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("bench-gen") => bench_gen(args),
+        Some("synth") => synth(args),
+        Some("sweep") => sweep(args),
+        Some("proxy-study") => proxy_study(args),
+        Some("random-baseline") => random_baseline(args),
+        Some("verify") => verify(args),
+        Some("nn-eval") => nn_eval(args),
+        _ => {
+            eprintln!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "usage: sxpat <bench-gen|synth|sweep|proxy-study|random-baseline|verify|nn-eval> [--flags]
+see rust/src/main.rs header or README.md for details";
+
+fn search_config(args: &Args) -> Result<SearchConfig> {
+    Ok(SearchConfig {
+        pool: args.get_usize_or("pool", 10)?,
+        solutions_per_cell: args.get_usize_or("solutions", 3)?,
+        max_sat_cells: args.get_usize_or("sat-cells", 4)?,
+        conflict_budget: Some(args.get_u64("budget")?.unwrap_or(200_000)),
+        time_budget_ms: args.get_u64("time-ms")?.unwrap_or(120_000),
+    })
+}
+
+fn out_dir(args: &Args) -> Result<PathBuf> {
+    let dir = PathBuf::from(args.get_or("out", "results"));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+fn the_bench(args: &Args) -> Result<&'static sxpat::circuit::Benchmark> {
+    let name = args
+        .get("bench")
+        .ok_or_else(|| anyhow!("--bench <name> required (e.g. adder_i4)"))?;
+    benchmark_by_name(name).ok_or_else(|| {
+        anyhow!(
+            "unknown benchmark {name}; have: {}",
+            PAPER_BENCHMARKS.iter().map(|b| b.name).collect::<Vec<_>>().join(", ")
+        )
+    })
+}
+
+fn bench_gen(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or("out", "benchmarks"));
+    std::fs::create_dir_all(&dir)?;
+    for b in &PAPER_BENCHMARKS {
+        let path = dir.join(format!("{}.v", b.name));
+        std::fs::write(&path, write_verilog(&b.netlist()))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn synth(args: &Args) -> Result<()> {
+    let bench = the_bench(args)?;
+    let et = args.get_u64("et")?.unwrap_or(bench.fig4_et());
+    let method = match args.get_or("method", "shared").as_str() {
+        "shared" => Method::Shared,
+        "xpat" => Method::Xpat,
+        "muscat" => Method::Muscat,
+        "mecals" => Method::Mecals,
+        m => bail!("unknown method {m}"),
+    };
+    let rec = run_job(&Job { bench, method, et, search: search_config(args)? });
+    println!(
+        "{} {} et={} -> area {:.3} µm², max_err {}, mean_err {:.3}, {} ms",
+        rec.bench,
+        rec.method.name(),
+        rec.et,
+        rec.area,
+        rec.max_err,
+        rec.mean_err,
+        rec.elapsed_ms
+    );
+    if method == Method::Shared || method == Method::Xpat {
+        println!("proxy: ({}, {})", rec.proxy.0, rec.proxy.1);
+    }
+    let exact_area = synthesize_area(&bench.netlist());
+    println!("exact area {:.3} µm² -> saving {:.1}%", exact_area,
+             100.0 * (1.0 - rec.area / exact_area));
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let dir = out_dir(args)?;
+    let mut plan = SweepPlan { search: search_config(args)?, ..Default::default() };
+    if let Some(b) = args.get("bench") {
+        plan.benches = vec![benchmark_by_name(b).ok_or_else(|| anyhow!("unknown bench"))?];
+    }
+    if let Some(w) = args.get_u64("workers")? {
+        plan.workers = w as usize;
+    }
+    println!("running {} jobs on {} workers...", plan.jobs().len(), plan.workers);
+    let records = run_sweep(&plan);
+    std::fs::write(dir.join("records.csv"), records_csv(&records))?;
+    std::fs::write(dir.join("fig5.csv"), fig5_csv(&records))?;
+    std::fs::write(dir.join("fig5.md"), fig5_markdown(&records))?;
+    println!("{}", fig5_markdown(&records));
+    println!("wrote {}/records.csv, fig5.csv, fig5.md", dir.display());
+    Ok(())
+}
+
+fn proxy_study(args: &Args) -> Result<()> {
+    let dir = out_dir(args)?;
+    let count = args.get_usize_or("count", 1000)?;
+    let pool = args.get_usize_or("pool", 10)?;
+    let runtime = if args.has_flag("pjrt") { Some(load_runtime(args)?) } else { None };
+
+    // The paper's Fig. 4 grid: two adders and two multipliers.
+    for name in ["adder_i4", "mult_i4", "adder_i6", "mult_i6"] {
+        let bench = benchmark_by_name(name).unwrap();
+        let et = args.get_u64("et")?.unwrap_or(bench.fig4_et());
+        let nl = bench.netlist();
+        let exact_area = synthesize_area(&nl);
+        let mut records = Vec::new();
+        for method in Method::all_compared() {
+            records.push(run_job(&Job {
+                bench,
+                method,
+                et,
+                search: search_config(args)?,
+            }));
+        }
+        let random = match &runtime {
+            Some(rt) if rt.geometry(name).map(|g| g.t >= pool).unwrap_or(false) => {
+                let g = rt.geometry(name).unwrap().clone();
+                let hook = |batch: &[SopParams], exact: &[u64]| {
+                    let widened: Vec<SopParams> = batch
+                        .iter()
+                        .map(|p| sxpat::evaluator::pack::widen_to_pool(p, g.t))
+                        .collect();
+                    rt.evaluate_batch(name, &widened, exact)
+                        .unwrap_or_else(|_| evaluate_batch(batch, exact))
+                };
+                random_sound_baseline(&nl, et, count, pool, 42, Some(&hook))
+            }
+            _ => random_sound_baseline(&nl, et, count, pool, 42, None),
+        };
+        let csv = fig4_csv(name, et, exact_area, &records, &random);
+        let path = dir.join(format!("fig4_{name}.csv"));
+        std::fs::write(&path, &csv)?;
+        let best_shared = records
+            .iter()
+            .find(|r| r.method == Method::Shared)
+            .map(|r| r.area)
+            .unwrap_or(f64::NAN);
+        println!(
+            "{name} et={et}: exact {exact_area:.2}, SHARED best {best_shared:.2}, \
+             {} random sound pts -> {}",
+            random.len(),
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+fn load_runtime(args: &Args) -> Result<Runtime> {
+    let dir = match args.get("artifacts") {
+        Some(d) => PathBuf::from(d),
+        None => find_artifacts_dir()
+            .ok_or_else(|| anyhow!("no artifacts/ found; run `make artifacts`"))?,
+    };
+    let rt = Runtime::load(&dir)?;
+    println!("PJRT runtime up: platform {}", rt.platform());
+    Ok(rt)
+}
+
+fn random_baseline(args: &Args) -> Result<()> {
+    let bench = the_bench(args)?;
+    let et = args.get_u64("et")?.unwrap_or(bench.fig4_et());
+    let count = args.get_usize_or("count", 1000)?;
+    let pool = args.get_usize_or("pool", 10)?;
+    let nl = bench.netlist();
+    let pts = if args.has_flag("pjrt") {
+        let rt = load_runtime(args)?;
+        let name = bench.name;
+        let g = rt
+            .geometry(name)
+            .ok_or_else(|| anyhow!("no artifact for {name}"))?
+            .clone();
+        let hook = |batch: &[SopParams], exact: &[u64]| {
+            let widened: Vec<SopParams> = batch
+                .iter()
+                .map(|p| sxpat::evaluator::pack::widen_to_pool(p, g.t))
+                .collect();
+            rt.evaluate_batch(name, &widened, exact)
+                .unwrap_or_else(|_| evaluate_batch(batch, exact))
+        };
+        random_sound_baseline(&nl, et, count, pool, 42, Some(&hook))
+    } else {
+        random_sound_baseline(&nl, et, count, pool, 42, None)
+    };
+    println!("{} sound random approximations (target {count})", pts.len());
+    if let (Some(first), Some(last)) = (pts.first(), pts.last()) {
+        println!("area range [{:.3}, {:.3}] µm²", first.area, last.area);
+    }
+    Ok(())
+}
+
+fn verify(args: &Args) -> Result<()> {
+    let bench = the_bench(args)?;
+    let et = args.get_u64("et")?.unwrap_or(bench.fig4_et());
+    let nl = bench.netlist();
+    let rec = run_job(&Job {
+        bench,
+        method: Method::Shared,
+        et,
+        search: search_config(args)?,
+    });
+    let exact = TruthTables::simulate(&nl).output_values(&nl);
+    println!(
+        "SHARED on {} et={}: area {:.3}, max_err {} (bound {}) over {} points — {}",
+        bench.name,
+        et,
+        rec.area,
+        rec.max_err,
+        et,
+        exact.len(),
+        if rec.max_err <= et { "SOUND" } else { "VIOLATION" }
+    );
+    if rec.max_err > et {
+        bail!("verification failed");
+    }
+    Ok(())
+}
+
+fn nn_eval(args: &Args) -> Result<()> {
+    use sxpat::nn::{synthetic_digits, MultLut, QuantMlp};
+    let ets: Vec<u64> = args
+        .get_or("et-list", "0,2,4,8,16")
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|_| anyhow!("bad --et-list")))
+        .collect::<Result<_>>()?;
+    let bench = benchmark_by_name("mult_i8").unwrap();
+    let train = synthetic_digits(300, 11);
+    let test = synthetic_digits(200, 77);
+    let mlp = QuantMlp::train(&train, 12, 15, 5);
+    let exact_area = synthesize_area(&bench.netlist());
+    let exact_acc = mlp.accuracy(&test, &MultLut::exact());
+    println!("bench=mult_i8 exact: area {exact_area:.2} µm², accuracy {exact_acc:.3}");
+    println!("et,area,area_saving_pct,max_err,accuracy");
+    for et in ets {
+        if et == 0 {
+            println!("0,{exact_area:.3},0.0,0,{exact_acc:.3}");
+            continue;
+        }
+        // MUSCAT is the fast sound method at i8 scale.
+        let res = sxpat::baselines::muscat(&bench.netlist(), et);
+        let lut = MultLut::from_netlist(&res.netlist);
+        let acc = mlp.accuracy(&test, &lut);
+        println!(
+            "{et},{:.3},{:.1},{},{acc:.3}",
+            res.area,
+            100.0 * (1.0 - res.area / exact_area),
+            lut.max_error()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Synthetic 8x8 "digits" workload: ten prototype glyphs rendered as
+//! 4-bit grayscale images, perturbed with seeded noise — a deterministic
+//! stand-in for the UCI digits set that exercises the same code path
+//! (DESIGN.md §2 substitution table).
+
+use crate::util::Rng;
+
+pub const IMG: usize = 8;
+pub const N_CLASSES: usize = 10;
+
+/// Prototype strokes per digit class, on an 8x8 grid ('#' = bright).
+const GLYPHS: [[&str; 8]; 10] = [
+    [" ####   ", "##  ##  ", "##  ##  ", "##  ##  ", "##  ##  ", "##  ##  ", " ####   ", "        "],
+    ["  ##    ", " ###    ", "  ##    ", "  ##    ", "  ##    ", "  ##    ", " ####   ", "        "],
+    [" ####   ", "##  ##  ", "    ##  ", "   ##   ", "  ##    ", " ##     ", "######  ", "        "],
+    [" ####   ", "##  ##  ", "    ##  ", "  ###   ", "    ##  ", "##  ##  ", " ####   ", "        "],
+    ["   ###  ", "  ####  ", " ## ##  ", "##  ##  ", "######  ", "    ##  ", "    ##  ", "        "],
+    ["######  ", "##      ", "#####   ", "    ##  ", "    ##  ", "##  ##  ", " ####   ", "        "],
+    [" ####   ", "##      ", "#####   ", "##  ##  ", "##  ##  ", "##  ##  ", " ####   ", "        "],
+    ["######  ", "    ##  ", "   ##   ", "  ##    ", " ##     ", " ##     ", " ##     ", "        "],
+    [" ####   ", "##  ##  ", " ####   ", "##  ##  ", "##  ##  ", "##  ##  ", " ####   ", "        "],
+    [" ####   ", "##  ##  ", "##  ##  ", " #####  ", "    ##  ", "    ##  ", " ####   ", "        "],
+];
+
+/// One labelled image: 64 pixels quantised to 4 bits (0..=15).
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub pixels: Vec<u8>,
+    pub label: usize,
+}
+
+/// Render `count` noisy samples (balanced across classes).
+pub fn synthetic_digits(count: usize, seed: u64) -> Vec<Sample> {
+    let mut rng = Rng::seed_from(seed);
+    let mut out = Vec::with_capacity(count);
+    for idx in 0..count {
+        let label = idx % N_CLASSES;
+        let glyph = &GLYPHS[label];
+        let mut pixels = Vec::with_capacity(IMG * IMG);
+        for row in glyph {
+            for ch in row.chars() {
+                let base = if ch == '#' { 13u8 } else { 1u8 };
+                // ±2 noise, clamped to the 4-bit range.
+                let noise = rng.below(5) as i16 - 2;
+                pixels.push((base as i16 + noise).clamp(0, 15) as u8);
+            }
+        }
+        // Occasional pixel dropouts make the task non-trivial.
+        for _ in 0..3 {
+            let p = rng.usize_below(IMG * IMG);
+            pixels[p] = rng.below(16) as u8;
+        }
+        out.push(Sample { pixels, label });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let data = synthetic_digits(40, 7);
+        assert_eq!(data.len(), 40);
+        for s in &data {
+            assert_eq!(s.pixels.len(), 64);
+            assert!(s.pixels.iter().all(|&p| p <= 15));
+            assert!(s.label < N_CLASSES);
+        }
+    }
+
+    #[test]
+    fn deterministic_and_balanced() {
+        let a = synthetic_digits(30, 1);
+        let b = synthetic_digits(30, 1);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.pixels, y.pixels);
+        }
+        let count0 = a.iter().filter(|s| s.label == 0).count();
+        assert_eq!(count0, 3);
+    }
+
+    #[test]
+    fn glyphs_are_distinguishable() {
+        // Prototype images of different classes differ in many pixels.
+        let protos = synthetic_digits(10, 99);
+        for i in 0..10 {
+            for j in i + 1..10 {
+                let d: usize = protos[i]
+                    .pixels
+                    .iter()
+                    .zip(&protos[j].pixels)
+                    .filter(|(a, b)| a.abs_diff(**b) > 6)
+                    .count();
+                assert!(d >= 4, "classes {i} and {j} too similar ({d})");
+            }
+        }
+    }
+}

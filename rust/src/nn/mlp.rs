@@ -1,0 +1,239 @@
+//! Quantised two-layer MLP whose every multiplication goes through a
+//! 4x4-bit multiplier lookup table — exact or approximate.
+//!
+//! Training is a tiny perceptron-style fit on the synthetic digits (all
+//! integer arithmetic in the forward pass, so swapping the multiplier
+//! LUT is the *only* difference between exact and approximate
+//! inference). This mirrors how approximate multipliers are dropped into
+//! edge NN accelerators [1].
+
+use crate::circuit::sim::TruthTables;
+use crate::circuit::Netlist;
+use crate::util::Rng;
+
+use super::digits::{Sample, IMG, N_CLASSES};
+
+/// 16x16 unsigned multiplier lookup table (4-bit operands).
+#[derive(Debug, Clone)]
+pub struct MultLut {
+    table: Vec<u16>, // 256 entries, index = a | (b << 4)
+}
+
+impl MultLut {
+    pub fn exact() -> Self {
+        let mut table = vec![0u16; 256];
+        for a in 0..16u16 {
+            for b in 0..16u16 {
+                table[(a | (b << 4)) as usize] = a * b;
+            }
+        }
+        MultLut { table }
+    }
+
+    /// Build from any 8-input circuit with the mult_i8 bus convention
+    /// (inputs 0..4 = operand A LSB-first, 4..8 = operand B).
+    pub fn from_netlist(nl: &Netlist) -> Self {
+        assert_eq!(nl.n_inputs(), 8, "expected a 4x4 multiplier");
+        let vals = TruthTables::simulate(nl).output_values(nl);
+        let table = vals.iter().map(|&v| v as u16).collect();
+        MultLut { table }
+    }
+
+    /// Build directly from precomputed output values (e.g. the PJRT
+    /// evaluator's `values` vector for a template instantiation).
+    pub fn from_values(vals: &[u64]) -> Self {
+        assert_eq!(vals.len(), 256);
+        MultLut { table: vals.iter().map(|&v| v as u16).collect() }
+    }
+
+    #[inline]
+    pub fn mul(&self, a: u8, b: u8) -> u16 {
+        debug_assert!(a < 16 && b < 16);
+        self.table[(a as usize) | ((b as usize) << 4)]
+    }
+
+    /// Worst-case absolute error against the exact product.
+    pub fn max_error(&self) -> u16 {
+        let exact = MultLut::exact();
+        (0..256)
+            .map(|i| self.table[i].abs_diff(exact.table[i]))
+            .max()
+            .unwrap()
+    }
+}
+
+/// Two-layer quantised MLP: 64 -> hidden -> 10. Weights are 4-bit signed
+/// magnitudes (sign handled outside the LUT, as in unsigned-multiplier
+/// accelerator datapaths).
+#[derive(Debug, Clone)]
+pub struct QuantMlp {
+    pub hidden: usize,
+    /// [hidden][64]: (magnitude 0..=15, negative?).
+    w1: Vec<(u8, bool)>,
+    /// [10][hidden].
+    w2: Vec<(u8, bool)>,
+}
+
+impl QuantMlp {
+    /// Train with a simple sign-based perceptron rule, then quantise.
+    pub fn train(data: &[Sample], hidden: usize, epochs: usize, seed: u64) -> Self {
+        let n_in = IMG * IMG;
+        let mut rng = Rng::seed_from(seed);
+        // Float shadow weights for training only.
+        let mut f1: Vec<f64> = (0..hidden * n_in)
+            .map(|_| rng.f64() * 2.0 - 1.0)
+            .collect();
+        let mut f2: Vec<f64> = (0..N_CLASSES * hidden)
+            .map(|_| rng.f64() * 2.0 - 1.0)
+            .collect();
+        let lr = 0.01;
+        for _ in 0..epochs {
+            for s in data {
+                // Forward (float, for training signal).
+                let h: Vec<f64> = (0..hidden)
+                    .map(|u| {
+                        let dot: f64 = (0..n_in)
+                            .map(|i| f1[u * n_in + i] * s.pixels[i] as f64 / 15.0)
+                            .sum();
+                        dot.max(0.0)
+                    })
+                    .collect();
+                let o: Vec<f64> = (0..N_CLASSES)
+                    .map(|c| (0..hidden).map(|u| f2[c * hidden + u] * h[u]).sum())
+                    .collect();
+                let pred = argmax(&o);
+                if pred == s.label {
+                    continue;
+                }
+                // Perceptron update toward the true class, away from pred.
+                for u in 0..hidden {
+                    f2[s.label * hidden + u] += lr * h[u];
+                    f2[pred * hidden + u] -= lr * h[u];
+                    let backdelta = f2[s.label * hidden + u] - f2[pred * hidden + u];
+                    if h[u] > 0.0 {
+                        for i in 0..n_in {
+                            f1[u * n_in + i] +=
+                                lr * backdelta.signum() * s.pixels[i] as f64 / 15.0 * 0.1;
+                        }
+                    }
+                }
+            }
+        }
+        QuantMlp {
+            hidden,
+            w1: quantise(&f1),
+            w2: quantise(&f2),
+        }
+    }
+
+    /// Integer forward pass; every product goes through `lut`.
+    pub fn infer(&self, pixels: &[u8], lut: &MultLut) -> usize {
+        let n_in = pixels.len();
+        let h: Vec<i32> = (0..self.hidden)
+            .map(|u| {
+                let mut acc = 0i32;
+                for i in 0..n_in {
+                    let (mag, neg) = self.w1[u * n_in + i];
+                    let p = lut.mul(mag, pixels[i]) as i32;
+                    acc += if neg { -p } else { p };
+                }
+                acc.max(0)
+            })
+            .collect();
+        // Re-quantise activations to 4 bits for the second LUT layer.
+        let hmax = h.iter().copied().max().unwrap_or(1).max(1);
+        let hq: Vec<u8> = h.iter().map(|&v| ((v * 15) / hmax) as u8).collect();
+        let o: Vec<i32> = (0..N_CLASSES)
+            .map(|c| {
+                let mut acc = 0i32;
+                for u in 0..self.hidden {
+                    let (mag, neg) = self.w2[c * self.hidden + u];
+                    let p = lut.mul(mag, hq[u]) as i32;
+                    acc += if neg { -p } else { p };
+                }
+                acc
+            })
+            .collect();
+        argmax_i32(&o)
+    }
+
+    /// Classification accuracy over a dataset with the given multiplier.
+    pub fn accuracy(&self, data: &[Sample], lut: &MultLut) -> f64 {
+        let correct = data
+            .iter()
+            .filter(|s| self.infer(&s.pixels, lut) == s.label)
+            .count();
+        correct as f64 / data.len() as f64
+    }
+}
+
+fn quantise(w: &[f64]) -> Vec<(u8, bool)> {
+    let wmax = w.iter().fold(0.0f64, |a, &b| a.max(b.abs())).max(1e-9);
+    w.iter()
+        .map(|&v| (((v.abs() / wmax) * 15.0).round() as u8, v < 0.0))
+        .collect()
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+fn argmax_i32(xs: &[i32]) -> usize {
+    xs.iter().enumerate().max_by_key(|&(_, &v)| v).map(|(i, _)| i).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::generators::multiplier;
+    use crate::nn::digits::synthetic_digits;
+
+    #[test]
+    fn exact_lut_is_multiplication() {
+        let lut = MultLut::exact();
+        for a in 0..16u8 {
+            for b in 0..16u8 {
+                assert_eq!(lut.mul(a, b), a as u16 * b as u16);
+            }
+        }
+        assert_eq!(lut.max_error(), 0);
+    }
+
+    #[test]
+    fn netlist_lut_matches_exact_for_exact_multiplier() {
+        let lut = MultLut::from_netlist(&multiplier(4));
+        assert_eq!(lut.max_error(), 0);
+    }
+
+    #[test]
+    fn training_beats_chance_with_exact_multiplier() {
+        let train = synthetic_digits(200, 11);
+        let test = synthetic_digits(100, 77);
+        let mlp = QuantMlp::train(&train, 12, 12, 5);
+        let acc = mlp.accuracy(&test, &MultLut::exact());
+        assert!(acc > 0.5, "accuracy {acc} not above chance (0.1)");
+    }
+
+    #[test]
+    fn mild_approximation_degrades_gracefully() {
+        let train = synthetic_digits(200, 11);
+        let test = synthetic_digits(100, 77);
+        let mlp = QuantMlp::train(&train, 12, 12, 5);
+        let exact_acc = mlp.accuracy(&test, &MultLut::exact());
+        // ET=4 approximate multiplier: truncate the low two output bits.
+        let vals: Vec<u64> = (0..256u64)
+            .map(|x| ((x & 15) * (x >> 4)) & !3)
+            .collect();
+        let lut = MultLut::from_values(&vals);
+        assert!(lut.max_error() <= 4);
+        let approx_acc = mlp.accuracy(&test, &lut);
+        assert!(
+            approx_acc >= exact_acc - 0.25,
+            "approx {approx_acc} vs exact {exact_acc}"
+        );
+    }
+}

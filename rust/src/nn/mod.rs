@@ -1,0 +1,12 @@
+//! The paper's motivating application (§I): quantised neural-network
+//! inference on edge devices with approximate multipliers. A small MLP
+//! with 4-bit weights/activations runs inference where every multiply is
+//! a 16x16 lookup table — either the exact 4x4 multiplier or an
+//! approximate one produced by any of the ALS methods — so classification
+//! accuracy vs. multiplier area can be traded off exactly as in [1].
+
+pub mod digits;
+pub mod mlp;
+
+pub use digits::synthetic_digits;
+pub use mlp::{MultLut, QuantMlp};

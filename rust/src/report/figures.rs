@@ -1,0 +1,216 @@
+//! Renderers for the paper's evaluation artefacts.
+//!
+//! * Fig. 4 — area vs. proxy value at fixed ET: scatter series per
+//!   method plus the exact-circuit star and the random-sound baseline.
+//! * Fig. 5 — best area per method across the ET sweep.
+
+use std::fmt::Write as _;
+
+use crate::baselines::RandomPoint;
+use crate::coordinator::{Method, RunRecord};
+
+/// Raw record dump (one row per job) — the machine-readable log.
+pub fn records_csv(records: &[RunRecord]) -> String {
+    let mut s = String::from(
+        "bench,method,et,area,max_err,mean_err,proxy_a,proxy_b,elapsed_ms\n",
+    );
+    for r in records {
+        let _ = writeln!(
+            s,
+            "{},{},{},{:.4},{},{:.4},{},{},{}",
+            r.bench,
+            r.method.name(),
+            r.et,
+            r.area,
+            r.max_err,
+            r.mean_err,
+            r.proxy.0,
+            r.proxy.1,
+            r.elapsed_ms
+        );
+    }
+    s
+}
+
+/// Fig. 4 series: every enumerated solution of the template methods
+/// (proxy = PIT+ITS for SHARED, LPP·PPO·m for XPAT — the paper plots
+/// each method against its own proxy), single points for the baseline
+/// methods and the exact star, and the random-sound cloud.
+pub fn fig4_csv(
+    bench: &str,
+    et: u64,
+    exact_area: f64,
+    records: &[RunRecord],
+    random: &[RandomPoint],
+) -> String {
+    let mut s = String::from("bench,et,series,proxy,area\n");
+    let _ = writeln!(s, "{bench},{et},exact,0,{exact_area:.4}");
+    for p in random {
+        let _ = writeln!(s, "{bench},{et},random,{},{:.4}", p.pit + p.its, p.area);
+    }
+    for r in records.iter().filter(|r| r.bench == bench && r.et == et) {
+        match r.method {
+            Method::Shared | Method::Xpat => {
+                for &(a, b, area) in &r.all_points {
+                    let proxy = a + b;
+                    let _ = writeln!(
+                        s,
+                        "{bench},{et},{},{proxy},{area:.4}",
+                        r.method.name()
+                    );
+                }
+            }
+            _ => {
+                let _ = writeln!(
+                    s,
+                    "{bench},{et},{},{},{:.4}",
+                    r.method.name(),
+                    r.proxy.0 + r.proxy.1,
+                    r.area
+                );
+            }
+        }
+    }
+    s
+}
+
+/// Fig. 5 series: per (bench, method), area across the ET sweep.
+pub fn fig5_csv(records: &[RunRecord]) -> String {
+    let mut s = String::from("bench,method,et,area\n");
+    for r in records {
+        let _ = writeln!(
+            s,
+            "{},{},{},{:.4}",
+            r.bench,
+            r.method.name(),
+            r.et,
+            r.area
+        );
+    }
+    s
+}
+
+/// Markdown rendering of the Fig. 5 grid — one table per benchmark,
+/// methods as columns, ET values as rows; the winner per row is bolded.
+pub fn fig5_markdown(records: &[RunRecord]) -> String {
+    let mut benches: Vec<&str> = records.iter().map(|r| r.bench).collect();
+    benches.sort_unstable();
+    benches.dedup();
+    let methods = Method::all_compared();
+
+    let mut s = String::new();
+    for bench in benches {
+        let _ = writeln!(s, "\n### {bench}\n");
+        let mut header = String::from("| ET |");
+        for m in methods {
+            let _ = write!(header, " {} |", m.name());
+        }
+        let _ = writeln!(s, "{header}");
+        let _ = writeln!(s, "|---{}|", "|---".repeat(methods.len()));
+
+        let mut ets: Vec<u64> = records
+            .iter()
+            .filter(|r| r.bench == bench)
+            .map(|r| r.et)
+            .collect();
+        ets.sort_unstable();
+        ets.dedup();
+        for et in ets {
+            let areas: Vec<Option<f64>> = methods
+                .iter()
+                .map(|&m| {
+                    records
+                        .iter()
+                        .find(|r| r.bench == bench && r.et == et && r.method == m)
+                        .map(|r| r.area)
+                })
+                .collect();
+            let best = areas
+                .iter()
+                .flatten()
+                .fold(f64::INFINITY, |a, &b| a.min(b));
+            let mut row = format!("| {et} |");
+            for a in areas {
+                match a {
+                    Some(a) if (a - best).abs() < 1e-9 => {
+                        let _ = write!(row, " **{a:.3}** |");
+                    }
+                    Some(a) if a.is_finite() => {
+                        let _ = write!(row, " {a:.3} |");
+                    }
+                    _ => {
+                        let _ = write!(row, " — |");
+                    }
+                }
+            }
+            let _ = writeln!(s, "{row}");
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(bench: &'static str, method: Method, et: u64, area: f64) -> RunRecord {
+        RunRecord {
+            bench,
+            method,
+            et,
+            area,
+            max_err: et,
+            mean_err: 0.5,
+            proxy: (2, 3),
+            elapsed_ms: 1,
+            all_points: vec![(2, 3, area), (3, 4, area + 1.0)],
+        }
+    }
+
+    #[test]
+    fn records_csv_has_row_per_record() {
+        let rs = vec![
+            rec("adder_i4", Method::Shared, 1, 2.0),
+            rec("adder_i4", Method::Xpat, 1, 3.0),
+        ];
+        let csv = records_csv(&rs);
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.contains("adder_i4,SHARED,1,2.0000"));
+    }
+
+    #[test]
+    fn fig4_includes_all_series() {
+        let rs = vec![
+            rec("adder_i4", Method::Shared, 2, 2.0),
+            rec("adder_i4", Method::Muscat, 2, 4.0),
+        ];
+        let random = vec![RandomPoint { pit: 3, its: 5, area: 6.0, max_err: 1, mean_err: 0.2 }];
+        let csv = fig4_csv("adder_i4", 2, 9.5, &rs, &random);
+        assert!(csv.contains("exact,0,9.5000"));
+        assert!(csv.contains("random,8,6.0000"));
+        assert!(csv.contains("SHARED,5,2.0000")); // scatter point (2+3)
+        assert!(csv.contains("SHARED,7,3.0000")); // scatter point (3+4)
+        assert!(csv.contains("MUSCAT,5,4.0000"));
+    }
+
+    #[test]
+    fn fig5_markdown_bolds_winner() {
+        let rs = vec![
+            rec("mult_i4", Method::Shared, 1, 2.0),
+            rec("mult_i4", Method::Xpat, 1, 3.0),
+            rec("mult_i4", Method::Muscat, 1, 4.0),
+            rec("mult_i4", Method::Mecals, 1, 5.0),
+        ];
+        let md = fig5_markdown(&rs);
+        assert!(md.contains("### mult_i4"));
+        assert!(md.contains("**2.000**"));
+        assert!(!md.contains("**3.000**"));
+    }
+
+    #[test]
+    fn fig5_markdown_handles_missing_cells() {
+        let rs = vec![rec("adder_i6", Method::Shared, 4, 2.5)];
+        let md = fig5_markdown(&rs);
+        assert!(md.contains("—"));
+    }
+}

@@ -1,0 +1,6 @@
+//! Figure/table emitters: CSV series for plotting plus human-readable
+//! markdown tables, one emitter per paper figure.
+
+pub mod figures;
+
+pub use figures::{fig4_csv, fig5_csv, fig5_markdown, records_csv};

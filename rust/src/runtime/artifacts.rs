@@ -1,0 +1,136 @@
+//! Artifact manifest: the shape contract between `python/compile/aot.py`
+//! and the rust runtime (one entry per AOT-lowered geometry).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// One artifact's geometry — mirrors `compile.model.Geometry`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Geometry {
+    pub name: String,
+    pub file: String,
+    pub n: usize,
+    pub m: usize,
+    pub t: usize,
+    pub b: usize,
+    pub npoints: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub geometries: BTreeMap<String, Geometry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&src)?;
+        let obj = json.as_obj().ok_or_else(|| anyhow!("manifest is not an object"))?;
+        let mut geometries = BTreeMap::new();
+        for (name, entry) in obj {
+            let get = |k: &str| -> Result<u64> {
+                entry
+                    .get(k)
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("manifest entry {name} missing {k}"))
+            };
+            let g = Geometry {
+                name: name.clone(),
+                file: entry
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("manifest entry {name} missing file"))?
+                    .to_string(),
+                n: get("n")? as usize,
+                m: get("m")? as usize,
+                t: get("t")? as usize,
+                b: get("b")? as usize,
+                npoints: get("npoints")? as usize,
+            };
+            if g.npoints != 1usize << g.n {
+                bail!("{name}: npoints {} != 2^{}", g.npoints, g.n);
+            }
+            geometries.insert(name.clone(), g);
+        }
+        Ok(Manifest { geometries, dir: dir.to_path_buf() })
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Option<PathBuf> {
+        self.geometries.get(name).map(|g| self.dir.join(&g.file))
+    }
+}
+
+/// Locate the artifacts directory: `$SXPAT_ARTIFACTS`, else `artifacts/`
+/// relative to the working directory, else relative to the manifest dir
+/// of the crate (useful under `cargo test`).
+pub fn find_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("SXPAT_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    for base in [
+        PathBuf::from("artifacts"),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ] {
+        if base.join("manifest.json").exists() {
+            return Some(base);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_well_formed_manifest() {
+        let dir = std::env::temp_dir().join("sxpat_manifest_ok");
+        write_manifest(
+            &dir,
+            r#"{"adder_i4": {"file": "a.hlo.txt", "n": 4, "m": 3, "t": 16,
+                             "b": 256, "npoints": 16}}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let g = &m.geometries["adder_i4"];
+        assert_eq!((g.n, g.m, g.t, g.b), (4, 3, 16, 256));
+        assert_eq!(m.hlo_path("adder_i4").unwrap(), dir.join("a.hlo.txt"));
+        assert!(m.hlo_path("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_inconsistent_npoints() {
+        let dir = std::env::temp_dir().join("sxpat_manifest_bad");
+        write_manifest(
+            &dir,
+            r#"{"x": {"file": "x", "n": 4, "m": 3, "t": 16, "b": 256,
+                      "npoints": 17}}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_artifacts_manifest_parses_when_present() {
+        if let Some(dir) = find_artifacts_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.geometries.len(), 6);
+            for (name, g) in &m.geometries {
+                assert!(dir.join(&g.file).exists(), "{name} artifact missing");
+            }
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! The PJRT client wrapper: compile each HLO-text artifact once, then
+//! execute batches from the coordinator hot path.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::evaluator::pack::pack_batch;
+use crate::evaluator::EvalResult;
+use crate::template::SopParams;
+
+use super::artifacts::{Geometry, Manifest};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` and compile it on the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for (name, _g) in manifest.geometries.iter() {
+            let path = manifest.hlo_path(name).unwrap();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Runtime { client, exes, manifest })
+    }
+
+    pub fn geometry(&self, name: &str) -> Option<&Geometry> {
+        self.manifest.geometries.get(name)
+    }
+
+    pub fn geometries(&self) -> impl Iterator<Item = &Geometry> {
+        self.manifest.geometries.values()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Evaluate instantiations under geometry `name`, chunking into the
+    /// artifact's fixed batch size. Semantics match
+    /// [`crate::evaluator::rust_eval::evaluate_batch`] exactly.
+    pub fn evaluate_batch(
+        &self,
+        name: &str,
+        params: &[SopParams],
+        exact: &[u64],
+    ) -> Result<Vec<EvalResult>> {
+        let g = self
+            .geometry(name)
+            .ok_or_else(|| anyhow!("unknown geometry {name}"))?
+            .clone();
+        let exe = &self.exes[name];
+        anyhow::ensure!(exact.len() == g.npoints, "exact length mismatch");
+        let exact_f32: Vec<f32> = exact.iter().map(|&v| v as f32).collect();
+
+        let mut out = Vec::with_capacity(params.len());
+        for chunk in params.chunks(g.b) {
+            let packed = pack_batch(chunk, g.n, g.m, g.t, g.b);
+            let lits = [
+                lit3(&packed.use_mask, g.b, g.t, g.n)?,
+                lit3(&packed.neg_mask, g.b, g.t, g.n)?,
+                lit3(&packed.out_sel, g.b, g.m, g.t)?,
+                lit2(&packed.out_const, g.b, g.m)?,
+                xla::Literal::vec1(&exact_f32),
+            ];
+            let result = exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+            let (max_l, mean_l, vals_l) = result
+                .to_tuple3()
+                .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+            let maxs: Vec<f32> =
+                max_l.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let means: Vec<f32> =
+                mean_l.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let vals: Vec<f32> =
+                vals_l.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            for bi in 0..chunk.len() {
+                out.push(EvalResult {
+                    max_err: maxs[bi].round() as u64,
+                    mean_err: means[bi] as f64,
+                    values: vals[bi * g.npoints..(bi + 1) * g.npoints]
+                        .iter()
+                        .map(|&v| v.round() as u64)
+                        .collect(),
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn lit3(data: &[f32], d0: usize, d1: usize, d2: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(&[d0 as i64, d1 as i64, d2 as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+fn lit2(data: &[f32], d0: usize, d1: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(&[d0 as i64, d1 as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+// Integration coverage for the full PJRT path (needs built artifacts)
+// lives in rust/tests/integration_runtime.rs.

@@ -1,0 +1,10 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas evaluator artifacts
+//! (HLO text, see `python/compile/aot.py`) and execute them from the
+//! rust hot path. Python never runs here — the artifacts are compiled
+//! once by `make artifacts` and the binary is self-contained afterwards.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{find_artifacts_dir, Geometry, Manifest};
+pub use client::Runtime;

@@ -1,0 +1,105 @@
+//! DIMACS CNF reader/writer — used for differential testing and for
+//! exporting miters to external solvers when debugging.
+
+use anyhow::{bail, Result};
+
+use super::solver::{Lit, Solver, Var};
+
+/// Parse DIMACS CNF into clauses (1-based DIMACS vars -> 0-based).
+pub fn parse_dimacs(src: &str) -> Result<(usize, Vec<Vec<Lit>>)> {
+    let mut n_vars = 0usize;
+    let mut clauses = Vec::new();
+    let mut cur: Vec<Lit> = Vec::new();
+    for line in src.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('c') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('p') {
+            let parts: Vec<&str> = rest.split_whitespace().collect();
+            if parts.len() != 3 || parts[0] != "cnf" {
+                bail!("bad problem line: {line}");
+            }
+            n_vars = parts[1].parse()?;
+            continue;
+        }
+        for tok in line.split_whitespace() {
+            let x: i64 = tok.parse()?;
+            if x == 0 {
+                clauses.push(std::mem::take(&mut cur));
+            } else {
+                let v = (x.unsigned_abs() - 1) as Var;
+                if (v as usize) >= n_vars {
+                    bail!("literal {x} out of range (p cnf {n_vars})");
+                }
+                cur.push(Lit::new(v, x > 0));
+            }
+        }
+    }
+    if !cur.is_empty() {
+        clauses.push(cur);
+    }
+    Ok((n_vars, clauses))
+}
+
+/// Load a DIMACS instance into a fresh solver.
+pub fn solver_from_dimacs(src: &str) -> Result<(Solver, bool)> {
+    let (n_vars, clauses) = parse_dimacs(src)?;
+    let mut s = Solver::new();
+    for _ in 0..n_vars {
+        s.new_var();
+    }
+    let mut ok = true;
+    for c in &clauses {
+        ok &= s.add_clause(c);
+    }
+    Ok((s, ok))
+}
+
+/// Render clauses as DIMACS.
+pub fn to_dimacs(n_vars: usize, clauses: &[Vec<Lit>]) -> String {
+    let mut s = format!("p cnf {} {}\n", n_vars, clauses.len());
+    for c in clauses {
+        for &l in c {
+            let v = l.var() as i64 + 1;
+            s.push_str(&format!("{} ", if l.is_neg() { -v } else { v }));
+        }
+        s.push_str("0\n");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sat::SatResult;
+
+    #[test]
+    fn parse_and_solve() {
+        let src = "c tiny\np cnf 2 2\n1 2 0\n-1 0\n";
+        let (mut s, ok) = solver_from_dimacs(src).unwrap();
+        assert!(ok);
+        assert_eq!(s.solve(&[]), SatResult::Sat);
+        assert!(s.model_value(Lit::new(1, true)));
+    }
+
+    #[test]
+    fn round_trip() {
+        let src = "p cnf 3 3\n1 -2 0\n2 3 0\n-3 -1 0\n";
+        let (n, clauses) = parse_dimacs(src).unwrap();
+        let again = to_dimacs(n, &clauses);
+        let (n2, clauses2) = parse_dimacs(&again).unwrap();
+        assert_eq!(n, n2);
+        assert_eq!(clauses, clauses2);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(parse_dimacs("p cnf 1 1\n2 0\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(parse_dimacs("p dnf 1 1\n1 0\n").is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Indexed max-heap over variables ordered by VSIDS activity.
+//!
+//! Standard MiniSat structure: `heap` is the binary heap of variables,
+//! `index[v]` is the position of `v` in it (or `usize::MAX` when absent),
+//! so decrease/increase-key and membership tests are O(1)/O(log n).
+
+#[derive(Debug, Default, Clone)]
+pub struct VarHeap {
+    heap: Vec<u32>,
+    index: Vec<usize>,
+}
+
+impl VarHeap {
+    pub fn grow_to(&mut self, n_vars: usize) {
+        self.index.resize(n_vars, usize::MAX);
+    }
+
+    pub fn contains(&self, v: u32) -> bool {
+        self.index[v as usize] != usize::MAX
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn insert(&mut self, v: u32, activity: &[f64]) {
+        if self.contains(v) {
+            return;
+        }
+        self.index[v as usize] = self.heap.len();
+        self.heap.push(v);
+        self.sift_up(self.heap.len() - 1, activity);
+    }
+
+    pub fn pop_max(&mut self, activity: &[f64]) -> Option<u32> {
+        let top = *self.heap.first()?;
+        let last = self.heap.pop().unwrap();
+        self.index[top as usize] = usize::MAX;
+        if !self.heap.is_empty() {
+            self.heap[0] = last;
+            self.index[last as usize] = 0;
+            self.sift_down(0, activity);
+        }
+        Some(top)
+    }
+
+    /// Restore heap order for `v` after its activity increased.
+    pub fn decrease_key(&mut self, v: u32, activity: &[f64]) {
+        if let Some(&pos) = self.index.get(v as usize) {
+            if pos != usize::MAX {
+                self.sift_up(pos, activity);
+            }
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize, act: &[f64]) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if act[self.heap[i] as usize] <= act[self.heap[parent] as usize] {
+                break;
+            }
+            self.swap(i, parent);
+            i = parent;
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize, act: &[f64]) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut best = i;
+            if l < self.heap.len() && act[self.heap[l] as usize] > act[self.heap[best] as usize]
+            {
+                best = l;
+            }
+            if r < self.heap.len() && act[self.heap[r] as usize] > act[self.heap[best] as usize]
+            {
+                best = r;
+            }
+            if best == i {
+                return;
+            }
+            self.swap(i, best);
+            i = best;
+        }
+    }
+
+    fn swap(&mut self, i: usize, j: usize) {
+        self.heap.swap(i, j);
+        self.index[self.heap[i] as usize] = i;
+        self.index[self.heap[j] as usize] = j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_activity_order() {
+        let act = vec![0.5, 3.0, 1.0, 2.0];
+        let mut h = VarHeap::default();
+        h.grow_to(4);
+        for v in 0..4 {
+            h.insert(v, &act);
+        }
+        let mut got = Vec::new();
+        while let Some(v) = h.pop_max(&act) {
+            got.push(v);
+        }
+        assert_eq!(got, vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn reinsert_and_membership() {
+        let act = vec![1.0, 2.0];
+        let mut h = VarHeap::default();
+        h.grow_to(2);
+        h.insert(0, &act);
+        assert!(h.contains(0));
+        assert!(!h.contains(1));
+        assert_eq!(h.pop_max(&act), Some(0));
+        assert!(!h.contains(0));
+        h.insert(0, &act);
+        h.insert(0, &act); // idempotent
+        assert_eq!(h.pop_max(&act), Some(0));
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn decrease_key_reorders() {
+        let mut act = vec![1.0, 2.0, 3.0];
+        let mut h = VarHeap::default();
+        h.grow_to(3);
+        for v in 0..3 {
+            h.insert(v, &act);
+        }
+        act[0] = 10.0;
+        h.decrease_key(0, &act);
+        assert_eq!(h.pop_max(&act), Some(0));
+    }
+}

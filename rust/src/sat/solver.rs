@@ -1,0 +1,873 @@
+//! The CDCL solver core.
+
+use super::heap::VarHeap;
+
+/// Variable index (0-based).
+pub type Var = u32;
+
+/// Literal: `2*var + sign`, sign bit set for the negative literal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Lit(pub u32);
+
+impl Lit {
+    #[inline]
+    pub fn pos(v: Var) -> Lit {
+        Lit(v << 1)
+    }
+
+    #[inline]
+    pub fn neg(v: Var) -> Lit {
+        Lit((v << 1) | 1)
+    }
+
+    /// Literal of `v` with the given truth value request: `Lit::new(v,
+    /// true)` is satisfied when `v` is true.
+    #[inline]
+    pub fn new(v: Var, positive: bool) -> Lit {
+        Lit((v << 1) | (!positive) as u32)
+    }
+
+    #[inline]
+    pub fn var(self) -> Var {
+        self.0 >> 1
+    }
+
+    #[inline]
+    pub fn is_neg(self) -> bool {
+        self.0 & 1 == 1
+    }
+
+    #[inline]
+    pub fn inverted(self) -> Lit {
+        Lit(self.0 ^ 1)
+    }
+
+    #[inline]
+    fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::ops::Not for Lit {
+    type Output = Lit;
+    fn not(self) -> Lit {
+        self.inverted()
+    }
+}
+
+/// Three-valued assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lbool {
+    True,
+    False,
+    Undef,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SatResult {
+    Sat,
+    Unsat,
+}
+
+#[derive(Debug, Clone)]
+struct Clause {
+    lits: Vec<Lit>,
+    learnt: bool,
+    activity: f64,
+    deleted: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Watcher {
+    clause: u32,
+    blocker: Lit,
+}
+
+const REASON_NONE: u32 = u32::MAX;
+
+/// Solver statistics, exposed for the benches and EXPERIMENTS.md §Perf.
+#[derive(Debug, Default, Clone)]
+pub struct Stats {
+    pub conflicts: u64,
+    pub decisions: u64,
+    pub propagations: u64,
+    pub restarts: u64,
+    pub learnt_literals: u64,
+    pub deleted_clauses: u64,
+}
+
+pub struct Solver {
+    clauses: Vec<Clause>,
+    learnts: Vec<u32>,
+    watches: Vec<Vec<Watcher>>, // indexed by Lit
+    assign: Vec<Lbool>,         // indexed by Var
+    level: Vec<u32>,
+    reason: Vec<u32>,
+    trail: Vec<Lit>,
+    trail_lim: Vec<usize>,
+    qhead: usize,
+    activity: Vec<f64>,
+    var_inc: f64,
+    cla_inc: f64,
+    heap: VarHeap,
+    polarity: Vec<bool>, // saved phases
+    ok: bool,
+    seen: Vec<bool>,
+    conflict_core: Vec<Lit>,
+    model: Vec<Lbool>,
+    pub stats: Stats,
+    /// Abort knob: give up (returning Unsat-as-timeout is wrong, so we
+    /// surface `None` from `solve_limited`) after this many conflicts.
+    pub conflict_budget: Option<u64>,
+}
+
+impl Default for Solver {
+    fn default() -> Self {
+        Solver::new()
+    }
+}
+
+impl Solver {
+    pub fn new() -> Self {
+        Solver {
+            clauses: Vec::new(),
+            learnts: Vec::new(),
+            watches: Vec::new(),
+            assign: Vec::new(),
+            level: Vec::new(),
+            reason: Vec::new(),
+            trail: Vec::new(),
+            trail_lim: Vec::new(),
+            qhead: 0,
+            activity: Vec::new(),
+            var_inc: 1.0,
+            cla_inc: 1.0,
+            heap: VarHeap::default(),
+            polarity: Vec::new(),
+            ok: true,
+            seen: Vec::new(),
+            conflict_core: Vec::new(),
+            model: Vec::new(),
+            stats: Stats::default(),
+            conflict_budget: None,
+        }
+    }
+
+    pub fn new_var(&mut self) -> Var {
+        let v = self.assign.len() as Var;
+        self.assign.push(Lbool::Undef);
+        self.level.push(0);
+        self.reason.push(REASON_NONE);
+        self.activity.push(0.0);
+        self.polarity.push(false);
+        self.seen.push(false);
+        self.watches.push(Vec::new());
+        self.watches.push(Vec::new());
+        self.heap.grow_to(self.assign.len());
+        self.heap.insert(v, &self.activity);
+        v
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.assign.len()
+    }
+
+    pub fn n_clauses(&self) -> usize {
+        self.clauses.iter().filter(|c| !c.deleted && !c.learnt).count()
+    }
+
+    #[inline]
+    fn value_lit(&self, l: Lit) -> Lbool {
+        match self.assign[l.var() as usize] {
+            Lbool::Undef => Lbool::Undef,
+            Lbool::True => {
+                if l.is_neg() {
+                    Lbool::False
+                } else {
+                    Lbool::True
+                }
+            }
+            Lbool::False => {
+                if l.is_neg() {
+                    Lbool::True
+                } else {
+                    Lbool::False
+                }
+            }
+        }
+    }
+
+    /// Add a clause; returns `false` if the formula became trivially UNSAT.
+    pub fn add_clause(&mut self, lits: &[Lit]) -> bool {
+        debug_assert_eq!(self.decision_level(), 0);
+        if !self.ok {
+            return false;
+        }
+        // Normalise: sort, dedup, drop false lits, detect tautology.
+        let mut c: Vec<Lit> = lits.to_vec();
+        c.sort_unstable();
+        c.dedup();
+        let mut filtered = Vec::with_capacity(c.len());
+        for &l in &c {
+            if c.binary_search(&!l).is_ok() {
+                return true; // tautology
+            }
+            match self.value_lit(l) {
+                Lbool::True => return true, // already satisfied at level 0
+                Lbool::False => {}          // drop
+                Lbool::Undef => filtered.push(l),
+            }
+        }
+        match filtered.len() {
+            0 => {
+                self.ok = false;
+                false
+            }
+            1 => {
+                self.unchecked_enqueue(filtered[0], REASON_NONE);
+                self.ok = self.propagate().is_none();
+                self.ok
+            }
+            _ => {
+                self.attach_clause(filtered, false);
+                true
+            }
+        }
+    }
+
+    fn attach_clause(&mut self, lits: Vec<Lit>, learnt: bool) -> u32 {
+        let idx = self.clauses.len() as u32;
+        let w0 = Watcher { clause: idx, blocker: lits[1] };
+        let w1 = Watcher { clause: idx, blocker: lits[0] };
+        self.watches[(!lits[0]).idx()].push(w0);
+        self.watches[(!lits[1]).idx()].push(w1);
+        self.clauses.push(Clause { lits, learnt, activity: 0.0, deleted: false });
+        if learnt {
+            self.learnts.push(idx);
+        }
+        idx
+    }
+
+    #[inline]
+    fn decision_level(&self) -> u32 {
+        self.trail_lim.len() as u32
+    }
+
+    fn unchecked_enqueue(&mut self, l: Lit, reason: u32) {
+        debug_assert_eq!(self.value_lit(l), Lbool::Undef);
+        self.assign[l.var() as usize] =
+            if l.is_neg() { Lbool::False } else { Lbool::True };
+        self.level[l.var() as usize] = self.decision_level();
+        self.reason[l.var() as usize] = reason;
+        self.trail.push(l);
+    }
+
+    /// Propagate; returns the index of a conflicting clause, if any.
+    fn propagate(&mut self) -> Option<u32> {
+        while self.qhead < self.trail.len() {
+            let p = self.trail[self.qhead];
+            self.qhead += 1;
+            self.stats.propagations += 1;
+
+            let mut i = 0usize;
+            let mut j = 0usize;
+            let mut ws = std::mem::take(&mut self.watches[p.idx()]);
+            let mut conflict = None;
+            'watchers: while i < ws.len() {
+                let w = ws[i];
+                i += 1;
+                // Fast path: blocker already true.
+                if self.value_lit(w.blocker) == Lbool::True {
+                    ws[j] = w;
+                    j += 1;
+                    continue;
+                }
+                let ci = w.clause as usize;
+                if self.clauses[ci].deleted {
+                    continue; // drop the watcher
+                }
+                // Make sure the false literal is at position 1.
+                let false_lit = !p;
+                if self.clauses[ci].lits[0] == false_lit {
+                    self.clauses[ci].lits.swap(0, 1);
+                }
+                debug_assert_eq!(self.clauses[ci].lits[1], false_lit);
+                let first = self.clauses[ci].lits[0];
+                if first != w.blocker && self.value_lit(first) == Lbool::True {
+                    ws[j] = Watcher { clause: w.clause, blocker: first };
+                    j += 1;
+                    continue;
+                }
+                // Look for a new literal to watch.
+                for k in 2..self.clauses[ci].lits.len() {
+                    let lk = self.clauses[ci].lits[k];
+                    if self.value_lit(lk) != Lbool::False {
+                        self.clauses[ci].lits.swap(1, k);
+                        self.watches[(!lk).idx()]
+                            .push(Watcher { clause: w.clause, blocker: first });
+                        continue 'watchers;
+                    }
+                }
+                // Unit or conflicting.
+                ws[j] = Watcher { clause: w.clause, blocker: first };
+                j += 1;
+                if self.value_lit(first) == Lbool::False {
+                    // Conflict: copy remaining watchers back and stop.
+                    while i < ws.len() {
+                        ws[j] = ws[i];
+                        j += 1;
+                        i += 1;
+                    }
+                    conflict = Some(w.clause);
+                } else {
+                    self.unchecked_enqueue(first, w.clause);
+                }
+            }
+            ws.truncate(j);
+            self.watches[p.idx()] = ws;
+            if let Some(c) = conflict {
+                return Some(c);
+            }
+        }
+        None
+    }
+
+    fn bump_var(&mut self, v: Var) {
+        self.activity[v as usize] += self.var_inc;
+        if self.activity[v as usize] > 1e100 {
+            for a in self.activity.iter_mut() {
+                *a *= 1e-100;
+            }
+            self.var_inc *= 1e-100;
+        }
+        self.heap.decrease_key(v, &self.activity);
+    }
+
+    fn bump_clause(&mut self, ci: usize) {
+        self.clauses[ci].activity += self.cla_inc;
+        if self.clauses[ci].activity > 1e20 {
+            for &li in &self.learnts {
+                self.clauses[li as usize].activity *= 1e-20;
+            }
+            self.cla_inc *= 1e-20;
+        }
+    }
+
+    /// First-UIP conflict analysis. Returns (learnt clause, backtrack level).
+    fn analyze(&mut self, mut confl: u32) -> (Vec<Lit>, u32) {
+        let mut learnt: Vec<Lit> = vec![Lit(0)]; // slot for the asserting lit
+        let mut counter = 0u32;
+        let mut p: Option<Lit> = None;
+        let mut index = self.trail.len();
+
+        loop {
+            let ci = confl as usize;
+            if self.clauses[ci].learnt {
+                self.bump_clause(ci);
+            }
+            let start = if p.is_some() { 1 } else { 0 };
+            for k in start..self.clauses[ci].lits.len() {
+                let q = self.clauses[ci].lits[k];
+                let v = q.var() as usize;
+                if !self.seen[v] && self.level[v] > 0 {
+                    self.seen[v] = true;
+                    self.bump_var(q.var());
+                    if self.level[v] >= self.decision_level() {
+                        counter += 1;
+                    } else {
+                        learnt.push(q);
+                    }
+                }
+            }
+            // Pick the next literal on the trail to resolve on.
+            loop {
+                index -= 1;
+                if self.seen[self.trail[index].var() as usize] {
+                    break;
+                }
+            }
+            let pl = self.trail[index];
+            self.seen[pl.var() as usize] = false;
+            counter -= 1;
+            if counter == 0 {
+                learnt[0] = !pl;
+                p = Some(pl);
+                break;
+            }
+            confl = self.reason[pl.var() as usize];
+            debug_assert_ne!(confl, REASON_NONE);
+            p = Some(pl);
+        }
+        let _ = p;
+
+        // Self-subsumption minimisation: drop lits whose reason clause is
+        // fully covered by the rest of the learnt clause.
+        for l in &learnt[1..] {
+            self.seen[l.var() as usize] = true;
+        }
+        let keep: Vec<Lit> = learnt[1..]
+            .iter()
+            .copied()
+            .filter(|&l| {
+                let r = self.reason[l.var() as usize];
+                if r == REASON_NONE {
+                    return true;
+                }
+                let rc = &self.clauses[r as usize];
+                rc.lits.iter().any(|&q| {
+                    q.var() != l.var()
+                        && !self.seen[q.var() as usize]
+                        && self.level[q.var() as usize] > 0
+                })
+            })
+            .collect();
+        for l in &learnt[1..] {
+            self.seen[l.var() as usize] = false;
+        }
+        let mut out = vec![learnt[0]];
+        out.extend(keep);
+
+        // Backtrack level = second-highest level in the clause.
+        let bt = if out.len() == 1 {
+            0
+        } else {
+            let mut max_i = 1;
+            for k in 2..out.len() {
+                if self.level[out[k].var() as usize] > self.level[out[max_i].var() as usize] {
+                    max_i = k;
+                }
+            }
+            out.swap(1, max_i);
+            self.level[out[1].var() as usize]
+        };
+        self.stats.learnt_literals += out.len() as u64;
+        (out, bt)
+    }
+
+    fn backtrack_to(&mut self, lvl: u32) {
+        if self.decision_level() <= lvl {
+            return;
+        }
+        let lim = self.trail_lim[lvl as usize];
+        for k in (lim..self.trail.len()).rev() {
+            let l = self.trail[k];
+            let v = l.var() as usize;
+            self.polarity[v] = !l.is_neg();
+            self.assign[v] = Lbool::Undef;
+            self.reason[v] = REASON_NONE;
+            self.heap.insert(l.var(), &self.activity);
+        }
+        self.trail.truncate(lim);
+        self.trail_lim.truncate(lvl as usize);
+        self.qhead = self.trail.len();
+    }
+
+    fn pick_branch(&mut self) -> Option<Lit> {
+        while let Some(v) = self.heap.pop_max(&self.activity) {
+            if self.assign[v as usize] == Lbool::Undef {
+                return Some(Lit::new(v, self.polarity[v as usize]));
+            }
+        }
+        None
+    }
+
+    fn reduce_db(&mut self) {
+        let mut order: Vec<u32> = self
+            .learnts
+            .iter()
+            .copied()
+            .filter(|&ci| !self.clauses[ci as usize].deleted)
+            .collect();
+        order.sort_by(|&a, &b| {
+            self.clauses[a as usize]
+                .activity
+                .partial_cmp(&self.clauses[b as usize].activity)
+                .unwrap()
+        });
+        let target = order.len() / 2;
+        let mut removed = 0usize;
+        for &ci in order.iter() {
+            if removed >= target {
+                break;
+            }
+            let c = &self.clauses[ci as usize];
+            if c.lits.len() <= 2 {
+                continue; // keep short clauses
+            }
+            // Never delete a clause that is currently a reason.
+            let is_reason = c
+                .lits
+                .first()
+                .map(|l| self.reason[l.var() as usize] == ci)
+                .unwrap_or(false);
+            if is_reason {
+                continue;
+            }
+            self.clauses[ci as usize].deleted = true;
+            removed += 1;
+        }
+        self.stats.deleted_clauses += removed as u64;
+        self.learnts.retain(|&ci| !self.clauses[ci as usize].deleted);
+    }
+
+    /// Solve under assumptions. `Some(Sat)`/`Some(Unsat)`, or `None` when
+    /// the conflict budget ran out.
+    pub fn solve_limited(&mut self, assumptions: &[Lit]) -> Option<SatResult> {
+        if !self.ok {
+            self.conflict_core.clear();
+            return Some(SatResult::Unsat);
+        }
+        self.backtrack_to(0);
+        self.model.clear();
+        self.conflict_core.clear();
+
+        let budget_start = self.stats.conflicts;
+        let mut max_learnts = (self.n_clauses() as f64 * 0.4).max(1000.0);
+        let mut restart_idx = 0u64;
+        let mut conflicts_until_restart = luby(restart_idx) * 100;
+
+        loop {
+            if let Some(confl) = self.propagate() {
+                self.stats.conflicts += 1;
+                conflicts_until_restart = conflicts_until_restart.saturating_sub(1);
+                if self.decision_level() == 0 {
+                    self.ok = false;
+                    return Some(SatResult::Unsat);
+                }
+                // Conflict inside the assumption prefix => UNSAT core.
+                if self.decision_level() <= assumptions.len() as u32 {
+                    self.analyze_final_conflict(confl, assumptions);
+                    return Some(SatResult::Unsat);
+                }
+                let (learnt, bt) = self.analyze(confl);
+                // Backjump possibly below the assumption prefix: the
+                // decision loop re-asserts assumptions afterwards (and a
+                // falsified assumption then yields the UNSAT core).
+                self.backtrack_to(bt);
+                if learnt.len() == 1 {
+                    debug_assert_eq!(self.value_lit(learnt[0]), Lbool::Undef);
+                    self.unchecked_enqueue(learnt[0], REASON_NONE);
+                } else {
+                    let ci = self.attach_clause(learnt, true);
+                    let first = self.clauses[ci as usize].lits[0];
+                    debug_assert_eq!(self.value_lit(first), Lbool::Undef);
+                    self.unchecked_enqueue(first, ci);
+                }
+                self.var_inc /= 0.95;
+                self.cla_inc /= 0.999;
+                if self.learnts.len() as f64 > max_learnts {
+                    self.reduce_db();
+                    max_learnts *= 1.1;
+                }
+                if let Some(b) = self.conflict_budget {
+                    if self.stats.conflicts - budget_start > b {
+                        self.backtrack_to(0);
+                        return None;
+                    }
+                }
+            } else {
+                if conflicts_until_restart == 0 {
+                    self.stats.restarts += 1;
+                    restart_idx += 1;
+                    conflicts_until_restart = luby(restart_idx) * 100;
+                    self.backtrack_to((assumptions.len() as u32).min(self.decision_level()));
+                }
+                // Assumption decisions first.
+                let dl = self.decision_level() as usize;
+                if dl < assumptions.len() {
+                    let a = assumptions[dl];
+                    match self.value_lit(a) {
+                        Lbool::True => {
+                            // Already implied: introduce an empty decision
+                            // level so indices keep lining up.
+                            self.trail_lim.push(self.trail.len());
+                        }
+                        Lbool::False => {
+                            self.core_from_lit(!a, assumptions);
+                            return Some(SatResult::Unsat);
+                        }
+                        Lbool::Undef => {
+                            self.trail_lim.push(self.trail.len());
+                            self.unchecked_enqueue(a, REASON_NONE);
+                        }
+                    }
+                    continue;
+                }
+                match self.pick_branch() {
+                    None => {
+                        self.model = self.assign.clone();
+                        self.backtrack_to(0);
+                        return Some(SatResult::Sat);
+                    }
+                    Some(l) => {
+                        self.stats.decisions += 1;
+                        self.trail_lim.push(self.trail.len());
+                        self.unchecked_enqueue(l, REASON_NONE);
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn solve(&mut self, assumptions: &[Lit]) -> SatResult {
+        self.solve_limited(assumptions).expect("no conflict budget set")
+    }
+
+    /// Walk reasons from a conflicting clause restricted to assumption
+    /// levels, collecting the failed assumptions (the UNSAT core).
+    fn analyze_final_conflict(&mut self, confl: u32, assumptions: &[Lit]) {
+        self.conflict_core.clear();
+        let mut seen = vec![false; self.n_vars()];
+        let mut stack: Vec<Lit> = self.clauses[confl as usize].lits.clone();
+        while let Some(l) = stack.pop() {
+            let v = l.var() as usize;
+            if seen[v] || self.level[v] == 0 {
+                continue;
+            }
+            seen[v] = true;
+            let r = self.reason[v];
+            if r == REASON_NONE {
+                // Decision inside the assumption prefix.
+                if assumptions.iter().any(|&a| a.var() == l.var()) {
+                    self.conflict_core.push(!l);
+                }
+            } else {
+                stack.extend(self.clauses[r as usize].lits.iter().copied());
+            }
+        }
+        self.backtrack_to(0);
+    }
+
+    /// Core when an assumption literal is directly falsified.
+    fn core_from_lit(&mut self, falsified: Lit, assumptions: &[Lit]) {
+        self.conflict_core.clear();
+        let mut seen = vec![false; self.n_vars()];
+        let mut stack = vec![falsified];
+        while let Some(l) = stack.pop() {
+            let v = l.var() as usize;
+            if seen[v] || self.level[v] == 0 {
+                continue;
+            }
+            seen[v] = true;
+            let r = self.reason[v];
+            if r == REASON_NONE {
+                if assumptions.iter().any(|&a| a.var() == l.var()) {
+                    self.conflict_core.push(if assumptions.contains(&l) { l } else { !l });
+                }
+            } else {
+                stack.extend(self.clauses[r as usize].lits.iter().copied());
+            }
+        }
+        self.backtrack_to(0);
+    }
+
+    /// Failed assumptions of the last UNSAT answer.
+    pub fn core(&self) -> &[Lit] {
+        &self.conflict_core
+    }
+
+    /// Model value of a literal after a SAT answer.
+    pub fn model_value(&self, l: Lit) -> bool {
+        match self.model[l.var() as usize] {
+            Lbool::True => !l.is_neg(),
+            Lbool::False => l.is_neg(),
+            Lbool::Undef => false, // don't-care: report false
+        }
+    }
+}
+
+/// Luby restart sequence (1,1,2,1,1,2,4,...), 0-indexed.
+fn luby(i: u64) -> u64 {
+    let mut i = i + 1;
+    loop {
+        let mut k = 1u64;
+        while (1u64 << k) - 1 < i {
+            k += 1;
+        }
+        if (1u64 << k) - 1 == i {
+            return 1u64 << (k - 1);
+        }
+        i -= (1u64 << (k - 1)) - 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lit(v: Var, pos: bool) -> Lit {
+        Lit::new(v, pos)
+    }
+
+    #[test]
+    fn trivial_sat_and_model() {
+        let mut s = Solver::new();
+        let a = s.new_var();
+        let b = s.new_var();
+        assert!(s.add_clause(&[lit(a, true), lit(b, true)]));
+        assert!(s.add_clause(&[lit(a, false)]));
+        assert_eq!(s.solve(&[]), SatResult::Sat);
+        assert!(!s.model_value(lit(a, true)));
+        assert!(s.model_value(lit(b, true)));
+    }
+
+    #[test]
+    fn trivial_unsat() {
+        let mut s = Solver::new();
+        let a = s.new_var();
+        s.add_clause(&[lit(a, true)]);
+        assert!(!s.add_clause(&[lit(a, false)]) || s.solve(&[]) == SatResult::Unsat);
+    }
+
+    #[test]
+    fn empty_clause_is_unsat() {
+        let mut s = Solver::new();
+        let _ = s.new_var();
+        assert!(!s.add_clause(&[]));
+        assert_eq!(s.solve(&[]), SatResult::Unsat);
+    }
+
+    #[test]
+    fn tautology_is_ignored() {
+        let mut s = Solver::new();
+        let a = s.new_var();
+        assert!(s.add_clause(&[lit(a, true), lit(a, false)]));
+        assert_eq!(s.solve(&[]), SatResult::Sat);
+    }
+
+    /// Pigeonhole principle PHP(n+1, n): n+1 pigeons, n holes — UNSAT and
+    /// requires real conflict analysis to close out.
+    fn php(pigeons: usize, holes: usize) -> Solver {
+        let mut s = Solver::new();
+        let mut v = vec![vec![Lit(0); holes]; pigeons];
+        for p in 0..pigeons {
+            for h in 0..holes {
+                v[p][h] = lit(s.new_var(), true);
+            }
+        }
+        for p in 0..pigeons {
+            s.add_clause(&v[p]);
+        }
+        for h in 0..holes {
+            for p1 in 0..pigeons {
+                for p2 in p1 + 1..pigeons {
+                    s.add_clause(&[!v[p1][h], !v[p2][h]]);
+                }
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn pigeonhole_unsat() {
+        for n in 2..=5 {
+            let mut s = php(n + 1, n);
+            assert_eq!(s.solve(&[]), SatResult::Unsat, "PHP({},{})", n + 1, n);
+        }
+    }
+
+    #[test]
+    fn pigeonhole_sat_when_enough_holes() {
+        let mut s = php(4, 4);
+        assert_eq!(s.solve(&[]), SatResult::Sat);
+    }
+
+    #[test]
+    fn assumptions_and_core() {
+        let mut s = Solver::new();
+        let a = s.new_var();
+        let b = s.new_var();
+        let c = s.new_var();
+        // a & b -> c is inconsistent with assumptions a, b, !c.
+        s.add_clause(&[lit(a, false), lit(b, false), lit(c, true)]);
+        let assum = [lit(a, true), lit(b, true), lit(c, false)];
+        assert_eq!(s.solve(&assum), SatResult::Unsat);
+        let core = s.core().to_vec();
+        assert!(!core.is_empty());
+        assert!(core.iter().all(|l| assum.contains(l)), "core {core:?} ⊄ assumptions");
+        // Without the blocking assumption it's SAT again (incremental reuse).
+        assert_eq!(s.solve(&[lit(a, true), lit(b, true)]), SatResult::Sat);
+        assert!(s.model_value(lit(c, true)));
+    }
+
+    #[test]
+    fn incremental_solving_with_added_clauses() {
+        let mut s = Solver::new();
+        let a = s.new_var();
+        let b = s.new_var();
+        s.add_clause(&[lit(a, true), lit(b, true)]);
+        assert_eq!(s.solve(&[]), SatResult::Sat);
+        s.add_clause(&[lit(a, false)]);
+        assert_eq!(s.solve(&[]), SatResult::Sat);
+        assert!(s.model_value(lit(b, true)));
+        s.add_clause(&[lit(b, false)]);
+        assert_eq!(s.solve(&[]), SatResult::Unsat);
+    }
+
+    #[test]
+    fn random_3sat_agrees_with_brute_force() {
+        // Differential test on 10-var random instances.
+        let mut state = 0x12345678u64;
+        let mut rand = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u32
+        };
+        for _round in 0..30 {
+            let n = 10usize;
+            let n_clauses = 38; // near the phase transition
+            let mut clauses = Vec::new();
+            for _ in 0..n_clauses {
+                let mut cl = Vec::new();
+                for _ in 0..3 {
+                    let v = rand() as usize % n;
+                    cl.push(Lit::new(v as Var, rand() % 2 == 0));
+                }
+                clauses.push(cl);
+            }
+            // Brute force.
+            let mut bf_sat = false;
+            'outer: for m in 0..1u32 << n {
+                for cl in &clauses {
+                    if !cl.iter().any(|l| ((m >> l.var()) & 1 == 1) != l.is_neg() ) {
+                        continue 'outer;
+                    }
+                }
+                bf_sat = true;
+                break;
+            }
+            let mut s = Solver::new();
+            for _ in 0..n {
+                s.new_var();
+            }
+            let mut ok = true;
+            for cl in &clauses {
+                ok &= s.add_clause(cl);
+            }
+            let got = if !ok { SatResult::Unsat } else { s.solve(&[]) };
+            assert_eq!(got == SatResult::Sat, bf_sat, "instance {clauses:?}");
+            if got == SatResult::Sat {
+                // Verify the model actually satisfies the formula.
+                for cl in &clauses {
+                    assert!(cl.iter().any(|&l| s.model_value(l)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn luby_sequence_prefix() {
+        let got: Vec<u64> = (0..15).map(luby).collect();
+        assert_eq!(got, vec![1, 1, 2, 1, 1, 2, 4, 1, 1, 2, 1, 1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn conflict_budget_returns_none_or_answer() {
+        let mut s = php(7, 6); // hard-ish
+        s.conflict_budget = Some(10);
+        let r = s.solve_limited(&[]);
+        // Either it finished fast or it gave up; both acceptable.
+        if let Some(res) = r {
+            assert_eq!(res, SatResult::Unsat);
+        }
+    }
+}

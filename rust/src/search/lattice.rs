@@ -1,0 +1,99 @@
+//! Restriction lattices.
+//!
+//! A cell is one restriction the miter is solved under. The paper starts
+//! from a strong restriction and progressively weakens it; because the
+//! proxies correlate with synthesised area (§III / Fig. 4), visiting
+//! cells in ascending *estimated-area* order makes the first few SAT
+//! answers the low-area ones.
+
+/// One restriction cell with its proxy-based area estimate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cell {
+    /// (PIT, ITS) for SHARED; (LPP, PPO) for XPAT.
+    pub a: usize,
+    pub b: usize,
+    pub estimate: f64,
+}
+
+/// SHARED lattice: PIT ∈ [0, t], ITS ∈ [pit, min(m*pit, its_cap)].
+///
+/// The estimate mirrors the proxy study: each included product costs
+/// roughly one AND tree, each extra sum connection one OR input. The
+/// exact weights only fix the visiting order, not correctness.
+pub fn shared_cells(t: usize, m: usize) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for pit in 0..=t {
+        let its_hi = (m * pit.max(1)).min(m * t);
+        for its in pit..=its_hi {
+            cells.push(Cell {
+                a: pit,
+                b: its,
+                estimate: 2.0 * pit as f64 + 0.8 * its as f64,
+            });
+        }
+    }
+    sort_cells(&mut cells);
+    cells
+}
+
+/// XPAT lattice: LPP ∈ [0, n], PPO ∈ [1, k]. The nonshared template
+/// replicates products per output, so the estimate scales with m.
+pub fn xpat_cells(n: usize, k: usize, m: usize) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for lpp in 0..=n {
+        for ppo in 1..=k {
+            cells.push(Cell {
+                a: lpp,
+                b: ppo,
+                estimate: m as f64 * ppo as f64 * (1.0 + 0.9 * lpp as f64),
+            });
+        }
+    }
+    sort_cells(&mut cells);
+    cells
+}
+
+fn sort_cells(cells: &mut [Cell]) {
+    cells.sort_by(|x, y| {
+        x.estimate
+            .partial_cmp(&y.estimate)
+            .unwrap()
+            .then(x.a.cmp(&y.a))
+            .then(x.b.cmp(&y.b))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_cells_sorted_and_bounded() {
+        let cells = shared_cells(4, 3);
+        assert!(!cells.is_empty());
+        for w in cells.windows(2) {
+            assert!(w[0].estimate <= w[1].estimate);
+        }
+        for c in &cells {
+            assert!(c.a <= 4);
+            assert!(c.b <= 12);
+            assert!(c.b >= c.a || c.a == 0);
+        }
+    }
+
+    #[test]
+    fn xpat_cells_cover_grid() {
+        let cells = xpat_cells(4, 3, 2);
+        assert_eq!(cells.len(), 5 * 3);
+        assert!(cells.iter().any(|c| c.a == 0 && c.b == 1));
+        assert!(cells.iter().any(|c| c.a == 4 && c.b == 3));
+    }
+
+    #[test]
+    fn strongest_cell_first() {
+        let cells = shared_cells(6, 3);
+        assert_eq!((cells[0].a, cells[0].b), (0, 0));
+        let xc = xpat_cells(4, 4, 3);
+        assert_eq!((xc[0].a, xc[0].b), (0, 1));
+    }
+}

@@ -1,0 +1,10 @@
+//! The design-space exploration of §III: progressive weakening of the
+//! template restrictions until satisfiable, then multi-solution
+//! enumeration — XPAT's grid over (LPP, PPO) and SHARED's grid over
+//! (PIT, ITS), each ordered by the proxy's area estimate.
+
+pub mod lattice;
+pub mod runner;
+
+pub use lattice::{shared_cells, xpat_cells, Cell};
+pub use runner::{search_shared, search_xpat, SearchConfig, SearchOutcome, Solution};

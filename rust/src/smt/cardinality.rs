@@ -1,0 +1,176 @@
+//! Totalizer cardinality constraints (Bailleux & Boufkhad).
+//!
+//! `at_most_k(builder, xs, k)` constrains `sum(xs) <= k` by building a
+//! balanced merge tree of unary counters. The totalizer is incremental-
+//! friendly: the count outputs are ordinary literals, so the search can
+//! also *assume* tighter bounds without re-encoding (used by the
+//! progressive weakening in `search::lattice`).
+
+use crate::sat::Lit;
+
+use super::cnf::CnfBuilder;
+
+/// Unary counter node: `out[i]` true iff at least `i+1` of the leaves
+/// below it are true.
+fn merge(b: &mut CnfBuilder, left: &[Lit], right: &[Lit], cap: usize) -> Vec<Lit> {
+    let n = (left.len() + right.len()).min(cap);
+    let out: Vec<Lit> = (0..n).map(|_| b.new_lit()).collect();
+    // sum >= i+j  =>  out[i+j-1]; encode for all splits.
+    for i in 0..=left.len().min(n) {
+        for j in 0..=right.len().min(n) {
+            if i + j == 0 || i + j > n {
+                continue;
+            }
+            let mut clause: Vec<Lit> = Vec::with_capacity(3);
+            if i > 0 {
+                clause.push(!left[i - 1]);
+            }
+            if j > 0 {
+                clause.push(!right[j - 1]);
+            }
+            clause.push(out[i + j - 1]);
+            b.add_clause(&clause);
+        }
+    }
+    // Only the "count >= i+j -> out" direction is required: enforcing
+    // `sum <= k` (hard or assumed as !out[k]) only ever *reads* that
+    // direction. At-least constraints would need the converse; the search
+    // never uses them.
+    out
+}
+
+/// Build the totalizer count outputs for `xs`, capped at `cap` counts.
+/// `result[i]` is true iff at least `i+1` inputs are true (for i < cap).
+pub fn totalizer_outputs(b: &mut CnfBuilder, xs: &[Lit], cap: usize) -> Vec<Lit> {
+    match xs.len() {
+        0 => Vec::new(),
+        1 => vec![xs[0]],
+        _ => {
+            let mid = xs.len() / 2;
+            let left = totalizer_outputs(b, &xs[..mid], cap);
+            let right = totalizer_outputs(b, &xs[mid..], cap);
+            merge(b, &left, &right, cap)
+        }
+    }
+}
+
+/// Constrain `sum(xs) <= k` (hard clauses).
+pub fn at_most_k(b: &mut CnfBuilder, xs: &[Lit], k: usize) {
+    if k >= xs.len() {
+        return;
+    }
+    if k == 0 {
+        for &x in xs {
+            b.add_clause(&[!x]);
+        }
+        return;
+    }
+    let outs = totalizer_outputs(b, xs, k + 1);
+    // Forbid count >= k+1.
+    if outs.len() > k {
+        b.add_clause(&[!outs[k]]);
+    }
+}
+
+/// Build count outputs once and return the *assumption literal* that
+/// enforces `sum(xs) <= k` when assumed. Used for progressive weakening
+/// without re-encoding the formula.
+pub struct BoundedCounter {
+    outs: Vec<Lit>,
+    n_inputs: usize,
+}
+
+impl BoundedCounter {
+    pub fn new(b: &mut CnfBuilder, xs: &[Lit]) -> Self {
+        let outs = totalizer_outputs(b, xs, xs.len());
+        BoundedCounter { outs, n_inputs: xs.len() }
+    }
+
+    /// Literal that is *false* iff the count exceeds `k`; assume it to
+    /// enforce `sum <= k`. Returns `None` when the bound is trivial.
+    pub fn at_most(&self, k: usize) -> Option<Lit> {
+        if k >= self.n_inputs {
+            None
+        } else {
+            Some(!self.outs[k])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sat::SatResult;
+
+    fn popcount_models(n: usize, k: usize) -> (usize, usize) {
+        // Returns (#models found satisfying at_most_k, expected count).
+        let mut b = CnfBuilder::new();
+        let xs: Vec<Lit> = (0..n).map(|_| b.new_lit()).collect();
+        at_most_k(&mut b, &xs, k);
+        let mut sat_count = 0usize;
+        for m in 0..1usize << n {
+            let assum: Vec<Lit> = xs
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| if (m >> i) & 1 == 1 { l } else { !l })
+                .collect();
+            if b.solver.solve(&assum) == SatResult::Sat {
+                sat_count += 1;
+            }
+        }
+        let expected = (0..1usize << n).filter(|m| m.count_ones() as usize <= k).count();
+        (sat_count, expected)
+    }
+
+    #[test]
+    fn at_most_k_exact_model_count() {
+        for n in 1..=6 {
+            for k in 0..=n {
+                let (got, want) = popcount_models(n, k);
+                assert_eq!(got, want, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn at_most_zero_forces_all_false() {
+        let mut b = CnfBuilder::new();
+        let xs: Vec<Lit> = (0..4).map(|_| b.new_lit()).collect();
+        at_most_k(&mut b, &xs, 0);
+        assert_eq!(b.solver.solve(&[]), SatResult::Sat);
+        for &x in &xs {
+            assert!(!b.solver.model_value(x));
+        }
+        assert_eq!(b.solver.solve(&[xs[2]]), SatResult::Unsat);
+    }
+
+    #[test]
+    fn bounded_counter_assumption_tightening() {
+        let mut b = CnfBuilder::new();
+        let xs: Vec<Lit> = (0..5).map(|_| b.new_lit()).collect();
+        let counter = BoundedCounter::new(&mut b, &xs);
+        // Force exactly 3 inputs true.
+        b.solver.add_clause(&[xs[0]]);
+        b.solver.add_clause(&[xs[1]]);
+        b.solver.add_clause(&[xs[2]]);
+        b.solver.add_clause(&[!xs[3]]);
+        b.solver.add_clause(&[!xs[4]]);
+        for k in 0..5 {
+            let mut assum = Vec::new();
+            if let Some(l) = counter.at_most(k) {
+                assum.push(l);
+            }
+            let want = if k >= 3 { SatResult::Sat } else { SatResult::Unsat };
+            assert_eq!(b.solver.solve(&assum), want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn trivial_bound_is_none() {
+        let mut b = CnfBuilder::new();
+        let xs: Vec<Lit> = (0..3).map(|_| b.new_lit()).collect();
+        let counter = BoundedCounter::new(&mut b, &xs);
+        assert!(counter.at_most(3).is_none());
+        assert!(counter.at_most(2).is_some());
+    }
+}

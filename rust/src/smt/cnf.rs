@@ -1,0 +1,194 @@
+//! Tseitin-style CNF construction helpers over a [`Solver`].
+
+use crate::sat::{Lit, Solver};
+
+/// Thin wrapper owning a solver while formulas are being built.
+pub struct CnfBuilder {
+    pub solver: Solver,
+    /// Lazily-created literal that is constrained true.
+    true_lit: Option<Lit>,
+}
+
+impl Default for CnfBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CnfBuilder {
+    pub fn new() -> Self {
+        CnfBuilder { solver: Solver::new(), true_lit: None }
+    }
+
+    pub fn new_lit(&mut self) -> Lit {
+        Lit::pos(self.solver.new_var())
+    }
+
+    /// A literal fixed to true (created on first use).
+    pub fn true_lit(&mut self) -> Lit {
+        match self.true_lit {
+            Some(l) => l,
+            None => {
+                let l = self.new_lit();
+                self.solver.add_clause(&[l]);
+                self.true_lit = Some(l);
+                l
+            }
+        }
+    }
+
+    pub fn false_lit(&mut self) -> Lit {
+        !self.true_lit()
+    }
+
+    pub fn add_clause(&mut self, lits: &[Lit]) {
+        self.solver.add_clause(lits);
+    }
+
+    /// y <-> AND(xs). Empty conjunction is true.
+    pub fn and(&mut self, xs: &[Lit]) -> Lit {
+        match xs {
+            [] => self.true_lit(),
+            [x] => *x,
+            _ => {
+                let y = self.new_lit();
+                for &x in xs {
+                    self.add_clause(&[!y, x]);
+                }
+                let mut long: Vec<Lit> = xs.iter().map(|&x| !x).collect();
+                long.push(y);
+                self.add_clause(&long);
+                y
+            }
+        }
+    }
+
+    /// y <-> OR(xs). Empty disjunction is false.
+    pub fn or(&mut self, xs: &[Lit]) -> Lit {
+        match xs {
+            [] => self.false_lit(),
+            [x] => *x,
+            _ => {
+                let y = self.new_lit();
+                for &x in xs {
+                    self.add_clause(&[y, !x]);
+                }
+                let mut long: Vec<Lit> = xs.to_vec();
+                long.push(!y);
+                self.add_clause(&long);
+                y
+            }
+        }
+    }
+
+    /// y <-> (a XOR b).
+    pub fn xor(&mut self, a: Lit, b: Lit) -> Lit {
+        let y = self.new_lit();
+        self.add_clause(&[!y, a, b]);
+        self.add_clause(&[!y, !a, !b]);
+        self.add_clause(&[y, !a, b]);
+        self.add_clause(&[y, a, !b]);
+        y
+    }
+
+    /// y <-> (sel ? t : e).
+    pub fn ite(&mut self, sel: Lit, t: Lit, e: Lit) -> Lit {
+        let y = self.new_lit();
+        self.add_clause(&[!y, !sel, t]);
+        self.add_clause(&[!y, sel, e]);
+        self.add_clause(&[y, !sel, !t]);
+        self.add_clause(&[y, sel, !e]);
+        // Redundant but propagation-strengthening: y true if both branches.
+        self.add_clause(&[!t, !e, y]);
+        self.add_clause(&[t, e, !y]);
+        y
+    }
+
+    /// Constrain a -> b.
+    pub fn implies(&mut self, a: Lit, b: Lit) {
+        self.add_clause(&[!a, b]);
+    }
+
+    /// Constrain y <-> (a OR b) for an existing y.
+    pub fn define_or2(&mut self, y: Lit, a: Lit, b: Lit) {
+        self.add_clause(&[!a, y]);
+        self.add_clause(&[!b, y]);
+        self.add_clause(&[a, b, !y]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sat::SatResult;
+
+    fn all_models_agree<F>(builder: &mut CnfBuilder, ins: &[Lit], y: Lit, f: F)
+    where
+        F: Fn(&[bool]) -> bool,
+    {
+        // Enumerate all input assignments via assumptions; check y's value.
+        let n = ins.len();
+        for m in 0..1usize << n {
+            let assum: Vec<Lit> = ins
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| if (m >> i) & 1 == 1 { l } else { !l })
+                .collect();
+            assert_eq!(builder.solver.solve(&assum), SatResult::Sat);
+            let bits: Vec<bool> = (0..n).map(|i| (m >> i) & 1 == 1).collect();
+            assert_eq!(
+                builder.solver.model_value(y),
+                f(&bits),
+                "inputs {bits:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn and_gate_semantics() {
+        let mut b = CnfBuilder::new();
+        let ins: Vec<Lit> = (0..3).map(|_| b.new_lit()).collect();
+        let y = b.and(&ins);
+        all_models_agree(&mut b, &ins.clone(), y, |bits| bits.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn or_gate_semantics() {
+        let mut b = CnfBuilder::new();
+        let ins: Vec<Lit> = (0..3).map(|_| b.new_lit()).collect();
+        let y = b.or(&ins);
+        all_models_agree(&mut b, &ins.clone(), y, |bits| bits.iter().any(|&x| x));
+    }
+
+    #[test]
+    fn xor_gate_semantics() {
+        let mut b = CnfBuilder::new();
+        let ins: Vec<Lit> = (0..2).map(|_| b.new_lit()).collect();
+        let y = b.xor(ins[0], ins[1]);
+        all_models_agree(&mut b, &ins.clone(), y, |bits| bits[0] ^ bits[1]);
+    }
+
+    #[test]
+    fn ite_semantics() {
+        let mut b = CnfBuilder::new();
+        let ins: Vec<Lit> = (0..3).map(|_| b.new_lit()).collect();
+        let y = b.ite(ins[0], ins[1], ins[2]);
+        all_models_agree(&mut b, &ins.clone(), y, |bits| {
+            if bits[0] {
+                bits[1]
+            } else {
+                bits[2]
+            }
+        });
+    }
+
+    #[test]
+    fn empty_and_or() {
+        let mut b = CnfBuilder::new();
+        let t = b.and(&[]);
+        let f = b.or(&[]);
+        assert_eq!(b.solver.solve(&[]), SatResult::Sat);
+        assert!(b.solver.model_value(t));
+        assert!(!b.solver.model_value(f));
+    }
+}

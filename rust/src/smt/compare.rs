@@ -1,0 +1,160 @@
+//! Integer range comparators over bit vectors.
+//!
+//! In the ∀-expanded miter (DESIGN.md §2) the exact circuit's value `E`
+//! at each input point is a *constant*, so the distance constraint
+//! `|V - E| <= ET` collapses to the interval check
+//! `V ∈ [max(0, E-ET), min(2^m - 1, E+ET)]` over the approximate output
+//! bits `V` — two lexicographic comparisons against constants.
+
+use crate::sat::Lit;
+
+use super::cnf::CnfBuilder;
+
+/// Constrain `value(bits) <= c` where `bits` is LSB-first.
+///
+/// Classic constant comparison: for every position `k` where `c` has a 0
+/// bit, either some higher position with a 1 in `c` is 0 in the value, or
+/// `bits[k]` must be 0. Encoded MSB-down with a prefix-equality chain.
+pub fn value_le_const(b: &mut CnfBuilder, bits: &[Lit], c: u64) {
+    let m = bits.len();
+    if m == 0 || c >= (1u64 << m) - 1 {
+        return; // trivially satisfied
+    }
+    // eq[k]: value bits above position k all equal c's bits above k.
+    // Chain from MSB; when prefix equal and c_k = 0, forbid bits[k] = 1.
+    let mut prefix_eq: Option<Lit> = None; // None = vacuously true
+    for k in (0..m).rev() {
+        let ck = (c >> k) & 1 == 1;
+        match prefix_eq {
+            None => {
+                if !ck {
+                    // No prefix condition: bits[k] -> value > c unless a
+                    // higher... there is no higher; forbid directly only
+                    // while prefix is vacuous.
+                    b.add_clause(&[!bits[k]]);
+                    continue; // prefix stays vacuous (bits[k]=0=c_k)
+                }
+                // c_k = 1: prefix equality now depends on bits[k].
+                prefix_eq = Some(bits[k]);
+            }
+            Some(eq) => {
+                if !ck {
+                    // eq & bits[k] would make value > c.
+                    b.add_clause(&[!eq, !bits[k]]);
+                    // prefix remains eq ∧ !bits[k]; fold into a new lit.
+                    let eq2 = b.new_lit();
+                    b.add_clause(&[!eq2, eq]);
+                    b.add_clause(&[!eq2, !bits[k]]);
+                    b.add_clause(&[eq2, !eq, bits[k]]);
+                    prefix_eq = Some(eq2);
+                } else {
+                    let eq2 = b.new_lit();
+                    b.add_clause(&[!eq2, eq]);
+                    b.add_clause(&[!eq2, bits[k]]);
+                    b.add_clause(&[eq2, !eq, !bits[k]]);
+                    prefix_eq = Some(eq2);
+                }
+            }
+        }
+    }
+}
+
+/// Constrain `value(bits) >= c` (LSB-first) by comparing the complemented
+/// bits against the complemented constant: `V >= c  <=>  ~V <= ~c`.
+pub fn value_ge_const(b: &mut CnfBuilder, bits: &[Lit], c: u64) {
+    let m = bits.len();
+    if c == 0 {
+        return;
+    }
+    assert!(c < (1u64 << m) + 1, "bound exceeds bus range");
+    let inv: Vec<Lit> = bits.iter().map(|&l| !l).collect();
+    let mask = (1u64 << m) - 1;
+    value_le_const(b, &inv, !c & mask);
+}
+
+/// Constrain `lo <= value(bits) <= hi`.
+pub fn value_in_range(b: &mut CnfBuilder, bits: &[Lit], lo: u64, hi: u64) {
+    assert!(lo <= hi);
+    value_ge_const(b, bits, lo);
+    value_le_const(b, bits, hi);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sat::{Lit, SatResult};
+
+    fn models_in_range(m: usize, lo: u64, hi: u64) -> Vec<u64> {
+        let mut b = CnfBuilder::new();
+        let bits: Vec<Lit> = (0..m).map(|_| b.new_lit()).collect();
+        value_in_range(&mut b, &bits, lo, hi);
+        let mut sats = Vec::new();
+        for v in 0..1u64 << m {
+            let assum: Vec<Lit> = bits
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| if (v >> i) & 1 == 1 { l } else { !l })
+                .collect();
+            if b.solver.solve(&assum) == SatResult::Sat {
+                sats.push(v);
+            }
+        }
+        sats
+    }
+
+    #[test]
+    fn exhaustive_range_check() {
+        for m in 1..=4 {
+            let top = (1u64 << m) - 1;
+            for lo in 0..=top {
+                for hi in lo..=top {
+                    let got = models_in_range(m, lo, hi);
+                    let want: Vec<u64> = (lo..=hi).collect();
+                    assert_eq!(got, want, "m={m} lo={lo} hi={hi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn le_only() {
+        let mut b = CnfBuilder::new();
+        let bits: Vec<Lit> = (0..3).map(|_| b.new_lit()).collect();
+        value_le_const(&mut b, &bits, 5);
+        for v in 0..8u64 {
+            let assum: Vec<Lit> = bits
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| if (v >> i) & 1 == 1 { l } else { !l })
+                .collect();
+            let want = if v <= 5 { SatResult::Sat } else { SatResult::Unsat };
+            assert_eq!(b.solver.solve(&assum), want, "v={v}");
+        }
+    }
+
+    #[test]
+    fn ge_only() {
+        let mut b = CnfBuilder::new();
+        let bits: Vec<Lit> = (0..3).map(|_| b.new_lit()).collect();
+        value_ge_const(&mut b, &bits, 3);
+        for v in 0..8u64 {
+            let assum: Vec<Lit> = bits
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| if (v >> i) & 1 == 1 { l } else { !l })
+                .collect();
+            let want = if v >= 3 { SatResult::Sat } else { SatResult::Unsat };
+            assert_eq!(b.solver.solve(&assum), want, "v={v}");
+        }
+    }
+
+    #[test]
+    fn trivial_bounds_add_nothing() {
+        let mut b = CnfBuilder::new();
+        let bits: Vec<Lit> = (0..3).map(|_| b.new_lit()).collect();
+        let before = b.solver.n_clauses();
+        value_le_const(&mut b, &bits, 7);
+        value_ge_const(&mut b, &bits, 0);
+        assert_eq!(b.solver.n_clauses(), before);
+    }
+}

@@ -1,0 +1,13 @@
+//! Propositional encodings on top of the SAT core — the "bit-blasting"
+//! layer standing in for the paper's use of Z3 over the error miter
+//! (DESIGN.md §2): Tseitin gates, totalizer cardinality constraints for
+//! the LPP/PPO/PIT/ITS restrictions, and integer range comparators for
+//! the `|exact - approx| <= ET` distance check.
+
+pub mod cardinality;
+pub mod cnf;
+pub mod compare;
+
+pub use cardinality::at_most_k;
+pub use cnf::CnfBuilder;
+pub use compare::{value_in_range, value_le_const, value_ge_const};

@@ -1,0 +1,269 @@
+//! Standard-cell library and the 3-input minimal-area function table.
+//!
+//! Cell areas follow the Nangate 45nm Open Cell Library X1 drive
+//! strengths (µm²). The [`FunctionTable`] assigns to every boolean
+//! function of up to three variables the minimum *tree* area over
+//! compositions of library cells, computed once by fixpoint relaxation —
+//! a miniature exact synthesis that the cut mapper then reuses for every
+//! cut match. Shared subtrees inside a cut are not discounted (tree
+//! costing), which is the standard conservative choice in cut mappers.
+
+use std::sync::OnceLock;
+
+/// Truth table over (a, b, c) packed into a u8: bit `x` is f(x) with
+/// a = bit0 of x, b = bit1, c = bit2 — the same LSB-first order used
+/// everywhere in this repo.
+pub type Tt3 = u8;
+
+pub const VAR_A: Tt3 = 0xAA;
+pub const VAR_B: Tt3 = 0xCC;
+pub const VAR_C: Tt3 = 0xF0;
+
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub name: &'static str,
+    pub area: f64,
+    pub arity: usize,
+    /// Function as a combinator over operand truth tables.
+    pub eval: fn(&[Tt3]) -> Tt3,
+}
+
+/// The library: Nangate 45nm X1-ish cells.
+#[derive(Debug, Clone)]
+pub struct CellLibrary {
+    pub cells: Vec<Cell>,
+    pub inv_area: f64,
+}
+
+fn f_inv(x: &[Tt3]) -> Tt3 {
+    !x[0]
+}
+fn f_nand2(x: &[Tt3]) -> Tt3 {
+    !(x[0] & x[1])
+}
+fn f_nor2(x: &[Tt3]) -> Tt3 {
+    !(x[0] | x[1])
+}
+fn f_and2(x: &[Tt3]) -> Tt3 {
+    x[0] & x[1]
+}
+fn f_or2(x: &[Tt3]) -> Tt3 {
+    x[0] | x[1]
+}
+fn f_xor2(x: &[Tt3]) -> Tt3 {
+    x[0] ^ x[1]
+}
+fn f_xnor2(x: &[Tt3]) -> Tt3 {
+    !(x[0] ^ x[1])
+}
+fn f_nand3(x: &[Tt3]) -> Tt3 {
+    !(x[0] & x[1] & x[2])
+}
+fn f_nor3(x: &[Tt3]) -> Tt3 {
+    !(x[0] | x[1] | x[2])
+}
+fn f_aoi21(x: &[Tt3]) -> Tt3 {
+    !((x[0] & x[1]) | x[2])
+}
+fn f_oai21(x: &[Tt3]) -> Tt3 {
+    !((x[0] | x[1]) & x[2])
+}
+fn f_mux2(x: &[Tt3]) -> Tt3 {
+    // MUX2(a, b, sel) = sel ? b : a
+    (x[2] & x[1]) | (!x[2] & x[0])
+}
+
+impl CellLibrary {
+    pub fn nangate45() -> Self {
+        CellLibrary {
+            inv_area: 0.532,
+            cells: vec![
+                Cell { name: "INV_X1", area: 0.532, arity: 1, eval: f_inv },
+                Cell { name: "NAND2_X1", area: 0.798, arity: 2, eval: f_nand2 },
+                Cell { name: "NOR2_X1", area: 0.798, arity: 2, eval: f_nor2 },
+                Cell { name: "AND2_X1", area: 1.064, arity: 2, eval: f_and2 },
+                Cell { name: "OR2_X1", area: 1.064, arity: 2, eval: f_or2 },
+                Cell { name: "XOR2_X1", area: 1.596, arity: 2, eval: f_xor2 },
+                Cell { name: "XNOR2_X1", area: 1.596, arity: 2, eval: f_xnor2 },
+                Cell { name: "NAND3_X1", area: 1.064, arity: 3, eval: f_nand3 },
+                Cell { name: "NOR3_X1", area: 1.064, arity: 3, eval: f_nor3 },
+                Cell { name: "AOI21_X1", area: 1.064, arity: 3, eval: f_aoi21 },
+                Cell { name: "OAI21_X1", area: 1.064, arity: 3, eval: f_oai21 },
+                Cell { name: "MUX2_X1", area: 1.862, arity: 3, eval: f_mux2 },
+            ],
+        }
+    }
+}
+
+/// Minimal tree-area per 3-input function, plus the cell chosen at the
+/// root (for reporting).
+#[derive(Debug, Clone)]
+pub struct FunctionTable {
+    pub cost: [f64; 256],
+    pub root_cell: [&'static str; 256],
+    pub inv_area: f64,
+}
+
+impl FunctionTable {
+    /// The singleton Nangate-45nm table (built on first use).
+    pub fn nangate45() -> &'static FunctionTable {
+        static TABLE: OnceLock<FunctionTable> = OnceLock::new();
+        TABLE.get_or_init(|| FunctionTable::build(&CellLibrary::nangate45()))
+    }
+
+    /// Fixpoint relaxation over cell compositions.
+    ///
+    /// Binary/unary cells relax over all pairs of reached functions.
+    /// Ternary cells are seeded over *leaf arrangements* (permutations of
+    /// the three variables, each possibly inverted) and then participate
+    /// in further relaxation through the general pass below — leaf-level
+    /// AOI/OAI/MUX matches are what a cut of size 3 can use directly.
+    pub fn build(lib: &CellLibrary) -> FunctionTable {
+        let mut cost = [f64::INFINITY; 256];
+        let mut root: [&'static str; 256] = ["-"; 256];
+        // Free starting points: projections and constants (wires).
+        for (tt, name) in [
+            (VAR_A, "wire"),
+            (VAR_B, "wire"),
+            (VAR_C, "wire"),
+            (0x00u8, "tie0"),
+            (0xFFu8, "tie1"),
+        ] {
+            cost[tt as usize] = 0.0;
+            root[tt as usize] = name;
+        }
+
+        // Ternary seeding over leaf arrangements with input inverters.
+        let perms: [[Tt3; 3]; 6] = [
+            [VAR_A, VAR_B, VAR_C],
+            [VAR_A, VAR_C, VAR_B],
+            [VAR_B, VAR_A, VAR_C],
+            [VAR_B, VAR_C, VAR_A],
+            [VAR_C, VAR_A, VAR_B],
+            [VAR_C, VAR_B, VAR_A],
+        ];
+        for cell in lib.cells.iter().filter(|c| c.arity == 3) {
+            for perm in &perms {
+                for mask in 0..8u8 {
+                    let ops: Vec<Tt3> = perm
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &v)| if (mask >> i) & 1 == 1 { !v } else { v })
+                        .collect();
+                    let tt = (cell.eval)(&ops) as usize;
+                    let c = cell.area + mask.count_ones() as f64 * lib.inv_area;
+                    if c < cost[tt] {
+                        cost[tt] = c;
+                        root[tt] = cell.name;
+                    }
+                }
+            }
+        }
+
+        // General relaxation with unary/binary cells until fixpoint.
+        loop {
+            let mut changed = false;
+            for cell in lib.cells.iter().filter(|c| c.arity <= 2) {
+                if cell.arity == 1 {
+                    for x in 0..256usize {
+                        if cost[x].is_infinite() {
+                            continue;
+                        }
+                        let tt = (cell.eval)(&[x as Tt3]) as usize;
+                        let c = cost[x] + cell.area;
+                        if c + 1e-9 < cost[tt] {
+                            cost[tt] = c;
+                            root[tt] = cell.name;
+                            changed = true;
+                        }
+                    }
+                } else {
+                    for x in 0..256usize {
+                        if cost[x].is_infinite() {
+                            continue;
+                        }
+                        for y in x..256usize {
+                            if cost[y].is_infinite() {
+                                continue;
+                            }
+                            let tt = (cell.eval)(&[x as Tt3, y as Tt3]) as usize;
+                            let c = cost[x] + cost[y] + cell.area;
+                            if c + 1e-9 < cost[tt] {
+                                cost[tt] = c;
+                                root[tt] = cell.name;
+                                changed = true;
+                            }
+                        }
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        FunctionTable { cost, root_cell: root, inv_area: lib.inv_area }
+    }
+
+    pub fn area_of(&self, tt: Tt3) -> f64 {
+        self.cost[tt as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_total_and_finite() {
+        let t = FunctionTable::nangate45();
+        for f in 0..256usize {
+            assert!(t.cost[f].is_finite(), "function {f:#04x} unreachable");
+        }
+    }
+
+    #[test]
+    fn projections_and_constants_are_free() {
+        let t = FunctionTable::nangate45();
+        for f in [VAR_A, VAR_B, VAR_C, 0x00, 0xFF] {
+            assert_eq!(t.area_of(f), 0.0);
+        }
+    }
+
+    #[test]
+    fn single_cells_cost_their_area() {
+        let t = FunctionTable::nangate45();
+        assert_eq!(t.area_of(!VAR_A), 0.532); // INV
+        assert_eq!(t.area_of(!(VAR_A & VAR_B)), 0.798); // NAND2
+        assert_eq!(t.area_of(VAR_A & VAR_B), 1.064); // AND2 beats NAND2+INV (1.33)
+        assert_eq!(t.area_of(VAR_A ^ VAR_B), 1.596); // XOR2
+        assert_eq!(t.area_of(!((VAR_A & VAR_B) | VAR_C)), 1.064); // AOI21
+    }
+
+    #[test]
+    fn table_respects_symmetry() {
+        // Cost must be invariant under permuting input variables.
+        let t = FunctionTable::nangate45();
+        let maj_abc = (VAR_A & VAR_B) | (VAR_A & VAR_C) | (VAR_B & VAR_C);
+        let maj_bca = (VAR_B & VAR_C) | (VAR_B & VAR_A) | (VAR_C & VAR_A);
+        assert_eq!(t.area_of(maj_abc), t.area_of(maj_bca));
+    }
+
+    #[test]
+    fn inverter_duality() {
+        // f and !f differ by at most one inverter.
+        let t = FunctionTable::nangate45();
+        for f in 0..=255u8 {
+            let d = (t.area_of(f) - t.area_of(!f)).abs();
+            assert!(d <= t.inv_area + 1e-9, "f={f:#04x} delta={d}");
+        }
+    }
+
+    #[test]
+    fn costs_are_sane_upper_bound() {
+        // Nothing should exceed a naive 2-level bound for 3 vars.
+        let t = FunctionTable::nangate45();
+        for f in 0..=255u8 {
+            assert!(t.area_of(f) < 12.0, "f={f:#04x} cost={}", t.area_of(f));
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! Technology mapping and the synthesised-area metric — our stand-in for
+//! the paper's Yosys + Nangate 45nm flow (DESIGN.md §2).
+//!
+//! `cell` builds, once, a minimal-area implementation table for all 256
+//! three-input boolean functions over a Nangate-45nm-like standard-cell
+//! library (fixpoint relaxation over cell compositions). `mapper` then
+//! performs 3-feasible-cut covering of the optimised AIG with that table,
+//! which is exactly the shape of an area-oriented LUT/cell mapper.
+//!
+//! The resulting metric is deterministic and monotone in circuit
+//! structure; the paper's claims rest on *relative* areas (who wins, by
+//! how much), which this preserves.
+
+pub mod cell;
+pub mod mapper;
+
+pub use cell::{CellLibrary, FunctionTable};
+pub use mapper::{map_aig, MappedNetlist};
+
+use crate::aig::{netlist_to_aig, optimize};
+use crate::circuit::Netlist;
+
+/// End-to-end "synthesis": optimise the netlist and map it, returning the
+/// synthesised area in µm² (Nangate-45nm-like cell areas).
+pub fn synthesize_area(nl: &Netlist) -> f64 {
+    let aig = optimize(&netlist_to_aig(nl));
+    map_aig(&aig, FunctionTable::nangate45()).area
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::generators::PAPER_BENCHMARKS;
+
+    #[test]
+    fn exact_benchmark_areas_are_positive_and_monotone() {
+        let mut adder_area = Vec::new();
+        let mut mult_area = Vec::new();
+        for b in &PAPER_BENCHMARKS {
+            let area = synthesize_area(&b.netlist());
+            assert!(area > 0.0, "{}", b.name);
+            if b.is_adder {
+                adder_area.push(area);
+            } else {
+                mult_area.push(area);
+            }
+        }
+        // Wider circuits must synthesise larger.
+        assert!(adder_area[0] < adder_area[1] && adder_area[1] < adder_area[2]);
+        assert!(mult_area[0] < mult_area[1] && mult_area[1] < mult_area[2]);
+        // A multiplier dwarfs the same-width adder.
+        assert!(mult_area[2] > adder_area[2]);
+    }
+
+    #[test]
+    fn constant_circuit_has_zero_area() {
+        use crate::circuit::netlist::{GateKind, Netlist};
+        let mut nl = Netlist::new("const");
+        let _a = nl.add_input();
+        let c = nl.push(GateKind::Const1, vec![]);
+        nl.set_outputs(vec![c]);
+        assert_eq!(synthesize_area(&nl), 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! The paper's core machinery: parametrisable sum-of-products templates
+//! and the error miter.
+//!
+//! * [`params`] — a concrete template instantiation ([`SopParams`]): the
+//!   assignment the SMT search produces, with direct evaluation, netlist
+//!   extraction and the PIT/ITS/LPP/PPO proxy metrics of §III.
+//! * [`miter`] — the ∀-expanded error miter (Fig. 1) for both the SHARED
+//!   template (eq. 2) and the nonshared XPAT template (eq. 1), encoded
+//!   into CNF with assumption-based restriction counters so the lattice
+//!   search tightens/weakens PIT/ITS (resp. LPP/PPO) without re-encoding.
+
+pub mod miter;
+pub mod params;
+
+pub use miter::{NonsharedMiter, SharedMiter};
+pub use params::SopParams;

@@ -1,0 +1,278 @@
+//! A concrete SOP template instantiation — the object the search hands
+//! around: evaluated exhaustively (rust or PJRT), extracted to a netlist
+//! for synthesis, and measured for the proxy metrics of §III.
+
+use crate::circuit::netlist::{GateKind, Netlist, NodeId};
+use crate::util::Rng;
+
+/// Parameters of a (possibly shared) sum-of-products template over `n`
+/// inputs, `m` outputs and a pool of `t` products. The nonshared XPAT
+/// template is the special case where `out_sel` is block-diagonal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SopParams {
+    pub n: usize,
+    pub m: usize,
+    pub t: usize,
+    /// `[t][n]` flattened: literal j participates in product k.
+    pub use_mask: Vec<bool>,
+    /// `[t][n]` flattened: literal appears negated (meaningful when used).
+    pub neg_mask: Vec<bool>,
+    /// `[m][t]` flattened: product k feeds output i.
+    pub out_sel: Vec<bool>,
+    /// Output i is the constant 1 (the `∨ ⊤` term of eq. 2).
+    pub out_const: Vec<bool>,
+}
+
+impl SopParams {
+    pub fn empty(n: usize, m: usize, t: usize) -> Self {
+        SopParams {
+            n,
+            m,
+            t,
+            use_mask: vec![false; t * n],
+            neg_mask: vec![false; t * n],
+            out_sel: vec![false; m * t],
+            out_const: vec![false; m],
+        }
+    }
+
+    #[inline]
+    pub fn uses(&self, k: usize, j: usize) -> bool {
+        self.use_mask[k * self.n + j]
+    }
+
+    #[inline]
+    pub fn negated(&self, k: usize, j: usize) -> bool {
+        self.neg_mask[k * self.n + j]
+    }
+
+    #[inline]
+    pub fn selects(&self, i: usize, k: usize) -> bool {
+        self.out_sel[i * self.t + k]
+    }
+
+    /// Product k's value at input point `x` (empty product = 1).
+    pub fn product_at(&self, k: usize, x: usize) -> bool {
+        (0..self.n).all(|j| {
+            !self.uses(k, j) || (((x >> j) & 1 == 1) ^ self.negated(k, j))
+        })
+    }
+
+    /// Output value (LSB-first integer) at input point `x`.
+    pub fn value_at(&self, x: usize) -> u64 {
+        let prods: Vec<bool> = (0..self.t).map(|k| self.product_at(k, x)).collect();
+        (0..self.m).fold(0u64, |acc, i| {
+            let bit = self.out_const[i]
+                || (0..self.t).any(|k| self.selects(i, k) && prods[k]);
+            acc | ((bit as u64) << i)
+        })
+    }
+
+    /// All output values — the slow direct-semantics oracle; the fast
+    /// bit-parallel version lives in [`crate::evaluator`].
+    pub fn output_values(&self) -> Vec<u64> {
+        (0..1usize << self.n).map(|x| self.value_at(x)).collect()
+    }
+
+    // ---- §III proxy metrics ------------------------------------------
+
+    /// Products-in-total: pool products referenced by at least one sum.
+    pub fn pit(&self) -> usize {
+        (0..self.t)
+            .filter(|&k| (0..self.m).any(|i| self.selects(i, k)))
+            .count()
+    }
+
+    /// Inputs-to-sums: total product→sum connections.
+    pub fn its(&self) -> usize {
+        self.out_sel.iter().filter(|&&b| b).count()
+    }
+
+    /// Max literals-per-product over *used* products (XPAT's LPP).
+    pub fn lpp(&self) -> usize {
+        (0..self.t)
+            .filter(|&k| (0..self.m).any(|i| self.selects(i, k)))
+            .map(|k| (0..self.n).filter(|&j| self.uses(k, j)).count())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Max products-per-output (XPAT's PPO).
+    pub fn ppo(&self) -> usize {
+        (0..self.m)
+            .map(|i| (0..self.t).filter(|&k| self.selects(i, k)).count())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Extract the instantiated template as a gate-level netlist (the
+    /// circuit that goes to synthesis). Unused products are skipped;
+    /// literals materialise one inverter per input, shared.
+    pub fn to_netlist(&self, name: &str) -> Netlist {
+        let mut nl = Netlist::new(name);
+        let ins: Vec<NodeId> = (0..self.n).map(|_| nl.add_input()).collect();
+        let mut invs: Vec<Option<NodeId>> = vec![None; self.n];
+        let used: Vec<bool> = (0..self.t)
+            .map(|k| (0..self.m).any(|i| self.selects(i, k)))
+            .collect();
+
+        let mut const0: Option<NodeId> = None;
+        let mut const1: Option<NodeId> = None;
+        let mut prod_node: Vec<Option<NodeId>> = vec![None; self.t];
+        for k in 0..self.t {
+            if !used[k] {
+                continue;
+            }
+            let mut lits: Vec<NodeId> = Vec::new();
+            for j in 0..self.n {
+                if !self.uses(k, j) {
+                    continue;
+                }
+                if self.negated(k, j) {
+                    let inv = *invs[j]
+                        .get_or_insert_with(|| nl.push(GateKind::Not, vec![ins[j]]));
+                    lits.push(inv);
+                } else {
+                    lits.push(ins[j]);
+                }
+            }
+            prod_node[k] = Some(match lits.len() {
+                0 => *const1.get_or_insert_with(|| nl.push(GateKind::Const1, vec![])),
+                1 => lits[0],
+                _ => nl.push(GateKind::And, lits),
+            });
+        }
+
+        let mut outs = Vec::with_capacity(self.m);
+        for i in 0..self.m {
+            if self.out_const[i] {
+                outs.push(*const1.get_or_insert_with(|| nl.push(GateKind::Const1, vec![])));
+                continue;
+            }
+            let terms: Vec<NodeId> = (0..self.t)
+                .filter(|&k| self.selects(i, k))
+                .map(|k| prod_node[k].expect("selected product must be built"))
+                .collect();
+            outs.push(match terms.len() {
+                0 => *const0.get_or_insert_with(|| nl.push(GateKind::Const0, vec![])),
+                1 => terms[0],
+                _ => nl.push(GateKind::Or, terms),
+            });
+        }
+        nl.set_outputs(outs);
+        nl
+    }
+
+    /// Random instantiation (for the Fig. 4 random baseline and tests).
+    /// `lit_density` is the chance a literal is used in a product,
+    /// `sel_density` the chance a product feeds an output.
+    pub fn random(rng: &mut Rng, n: usize, m: usize, t: usize,
+                  lit_density: f64, sel_density: f64) -> Self {
+        let mut p = SopParams::empty(n, m, t);
+        for v in p.use_mask.iter_mut() {
+            *v = rng.chance(lit_density);
+        }
+        for v in p.neg_mask.iter_mut() {
+            *v = rng.chance(0.5);
+        }
+        for v in p.out_sel.iter_mut() {
+            *v = rng.chance(sel_density);
+        }
+        for v in p.out_const.iter_mut() {
+            *v = rng.chance(0.05);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::sim::TruthTables;
+
+    /// out0 = in0 & ~in1, out1 = in0 & ~in1 | in2 (product shared).
+    fn sample() -> SopParams {
+        let mut p = SopParams::empty(3, 2, 2);
+        p.use_mask[0] = true; // prod0: in0
+        p.use_mask[1] = true; // prod0: in1
+        p.neg_mask[1] = true; // ... negated
+        p.use_mask[3 + 2] = true; // prod1: in2
+        p.out_sel[0] = true; // out0 <- prod0
+        p.out_sel[2] = true; // out1 <- prod0
+        p.out_sel[3] = true; // out1 <- prod1
+        p
+    }
+
+    #[test]
+    fn direct_semantics() {
+        let p = sample();
+        for x in 0..8usize {
+            let in0 = x & 1 == 1;
+            let in1 = (x >> 1) & 1 == 1;
+            let in2 = (x >> 2) & 1 == 1;
+            let prod = in0 && !in1;
+            let want = (prod as u64) | (((prod || in2) as u64) << 1);
+            assert_eq!(p.value_at(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn proxies() {
+        let p = sample();
+        assert_eq!(p.pit(), 2);
+        assert_eq!(p.its(), 3);
+        assert_eq!(p.lpp(), 2);
+        assert_eq!(p.ppo(), 2);
+    }
+
+    #[test]
+    fn netlist_extraction_matches_direct_eval() {
+        let p = sample();
+        let nl = p.to_netlist("sample");
+        assert!(nl.validate().is_ok());
+        let tt = TruthTables::simulate(&nl);
+        assert_eq!(tt.output_values(&nl), p.output_values());
+    }
+
+    #[test]
+    fn empty_template_outputs_zero() {
+        let p = SopParams::empty(3, 2, 4);
+        assert!(p.output_values().iter().all(|&v| v == 0));
+        let nl = p.to_netlist("zero");
+        let tt = TruthTables::simulate(&nl);
+        assert!(tt.output_values(&nl).iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn const_output_and_empty_product() {
+        let mut p = SopParams::empty(2, 2, 1);
+        p.out_const[0] = true; // out0 = 1
+        p.out_sel[1 * 1 + 0] = true; // out1 <- prod0 (empty product = 1)
+        assert!(p.output_values().iter().all(|&v| v == 3));
+        let nl = p.to_netlist("consts");
+        let tt = TruthTables::simulate(&nl);
+        assert!(tt.output_values(&nl).iter().all(|&v| v == 3));
+    }
+
+    #[test]
+    fn random_extraction_agrees_for_many_seeds() {
+        for seed in 0..30u64 {
+            let mut rng = Rng::seed_from(seed);
+            let p = SopParams::random(&mut rng, 4, 3, 6, 0.4, 0.3);
+            let nl = p.to_netlist("rnd");
+            let tt = TruthTables::simulate(&nl);
+            assert_eq!(tt.output_values(&nl), p.output_values(), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn unused_products_do_not_appear_in_netlist() {
+        let mut p = SopParams::empty(3, 1, 5);
+        // Fill literals of all products but select none.
+        for v in p.use_mask.iter_mut() {
+            *v = true;
+        }
+        let nl = p.to_netlist("dead");
+        assert_eq!(nl.n_logic_gates(), 0, "{:?}", nl.gates);
+    }
+}

@@ -1,0 +1,97 @@
+//! Tiny argv parser: `--key value` / `--flag` options after a positional
+//! subcommand. Replaces `clap` in the offline build environment.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name). Tokens beginning with
+    /// `--` become options if followed by a non-`--` token, flags
+    /// otherwise.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let toks: Vec<String> = argv.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0usize;
+        while i < toks.len() {
+            if let Some(name) = toks[i].strip_prefix("--") {
+                if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), toks[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(toks[i].clone());
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(_) => bail!("--{key} expects an integer, got '{v}'"),
+            },
+        }
+    }
+
+    pub fn get_usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get_u64(key)?.map(|x| x as usize).unwrap_or(default))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn mixed_parsing() {
+        let a = parse("sweep --bench adder_i4 --et 2 out.csv --verbose");
+        assert_eq!(a.positional, vec!["sweep", "out.csv"]);
+        assert_eq!(a.get("bench"), Some("adder_i4"));
+        assert_eq!(a.get_u64("et").unwrap(), Some(2));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn bad_integer_errors() {
+        let a = parse("--et banana");
+        assert!(a.get_u64("et").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.get_or("missing", "x"), "x");
+        assert_eq!(a.get_usize_or("n", 7).unwrap(), 7);
+        assert!(!a.has_flag("q"));
+    }
+}

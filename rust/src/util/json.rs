@@ -1,0 +1,224 @@
+//! Minimal JSON reader — just enough for `artifacts/manifest.json`
+//! (objects, strings, integers/floats, bools, null, arrays). No escapes
+//! beyond `\" \\ \/ \n \t`, no unicode surrogates: the manifest is
+//! machine-written by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(src: &str) -> Result<Json> {
+        let bytes = src.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing garbage at byte {pos}");
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        bail!("unexpected end of input");
+    }
+    match b[*pos] {
+        b'{' => {
+            *pos += 1;
+            let mut m = BTreeMap::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b'}' {
+                *pos += 1;
+                return Ok(Json::Obj(m));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos)? {
+                    Json::Str(s) => s,
+                    other => bail!("object key must be string, got {other:?}"),
+                };
+                skip_ws(b, pos);
+                if *pos >= b.len() || b[*pos] != b':' {
+                    bail!("expected ':' at byte {pos}");
+                }
+                *pos += 1;
+                let val = parse_value(b, pos)?;
+                m.insert(key, val);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(m));
+                    }
+                    _ => bail!("expected ',' or '}}' at byte {pos}"),
+                }
+            }
+        }
+        b'[' => {
+            *pos += 1;
+            let mut v = Vec::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b']' {
+                *pos += 1;
+                return Ok(Json::Arr(v));
+            }
+            loop {
+                v.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(v));
+                    }
+                    _ => bail!("expected ',' or ']' at byte {pos}"),
+                }
+            }
+        }
+        b'"' => {
+            *pos += 1;
+            let mut s = String::new();
+            loop {
+                match b.get(*pos) {
+                    None => bail!("unterminated string"),
+                    Some(b'"') => {
+                        *pos += 1;
+                        return Ok(Json::Str(s));
+                    }
+                    Some(b'\\') => {
+                        *pos += 1;
+                        match b.get(*pos) {
+                            Some(b'"') => s.push('"'),
+                            Some(b'\\') => s.push('\\'),
+                            Some(b'/') => s.push('/'),
+                            Some(b'n') => s.push('\n'),
+                            Some(b't') => s.push('\t'),
+                            other => bail!("unsupported escape {other:?}"),
+                        }
+                        *pos += 1;
+                    }
+                    Some(&c) => {
+                        s.push(c as char);
+                        *pos += 1;
+                    }
+                }
+            }
+        }
+        b't' if b[*pos..].starts_with(b"true") => {
+            *pos += 4;
+            Ok(Json::Bool(true))
+        }
+        b'f' if b[*pos..].starts_with(b"false") => {
+            *pos += 5;
+            Ok(Json::Bool(false))
+        }
+        b'n' if b[*pos..].starts_with(b"null") => {
+            *pos += 4;
+            Ok(Json::Null)
+        }
+        _ => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            let txt = std::str::from_utf8(&b[start..*pos])?;
+            Ok(Json::Num(txt.parse::<f64>()?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let src = r#"{
+          "adder_i4": {"file": "sop_eval_adder_i4.hlo.txt", "n": 4, "m": 3,
+                        "t": 16, "b": 256, "npoints": 16},
+          "mult_i8": {"file": "sop_eval_mult_i8.hlo.txt", "n": 8, "m": 8,
+                       "t": 16, "b": 256, "npoints": 256}
+        }"#;
+        let j = Json::parse(src).unwrap();
+        let adder = j.get("adder_i4").unwrap();
+        assert_eq!(adder.get("n").unwrap().as_u64(), Some(4));
+        assert_eq!(
+            adder.get("file").unwrap().as_str(),
+            Some("sop_eval_adder_i4.hlo.txt")
+        );
+        assert_eq!(j.as_obj().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn parses_scalars_arrays_escapes() {
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("-2.5e1").unwrap(), Json::Num(-25.0));
+        assert_eq!(
+            Json::parse(r#"[1, "a\nb", []]"#).unwrap(),
+            Json::Arr(vec![
+                Json::Num(1.0),
+                Json::Str("a\nb".into()),
+                Json::Arr(vec![])
+            ])
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Small in-tree utilities replacing crates the offline build environment
+//! does not provide: a splittable PRNG (`rng`), a minimal JSON reader for
+//! the artifact manifest (`json`), and a tiny argv parser (`cli`).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,108 @@
+//! PJRT runtime integration: the AOT artifact (JAX + Pallas, compiled
+//! via `make artifacts`) must agree bit-for-bit with the rust evaluator.
+//! Skips gracefully when artifacts have not been built.
+
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::circuit::sim::TruthTables;
+use sxpat::evaluator::pack::widen_to_pool;
+use sxpat::evaluator::rust_eval::evaluate_batch;
+use sxpat::runtime::{find_artifacts_dir, Runtime};
+use sxpat::template::SopParams;
+use sxpat::util::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = find_artifacts_dir()?;
+    match Runtime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => panic!("artifacts exist but failed to load: {e:#}"),
+    }
+}
+
+#[test]
+fn artifact_manifest_covers_all_benchmarks() {
+    let Some(rt) = runtime_or_skip() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    for name in ["adder_i4", "mult_i4", "adder_i6", "mult_i6", "adder_i8", "mult_i8"] {
+        let g = rt.geometry(name).unwrap_or_else(|| panic!("missing {name}"));
+        let bench = benchmark_by_name(name).unwrap();
+        assert_eq!(g.n, bench.n_inputs(), "{name}");
+        assert_eq!(g.m, bench.n_outputs(), "{name}");
+    }
+}
+
+#[test]
+fn pjrt_matches_rust_evaluator_exactly() {
+    let Some(rt) = runtime_or_skip() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    for name in ["adder_i4", "mult_i6", "mult_i8"] {
+        let bench = benchmark_by_name(name).unwrap();
+        let nl = bench.netlist();
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        let g = rt.geometry(name).unwrap().clone();
+        let mut rng = Rng::seed_from(0xA5A5 ^ g.n as u64);
+        let batch: Vec<SopParams> = (0..40)
+            .map(|_| SopParams::random(&mut rng, g.n, g.m, g.t, 0.35, 0.3))
+            .collect();
+        let via_pjrt = rt.evaluate_batch(name, &batch, &exact).unwrap();
+        let via_rust = evaluate_batch(&batch, &exact);
+        for (i, (a, b)) in via_pjrt.iter().zip(&via_rust).enumerate() {
+            assert_eq!(a.max_err, b.max_err, "{name}[{i}] max");
+            assert!((a.mean_err - b.mean_err).abs() < 1e-3, "{name}[{i}] mean");
+            assert_eq!(a.values, b.values, "{name}[{i}] values");
+        }
+    }
+}
+
+#[test]
+fn pjrt_batches_larger_than_artifact_b_are_chunked() {
+    let Some(rt) = runtime_or_skip() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let name = "adder_i4";
+    let bench = benchmark_by_name(name).unwrap();
+    let nl = bench.netlist();
+    let exact = TruthTables::simulate(&nl).output_values(&nl);
+    let g = rt.geometry(name).unwrap().clone();
+    let mut rng = Rng::seed_from(17);
+    let batch: Vec<SopParams> = (0..g.b + 37)
+        .map(|_| SopParams::random(&mut rng, g.n, g.m, g.t, 0.4, 0.3))
+        .collect();
+    let via_pjrt = rt.evaluate_batch(name, &batch, &exact).unwrap();
+    assert_eq!(via_pjrt.len(), batch.len());
+    let via_rust = evaluate_batch(&batch, &exact);
+    for (a, b) in via_pjrt.iter().zip(&via_rust) {
+        assert_eq!(a.values, b.values);
+    }
+}
+
+#[test]
+fn widen_then_pjrt_matches_narrow_rust_eval() {
+    // The search uses small pools; the artifact uses T=16. Widening must
+    // not change semantics through the PJRT path.
+    let Some(rt) = runtime_or_skip() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let name = "mult_i4";
+    let bench = benchmark_by_name(name).unwrap();
+    let nl = bench.netlist();
+    let exact = TruthTables::simulate(&nl).output_values(&nl);
+    let g = rt.geometry(name).unwrap().clone();
+    let mut rng = Rng::seed_from(23);
+    let narrow: Vec<SopParams> = (0..16)
+        .map(|_| SopParams::random(&mut rng, g.n, g.m, 6, 0.4, 0.3))
+        .collect();
+    let widened: Vec<SopParams> =
+        narrow.iter().map(|p| widen_to_pool(p, g.t)).collect();
+    let via_pjrt = rt.evaluate_batch(name, &widened, &exact).unwrap();
+    let via_rust = evaluate_batch(&narrow, &exact);
+    for (a, b) in via_pjrt.iter().zip(&via_rust) {
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.max_err, b.max_err);
+    }
+}

@@ -1,0 +1,187 @@
+//! Property-based invariants over randomised inputs (hand-rolled driver;
+//! proptest is not vendored in this offline environment — see Cargo.toml
+//! note). Each property runs on many seeded random cases so failures
+//! reproduce deterministically from the printed seed.
+
+use sxpat::aig::{netlist_to_aig, optimize};
+use sxpat::circuit::netlist::{GateKind, Netlist};
+use sxpat::circuit::sim::{error_stats, TruthTables};
+use sxpat::evaluator::rust_eval::evaluate;
+use sxpat::sat::{Lit, SatResult, Solver};
+use sxpat::smt::cardinality::at_most_k;
+use sxpat::smt::cnf::CnfBuilder;
+use sxpat::synth::synthesize_area;
+use sxpat::template::SopParams;
+use sxpat::util::Rng;
+
+/// Random well-formed netlist with n inputs and a few random gates.
+fn random_netlist(rng: &mut Rng, n: usize, n_gates: usize, m: usize) -> Netlist {
+    let mut nl = Netlist::new("rand");
+    for _ in 0..n {
+        nl.add_input();
+    }
+    for _ in 0..n_gates {
+        let avail = nl.gates.len();
+        let kind = match rng.below(6) {
+            0 => GateKind::And,
+            1 => GateKind::Or,
+            2 => GateKind::Xor,
+            3 => GateKind::Nand,
+            4 => GateKind::Nor,
+            _ => GateKind::Not,
+        };
+        let arity = if kind == GateKind::Not { 1 } else { 2 + rng.usize_below(2) };
+        let fanins: Vec<u32> =
+            (0..arity).map(|_| rng.usize_below(avail) as u32).collect();
+        nl.push(kind, fanins);
+    }
+    let total = nl.gates.len();
+    let outs: Vec<u32> = (0..m).map(|_| rng.usize_below(total) as u32).collect();
+    nl.set_outputs(outs);
+    nl
+}
+
+#[test]
+fn prop_aig_optimization_preserves_function() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::seed_from(seed);
+        let n = 2 + rng.usize_below(5);
+        let g = 4 + rng.usize_below(20);
+        let m = 1 + rng.usize_below(4);
+        let nl = random_netlist(&mut rng, n, g, m);
+        assert!(nl.validate().is_ok(), "seed {seed}");
+        let tt = TruthTables::simulate(&nl).output_values(&nl);
+        let aig = netlist_to_aig(&nl);
+        assert_eq!(aig.output_values(), tt, "netlist->aig seed {seed}");
+        let opt = optimize(&aig);
+        assert_eq!(opt.output_values(), tt, "optimize seed {seed}");
+        assert!(opt.live_and_count() <= aig.live_and_count(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_synthesized_area_nonnegative_and_optimization_helps() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::seed_from(1000 + seed);
+        let ni = 3 + rng.usize_below(3);
+        let nl = random_netlist(&mut rng, ni, 10, 2);
+        let area = synthesize_area(&nl);
+        assert!(area >= 0.0 && area.is_finite(), "seed {seed}: {area}");
+    }
+}
+
+#[test]
+fn prop_evaluator_matches_netlist_extraction() {
+    // The three evaluation paths (direct semantics, bit-parallel
+    // evaluator, netlist extraction + simulation) agree on random params.
+    for seed in 0..40u64 {
+        let mut rng = Rng::seed_from(2000 + seed);
+        let n = 2 + rng.usize_below(5);
+        let m = 1 + rng.usize_below(4);
+        let t = 1 + rng.usize_below(8);
+        let (ld, sd) = (rng.f64(), rng.f64());
+        let p = SopParams::random(&mut rng, n, m, t, ld, sd);
+        let exact: Vec<u64> =
+            (0..1u64 << n).map(|x| x % (1 << m)).collect();
+        let r = evaluate(&p, &exact);
+        assert_eq!(r.values, p.output_values(), "seed {seed}");
+        let nl = p.to_netlist("p");
+        let tt = TruthTables::simulate(&nl).output_values(&nl);
+        assert_eq!(tt, r.values, "seed {seed}");
+        let (mx, mean) = error_stats(&exact, &r.values);
+        assert_eq!((mx, mean), (r.max_err, r.mean_err), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_sat_solver_agrees_with_brute_force() {
+    // Random small CNFs, solver vs exhaustive enumeration.
+    for seed in 0..80u64 {
+        let mut rng = Rng::seed_from(3000 + seed);
+        let n = 3 + rng.usize_below(8); // up to 10 vars
+        let n_clauses = 2 + rng.usize_below(4 * n);
+        let clauses: Vec<Vec<Lit>> = (0..n_clauses)
+            .map(|_| {
+                let len = 1 + rng.usize_below(3);
+                (0..len)
+                    .map(|_| Lit::new(rng.usize_below(n) as u32, rng.chance(0.5)))
+                    .collect()
+            })
+            .collect();
+        let mut brute = false;
+        'outer: for m in 0..1u32 << n {
+            for cl in &clauses {
+                if !cl
+                    .iter()
+                    .any(|l| ((m >> l.var()) & 1 == 1) != l.is_neg())
+                {
+                    continue 'outer;
+                }
+            }
+            brute = true;
+            break;
+        }
+        let mut s = Solver::new();
+        for _ in 0..n {
+            s.new_var();
+        }
+        let mut ok = true;
+        for cl in &clauses {
+            ok &= s.add_clause(cl);
+        }
+        let got = if ok { s.solve(&[]) == SatResult::Sat } else { false };
+        assert_eq!(got, brute, "seed {seed} clauses {clauses:?}");
+    }
+}
+
+#[test]
+fn prop_cardinality_bound_respected_in_models() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::seed_from(4000 + seed);
+        let n = 3 + rng.usize_below(8);
+        let k = rng.usize_below(n + 1);
+        let mut b = CnfBuilder::new();
+        let xs: Vec<Lit> = (0..n).map(|_| b.new_lit()).collect();
+        at_most_k(&mut b, &xs, k);
+        // Random extra constraints to push the model around.
+        for _ in 0..rng.usize_below(4) {
+            let x = xs[rng.usize_below(n)];
+            b.add_clause(&[if rng.chance(0.5) { x } else { !x }]);
+        }
+        if b.solver.solve(&[]) == SatResult::Sat {
+            let count = xs.iter().filter(|&&x| b.solver.model_value(x)).count();
+            assert!(count <= k, "seed {seed}: {count} > {k}");
+        }
+    }
+}
+
+#[test]
+fn prop_coordinator_records_are_internally_consistent() {
+    use sxpat::circuit::generators::benchmark_by_name;
+    use sxpat::coordinator::{run_job, Job, Method};
+    use sxpat::search::SearchConfig;
+    for seed in 0..6u64 {
+        let mut rng = Rng::seed_from(5000 + seed);
+        let bench = benchmark_by_name(["adder_i4", "mult_i4"][rng.usize_below(2)]).unwrap();
+        let et = 1 + rng.below(2);
+        let method = Method::all_compared()[rng.usize_below(4)];
+        let rec = run_job(&Job {
+            bench,
+            method,
+            et,
+            search: SearchConfig {
+                pool: 5,
+                solutions_per_cell: 1,
+                max_sat_cells: 1,
+                conflict_budget: Some(30_000),
+                time_budget_ms: 20_000,
+            },
+        });
+        assert_eq!(rec.bench, bench.name);
+        assert_eq!(rec.et, et);
+        if rec.area.is_finite() {
+            assert!(rec.max_err <= et, "seed {seed} {method:?}");
+            assert!(rec.mean_err <= rec.max_err as f64 + 1e-9);
+        }
+    }
+}
