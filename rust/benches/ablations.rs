@@ -3,7 +3,9 @@
 //!  (b) totalizer vs. naive pairwise cardinality,
 //!  (c) ∀-expansion cost as n grows,
 //!  (d) proxy-ordered lattice vs. naive row-major order (cells tried
-//!      until the first SAT answer).
+//!      until the first SAT answer),
+//!  (e) lattice-scan worker scaling (cumulative single-worker vs the
+//!      canonical parallel scan).
 //!
 //!     cargo bench --bench ablations
 
@@ -110,7 +112,7 @@ fn main() {
             let mut area = f64::NAN;
             for (pit, its) in cells {
                 tried += 1;
-                if let Some(sol) = miter.solve(pit, its) {
+                if let Some(sol) = miter.solve(pit, its).sat() {
                     area = sxpat::synth::synthesize_area(&sol.to_netlist("x"));
                     break;
                 }
@@ -124,5 +126,32 @@ fn main() {
             "ablation(d) {name}: proxy order {t1} cells -> area {a1:.3}; \
              row-major {t2} cells -> area {a2:.3}"
         );
+    }
+
+    // (e) lattice-scan worker scaling on the heaviest i4 job.
+    {
+        use sxpat::search::{search_shared, SearchConfig};
+        let b = benchmark_by_name("mult_i4").unwrap();
+        let nl = b.netlist();
+        let et = b.fig4_et();
+        for cell_workers in [1usize, 2, 4] {
+            let cfg = SearchConfig {
+                pool: 8,
+                solutions_per_cell: 1,
+                max_sat_cells: 4,
+                conflict_budget: Some(150_000),
+                time_budget_ms: 60_000,
+                cell_workers,
+                ..Default::default()
+            };
+            let mut area = f64::NAN;
+            bench(&format!("ablation_e/cell_workers_{cell_workers}"), 1, 3, || {
+                area = search_shared(&nl, et, &cfg)
+                    .best()
+                    .map(|s| s.area)
+                    .unwrap_or(f64::NAN);
+            });
+            println!("  cell_workers={cell_workers}: best area {area:.3}");
+        }
     }
 }

@@ -30,6 +30,7 @@ fn main() {
         max_sat_cells: 5,
         conflict_budget: Some(120_000),
         time_budget_ms: 30_000,
+        ..Default::default()
     };
     let random_count = 150; // paper: 1000; scaled for bench wall-time
 

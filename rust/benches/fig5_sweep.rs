@@ -8,7 +8,7 @@
 
 use sxpat::bench_support::bench;
 use sxpat::circuit::generators::{benchmark_by_name, PAPER_BENCHMARKS};
-use sxpat::coordinator::{run_sweep, Method, SweepPlan};
+use sxpat::coordinator::{run_job, run_sweep, Job, Method, SweepPlan};
 use sxpat::report::{fig5_csv, fig5_markdown};
 use sxpat::search::SearchConfig;
 
@@ -32,6 +32,7 @@ fn main() {
             max_sat_cells: 2,
             conflict_budget: Some(if full { 400_000 } else { 80_000 }),
             time_budget_ms: if full { 120_000 } else { 30_000 },
+            ..Default::default()
         },
         workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
     };
@@ -65,4 +66,37 @@ fn main() {
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/fig5_bench.csv", &csv).ok();
     println!("wrote results/fig5_bench.csv ({} rows)", csv.lines().count());
+
+    // Intra-job parallelism: sequential vs parallel lattice scan on one
+    // SHARED mult_i4 job (the acceptance bar: the parallel scan must not
+    // be slower, and its best area must match the sequential scan).
+    let mult = benchmark_by_name("mult_i4").unwrap();
+    let cores =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut area_by_workers = Vec::new();
+    for cell_workers in [1usize, cores.max(2)] {
+        let search = SearchConfig {
+            pool: 8,
+            solutions_per_cell: 1,
+            max_sat_cells: 4,
+            conflict_budget: Some(200_000),
+            time_budget_ms: 60_000,
+            cell_workers,
+            ..Default::default()
+        };
+        let mut area = f64::NAN;
+        bench(&format!("fig5/cell_scan_mult_i4_w{cell_workers}"), 1, 3, || {
+            let rec = run_job(&Job {
+                bench: mult,
+                method: Method::Shared,
+                et: mult.fig4_et(),
+                search: search.clone(),
+            });
+            area = rec.area;
+        });
+        area_by_workers.push((cell_workers, area));
+    }
+    for (w, area) in &area_by_workers {
+        println!("cell scan mult_i4, {w} worker(s): best area {area:.3}");
+    }
 }

@@ -57,7 +57,7 @@ fn main() {
             // Re-solve the same lattice prefix each iteration: the
             // solver is incremental, so this measures warm solving.
             for pit in 1..=4usize {
-                if miter.solve(pit, 3 * pit).is_some() {
+                if miter.solve(pit, 3 * pit).is_sat() {
                     break;
                 }
             }

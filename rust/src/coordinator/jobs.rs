@@ -57,6 +57,10 @@ pub struct RunRecord {
     pub elapsed_ms: u64,
     /// Every enumerated solution: (proxy.0, proxy.1, area).
     pub all_points: Vec<(usize, usize, f64)>,
+    /// `Some(message)` when the job crashed instead of completing (the
+    /// sweep records the failure and carries on; see `sweep::run_sweep`).
+    /// Failed jobs report `area = inf` so figure renderers skip them.
+    pub error: Option<String>,
 }
 
 /// Execute one job. Every produced circuit is re-verified against the
@@ -77,6 +81,7 @@ pub fn run_job(job: &Job) -> RunRecord {
             proxy: (0, 0),
             elapsed_ms: 0,
             all_points: Vec::new(),
+            error: None,
         },
         Method::Shared | Method::Xpat => {
             let out = if job.method == Method::Shared {
@@ -107,6 +112,7 @@ pub fn run_job(job: &Job) -> RunRecord {
                         proxy: best.proxy,
                         elapsed_ms: 0,
                         all_points,
+                        error: None,
                     }
                 }
                 None => RunRecord {
@@ -119,6 +125,7 @@ pub fn run_job(job: &Job) -> RunRecord {
                     proxy: (0, 0),
                     elapsed_ms: 0,
                     all_points,
+                    error: None,
                 },
             }
         }
@@ -144,6 +151,7 @@ pub fn run_job(job: &Job) -> RunRecord {
                 proxy: (0, 0),
                 elapsed_ms: 0,
                 all_points: Vec::new(),
+                error: None,
             }
         }
     };
@@ -162,6 +170,7 @@ mod tests {
             max_sat_cells: 2,
             conflict_budget: Some(50_000),
             time_budget_ms: 20_000,
+            ..Default::default()
         }
     }
 

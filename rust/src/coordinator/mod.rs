@@ -9,4 +9,4 @@ pub mod jobs;
 pub mod sweep;
 
 pub use jobs::{run_job, Job, Method, RunRecord};
-pub use sweep::{run_sweep, SweepPlan};
+pub use sweep::{run_sweep, run_sweep_with, SweepPlan};

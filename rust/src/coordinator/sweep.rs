@@ -1,6 +1,19 @@
 //! Parallel sweep execution: fan a job list out over a worker pool and
 //! collect records in a deterministic order.
+//!
+//! Parallelism is nested: `SweepPlan::workers` threads run jobs, and
+//! each job's lattice scan may itself use
+//! `SearchConfig::cell_workers` threads (`search::engine`), so the
+//! process-wide thread budget is `workers × cell_workers`. The `sweep`
+//! CLI keeps that product near the machine's core count by shrinking
+//! the outer pool when `--cell-workers` is raised.
+//!
+//! A job that panics does not take down the sweep: the panic is caught
+//! on the worker, recorded as a [`RunRecord`] with
+//! `error: Some(message)` and `area = inf`, and the remaining jobs run
+//! to completion.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -49,18 +62,58 @@ impl SweepPlan {
     }
 }
 
+/// Record standing in for a job that crashed or was lost to a dead
+/// worker: infinite area (the markdown renderer shows those as "—", and
+/// the CSVs carry them verbatim alongside the error column so nothing is
+/// silently dropped) plus the failure message.
+fn failed_record(job: &Job, message: String) -> RunRecord {
+    RunRecord {
+        bench: job.bench.name,
+        method: job.method,
+        et: job.et,
+        area: f64::INFINITY,
+        max_err: u64::MAX,
+        mean_err: f64::INFINITY,
+        proxy: (0, 0),
+        elapsed_ms: 0,
+        all_points: Vec::new(),
+        error: Some(message),
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "job panicked".to_string()
+    }
+}
+
 /// Run the plan on a worker pool; records return in job order.
 pub fn run_sweep(plan: &SweepPlan) -> Vec<RunRecord> {
+    run_sweep_with(plan, run_job)
+}
+
+/// As [`run_sweep`] with a custom job runner (the seam the resilience
+/// tests use). A panicking runner yields a `failed_record`, never a
+/// missing slot or a dead sweep.
+pub fn run_sweep_with<F>(plan: &SweepPlan, runner: F) -> Vec<RunRecord>
+where
+    F: Fn(&Job) -> RunRecord + Sync,
+{
     let jobs = plan.jobs();
     let n_jobs = jobs.len();
     if n_jobs == 0 {
         return Vec::new();
     }
     let queue = Arc::new(Mutex::new(
-        jobs.into_iter().enumerate().collect::<Vec<(usize, Job)>>(),
+        jobs.iter().cloned().enumerate().collect::<Vec<(usize, Job)>>(),
     ));
     let (tx, rx) = mpsc::channel::<(usize, RunRecord)>();
     let workers = plan.workers.clamp(1, n_jobs);
+    let runner = &runner;
 
     std::thread::scope(|scope| {
         for _ in 0..workers {
@@ -70,7 +123,10 @@ pub fn run_sweep(plan: &SweepPlan) -> Vec<RunRecord> {
                 let next = queue.lock().unwrap().pop();
                 match next {
                     Some((idx, job)) => {
-                        let rec = run_job(&job);
+                        let rec = catch_unwind(AssertUnwindSafe(|| runner(&job)))
+                            .unwrap_or_else(|payload| {
+                                failed_record(&job, panic_message(payload))
+                            });
                         if tx.send((idx, rec)).is_err() {
                             return;
                         }
@@ -84,7 +140,18 @@ pub fn run_sweep(plan: &SweepPlan) -> Vec<RunRecord> {
         for (idx, rec) in rx {
             slots[idx] = Some(rec);
         }
-        slots.into_iter().map(|s| s.expect("worker died mid-job")).collect()
+        // A slot can only still be empty if a worker died so hard the
+        // catch above never ran (e.g. a panic-in-panic abort was
+        // survived); record the loss instead of poisoning the sweep.
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(idx, s)| {
+                s.unwrap_or_else(|| {
+                    failed_record(&jobs[idx], "worker died mid-job".to_string())
+                })
+            })
+            .collect()
     })
 }
 
@@ -104,6 +171,7 @@ mod tests {
                 max_sat_cells: 1,
                 conflict_budget: Some(20_000),
                 time_budget_ms: 20_000,
+                ..Default::default()
             },
             workers: 2,
         }
@@ -119,6 +187,7 @@ mod tests {
             assert_eq!(j.bench.name, r.bench);
             assert_eq!(j.method, r.method);
             assert_eq!(j.et, r.et);
+            assert!(r.error.is_none());
         }
     }
 
@@ -131,6 +200,30 @@ mod tests {
         let a: Vec<f64> = run_sweep(&p1).iter().map(|r| r.area).collect();
         let b: Vec<f64> = run_sweep(&p4).iter().map(|r| r.area).collect();
         assert_eq!(a, b, "sweep must be deterministic across worker counts");
+    }
+
+    #[test]
+    fn sweep_survives_a_panicking_job() {
+        let plan = tiny_plan();
+        let jobs = plan.jobs();
+        let recs = run_sweep_with(&plan, |job| {
+            if job.et == 2 {
+                panic!("injected failure for et=2");
+            }
+            run_job(job)
+        });
+        assert_eq!(recs.len(), jobs.len(), "one bad job must not eat the sweep");
+        for (j, r) in jobs.iter().zip(&recs) {
+            assert_eq!(j.et, r.et);
+            if j.et == 2 {
+                let msg = r.error.as_deref().expect("failure must be recorded");
+                assert!(msg.contains("injected failure"), "{msg}");
+                assert!(r.area.is_infinite());
+            } else {
+                assert!(r.error.is_none());
+                assert!(r.area.is_finite());
+            }
+        }
     }
 
     #[test]

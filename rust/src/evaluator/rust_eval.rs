@@ -11,12 +11,17 @@ pub struct EvalResult {
     pub values: Vec<u64>,
 }
 
+/// Input-count cap of the fast evaluator: the paper's largest geometry
+/// is 8 inputs (`mult_i8`), i.e. `2^8 = 256` points = [`MAX_WORDS`]
+/// 64-bit words per row.
+const MAX_INPUTS: usize = 8;
+
+/// Words per row at [`MAX_INPUTS`]: `2^MAX_INPUTS / 64`.
+const MAX_WORDS: usize = (1 << MAX_INPUTS) / 64;
+
 /// Scratch space reused across candidates of one geometry — the batch
 /// path allocates it once instead of ~(t + m + n) Vecs per candidate
-/// (EXPERIMENTS.md §Perf iteration 1). Word count is capped at 16
-/// inputs -> 1024 words, but the paper geometries use at most 4.
-const MAX_WORDS: usize = 4;
-
+/// (EXPERIMENTS.md §Perf iteration 1).
 struct Scratch {
     inputs: Vec<[u64; MAX_WORDS]>,
     prods: Vec<[u64; MAX_WORDS]>,
@@ -25,7 +30,10 @@ struct Scratch {
 
 impl Scratch {
     fn new(n: usize, t: usize, m: usize) -> Self {
-        assert!(n <= 8, "fast evaluator capped at 8 inputs (paper max)");
+        assert!(
+            n <= MAX_INPUTS,
+            "fast evaluator capped at {MAX_INPUTS} inputs (paper max)"
+        );
         let words = (1usize << n).div_ceil(64);
         let mut inputs = vec![[0u64; MAX_WORDS]; n];
         for (j, row) in inputs.iter_mut().enumerate() {

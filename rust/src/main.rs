@@ -9,8 +9,12 @@
 //!   verify     --bench B --et E    re-verify SHARED result exhaustively
 //!   nn-eval    [--et-list 0,1,2,4] NN accuracy vs multiplier area
 //!
-//! Flags: --pool, --workers, --budget (SAT conflicts), --pjrt (use the
-//! AOT artifact for bulk evaluation), --artifacts DIR.
+//! Flags: --pool, --workers (parallel jobs), --cell-workers (parallel
+//! lattice cells within one job; `sweep` shrinks the outer job pool so
+//! jobs × cells stays near the core count), --share-models (exchange
+//! blocked models across cell workers; faster dedup, non-deterministic),
+//! --budget (SAT conflicts), --pjrt (use the AOT artifact for bulk
+//! evaluation), --artifacts DIR.
 
 use std::path::PathBuf;
 
@@ -63,6 +67,8 @@ fn search_config(args: &Args) -> Result<SearchConfig> {
         max_sat_cells: args.get_usize_or("sat-cells", 4)?,
         conflict_budget: Some(args.get_u64("budget")?.unwrap_or(200_000)),
         time_budget_ms: args.get_u64("time-ms")?.unwrap_or(120_000),
+        cell_workers: args.get_usize_or("cell-workers", 1)?.max(1),
+        share_blocked_models: args.has_flag("share-models"),
     })
 }
 
@@ -133,8 +139,18 @@ fn sweep(args: &Args) -> Result<()> {
     }
     if let Some(w) = args.get_u64("workers")? {
         plan.workers = w as usize;
+    } else if plan.search.cell_workers > 1 {
+        // One thread budget for the nested jobs × cells parallelism:
+        // shrink the outer job pool so the product stays near the
+        // machine's core count.
+        plan.workers = (plan.workers / plan.search.cell_workers).max(1);
     }
-    println!("running {} jobs on {} workers...", plan.jobs().len(), plan.workers);
+    println!(
+        "running {} jobs on {} workers × {} cell workers...",
+        plan.jobs().len(),
+        plan.workers,
+        plan.search.cell_workers
+    );
     let records = run_sweep(&plan);
     std::fs::write(dir.join("records.csv"), records_csv(&records))?;
     std::fs::write(dir.join("fig5.csv"), fig5_csv(&records))?;

@@ -12,12 +12,12 @@ use crate::coordinator::{Method, RunRecord};
 /// Raw record dump (one row per job) — the machine-readable log.
 pub fn records_csv(records: &[RunRecord]) -> String {
     let mut s = String::from(
-        "bench,method,et,area,max_err,mean_err,proxy_a,proxy_b,elapsed_ms\n",
+        "bench,method,et,area,max_err,mean_err,proxy_a,proxy_b,elapsed_ms,error\n",
     );
     for r in records {
         let _ = writeln!(
             s,
-            "{},{},{},{:.4},{},{:.4},{},{},{}",
+            "{},{},{},{:.4},{},{:.4},{},{},{},{}",
             r.bench,
             r.method.name(),
             r.et,
@@ -26,7 +26,11 @@ pub fn records_csv(records: &[RunRecord]) -> String {
             r.mean_err,
             r.proxy.0,
             r.proxy.1,
-            r.elapsed_ms
+            r.elapsed_ms,
+            r.error
+                .as_deref()
+                .unwrap_or("")
+                .replace(['\n', '\r', ','], ";")
         );
     }
     s
@@ -164,6 +168,7 @@ mod tests {
             proxy: (2, 3),
             elapsed_ms: 1,
             all_points: vec![(2, 3, area), (3, 4, area + 1.0)],
+            error: None,
         }
     }
 

@@ -1,0 +1,624 @@
+//! The generic lattice-scan engine.
+//!
+//! One engine serves every template family: a [`Template`] implementation
+//! supplies miter construction, restricted solving, blocking, lattice
+//! generation, proxy extraction and the achieved-estimate formula, and
+//! [`run_search`] owns everything the two former copy-pasted loops did —
+//! weakest-cell probe, proxy-ordered scan, per-cell model enumeration,
+//! deadline / conflict-budget / max-SAT-cells enforcement, and telemetry.
+//!
+//! ## Parallel scan and determinism
+//!
+//! The scan runs on `SearchConfig::cell_workers` threads that claim cells
+//! from an atomic cursor over the proxy-ordered candidate list. Two
+//! scan modes keep the results reproducible:
+//!
+//! * **Cumulative** (`cell_workers == 1`): the probe miter is reused for
+//!   the whole scan and every found model is blocked into it — the
+//!   historical sequential algorithm (bit-for-bit for SHARED; the XPAT
+//!   path additionally gained first-model proxy minimisation, which the
+//!   old `search_xpat` lacked).
+//! * **Canonical** (`cell_workers > 1`): every cell is solved on a fresh
+//!   miter with exactly the probe model blocked, so a cell's result is a
+//!   pure function of the cell — independent of scheduling, worker count
+//!   and which cells ran before it. Workers race ahead speculatively;
+//!   a deterministic in-order commit pass then replays the sequential
+//!   stopping rules (max SAT cells, perfect-area early exit) over the
+//!   per-cell results and discards any speculative overshoot, so the
+//!   outcome is identical across runs and thread counts — provided the
+//!   wall-clock budget does not bind (a deadline that fires mid-scan
+//!   truncates the claimed prefix at a load-dependent point, exactly as
+//!   it truncates the sequential scan).
+//!
+//! Cross-worker model exchange (`share_blocked_models`) additionally
+//! blocks every model already found anywhere into each fresh miter. That
+//! reduces duplicate models but makes the constraint set timing-
+//! dependent, so it is off by default; duplicates are instead removed
+//! deterministically at commit time.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::circuit::sim::{error_stats, is_sound, TruthTables};
+use crate::circuit::Netlist;
+use crate::synth::synthesize_area;
+use crate::template::{NonsharedMiter, SharedMiter, SolveOutcome, SopParams};
+
+use super::lattice::{shared_cells, xpat_cells, Cell};
+use super::runner::{SearchConfig, SearchOutcome, Solution};
+
+/// Everything the lattice-scan engine needs from a template family.
+///
+/// `a` / `b` are the two restriction axes — (PIT, ITS) for the SHARED
+/// template, (LPP, PPO) for the nonshared XPAT template. New template
+/// families plug into the whole search/coordinator stack by implementing
+/// this trait.
+pub trait Template: Sized {
+    /// Method name for diagnostics.
+    const NAME: &'static str;
+
+    /// Encode the miter for a function with `n` inputs, `m` outputs and
+    /// the given product pool, against `exact` output values (`2^n`
+    /// entries) and error threshold `et`.
+    fn build(n: usize, m: usize, pool: usize, exact: &[u64], et: u64) -> Self;
+
+    /// Per-solve conflict budget (None = run to completion).
+    fn set_conflict_budget(&mut self, budget: Option<u64>);
+
+    /// Solve under the `(a, b)` restriction.
+    fn solve(&mut self, a: usize, b: usize) -> SolveOutcome;
+
+    /// Solve, then greedily minimise the area-driving proxies within the
+    /// cell, stopping the descent (but keeping the incumbent) once the
+    /// deadline passes.
+    fn solve_minimized_deadline(
+        &mut self,
+        a: usize,
+        b: usize,
+        deadline: Option<Instant>,
+    ) -> SolveOutcome;
+
+    /// Permanently exclude a model from future solves.
+    fn block(&mut self, p: &SopParams);
+
+    /// The restriction lattice in ascending estimated-area order.
+    fn cells(n: usize, m: usize, pool: usize) -> Vec<Cell>;
+
+    /// The unrestricted probe cell solved before the scan.
+    fn weakest_cell(n: usize, m: usize, pool: usize) -> Cell;
+
+    /// Achieved proxy pair of a model.
+    fn proxy(p: &SopParams) -> (usize, usize);
+
+    /// Area estimate of achieved proxies — the same formula the lattice
+    /// ordering uses, so the probe's result prunes dominated cells.
+    fn achieved_estimate(proxy: (usize, usize), m: usize) -> f64;
+}
+
+impl Template for SharedMiter {
+    const NAME: &'static str = "SHARED";
+
+    fn build(n: usize, m: usize, pool: usize, exact: &[u64], et: u64) -> Self {
+        SharedMiter::build(n, m, pool, exact, et)
+    }
+
+    fn set_conflict_budget(&mut self, budget: Option<u64>) {
+        SharedMiter::set_conflict_budget(self, budget);
+    }
+
+    fn solve(&mut self, a: usize, b: usize) -> SolveOutcome {
+        SharedMiter::solve(self, a, b)
+    }
+
+    fn solve_minimized_deadline(
+        &mut self,
+        a: usize,
+        b: usize,
+        deadline: Option<Instant>,
+    ) -> SolveOutcome {
+        SharedMiter::solve_minimized_deadline(self, a, b, deadline)
+    }
+
+    fn block(&mut self, p: &SopParams) {
+        SharedMiter::block(self, p);
+    }
+
+    fn cells(_n: usize, m: usize, pool: usize) -> Vec<Cell> {
+        shared_cells(pool, m)
+    }
+
+    fn weakest_cell(_n: usize, m: usize, pool: usize) -> Cell {
+        Cell { a: pool, b: pool * m, estimate: f64::INFINITY }
+    }
+
+    fn proxy(p: &SopParams) -> (usize, usize) {
+        (p.pit(), p.its())
+    }
+
+    fn achieved_estimate(proxy: (usize, usize), _m: usize) -> f64 {
+        2.0 * proxy.0 as f64 + 0.8 * proxy.1 as f64
+    }
+}
+
+impl Template for NonsharedMiter {
+    const NAME: &'static str = "XPAT";
+
+    fn build(n: usize, m: usize, pool: usize, exact: &[u64], et: u64) -> Self {
+        NonsharedMiter::build(n, m, pool, exact, et)
+    }
+
+    fn set_conflict_budget(&mut self, budget: Option<u64>) {
+        NonsharedMiter::set_conflict_budget(self, budget);
+    }
+
+    fn solve(&mut self, a: usize, b: usize) -> SolveOutcome {
+        NonsharedMiter::solve(self, a, b)
+    }
+
+    fn solve_minimized_deadline(
+        &mut self,
+        a: usize,
+        b: usize,
+        deadline: Option<Instant>,
+    ) -> SolveOutcome {
+        NonsharedMiter::solve_minimized_deadline(self, a, b, deadline)
+    }
+
+    fn block(&mut self, p: &SopParams) {
+        NonsharedMiter::block(self, p);
+    }
+
+    fn cells(n: usize, m: usize, pool: usize) -> Vec<Cell> {
+        xpat_cells(n, pool, m)
+    }
+
+    fn weakest_cell(n: usize, _m: usize, pool: usize) -> Cell {
+        Cell { a: n, b: pool, estimate: f64::INFINITY }
+    }
+
+    fn proxy(p: &SopParams) -> (usize, usize) {
+        (p.lpp(), p.ppo())
+    }
+
+    fn achieved_estimate(proxy: (usize, usize), m: usize) -> f64 {
+        m as f64 * proxy.1 as f64 * (1.0 + 0.9 * proxy.0 as f64)
+    }
+}
+
+/// Result of scanning one cell, as produced by a worker.
+enum CellStatus {
+    Sat(Vec<Solution>),
+    Unsat,
+    /// The first solve of the cell ran out of conflict budget.
+    Budget,
+    /// No worker claimed the cell before the scan stopped.
+    NotReached,
+}
+
+/// Shared scan coordination state (all monotone, so `Relaxed` suffices:
+/// the claim cursor only hands out each index once, and the stop flags
+/// only ever tighten — a stale read merely delays a worker one cell).
+struct ScanState {
+    next: AtomicUsize,
+    sat_cells: AtomicUsize,
+    cancel: AtomicBool,
+}
+
+/// Read-only context shared by all scan workers.
+struct ScanCtx<'a> {
+    n: usize,
+    m: usize,
+    et: u64,
+    exact: &'a [u64],
+    name: &'a str,
+    cfg: &'a SearchConfig,
+    cells: &'a [Cell],
+    deadline: Instant,
+    state: &'a ScanState,
+    /// The probe model, blocked into every fresh canonical-mode miter.
+    probe: Option<&'a SopParams>,
+    /// Cross-worker model exchange (only with `share_blocked_models`).
+    journal: Option<&'a Mutex<Vec<SopParams>>>,
+}
+
+/// Post-process one model into a [`Solution`].
+fn finish<T: Template>(
+    params: SopParams,
+    cell: &Cell,
+    exact: &[u64],
+    name: &str,
+) -> Solution {
+    let approx = params.output_values();
+    let (max_err, mean_err) = error_stats(exact, &approx);
+    let area = synthesize_area(&params.to_netlist(name));
+    let proxy = T::proxy(&params);
+    Solution { params, proxy, cell: (cell.a, cell.b), area, max_err, mean_err }
+}
+
+/// Enumerate up to `solutions_per_cell` models of one cell. The first
+/// model is proxy-minimised (drives to the cell's low-area corner);
+/// further models are plain enumeration for the Fig. 4 scatter.
+fn scan_cell<T: Template>(miter: &mut T, cell: &Cell, ctx: &ScanCtx<'_>) -> CellStatus {
+    let mut sols: Vec<Solution> = Vec::new();
+    for sol_idx in 0..ctx.cfg.solutions_per_cell {
+        let solved = if sol_idx == 0 {
+            miter.solve_minimized_deadline(cell.a, cell.b, Some(ctx.deadline))
+        } else {
+            miter.solve(cell.a, cell.b)
+        };
+        match solved {
+            SolveOutcome::Sat(params) => {
+                debug_assert!(is_sound(ctx.exact, &params.output_values(), ctx.et));
+                miter.block(&params);
+                sols.push(finish::<T>(params, cell, ctx.exact, ctx.name));
+            }
+            SolveOutcome::Unsat => break,
+            SolveOutcome::Budget => {
+                if sols.is_empty() {
+                    return CellStatus::Budget;
+                }
+                break;
+            }
+        }
+    }
+    if sols.is_empty() {
+        CellStatus::Unsat
+    } else {
+        CellStatus::Sat(sols)
+    }
+}
+
+/// One scan worker: claim cells in lattice order until a stop condition
+/// fires. `persistent` is the cumulative-mode miter; canonical mode
+/// (`None`) builds a fresh miter per cell instead.
+fn scan_worker<T: Template>(
+    mut persistent: Option<&mut T>,
+    ctx: &ScanCtx<'_>,
+    tx: &mpsc::Sender<(usize, CellStatus)>,
+) {
+    loop {
+        if ctx.state.cancel.load(Ordering::Relaxed)
+            || ctx.state.sat_cells.load(Ordering::Relaxed) >= ctx.cfg.max_sat_cells
+            || Instant::now() > ctx.deadline
+        {
+            return;
+        }
+        let idx = ctx.state.next.fetch_add(1, Ordering::Relaxed);
+        if idx >= ctx.cells.len() {
+            return;
+        }
+        let cell = &ctx.cells[idx];
+        let status = match persistent.as_deref_mut() {
+            Some(miter) => scan_cell(miter, cell, ctx),
+            None => {
+                let mut miter =
+                    T::build(ctx.n, ctx.m, ctx.cfg.pool, ctx.exact, ctx.et);
+                miter.set_conflict_budget(ctx.cfg.conflict_budget);
+                if let Some(p) = ctx.probe {
+                    miter.block(p);
+                }
+                if let Some(j) = ctx.journal {
+                    // Snapshot under the lock, encode outside it — the
+                    // block() encodes would otherwise serialize workers.
+                    let snapshot = j.lock().unwrap().clone();
+                    for p in &snapshot {
+                        miter.block(p);
+                    }
+                }
+                scan_cell(&mut miter, cell, ctx)
+            }
+        };
+        if let CellStatus::Sat(sols) = &status {
+            ctx.state.sat_cells.fetch_add(1, Ordering::Relaxed);
+            if sols.iter().any(|s| s.area == 0.0) {
+                ctx.state.cancel.store(true, Ordering::Relaxed);
+            }
+            if let Some(j) = ctx.journal {
+                j.lock()
+                    .unwrap()
+                    .extend(sols.iter().map(|s| s.params.clone()));
+            }
+        }
+        if tx.send((idx, status)).is_err() {
+            return;
+        }
+    }
+}
+
+/// Run the full lattice search for one template family.
+pub fn run_search<T: Template>(nl: &Netlist, et: u64, cfg: &SearchConfig) -> SearchOutcome {
+    let (n, m) = (nl.n_inputs(), nl.n_outputs());
+    let exact = TruthTables::simulate(nl).output_values(nl);
+    let start = Instant::now();
+    let deadline = start + Duration::from_millis(cfg.time_budget_ms);
+
+    let mut out = SearchOutcome {
+        solutions: Vec::new(),
+        cells_tried: 0,
+        cells_sat: 0,
+        cells_unsat: 0,
+        cells_timeout: 0,
+        elapsed_ms: 0,
+    };
+
+    // Weakest-cell probe: solve the unrestricted template first. It
+    // yields (a) an immediate finite upper bound (no `inf` rows when the
+    // strong cells are all hard-UNSAT, as on the bigger multipliers) and
+    // (b) with proxy minimisation, achieved values that tell the lattice
+    // scan which strictly-stronger cells are worth trying.
+    let mut probe_miter = T::build(n, m, cfg.pool, &exact, et);
+    probe_miter.set_conflict_budget(cfg.conflict_budget);
+    let weakest = T::weakest_cell(n, m, cfg.pool);
+    let mut achieved = f64::INFINITY;
+    let mut probe_params: Option<SopParams> = None;
+    out.cells_tried += 1;
+    match probe_miter.solve_minimized_deadline(weakest.a, weakest.b, Some(deadline)) {
+        SolveOutcome::Sat(params) => {
+            probe_miter.block(&params);
+            probe_params = Some(params.clone());
+            let sol = finish::<T>(params, &weakest, &exact, &nl.name);
+            achieved = T::achieved_estimate(sol.proxy, m);
+            out.solutions.push(sol);
+            out.cells_sat += 1;
+        }
+        SolveOutcome::Unsat => out.cells_unsat += 1,
+        SolveOutcome::Budget => out.cells_timeout += 1,
+    }
+
+    // Cells that could still beat the probe's achieved proxies, in
+    // ascending estimated-area order.
+    let cells: Vec<Cell> = T::cells(n, m, cfg.pool)
+        .into_iter()
+        .filter(|c| c.estimate < achieved)
+        .collect();
+
+    let canonical = cfg.cell_workers > 1;
+    let state = ScanState {
+        next: AtomicUsize::new(0),
+        sat_cells: AtomicUsize::new(out.cells_sat),
+        cancel: AtomicBool::new(out.solutions.iter().any(|s| s.area == 0.0)),
+    };
+    let journal: Option<Mutex<Vec<SopParams>>> =
+        if canonical && cfg.share_blocked_models {
+            Some(Mutex::new(Vec::new()))
+        } else {
+            None
+        };
+    let ctx = ScanCtx {
+        n,
+        m,
+        et,
+        exact: &exact,
+        name: &nl.name,
+        cfg,
+        cells: &cells,
+        deadline,
+        state: &state,
+        probe: probe_params.as_ref(),
+        journal: journal.as_ref(),
+    };
+
+    let (tx, rx) = mpsc::channel::<(usize, CellStatus)>();
+    if !cells.is_empty() {
+        if !canonical {
+            scan_worker(Some(&mut probe_miter), &ctx, &tx);
+        } else {
+            let threads = cfg.cell_workers.min(cells.len());
+            let ctx_ref = &ctx;
+            std::thread::scope(|scope| {
+                for _ in 0..threads {
+                    let tx = tx.clone();
+                    scope.spawn(move || scan_worker::<T>(None, ctx_ref, &tx));
+                }
+            });
+        }
+    }
+    drop(tx);
+
+    let mut statuses: Vec<CellStatus> =
+        (0..cells.len()).map(|_| CellStatus::NotReached).collect();
+    for (idx, status) in rx {
+        statuses[idx] = status;
+    }
+
+    // Deterministic in-order commit: replay the sequential stopping rules
+    // over the per-cell results. In canonical mode this discards any
+    // speculative overshoot past the stop point and removes duplicate
+    // models a later cell re-found.
+    let mut zero_found = out.solutions.iter().any(|s| s.area == 0.0);
+    for status in statuses {
+        if out.cells_sat >= cfg.max_sat_cells || zero_found {
+            break;
+        }
+        match status {
+            CellStatus::NotReached => break,
+            CellStatus::Unsat => {
+                out.cells_tried += 1;
+                out.cells_unsat += 1;
+            }
+            CellStatus::Budget => {
+                out.cells_tried += 1;
+                out.cells_timeout += 1;
+            }
+            CellStatus::Sat(sols) => {
+                out.cells_tried += 1;
+                out.cells_sat += 1;
+                for s in sols {
+                    if canonical
+                        && out.solutions.iter().any(|q| q.params == s.params)
+                    {
+                        continue;
+                    }
+                    if s.area == 0.0 {
+                        zero_found = true;
+                    }
+                    out.solutions.push(s);
+                }
+            }
+        }
+    }
+    out.elapsed_ms = start.elapsed().as_millis() as u64;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::generators::adder;
+    use crate::circuit::netlist::GateKind;
+
+    fn quick_cfg() -> SearchConfig {
+        SearchConfig {
+            pool: 5,
+            solutions_per_cell: 1,
+            max_sat_cells: 2,
+            conflict_budget: Some(50_000),
+            time_budget_ms: 30_000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn generic_engine_runs_both_template_impls() {
+        let nl = adder(2);
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        let sh = run_search::<SharedMiter>(&nl, 2, &quick_cfg());
+        let xp = run_search::<NonsharedMiter>(&nl, 2, &quick_cfg());
+        for (name, out) in [("SHARED", &sh), ("XPAT", &xp)] {
+            let best = out.best().unwrap_or_else(|| panic!("{name}: no solution"));
+            assert!(
+                is_sound(&exact, &best.params.output_values(), 2),
+                "{name} unsound"
+            );
+            assert_eq!(
+                out.cells_tried,
+                out.cells_sat + out.cells_unsat + out.cells_timeout,
+                "{name} telemetry"
+            );
+        }
+    }
+
+    // ---- scripted mock template: deterministic engine-logic tests ----
+
+    /// A template whose solve outcomes are scripted by the cell's `a`
+    /// coordinate: 99 (the probe) and 2 are SAT, 1 exhausts the budget,
+    /// everything else is UNSAT. Models invert the single input, so they
+    /// are sound for the NOT-gate netlist below at ET = 0.
+    struct MockTemplate {
+        pool: usize,
+    }
+
+    fn mock_netlist() -> Netlist {
+        let mut nl = Netlist::new("mock");
+        let a = nl.add_input();
+        let inv = nl.push(GateKind::Not, vec![a]);
+        nl.set_outputs(vec![inv]);
+        nl
+    }
+
+    fn mock_model(pool: usize, tag: usize) -> SopParams {
+        let mut p = SopParams::empty(1, 1, pool);
+        p.use_mask[0] = true; // product 0: in0 ...
+        p.neg_mask[0] = true; // ... negated
+        p.out_sel[0] = true; // out0 <- product 0
+        // Distinguish models per cell via don't-care bits of unused
+        // products (they never reach the output or the netlist).
+        for k in 1..pool {
+            p.use_mask[k] = (tag >> (k - 1)) & 1 == 1;
+        }
+        p
+    }
+
+    impl Template for MockTemplate {
+        const NAME: &'static str = "MOCK";
+
+        fn build(_n: usize, _m: usize, pool: usize, _exact: &[u64], _et: u64) -> Self {
+            MockTemplate { pool }
+        }
+
+        fn set_conflict_budget(&mut self, _budget: Option<u64>) {}
+
+        fn solve(&mut self, a: usize, _b: usize) -> SolveOutcome {
+            match a {
+                99 | 2 => SolveOutcome::Sat(mock_model(self.pool, a)),
+                1 => SolveOutcome::Budget,
+                _ => SolveOutcome::Unsat,
+            }
+        }
+
+        fn solve_minimized_deadline(
+            &mut self,
+            a: usize,
+            b: usize,
+            _deadline: Option<Instant>,
+        ) -> SolveOutcome {
+            self.solve(a, b)
+        }
+
+        fn block(&mut self, _p: &SopParams) {}
+
+        fn cells(_n: usize, _m: usize, _pool: usize) -> Vec<Cell> {
+            (0..4)
+                .map(|a| Cell { a, b: 0, estimate: 1.0 + a as f64 })
+                .collect()
+        }
+
+        fn weakest_cell(_n: usize, _m: usize, _pool: usize) -> Cell {
+            Cell { a: 99, b: 0, estimate: f64::INFINITY }
+        }
+
+        fn proxy(p: &SopParams) -> (usize, usize) {
+            (p.pit(), p.its())
+        }
+
+        fn achieved_estimate(_proxy: (usize, usize), _m: usize) -> f64 {
+            f64::INFINITY
+        }
+    }
+
+    fn mock_cfg(cell_workers: usize) -> SearchConfig {
+        SearchConfig {
+            pool: 4,
+            solutions_per_cell: 1,
+            max_sat_cells: 3,
+            conflict_budget: None,
+            time_budget_ms: 60_000,
+            cell_workers,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn telemetry_distinguishes_budget_timeouts_from_unsat() {
+        // Scripted cells: a=0 UNSAT, a=1 budget-abort, a=2 SAT, a=3 UNSAT.
+        let nl = mock_netlist();
+        let out = run_search::<MockTemplate>(&nl, 0, &mock_cfg(1));
+        assert_eq!(out.cells_tried, 5); // probe + 4 cells
+        assert_eq!(out.cells_sat, 2); // probe + a=2
+        assert_eq!(out.cells_unsat, 2);
+        assert_eq!(out.cells_timeout, 1, "budget abort must not count as UNSAT");
+        assert_eq!(
+            out.cells_tried,
+            out.cells_sat + out.cells_unsat + out.cells_timeout
+        );
+        assert_eq!(out.solutions.len(), 2);
+    }
+
+    #[test]
+    fn engine_commit_is_identical_across_worker_counts() {
+        let nl = mock_netlist();
+        let base = run_search::<MockTemplate>(&nl, 0, &mock_cfg(1));
+        for workers in [2, 4, 8] {
+            let par = run_search::<MockTemplate>(&nl, 0, &mock_cfg(workers));
+            assert_eq!(par.cells_tried, base.cells_tried, "workers={workers}");
+            assert_eq!(par.cells_sat, base.cells_sat, "workers={workers}");
+            assert_eq!(par.cells_unsat, base.cells_unsat, "workers={workers}");
+            assert_eq!(par.cells_timeout, base.cells_timeout, "workers={workers}");
+            let key = |o: &SearchOutcome| -> Vec<((usize, usize), (usize, usize), f64)> {
+                o.solutions.iter().map(|s| (s.cell, s.proxy, s.area)).collect()
+            };
+            assert_eq!(key(&par), key(&base), "workers={workers}");
+        }
+    }
+}

@@ -2,9 +2,17 @@
 //! template restrictions until satisfiable, then multi-solution
 //! enumeration — XPAT's grid over (LPP, PPO) and SHARED's grid over
 //! (PIT, ITS), each ordered by the proxy's area estimate.
+//!
+//! * [`lattice`] — restriction cells and their area estimates.
+//! * [`engine`] — the generic, optionally parallel lattice-scan engine
+//!   over any [`Template`](engine::Template) implementation.
+//! * [`runner`] — configuration/outcome types and the two paper methods
+//!   (`search_shared`, `search_xpat`) as thin engine instantiations.
 
+pub mod engine;
 pub mod lattice;
 pub mod runner;
 
+pub use engine::{run_search, Template};
 pub use lattice::{shared_cells, xpat_cells, Cell};
 pub use runner::{search_shared, search_xpat, SearchConfig, SearchOutcome, Solution};

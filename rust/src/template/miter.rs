@@ -13,6 +13,12 @@
 //! so one encoded miter serves the whole lattice search:
 //! * SHARED:   PIT (products referenced anywhere), ITS (product→sum edges)
 //! * XPAT:     LPP (literals per product), PPO (products per output)
+//!
+//! Both miters additionally carry gate-count and inverter-count proxy
+//! counters so the search can greedily minimise the synthesised-area
+//! drivers *within* a SAT cell (`solve_minimized_deadline`).
+
+use std::time::Instant;
 
 use crate::sat::{Lit, SatResult};
 use crate::smt::cardinality::BoundedCounter;
@@ -20,6 +26,7 @@ use crate::smt::cnf::CnfBuilder;
 use crate::smt::compare::value_in_range;
 
 use super::params::SopParams;
+use super::SolveOutcome;
 
 /// Parameter literals shared by both templates.
 pub struct ParamVars {
@@ -155,6 +162,124 @@ fn encode_outputs_and_distance(
     }
 }
 
+/// Gate-count + inverter-count proxy counters over the parameter vars.
+///
+/// A product with L literals costs L-1 AND2s and a sum with S inputs
+/// costs S-1 OR2s, so count every literal beyond the first of its
+/// product and every selection beyond the first of its output — Σ is
+/// exactly the 2-input gate count of the extracted SOP netlist.
+/// Negated literals cost an inverter each, positive ones are free wires.
+/// Used by both templates (for the nonshared one the hard-wired-false
+/// cross-block selection literals simply never count).
+fn encode_gate_proxy(
+    b: &mut CnfBuilder,
+    params: &ParamVars,
+) -> (BoundedCounter, BoundedCounter) {
+    let (n, m, t) = (params.n, params.m, params.t);
+    let mut gate_bits: Vec<Lit> = Vec::new();
+    for k in 0..t {
+        let mut prefix: Option<Lit> = None;
+        for j in 0..n {
+            let u = params.use_lits[k * n + j];
+            if let Some(pf) = prefix {
+                gate_bits.push(b.and(&[u, pf]));
+                let np = b.new_lit();
+                b.define_or2(np, pf, u);
+                prefix = Some(np);
+            } else {
+                prefix = Some(u);
+            }
+        }
+    }
+    for i in 0..m {
+        let mut prefix: Option<Lit> = None;
+        for k in 0..t {
+            let sl = params.sel_lits[i * t + k];
+            if let Some(pf) = prefix {
+                gate_bits.push(b.and(&[sl, pf]));
+                let np = b.new_lit();
+                b.define_or2(np, pf, sl);
+                prefix = Some(np);
+            } else {
+                prefix = Some(sl);
+            }
+        }
+    }
+    let gates = BoundedCounter::new(b, &gate_bits);
+    let negs = BoundedCounter::new(b, &params.neg_lits.clone());
+    (gates, negs)
+}
+
+/// One `solve_limited` call mapped onto the three-way outcome.
+fn solve_with(
+    b: &mut CnfBuilder,
+    params: &ParamVars,
+    assumptions: &[Lit],
+) -> SolveOutcome {
+    match b.solver.solve_limited(assumptions) {
+        Some(SatResult::Sat) => SolveOutcome::Sat(params.extract(b)),
+        Some(SatResult::Unsat) => SolveOutcome::Unsat,
+        None => SolveOutcome::Budget,
+    }
+}
+
+/// Greedy within-cell minimisation shared by both templates: descend on
+/// the gate-count proxy, then on inverters holding the achieved gate
+/// optimum. Every probe is assumption-only, so the miter stays reusable;
+/// the incumbent stays valid when the deadline passes or a probe runs
+/// out of budget.
+fn minimize_descent(
+    b: &mut CnfBuilder,
+    params: &ParamVars,
+    gates: &BoundedCounter,
+    negs: &BoundedCounter,
+    base_assum: &[Lit],
+    first: SopParams,
+    deadline: Option<Instant>,
+) -> SopParams {
+    let expired =
+        |d: &Option<Instant>| d.map(|t| Instant::now() > t).unwrap_or(false);
+    let mut best = first;
+    // Primary: two-input gate count of the extracted netlist.
+    loop {
+        let count = gate_count(&best);
+        if count == 0 || expired(&deadline) {
+            break;
+        }
+        let mut assum = base_assum.to_vec();
+        match gates.at_most(count - 1) {
+            None => break,
+            Some(l) => assum.push(l),
+        }
+        match b.solver.solve_limited(&assum) {
+            Some(SatResult::Sat) => best = params.extract(b),
+            _ => break,
+        }
+    }
+    // Secondary: negations (each costs an inverter), holding the gate
+    // bound at the achieved optimum.
+    let achieved = gate_count(&best);
+    loop {
+        let n_negs = best.neg_mask.iter().filter(|&&u| u).count();
+        if n_negs == 0 || expired(&deadline) {
+            break;
+        }
+        let mut assum = base_assum.to_vec();
+        if let Some(l) = gates.at_most(achieved) {
+            assum.push(l);
+        }
+        match negs.at_most(n_negs - 1) {
+            None => break,
+            Some(l) => assum.push(l),
+        }
+        match b.solver.solve_limited(&assum) {
+            Some(SatResult::Sat) => best = params.extract(b),
+            _ => break,
+        }
+    }
+    best
+}
+
 /// Two-input gate count of an instantiation (ANDs beyond the first
 /// literal per product + ORs beyond the first selection per sum) —
 /// mirrors the miter's gate-proxy counter over concrete params.
@@ -177,6 +302,7 @@ pub struct SharedMiter {
     pub params: ParamVars,
     pit: BoundedCounter,
     its: BoundedCounter,
+    #[allow(dead_code)] // kept: third proxy of the study, and encode-order stability
     lits: BoundedCounter,
     gates: BoundedCounter,
     negs: BoundedCounter,
@@ -207,44 +333,7 @@ impl SharedMiter {
         // toward the low-area corner — the "parameters as proxies"
         // thesis applied once more.
         let lits = BoundedCounter::new(&mut b, &params.use_lits.clone());
-        // Gate-count proxy: a product with L literals costs L-1 AND2s and
-        // a sum with S inputs costs S-1 OR2s, so count every literal
-        // beyond the first of its product and every selection beyond the
-        // first of its output — Σ is exactly the 2-input gate count of
-        // the extracted SOP netlist (inverters tracked separately below).
-        let mut gate_bits: Vec<Lit> = Vec::new();
-        for k in 0..t {
-            let mut prefix: Option<Lit> = None;
-            for j in 0..n {
-                let u = params.use_lits[k * n + j];
-                if let Some(pf) = prefix {
-                    gate_bits.push(b.and(&[u, pf]));
-                    let np = b.new_lit();
-                    b.define_or2(np, pf, u);
-                    prefix = Some(np);
-                } else {
-                    prefix = Some(u);
-                }
-            }
-        }
-        for i in 0..m {
-            let mut prefix: Option<Lit> = None;
-            for k in 0..t {
-                let sl = params.sel_lits[i * t + k];
-                if let Some(pf) = prefix {
-                    gate_bits.push(b.and(&[sl, pf]));
-                    let np = b.new_lit();
-                    b.define_or2(np, pf, sl);
-                    prefix = Some(np);
-                } else {
-                    prefix = Some(sl);
-                }
-            }
-        }
-        let gates = BoundedCounter::new(&mut b, &gate_bits);
-        // Tie-breaker: negated literals cost an inverter each, positive
-        // ones are free wires.
-        let negs = BoundedCounter::new(&mut b, &params.neg_lits.clone());
+        let (gates, negs) = encode_gate_proxy(&mut b, &params);
         SharedMiter { b, params, pit, its, lits, gates, negs }
     }
 
@@ -260,19 +349,15 @@ impl SharedMiter {
         v
     }
 
-    /// Solve under a (pit, its) restriction; `Some(params)` when SAT.
-    pub fn solve(&mut self, pit: usize, its: usize) -> Option<SopParams> {
+    /// Solve under a (pit, its) restriction.
+    pub fn solve(&mut self, pit: usize, its: usize) -> SolveOutcome {
         let assum = self.restrict(pit, its);
-        match self.b.solver.solve_limited(&assum) {
-            Some(SatResult::Sat) => Some(self.params.extract(&self.b)),
-            _ => None,
-        }
+        solve_with(&mut self.b, &self.params, &assum)
     }
 
-    /// Solve, then greedily minimise the total-literal proxy within the
-    /// cell (binary-ish descent on the lits counter, assumption-only, so
-    /// the miter stays reusable).
-    pub fn solve_minimized(&mut self, pit: usize, its: usize) -> Option<SopParams> {
+    /// Solve, then greedily minimise the gate/inverter proxies within the
+    /// cell (assumption-only, so the miter stays reusable).
+    pub fn solve_minimized(&mut self, pit: usize, its: usize) -> SolveOutcome {
         self.solve_minimized_deadline(pit, its, None)
     }
 
@@ -283,49 +368,22 @@ impl SharedMiter {
         &mut self,
         pit: usize,
         its: usize,
-        deadline: Option<std::time::Instant>,
-    ) -> Option<SopParams> {
-        let expired =
-            |d: &Option<std::time::Instant>| d.map(|t| std::time::Instant::now() > t).unwrap_or(false);
-        let mut best = self.solve(pit, its)?;
-        // Primary: two-input gate count of the extracted netlist.
-        loop {
-            let count = gate_count(&best);
-            if count == 0 || expired(&deadline) {
-                break;
-            }
-            let mut assum = self.restrict(pit, its);
-            match self.gates.at_most(count - 1) {
-                None => break,
-                Some(l) => assum.push(l),
-            }
-            match self.b.solver.solve_limited(&assum) {
-                Some(SatResult::Sat) => best = self.params.extract(&self.b),
-                _ => break,
-            }
-        }
-        // Secondary: negations (each costs an inverter), holding the
-        // gate bound at the achieved optimum.
-        let achieved = gate_count(&best);
-        loop {
-            let negs = best.neg_mask.iter().filter(|&&u| u).count();
-            if negs == 0 || expired(&deadline) {
-                break;
-            }
-            let mut assum = self.restrict(pit, its);
-            if let Some(l) = self.gates.at_most(achieved) {
-                assum.push(l);
-            }
-            match self.negs.at_most(negs - 1) {
-                None => break,
-                Some(l) => assum.push(l),
-            }
-            match self.b.solver.solve_limited(&assum) {
-                Some(SatResult::Sat) => best = self.params.extract(&self.b),
-                _ => break,
-            }
-        }
-        Some(best)
+        deadline: Option<Instant>,
+    ) -> SolveOutcome {
+        let first = match self.solve(pit, its) {
+            SolveOutcome::Sat(p) => p,
+            other => return other,
+        };
+        let base = self.restrict(pit, its);
+        SolveOutcome::Sat(minimize_descent(
+            &mut self.b,
+            &self.params,
+            &self.gates,
+            &self.negs,
+            &base,
+            first,
+            deadline,
+        ))
     }
 
     /// Exclude a returned assignment so the next solve yields a fresh one.
@@ -346,6 +404,8 @@ pub struct NonsharedMiter {
     pub params: ParamVars,
     lpp: Vec<BoundedCounter>, // one per product
     ppo: Vec<BoundedCounter>, // one per output (over its block)
+    gates: BoundedCounter,
+    negs: BoundedCounter,
 }
 
 impl NonsharedMiter {
@@ -387,7 +447,8 @@ impl NonsharedMiter {
                 BoundedCounter::new(&mut b, &lits)
             })
             .collect();
-        NonsharedMiter { b, params, lpp, ppo }
+        let (gates, negs) = encode_gate_proxy(&mut b, &params);
+        NonsharedMiter { b, params, lpp, ppo, gates, negs }
     }
 
     /// Assumptions enforcing `LPP <= lpp` on every product and
@@ -407,12 +468,39 @@ impl NonsharedMiter {
         v
     }
 
-    pub fn solve(&mut self, lpp: usize, ppo: usize) -> Option<SopParams> {
+    pub fn solve(&mut self, lpp: usize, ppo: usize) -> SolveOutcome {
         let assum = self.restrict(lpp, ppo);
-        match self.b.solver.solve_limited(&assum) {
-            Some(SatResult::Sat) => Some(self.params.extract(&self.b)),
-            _ => None,
-        }
+        solve_with(&mut self.b, &self.params, &assum)
+    }
+
+    /// Gate/inverter minimisation within an (lpp, ppo) cell — parity with
+    /// [`SharedMiter::solve_minimized`].
+    pub fn solve_minimized(&mut self, lpp: usize, ppo: usize) -> SolveOutcome {
+        self.solve_minimized_deadline(lpp, ppo, None)
+    }
+
+    /// Deadline-aware minimisation so the XPAT path honours the search
+    /// wall clock *inside* the cell loop, not only between cells.
+    pub fn solve_minimized_deadline(
+        &mut self,
+        lpp: usize,
+        ppo: usize,
+        deadline: Option<Instant>,
+    ) -> SolveOutcome {
+        let first = match self.solve(lpp, ppo) {
+            SolveOutcome::Sat(p) => p,
+            other => return other,
+        };
+        let base = self.restrict(lpp, ppo);
+        SolveOutcome::Sat(minimize_descent(
+            &mut self.b,
+            &self.params,
+            &self.gates,
+            &self.negs,
+            &base,
+            first,
+            deadline,
+        ))
     }
 
     pub fn block(&mut self, p: &SopParams) {
@@ -440,7 +528,7 @@ mod tests {
         let nl = adder(2);
         let exact = exact_values(&nl);
         let mut miter = SharedMiter::build(4, 3, 8, &exact, 1);
-        let sol = miter.solve(8, 24).expect("unrestricted must be SAT");
+        let sol = miter.solve(8, 24).sat().expect("unrestricted must be SAT");
         assert!(is_sound(&exact, &sol.output_values(), 1),
                 "max err {:?}", crate::circuit::sim::error_stats(&exact, &sol.output_values()));
     }
@@ -450,7 +538,7 @@ mod tests {
         let nl = multiplier(2);
         let exact = exact_values(&nl);
         let mut miter = SharedMiter::build(4, 4, 12, &exact, 0);
-        let sol = miter.solve(12, 48).expect("ET=0 with a big pool must be SAT");
+        let sol = miter.solve(12, 48).sat().expect("ET=0 with a big pool must be SAT");
         assert_eq!(sol.output_values(), exact);
     }
 
@@ -462,13 +550,13 @@ mod tests {
         let mut miter = SharedMiter::build(4, 3, 6, &exact, 2);
         let mut first_sat: Option<(usize, usize)> = None;
         for pit in 1..=6 {
-            if miter.solve(pit, 2 * pit).is_some() {
+            if miter.solve(pit, 2 * pit).is_sat() {
                 first_sat = Some((pit, 2 * pit));
                 break;
             }
         }
         let (pit, its) = first_sat.expect("some cell must be SAT");
-        assert!(miter.solve(pit + 1, its + 1).is_some());
+        assert!(miter.solve(pit + 1, its + 1).is_sat());
     }
 
     #[test]
@@ -477,7 +565,7 @@ mod tests {
         let exact = exact_values(&nl);
         let mut miter = SharedMiter::build(4, 3, 8, &exact, 2);
         for (pit, its) in [(2, 4), (3, 6), (4, 8)] {
-            if let Some(sol) = miter.solve(pit, its) {
+            if let Some(sol) = miter.solve(pit, its).sat() {
                 assert!(sol.pit() <= pit, "pit {} > {}", sol.pit(), pit);
                 assert!(sol.its() <= its, "its {} > {}", sol.its(), its);
                 assert!(is_sound(&exact, &sol.output_values(), 2));
@@ -490,9 +578,9 @@ mod tests {
         let nl = adder(2);
         let exact = exact_values(&nl);
         let mut miter = SharedMiter::build(4, 3, 6, &exact, 2);
-        let s1 = miter.solve(4, 10).expect("sat");
+        let s1 = miter.solve(4, 10).sat().expect("sat");
         miter.block(&s1);
-        let s2 = miter.solve(4, 10).expect("second solution");
+        let s2 = miter.solve(4, 10).sat().expect("second solution");
         assert_ne!(s1, s2);
         assert!(is_sound(&exact, &s2.output_values(), 2));
     }
@@ -502,7 +590,7 @@ mod tests {
         let nl = adder(2);
         let exact = exact_values(&nl);
         let mut miter = NonsharedMiter::build(4, 3, 3, &exact, 1);
-        let sol = miter.solve(4, 3).expect("must be SAT");
+        let sol = miter.solve(4, 3).sat().expect("must be SAT");
         assert!(is_sound(&exact, &sol.output_values(), 1));
         // Block structure: every selected product belongs to its output.
         for i in 0..3 {
@@ -522,7 +610,7 @@ mod tests {
         let exact = exact_values(&nl);
         let mut miter = NonsharedMiter::build(4, 4, 2, &exact, 0);
         // LPP = 0 means only constant products: mult cannot be exact.
-        assert!(miter.solve(0, 2).is_none());
+        assert_eq!(miter.solve(0, 2), SolveOutcome::Unsat);
     }
 
     #[test]
@@ -555,13 +643,42 @@ mod tests {
         let nl = adder(2);
         let exact = exact_values(&nl);
         let mut m1 = SharedMiter::build(4, 3, 8, &exact, 2);
-        let plain = m1.solve(8, 24).unwrap();
+        let plain = m1.solve(8, 24).sat().unwrap();
         let mut m2 = SharedMiter::build(4, 3, 8, &exact, 2);
-        let minimized = m2.solve_minimized(8, 24).unwrap();
+        let minimized = m2.solve_minimized(8, 24).sat().unwrap();
         assert!(super::gate_count(&minimized) <= super::gate_count(&plain));
         assert!(crate::circuit::sim::is_sound(
             &exact, &minimized.output_values(), 2
         ));
+    }
+
+    #[test]
+    fn nonshared_minimized_solution_never_worse_than_plain() {
+        // Parity with the SHARED path: the XPAT miter minimises too.
+        let nl = adder(2);
+        let exact = exact_values(&nl);
+        let mut m1 = NonsharedMiter::build(4, 3, 3, &exact, 2);
+        let plain = m1.solve(4, 3).sat().unwrap();
+        let mut m2 = NonsharedMiter::build(4, 3, 3, &exact, 2);
+        let minimized = m2.solve_minimized(4, 3).sat().unwrap();
+        assert!(super::gate_count(&minimized) <= super::gate_count(&plain));
+        assert!(is_sound(&exact, &minimized.output_values(), 2));
+        // The minimised model still respects the cell bounds.
+        assert!(minimized.lpp() <= 4);
+        assert!(minimized.ppo() <= 3);
+    }
+
+    #[test]
+    fn nonshared_minimized_deadline_in_past_still_returns_incumbent() {
+        // An already-expired deadline must degrade gracefully to the
+        // plain first model, never to a lost answer.
+        let nl = adder(2);
+        let exact = exact_values(&nl);
+        let mut miter = NonsharedMiter::build(4, 3, 3, &exact, 2);
+        let past = Instant::now() - std::time::Duration::from_millis(10);
+        let sol = miter.solve_minimized_deadline(4, 3, Some(past)).sat();
+        assert!(sol.is_some(), "expired deadline must still return the first model");
+        assert!(is_sound(&exact, &sol.unwrap().output_values(), 2));
     }
 
     #[test]
@@ -571,6 +688,6 @@ mod tests {
         let mut miter = SharedMiter::build(4, 4, 8, &exact, 0);
         // PIT = 0 forces all outputs constant; mult_i4 with ET=0 cannot
         // be constant, so this must be UNSAT (None), never a bad model.
-        assert!(miter.solve(0, 0).is_none());
+        assert_eq!(miter.solve(0, 0), SolveOutcome::Unsat);
     }
 }

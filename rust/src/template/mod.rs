@@ -8,9 +8,40 @@
 //!   template (eq. 2) and the nonshared XPAT template (eq. 1), encoded
 //!   into CNF with assumption-based restriction counters so the lattice
 //!   search tightens/weakens PIT/ITS (resp. LPP/PPO) without re-encoding.
+//!
+//! Both miters answer restriction queries with a [`SolveOutcome`], which
+//! keeps "the cell is UNSAT" distinct from "the solver gave up on its
+//! conflict budget" — the search telemetry depends on that distinction.
 
 pub mod miter;
 pub mod params;
 
 pub use miter::{NonsharedMiter, SharedMiter};
 pub use params::SopParams;
+
+/// Result of solving one restriction cell.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SolveOutcome {
+    /// A model satisfying the restriction (already extracted).
+    Sat(SopParams),
+    /// Proven unsatisfiable under the restriction.
+    Unsat,
+    /// The per-solve conflict budget ran out before an answer — neither
+    /// SAT nor UNSAT may be concluded.
+    Budget,
+}
+
+impl SolveOutcome {
+    /// The model, if any — collapses `Unsat`/`Budget` to `None` for
+    /// callers that only care about models.
+    pub fn sat(self) -> Option<SopParams> {
+        match self {
+            SolveOutcome::Sat(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    pub fn is_sat(&self) -> bool {
+        matches!(self, SolveOutcome::Sat(_))
+    }
+}

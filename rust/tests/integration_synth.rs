@@ -16,6 +16,7 @@ fn quick_cfg() -> SearchConfig {
         max_sat_cells: 3,
         conflict_budget: Some(100_000),
         time_budget_ms: 60_000,
+        ..Default::default()
     }
 }
 
@@ -124,6 +125,40 @@ fn sweep_grid_produces_finite_sound_areas_on_i4() {
     for r in &records {
         assert!(r.area.is_finite(), "{} et={} infinite", r.method.name(), r.et);
         assert!(r.max_err <= r.et);
+    }
+}
+
+#[test]
+fn sweep_with_nested_cell_workers_matches_flat_sweep() {
+    // Nested parallelism (jobs × lattice cells) must agree with the flat
+    // sweep on the areas it reports.
+    let mk = |cell_workers: usize| SweepPlan {
+        benches: vec![benchmark_by_name("adder_i4").unwrap()],
+        methods: vec![Method::Shared],
+        ets: Some(vec![1]),
+        search: SearchConfig {
+            pool: 5,
+            solutions_per_cell: 1,
+            max_sat_cells: 2,
+            conflict_budget: None,
+            time_budget_ms: 120_000,
+            cell_workers,
+            ..Default::default()
+        },
+        workers: 2,
+    };
+    let flat = run_sweep(&mk(1));
+    let nested = run_sweep(&mk(2));
+    assert_eq!(flat.len(), nested.len());
+    for (a, b) in flat.iter().zip(&nested) {
+        assert!(
+            (a.area - b.area).abs() < 1e-9,
+            "{} et={}: flat {} vs nested {}",
+            a.bench,
+            a.et,
+            a.area,
+            b.area
+        );
     }
 }
 

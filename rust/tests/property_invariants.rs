@@ -175,6 +175,7 @@ fn prop_coordinator_records_are_internally_consistent() {
                 max_sat_cells: 1,
                 conflict_budget: Some(30_000),
                 time_budget_ms: 20_000,
+                ..Default::default()
             },
         });
         assert_eq!(rec.bench, bench.name);
