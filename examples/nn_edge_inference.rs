@@ -22,7 +22,10 @@ fn main() {
     let mlp = QuantMlp::train(&train, 12, 15, 5);
     let exact_acc = mlp.accuracy(&test, &MultLut::exact());
     println!("exact 4x4 multiplier: area {exact_area:.2} µm², accuracy {exact_acc:.3}\n");
-    println!("{:<8} {:>4} {:>9} {:>8} {:>8} {:>9}", "method", "ET", "area", "saving%", "max|err|", "accuracy");
+    println!(
+        "{:<8} {:>4} {:>9} {:>8} {:>8} {:>9}",
+        "method", "ET", "area", "saving%", "max|err|", "accuracy"
+    );
 
     for et in [1u64, 2, 4, 8, 16, 32] {
         for (label, res) in [

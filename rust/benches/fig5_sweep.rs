@@ -3,16 +3,23 @@
 //! search cells are the heavy tail; the per-cell conflict budget bounds
 //! the wall time the same way the paper's 3 h timeout does.
 //!
+//! Also the engine perf tracker: cell-worker scaling (cells/sec per
+//! worker count) and the prototype-clone vs fresh-build per-cell cost on
+//! the sweep geometries, written to `BENCH_engine.json`.
+//!
 //!     cargo bench --bench fig5_sweep
 //!     SXPAT_FULL=1 cargo bench --bench fig5_sweep   # include i8 grid
 
-use sxpat::bench_support::bench;
+use sxpat::bench_support::{bench, bench_clone_vs_build, JsonReport};
 use sxpat::circuit::generators::{benchmark_by_name, PAPER_BENCHMARKS};
+use sxpat::circuit::sim::TruthTables;
 use sxpat::coordinator::{run_job, run_sweep, Job, Method, SweepPlan};
 use sxpat::report::{fig5_csv, fig5_markdown};
-use sxpat::search::SearchConfig;
+use sxpat::search::{search_shared, SearchConfig};
+use sxpat::template::SharedMiter;
 
 fn main() {
+    let mut report = JsonReport::new();
     let full = std::env::var("SXPAT_FULL").is_ok();
     let benches: Vec<_> = if full {
         PAPER_BENCHMARKS.iter().collect()
@@ -38,9 +45,11 @@ fn main() {
     };
 
     let mut records = Vec::new();
-    bench("fig5/sweep", 0, 1, || {
+    let sweep_stats = bench("fig5/sweep", 0, 1, || {
         records = run_sweep(&plan);
     });
+    report.push_stats("sweep", &sweep_stats);
+    report.push("sweep.jobs", records.len() as f64);
     println!("{}", fig5_markdown(&records));
 
     // Who wins per (bench, et) — the figure's qualitative content.
@@ -67,6 +76,21 @@ fn main() {
     std::fs::write("results/fig5_bench.csv", &csv).ok();
     println!("wrote results/fig5_bench.csv ({} rows)", csv.lines().count());
 
+    // Prototype clone vs fresh build on the sweep geometries: the
+    // canonical scan pays one clone per cell where it used to pay a full
+    // re-encode, so clone must be strictly cheaper than build. Recorded
+    // in BENCH_engine.json so the perf trajectory is tracked.
+    for (name, pool) in [("adder_i4", 8usize), ("mult_i4", 8), ("adder_i6", 8)] {
+        let b = benchmark_by_name(name).unwrap();
+        let nl = b.netlist();
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        let (n, m) = (nl.n_inputs(), nl.n_outputs());
+        let et = b.fig4_et();
+        bench_clone_vs_build(&mut report, "fig5", &format!("proto_{name}"), || {
+            SharedMiter::build(n, m, pool, &exact, et)
+        });
+    }
+
     // Intra-job parallelism: sequential vs parallel lattice scan on one
     // SHARED mult_i4 job (the acceptance bar: the parallel scan must not
     // be slower, and its best area must match the sequential scan).
@@ -85,18 +109,31 @@ fn main() {
             ..Default::default()
         };
         let mut area = f64::NAN;
-        bench(&format!("fig5/cell_scan_mult_i4_w{cell_workers}"), 1, 3, || {
-            let rec = run_job(&Job {
-                bench: mult,
-                method: Method::Shared,
-                et: mult.fig4_et(),
-                search: search.clone(),
+        let scan_stats =
+            bench(&format!("fig5/cell_scan_mult_i4_w{cell_workers}"), 1, 3, || {
+                let rec = run_job(&Job {
+                    bench: mult,
+                    method: Method::Shared,
+                    et: mult.fig4_et(),
+                    search: search.clone(),
+                });
+                area = rec.area;
             });
-            area = rec.area;
-        });
+        // cells/sec needs the search telemetry, not the RunRecord — one
+        // untimed run outside the bench loop.
+        let out = search_shared(&mult.netlist(), mult.fig4_et(), &search);
+        let cells_per_sec =
+            out.cells_tried as f64 / (out.elapsed_ms.max(1) as f64 / 1e3);
         area_by_workers.push((cell_workers, area));
+        report.push_stats(&format!("cell_scan_mult_i4_w{cell_workers}"), &scan_stats);
+        report.push(
+            &format!("cell_scan_mult_i4_w{cell_workers}.cells_per_sec"),
+            cells_per_sec,
+        );
+        report.push(&format!("cell_scan_mult_i4_w{cell_workers}.best_area"), area);
     }
     for (w, area) in &area_by_workers {
         println!("cell scan mult_i4, {w} worker(s): best area {area:.3}");
     }
+    report.write("engine");
 }

@@ -1,9 +1,11 @@
 //! SAT-substrate microbenchmarks: propagation rate on miter CNFs and on
-//! pigeonhole instances. Feeds EXPERIMENTS.md §Perf (L3 targets).
+//! pigeonhole instances, plus the arena headline — prototype *clone*
+//! versus fresh *build* cost per miter. Feeds EXPERIMENTS.md §Perf (L3
+//! targets) and writes machine-readable results to `BENCH_sat.json`.
 //!
 //!     cargo bench --bench sat_solver
 
-use sxpat::bench_support::{bench, black_box};
+use sxpat::bench_support::{bench, bench_clone_vs_build, JsonReport};
 use sxpat::circuit::generators::benchmark_by_name;
 use sxpat::circuit::sim::TruthTables;
 use sxpat::sat::{Lit, SatResult, Solver};
@@ -31,16 +33,25 @@ fn php(pigeons: usize, holes: usize) -> Solver {
 }
 
 fn main() {
+    let mut report = JsonReport::new();
+
     // Pigeonhole: conflict-analysis stress.
     for n in [7usize, 8] {
         let mut props = 0u64;
+        let mut reclaimed = 0u64;
         let stats = bench(&format!("sat/php_{}_{n}", n + 1), 1, 3, || {
             let mut s = php(n + 1, n);
             assert_eq!(s.solve(&[]), SatResult::Unsat);
             props = s.stats.propagations;
+            reclaimed = s.stats.arena_reclaimed_words;
         });
         let rate = props as f64 / (stats.mean_ms / 1e3) / 1e6;
-        println!("  {:.1} M props/s ({props} propagations)", rate);
+        println!(
+            "  {rate:.1} M props/s ({props} propagations, {reclaimed} arena words reclaimed)"
+        );
+        report.push_stats(&format!("php_{}_{n}", n + 1), &stats);
+        report.push(&format!("php_{}_{n}.props_per_sec", n + 1), rate * 1e6);
+        report.push(&format!("php_{}_{n}.arena_reclaimed_words", n + 1), reclaimed as f64);
     }
 
     // Miter solving: the workload the search actually runs.
@@ -49,11 +60,15 @@ fn main() {
         let nl = b.netlist();
         let exact = TruthTables::simulate(&nl).output_values(&nl);
         let (n, m) = (nl.n_inputs(), nl.n_outputs());
-        bench(&format!("sat/miter_build_{name}"), 1, 3, || {
-            black_box(SharedMiter::build(n, m, 8, &exact, et));
+        // The arena headline: cloning the encoded prototype must be far
+        // cheaper than re-running the full encode — this ratio is what
+        // the canonical parallel scan saves on every lattice cell.
+        bench_clone_vs_build(&mut report, "sat", &format!("miter_{name}"), || {
+            SharedMiter::build(n, m, 8, &exact, et)
         });
+
         let mut miter = SharedMiter::build(n, m, 8, &exact, et);
-        bench(&format!("sat/miter_solve_{name}_et{et}"), 1, 3, || {
+        let solve_stats = bench(&format!("sat/miter_solve_{name}_et{et}"), 1, 3, || {
             // Re-solve the same lattice prefix each iteration: the
             // solver is incremental, so this measures warm solving.
             for pit in 1..=4usize {
@@ -62,5 +77,10 @@ fn main() {
                 }
             }
         });
+        report.push_stats(&format!("miter_solve_{name}_et{et}"), &solve_stats);
+        let props = miter.b.solver.stats.propagations;
+        report.push(&format!("miter_solve_{name}_et{et}.total_propagations"), props as f64);
     }
+
+    report.write("sat");
 }

@@ -59,3 +59,93 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
 pub fn throughput(stats: &BenchStats, items_per_iter: usize) -> f64 {
     items_per_iter as f64 / (stats.mean_ms / 1e3)
 }
+
+/// Machine-readable bench results: a flat `name -> number` JSON object
+/// written as `BENCH_<suite>.json`, so the perf trajectory can be diffed
+/// across commits instead of scraped from stdout. Non-finite values
+/// serialize as `null` (JSON has no NaN/inf).
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    entries: Vec<(String, f64)>,
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        JsonReport::default()
+    }
+
+    /// Record one metric. Keys are kept in insertion order.
+    pub fn push(&mut self, key: &str, value: f64) {
+        self.entries.push((key.to_string(), value));
+    }
+
+    /// Record the standard fields of a [`BenchStats`] under `prefix`.
+    pub fn push_stats(&mut self, prefix: &str, stats: &BenchStats) {
+        self.push(&format!("{prefix}.mean_ms"), stats.mean_ms);
+        self.push(&format!("{prefix}.min_ms"), stats.min_ms);
+        self.push(&format!("{prefix}.iters"), stats.iters as f64);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from("{\n");
+        for (i, (k, v)) in self.entries.iter().enumerate() {
+            let comma = if i + 1 < self.entries.len() { "," } else { "" };
+            let key = k.replace('\\', "\\\\").replace('"', "\\\"");
+            if v.is_finite() {
+                out.push_str(&format!("  \"{key}\": {v}{comma}\n"));
+            } else {
+                out.push_str(&format!("  \"{key}\": null{comma}\n"));
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+
+    /// Write `BENCH_<suite>.json` into the working directory (the crate
+    /// root under `cargo bench`).
+    pub fn write(&self, suite: &str) {
+        let path = format!("BENCH_{suite}.json");
+        match std::fs::write(&path, self.render()) {
+            Ok(()) => println!("wrote {path} ({} metrics)", self.entries.len()),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}
+
+/// Shared fresh-build vs prototype-clone harness: times `build()` (3
+/// iters) against `.clone()` of one built value (10 iters), prints the
+/// ratio and records `<key>_build.*`, `<key>_clone.*`,
+/// `<key>_clone.clone_over_build` and `<key>_clone.clone_strictly_faster`
+/// on the report. Used by the sat and engine bench suites so the two
+/// `BENCH_*.json` files cannot drift apart in methodology.
+pub fn bench_clone_vs_build<T: Clone>(
+    report: &mut JsonReport,
+    group: &str,
+    key: &str,
+    mut build: impl FnMut() -> T,
+) {
+    let build_stats = bench(&format!("{group}/{key}_build"), 1, 3, || {
+        black_box(build());
+    });
+    let proto = build();
+    let clone_stats = bench(&format!("{group}/{key}_clone"), 1, 10, || {
+        black_box(proto.clone());
+    });
+    let faster = clone_stats.mean_ms < build_stats.mean_ms;
+    println!(
+        "  {key}: clone {:.3} ms vs fresh build {:.3} ms — clone {}",
+        clone_stats.mean_ms,
+        build_stats.mean_ms,
+        if faster { "strictly faster" } else { "NOT faster (regression!)" }
+    );
+    report.push_stats(&format!("{key}_build"), &build_stats);
+    report.push_stats(&format!("{key}_clone"), &clone_stats);
+    report.push(
+        &format!("{key}_clone.clone_over_build"),
+        clone_stats.mean_ms / build_stats.mean_ms,
+    );
+    report.push(
+        &format!("{key}_clone.clone_strictly_faster"),
+        if faster { 1.0 } else { 0.0 },
+    );
+}

@@ -6,7 +6,7 @@ use std::time::Instant;
 use crate::baselines::{mecals, muscat};
 use crate::circuit::generators::Benchmark;
 use crate::circuit::sim::TruthTables;
-use crate::search::{search_shared, search_xpat, SearchConfig};
+use crate::search::{MiterCache, SearchConfig};
 use crate::synth::synthesize_area;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -67,6 +67,14 @@ pub struct RunRecord {
 /// exhaustive oracle before being reported (defence in depth on top of
 /// each method's own guarantee).
 pub fn run_job(job: &Job) -> RunRecord {
+    run_job_cached(job, &MiterCache::new())
+}
+
+/// As [`run_job`], sourcing template-method miter prototypes from a
+/// shared [`MiterCache`] so a sweep encodes each geometry once. Cache
+/// hits are result-invisible (prototypes are pristine); baseline methods
+/// ignore the cache.
+pub fn run_job_cached(job: &Job, protos: &MiterCache) -> RunRecord {
     let nl = job.bench.netlist();
     let exact = TruthTables::simulate(&nl).output_values(&nl);
     let start = Instant::now();
@@ -85,9 +93,9 @@ pub fn run_job(job: &Job) -> RunRecord {
         },
         Method::Shared | Method::Xpat => {
             let out = if job.method == Method::Shared {
-                search_shared(&nl, job.et, &job.search)
+                protos.search_shared(&nl, job.et, &job.search)
             } else {
-                search_xpat(&nl, job.et, &job.search)
+                protos.search_xpat(&nl, job.et, &job.search)
             };
             let all_points: Vec<(usize, usize, f64)> = out
                 .solutions

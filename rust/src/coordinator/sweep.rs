@@ -12,15 +12,19 @@
 //! on the worker, recorded as a [`RunRecord`] with
 //! `error: Some(message)` and `area = inf`, and the remaining jobs run
 //! to completion.
+//!
+//! Template-method jobs share one [`MiterCache`] per sweep: the first
+//! job of a geometry (benchmark × ET × pool) encodes the miter, every
+//! later same-geometry job clones the prototype instead of re-encoding.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
 use crate::circuit::generators::{Benchmark, PAPER_BENCHMARKS};
-use crate::search::SearchConfig;
+use crate::search::{MiterCache, SearchConfig};
 
-use super::jobs::{run_job, Job, Method, RunRecord};
+use super::jobs::{run_job, run_job_cached, Job, Method, RunRecord};
 
 /// A declarative sweep: which benchmarks, methods and ET values to run.
 #[derive(Debug, Clone)]
@@ -91,9 +95,12 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-/// Run the plan on a worker pool; records return in job order.
+/// Run the plan on a worker pool; records return in job order. All jobs
+/// share one miter-prototype cache, so each distinct geometry is encoded
+/// once per sweep.
 pub fn run_sweep(plan: &SweepPlan) -> Vec<RunRecord> {
-    run_sweep_with(plan, run_job)
+    let protos = MiterCache::new();
+    run_sweep_with(plan, |job| run_job_cached(job, &protos))
 }
 
 /// As [`run_sweep`] with a custom job runner (the seam the resilience

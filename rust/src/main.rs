@@ -15,6 +15,12 @@
 //! blocked models across cell workers; faster dedup, non-deterministic),
 //! --budget (SAT conflicts), --pjrt (use the AOT artifact for bulk
 //! evaluation), --artifacts DIR.
+//!
+//! `synth --dump-cnf DIR [--cell-a A --cell-b B]` skips the search and
+//! instead exports the cell's miter (base CNF + the cell's restriction
+//! assumptions as units) as DIMACS, for cross-checking against a
+//! reference SAT solver offline. Cell bounds default to the weakest
+//! (unrestricted) cell.
 
 use std::path::PathBuf;
 
@@ -28,9 +34,10 @@ use sxpat::coordinator::{run_job, run_sweep, Job, Method, SweepPlan};
 use sxpat::evaluator::rust_eval::evaluate_batch;
 use sxpat::report::{fig4_csv, fig5_csv, fig5_markdown, records_csv};
 use sxpat::runtime::{find_artifacts_dir, Runtime};
+use sxpat::sat::dimacs::to_dimacs;
 use sxpat::search::SearchConfig;
 use sxpat::synth::synthesize_area;
-use sxpat::template::SopParams;
+use sxpat::template::{NonsharedMiter, SharedMiter, SopParams};
 use sxpat::util::cli::Args;
 
 fn main() {
@@ -111,6 +118,9 @@ fn synth(args: &Args) -> Result<()> {
         "mecals" => Method::Mecals,
         m => bail!("unknown method {m}"),
     };
+    if let Some(dir) = args.get("dump-cnf") {
+        return dump_cnf(args, bench, method, et, &PathBuf::from(dir));
+    }
     let rec = run_job(&Job { bench, method, et, search: search_config(args)? });
     println!(
         "{} {} et={} -> area {:.3} µm², max_err {}, mean_err {:.3}, {} ms",
@@ -128,6 +138,61 @@ fn synth(args: &Args) -> Result<()> {
     let exact_area = synthesize_area(&bench.netlist());
     println!("exact area {:.3} µm² -> saving {:.1}%", exact_area,
              100.0 * (1.0 - rec.area / exact_area));
+    Ok(())
+}
+
+/// Export one lattice cell's miter instance as DIMACS CNF: the encoded
+/// base formula plus the cell's restriction assumptions appended as unit
+/// clauses, via the existing `sat::dimacs` writer. An external solver
+/// run on the file must agree with `miter.solve(a, b)` on SAT/UNSAT.
+fn dump_cnf(
+    args: &Args,
+    bench: &'static sxpat::circuit::Benchmark,
+    method: Method,
+    et: u64,
+    dir: &PathBuf,
+) -> Result<()> {
+    let nl = bench.netlist();
+    let exact = TruthTables::simulate(&nl).output_values(&nl);
+    let (n, m) = (nl.n_inputs(), nl.n_outputs());
+    let pool = args.get_usize_or("pool", 10)?;
+    let (clauses, n_vars, cell) = match method {
+        Method::Shared => {
+            let miter = SharedMiter::build(n, m, pool, &exact, et);
+            let a = args.get_usize_or("cell-a", pool)?;
+            let b = args.get_usize_or("cell-b", pool * m)?;
+            let mut cl = miter.b.solver.export_clauses();
+            cl.extend(miter.restrict(a, b).into_iter().map(|l| vec![l]));
+            (cl, miter.b.solver.n_vars(), (a, b))
+        }
+        Method::Xpat => {
+            let miter = NonsharedMiter::build(n, m, pool, &exact, et);
+            let a = args.get_usize_or("cell-a", n)?;
+            let b = args.get_usize_or("cell-b", pool)?;
+            let mut cl = miter.b.solver.export_clauses();
+            cl.extend(miter.restrict(a, b).into_iter().map(|l| vec![l]));
+            (cl, miter.b.solver.n_vars(), (a, b))
+        }
+        _ => bail!("--dump-cnf supports only the shared/xpat template methods"),
+    };
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!(
+        "{}_{}_et{}_cell{}x{}.cnf",
+        bench.name,
+        method.name().to_lowercase(),
+        et,
+        cell.0,
+        cell.1
+    ));
+    std::fs::write(&path, to_dimacs(n_vars, &clauses))?;
+    println!(
+        "wrote {} ({} vars, {} clauses, cell ({}, {}))",
+        path.display(),
+        n_vars,
+        clauses.len(),
+        cell.0,
+        cell.1
+    );
     Ok(())
 }
 

@@ -9,6 +9,7 @@ pub const IMG: usize = 8;
 pub const N_CLASSES: usize = 10;
 
 /// Prototype strokes per digit class, on an 8x8 grid ('#' = bright).
+#[rustfmt::skip]
 const GLYPHS: [[&str; 8]; 10] = [
     [" ####   ", "##  ##  ", "##  ##  ", "##  ##  ", "##  ##  ", "##  ##  ", " ####   ", "        "],
     ["  ##    ", " ###    ", "  ##    ", "  ##    ", "  ##    ", "  ##    ", " ####   ", "        "],

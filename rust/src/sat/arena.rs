@@ -1,0 +1,248 @@
+//! Flat clause storage: one contiguous `u32` arena for every clause.
+//!
+//! Replaces the former `Vec<Clause>` (a heap allocation per clause, an
+//! activity `f64` and two bools of padding each). Layout per clause,
+//! starting at its [`CRef`] word offset:
+//!
+//! ```text
+//!   word 0   header: len << 3 | RELOCED << 2 | DELETED << 1 | LEARNT
+//!   word 1   activity as f32 bits (learnt clauses; 0 otherwise)
+//!            — or the forwarding CRef while RELOCED during compaction
+//!   word 2.. the `len` literals, one `Lit` per word
+//! ```
+//!
+//! Why it matters here:
+//! * `propagate` walks literals that sit next to their header in one
+//!   cache line instead of chasing a `Vec` pointer per clause;
+//! * deleting a clause is a flag write, and [`ClauseArena`] tracks the
+//!   wasted words so the solver can *compact* — the old representation
+//!   tombstoned deleted learnts in `clauses` forever;
+//! * cloning the whole clause database is a single `memcpy` of `data`,
+//!   which is what makes build-once/clone-cheap miter prototypes viable
+//!   (`template::miter`).
+
+use super::solver::Lit;
+
+/// Word offset of a clause header inside the arena.
+pub type CRef = u32;
+
+/// Words of metadata preceding the literals of every clause.
+pub const HEADER_WORDS: usize = 2;
+
+const FLAG_LEARNT: u32 = 1;
+const FLAG_DELETED: u32 = 1 << 1;
+const FLAG_RELOCED: u32 = 1 << 2;
+const LEN_SHIFT: u32 = 3;
+
+#[derive(Debug, Clone, Default)]
+pub struct ClauseArena {
+    data: Vec<u32>,
+    /// Words occupied by deleted clauses, reclaimable by [`Self::compact`].
+    wasted: usize,
+}
+
+impl ClauseArena {
+    pub fn new() -> Self {
+        ClauseArena::default()
+    }
+
+    pub fn with_capacity(words: usize) -> Self {
+        ClauseArena { data: Vec::with_capacity(words), wasted: 0 }
+    }
+
+    /// Total words in use (live + deleted-but-not-yet-compacted).
+    pub fn len_words(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Words reclaimable by compaction.
+    pub fn wasted_words(&self) -> usize {
+        self.wasted
+    }
+
+    /// Append a clause; the literals stream straight into the arena with
+    /// no per-clause allocation.
+    pub fn alloc(&mut self, lits: &[Lit], learnt: bool) -> CRef {
+        debug_assert!(lits.len() >= 2, "unit/empty clauses are not stored");
+        let r = self.data.len() as CRef;
+        let header = ((lits.len() as u32) << LEN_SHIFT) | u32::from(learnt);
+        self.data.push(header);
+        self.data.push(0); // activity
+        self.data.extend(lits.iter().map(|l| l.0));
+        r
+    }
+
+    #[inline]
+    pub fn len(&self, r: CRef) -> usize {
+        (self.data[r as usize] >> LEN_SHIFT) as usize
+    }
+
+    #[inline]
+    pub fn is_learnt(&self, r: CRef) -> bool {
+        self.data[r as usize] & FLAG_LEARNT != 0
+    }
+
+    #[inline]
+    pub fn is_deleted(&self, r: CRef) -> bool {
+        self.data[r as usize] & FLAG_DELETED != 0
+    }
+
+    /// Flag a clause deleted and account its words as wasted. The clause
+    /// stays readable until [`Self::compact`] reclaims it.
+    pub fn delete(&mut self, r: CRef) {
+        debug_assert!(!self.is_deleted(r));
+        self.data[r as usize] |= FLAG_DELETED;
+        self.wasted += HEADER_WORDS + self.len(r);
+    }
+
+    #[inline]
+    pub fn lit(&self, r: CRef, k: usize) -> Lit {
+        debug_assert!(k < self.len(r));
+        Lit(self.data[r as usize + HEADER_WORDS + k])
+    }
+
+    #[inline]
+    pub fn swap_lits(&mut self, r: CRef, a: usize, b: usize) {
+        let base = r as usize + HEADER_WORDS;
+        self.data.swap(base + a, base + b);
+    }
+
+    #[inline]
+    pub fn activity(&self, r: CRef) -> f32 {
+        f32::from_bits(self.data[r as usize + 1])
+    }
+
+    #[inline]
+    pub fn set_activity(&mut self, r: CRef, a: f32) {
+        self.data[r as usize + 1] = a.to_bits();
+    }
+
+    /// Iterate the literals of a clause (borrow-friendly copy-out).
+    pub fn lits(&self, r: CRef) -> impl Iterator<Item = Lit> + '_ {
+        let base = r as usize + HEADER_WORDS;
+        self.data[base..base + self.len(r)].iter().map(|&w| Lit(w))
+    }
+
+    /// Walk every clause slot in allocation order, deleted ones included.
+    pub fn refs(&self) -> ArenaIter<'_> {
+        ArenaIter { arena: self, next: 0 }
+    }
+
+    /// Compact: rebuild the arena with the deleted clauses squeezed out,
+    /// preserving allocation order. The *old* arena is left holding a
+    /// forwarding table: [`Self::forward`] maps each live old [`CRef`] to
+    /// its new offset (deleted clauses map to `None`). Returns the
+    /// compacted arena and the number of words reclaimed; the caller
+    /// remaps its watchers / reasons / learnt list and swaps the arenas.
+    pub fn compact(&mut self) -> (ClauseArena, usize) {
+        let reclaimed = self.wasted;
+        let mut to = ClauseArena::with_capacity(self.data.len() - self.wasted);
+        let mut r = 0usize;
+        while r < self.data.len() {
+            let len = self.len(r as CRef);
+            if !self.is_deleted(r as CRef) {
+                let header = self.data[r];
+                let nr = to.data.len() as CRef;
+                to.data.push(header);
+                to.data.extend_from_slice(&self.data[r + 1..r + HEADER_WORDS + len]);
+                self.data[r] |= FLAG_RELOCED;
+                self.data[r + 1] = nr;
+            }
+            r += HEADER_WORDS + len;
+        }
+        (to, reclaimed)
+    }
+
+    /// New offset of a clause after [`Self::compact`] ran on this (old)
+    /// arena; `None` for deleted clauses.
+    #[inline]
+    pub fn forward(&self, r: CRef) -> Option<CRef> {
+        if self.data[r as usize] & FLAG_RELOCED != 0 {
+            Some(self.data[r as usize + 1])
+        } else {
+            None
+        }
+    }
+}
+
+pub struct ArenaIter<'a> {
+    arena: &'a ClauseArena,
+    next: usize,
+}
+
+impl Iterator for ArenaIter<'_> {
+    type Item = CRef;
+
+    fn next(&mut self) -> Option<CRef> {
+        if self.next >= self.arena.data.len() {
+            return None;
+        }
+        let r = self.next as CRef;
+        self.next += HEADER_WORDS + self.arena.len(r);
+        Some(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lits(vals: &[u32]) -> Vec<Lit> {
+        vals.iter().map(|&v| Lit(v)).collect()
+    }
+
+    #[test]
+    fn alloc_and_read_back() {
+        let mut a = ClauseArena::new();
+        let r1 = a.alloc(&lits(&[2, 5, 7]), false);
+        let r2 = a.alloc(&lits(&[4, 9]), true);
+        assert_eq!(a.len(r1), 3);
+        assert_eq!(a.len(r2), 2);
+        assert!(!a.is_learnt(r1));
+        assert!(a.is_learnt(r2));
+        assert_eq!(a.lits(r1).collect::<Vec<_>>(), lits(&[2, 5, 7]));
+        assert_eq!(a.lit(r2, 1), Lit(9));
+        assert_eq!(a.len_words(), 2 * HEADER_WORDS + 5);
+    }
+
+    #[test]
+    fn swap_and_activity() {
+        let mut a = ClauseArena::new();
+        let r = a.alloc(&lits(&[2, 5, 7]), true);
+        a.swap_lits(r, 0, 2);
+        assert_eq!(a.lits(r).collect::<Vec<_>>(), lits(&[7, 5, 2]));
+        a.set_activity(r, 3.5);
+        assert_eq!(a.activity(r), 3.5);
+    }
+
+    #[test]
+    fn delete_tracks_waste_and_compact_reclaims() {
+        let mut a = ClauseArena::new();
+        let r1 = a.alloc(&lits(&[2, 5, 7]), false);
+        let r2 = a.alloc(&lits(&[4, 9]), true);
+        let r3 = a.alloc(&lits(&[6, 11, 13, 15]), true);
+        a.delete(r2);
+        assert_eq!(a.wasted_words(), HEADER_WORDS + 2);
+        let before = a.len_words();
+        let (to, reclaimed) = a.compact();
+        assert_eq!(reclaimed, HEADER_WORDS + 2);
+        assert_eq!(to.len_words(), before - reclaimed);
+        assert_eq!(to.wasted_words(), 0);
+        // Forwarding: live clauses relocate in order, deleted ones drop.
+        let n1 = a.forward(r1).unwrap();
+        assert_eq!(a.forward(r2), None);
+        let n3 = a.forward(r3).unwrap();
+        assert_eq!(to.lits(n1).collect::<Vec<_>>(), lits(&[2, 5, 7]));
+        assert_eq!(to.lits(n3).collect::<Vec<_>>(), lits(&[6, 11, 13, 15]));
+        assert!(to.is_learnt(n3));
+        assert_eq!(to.refs().collect::<Vec<_>>(), vec![n1, n3]);
+    }
+
+    #[test]
+    fn refs_walks_allocation_order() {
+        let mut a = ClauseArena::new();
+        let r1 = a.alloc(&lits(&[0, 2]), false);
+        let r2 = a.alloc(&lits(&[4, 6, 8]), false);
+        assert_eq!(a.refs().collect::<Vec<_>>(), vec![r1, r2]);
+    }
+}

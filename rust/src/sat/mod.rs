@@ -2,12 +2,16 @@
 //! this reproduction (the paper's Z3 usage bit-blasts to propositional
 //! logic at these circuit sizes; see DESIGN.md §2).
 //!
-//! Features: two-watched-literal propagation, EVSIDS decision heuristic
-//! with an indexed heap, phase saving, Luby restarts, first-UIP conflict
-//! analysis with self-subsumption minimisation, activity-driven learnt
-//! clause DB reduction, incremental solving under assumptions with
-//! UNSAT-core extraction, and DIMACS I/O for differential testing.
+//! Features: flat-arena clause storage ([`arena`]) with compacting
+//! garbage collection, two-watched-literal propagation, EVSIDS decision
+//! heuristic with an indexed heap, phase saving, Luby restarts, first-UIP
+//! conflict analysis with self-subsumption minimisation, activity-driven
+//! learnt clause DB reduction, incremental solving under assumptions with
+//! UNSAT-core extraction, cheap whole-solver cloning (the substrate for
+//! `template::miter` prototypes), and DIMACS I/O for differential
+//! testing.
 
+pub mod arena;
 pub mod dimacs;
 pub mod heap;
 pub mod solver;

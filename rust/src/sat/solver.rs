@@ -1,5 +1,14 @@
 //! The CDCL solver core.
+//!
+//! Clause storage is a flat `u32` arena ([`super::arena::ClauseArena`]):
+//! watchers and reasons hold arena word offsets ([`CRef`]), `propagate`
+//! reads literals adjacent to their header instead of chasing a heap
+//! pointer per clause, `reduce_db` *compacts* the arena (deleted learnts
+//! are reclaimed, not tombstoned), and the whole solver is `Clone` — a
+//! handful of flat-buffer copies — which is what makes the build-once/
+//! clone-cheap miter prototypes of `template::miter` viable.
 
+use super::arena::{CRef, ClauseArena};
 use super::heap::VarHeap;
 
 /// Variable index (0-based).
@@ -69,21 +78,13 @@ pub enum SatResult {
     Unsat,
 }
 
-#[derive(Debug, Clone)]
-struct Clause {
-    lits: Vec<Lit>,
-    learnt: bool,
-    activity: f64,
-    deleted: bool,
-}
-
 #[derive(Debug, Clone, Copy)]
 struct Watcher {
-    clause: u32,
+    clause: CRef,
     blocker: Lit,
 }
 
-const REASON_NONE: u32 = u32::MAX;
+const REASON_NONE: CRef = u32::MAX;
 
 /// Solver statistics, exposed for the benches and EXPERIMENTS.md §Perf.
 #[derive(Debug, Default, Clone)]
@@ -94,15 +95,21 @@ pub struct Stats {
     pub restarts: u64,
     pub learnt_literals: u64,
     pub deleted_clauses: u64,
+    /// Arena compactions run by `reduce_db`.
+    pub gc_runs: u64,
+    /// `u32` words of clause storage reclaimed by compaction.
+    pub arena_reclaimed_words: u64,
 }
 
+#[derive(Clone)]
 pub struct Solver {
-    clauses: Vec<Clause>,
-    learnts: Vec<u32>,
+    arena: ClauseArena,
+    learnts: Vec<CRef>,
+    num_problem_clauses: usize,
     watches: Vec<Vec<Watcher>>, // indexed by Lit
     assign: Vec<Lbool>,         // indexed by Var
     level: Vec<u32>,
-    reason: Vec<u32>,
+    reason: Vec<CRef>,
     trail: Vec<Lit>,
     trail_lim: Vec<usize>,
     qhead: usize,
@@ -115,6 +122,11 @@ pub struct Solver {
     seen: Vec<bool>,
     conflict_core: Vec<Lit>,
     model: Vec<Lbool>,
+    /// Scratch for `add_clause` normalisation (no per-clause allocation).
+    add_tmp: Vec<Lit>,
+    /// Root-level unit clauses, kept for `export_clauses` (units are
+    /// enqueued directly and never reach the arena).
+    root_units: Vec<Lit>,
     pub stats: Stats,
     /// Abort knob: give up (returning Unsat-as-timeout is wrong, so we
     /// surface `None` from `solve_limited`) after this many conflicts.
@@ -130,8 +142,9 @@ impl Default for Solver {
 impl Solver {
     pub fn new() -> Self {
         Solver {
-            clauses: Vec::new(),
+            arena: ClauseArena::new(),
             learnts: Vec::new(),
+            num_problem_clauses: 0,
             watches: Vec::new(),
             assign: Vec::new(),
             level: Vec::new(),
@@ -148,6 +161,8 @@ impl Solver {
             seen: Vec::new(),
             conflict_core: Vec::new(),
             model: Vec::new(),
+            add_tmp: Vec::new(),
+            root_units: Vec::new(),
             stats: Stats::default(),
             conflict_budget: None,
         }
@@ -172,8 +187,21 @@ impl Solver {
         self.assign.len()
     }
 
+    /// Problem (non-learnt) clauses attached to the store. Root-level
+    /// units are not counted (they live on the trail, not in the arena).
     pub fn n_clauses(&self) -> usize {
-        self.clauses.iter().filter(|c| !c.deleted && !c.learnt).count()
+        self.num_problem_clauses
+    }
+
+    /// Total `u32` words of clause storage currently allocated.
+    pub fn arena_len_words(&self) -> usize {
+        self.arena.len_words()
+    }
+
+    /// Words flagged deleted but not yet reclaimed by compaction. Zero
+    /// right after every `reduce_db` — compaction is immediate.
+    pub fn arena_wasted_words(&self) -> usize {
+        self.arena.wasted_words()
     }
 
     #[inline]
@@ -198,54 +226,95 @@ impl Solver {
     }
 
     /// Add a clause; returns `false` if the formula became trivially UNSAT.
+    ///
+    /// Streams straight into the clause arena: normalisation happens in a
+    /// reused scratch buffer, so encoding a formula performs no per-clause
+    /// heap allocation.
     pub fn add_clause(&mut self, lits: &[Lit]) -> bool {
         debug_assert_eq!(self.decision_level(), 0);
         if !self.ok {
             return false;
         }
         // Normalise: sort, dedup, drop false lits, detect tautology.
-        let mut c: Vec<Lit> = lits.to_vec();
+        let mut c = std::mem::take(&mut self.add_tmp);
+        c.clear();
+        c.extend_from_slice(lits);
         c.sort_unstable();
         c.dedup();
-        let mut filtered = Vec::with_capacity(c.len());
-        for &l in &c {
-            if c.binary_search(&!l).is_ok() {
-                return true; // tautology
-            }
-            match self.value_lit(l) {
-                Lbool::True => return true, // already satisfied at level 0
-                Lbool::False => {}          // drop
-                Lbool::Undef => filtered.push(l),
-            }
-        }
-        match filtered.len() {
-            0 => {
-                self.ok = false;
-                false
-            }
-            1 => {
-                self.unchecked_enqueue(filtered[0], REASON_NONE);
-                self.ok = self.propagate().is_none();
-                self.ok
-            }
-            _ => {
-                self.attach_clause(filtered, false);
-                true
+        // Sorted by `2*var + sign`, so complementary literals are
+        // adjacent: a tautology is a same-var neighbour pair.
+        let tautology = c.windows(2).any(|w| w[0].var() == w[1].var());
+        let mut satisfied = false;
+        let mut w = 0usize;
+        if !tautology {
+            for i in 0..c.len() {
+                match self.value_lit(c[i]) {
+                    Lbool::True => {
+                        satisfied = true; // already true at level 0
+                        break;
+                    }
+                    Lbool::False => {} // drop
+                    Lbool::Undef => {
+                        c[w] = c[i];
+                        w += 1;
+                    }
+                }
             }
         }
+        let result = if tautology || satisfied {
+            true
+        } else {
+            match w {
+                0 => {
+                    self.ok = false;
+                    false
+                }
+                1 => {
+                    self.root_units.push(c[0]);
+                    self.unchecked_enqueue(c[0], REASON_NONE);
+                    self.ok = self.propagate().is_none();
+                    self.ok
+                }
+                _ => {
+                    c.truncate(w);
+                    self.attach_clause(&c, false);
+                    self.num_problem_clauses += 1;
+                    true
+                }
+            }
+        };
+        self.add_tmp = c;
+        result
     }
 
-    fn attach_clause(&mut self, lits: Vec<Lit>, learnt: bool) -> u32 {
-        let idx = self.clauses.len() as u32;
-        let w0 = Watcher { clause: idx, blocker: lits[1] };
-        let w1 = Watcher { clause: idx, blocker: lits[0] };
+    fn attach_clause(&mut self, lits: &[Lit], learnt: bool) -> CRef {
+        let r = self.arena.alloc(lits, learnt);
+        let w0 = Watcher { clause: r, blocker: lits[1] };
+        let w1 = Watcher { clause: r, blocker: lits[0] };
         self.watches[(!lits[0]).idx()].push(w0);
         self.watches[(!lits[1]).idx()].push(w1);
-        self.clauses.push(Clause { lits, learnt, activity: 0.0, deleted: false });
         if learnt {
-            self.learnts.push(idx);
+            self.learnts.push(r);
         }
-        idx
+        r
+    }
+
+    /// Problem CNF currently in the store: root-level units plus every
+    /// attached non-learnt clause (learnts are implied, so leaving them
+    /// out keeps the export equivalent to the original formula). Used by
+    /// the DIMACS dump path (`sat::dimacs`, `--dump-cnf`).
+    pub fn export_clauses(&self) -> Vec<Vec<Lit>> {
+        let mut out: Vec<Vec<Lit>> =
+            self.root_units.iter().map(|&l| vec![l]).collect();
+        for r in self.arena.refs() {
+            if !self.arena.is_learnt(r) && !self.arena.is_deleted(r) {
+                out.push(self.arena.lits(r).collect());
+            }
+        }
+        if !self.ok {
+            out.push(Vec::new());
+        }
+        out
     }
 
     #[inline]
@@ -253,7 +322,7 @@ impl Solver {
         self.trail_lim.len() as u32
     }
 
-    fn unchecked_enqueue(&mut self, l: Lit, reason: u32) {
+    fn unchecked_enqueue(&mut self, l: Lit, reason: CRef) {
         debug_assert_eq!(self.value_lit(l), Lbool::Undef);
         self.assign[l.var() as usize] =
             if l.is_neg() { Lbool::False } else { Lbool::True };
@@ -262,8 +331,8 @@ impl Solver {
         self.trail.push(l);
     }
 
-    /// Propagate; returns the index of a conflicting clause, if any.
-    fn propagate(&mut self) -> Option<u32> {
+    /// Propagate; returns the conflicting clause, if any.
+    fn propagate(&mut self) -> Option<CRef> {
         while self.qhead < self.trail.len() {
             let p = self.trail[self.qhead];
             self.qhead += 1;
@@ -282,34 +351,35 @@ impl Solver {
                     j += 1;
                     continue;
                 }
-                let ci = w.clause as usize;
-                if self.clauses[ci].deleted {
-                    continue; // drop the watcher
-                }
+                let cr = w.clause;
+                // Deleted clauses are compacted away inside `reduce_db`,
+                // so every watched clause is live here.
+                debug_assert!(!self.arena.is_deleted(cr));
                 // Make sure the false literal is at position 1.
                 let false_lit = !p;
-                if self.clauses[ci].lits[0] == false_lit {
-                    self.clauses[ci].lits.swap(0, 1);
+                if self.arena.lit(cr, 0) == false_lit {
+                    self.arena.swap_lits(cr, 0, 1);
                 }
-                debug_assert_eq!(self.clauses[ci].lits[1], false_lit);
-                let first = self.clauses[ci].lits[0];
+                debug_assert_eq!(self.arena.lit(cr, 1), false_lit);
+                let first = self.arena.lit(cr, 0);
                 if first != w.blocker && self.value_lit(first) == Lbool::True {
-                    ws[j] = Watcher { clause: w.clause, blocker: first };
+                    ws[j] = Watcher { clause: cr, blocker: first };
                     j += 1;
                     continue;
                 }
                 // Look for a new literal to watch.
-                for k in 2..self.clauses[ci].lits.len() {
-                    let lk = self.clauses[ci].lits[k];
+                let len = self.arena.len(cr);
+                for k in 2..len {
+                    let lk = self.arena.lit(cr, k);
                     if self.value_lit(lk) != Lbool::False {
-                        self.clauses[ci].lits.swap(1, k);
+                        self.arena.swap_lits(cr, 1, k);
                         self.watches[(!lk).idx()]
-                            .push(Watcher { clause: w.clause, blocker: first });
+                            .push(Watcher { clause: cr, blocker: first });
                         continue 'watchers;
                     }
                 }
                 // Unit or conflicting.
-                ws[j] = Watcher { clause: w.clause, blocker: first };
+                ws[j] = Watcher { clause: cr, blocker: first };
                 j += 1;
                 if self.value_lit(first) == Lbool::False {
                     // Conflict: copy remaining watchers back and stop.
@@ -318,9 +388,9 @@ impl Solver {
                         j += 1;
                         i += 1;
                     }
-                    conflict = Some(w.clause);
+                    conflict = Some(cr);
                 } else {
-                    self.unchecked_enqueue(first, w.clause);
+                    self.unchecked_enqueue(first, cr);
                 }
             }
             ws.truncate(j);
@@ -343,31 +413,32 @@ impl Solver {
         self.heap.decrease_key(v, &self.activity);
     }
 
-    fn bump_clause(&mut self, ci: usize) {
-        self.clauses[ci].activity += self.cla_inc;
-        if self.clauses[ci].activity > 1e20 {
-            for &li in &self.learnts {
-                self.clauses[li as usize].activity *= 1e-20;
+    fn bump_clause(&mut self, r: CRef) {
+        let a = self.arena.activity(r) + self.cla_inc as f32;
+        self.arena.set_activity(r, a);
+        if a > 1e20 {
+            for &lr in &self.learnts {
+                let scaled = self.arena.activity(lr) * 1e-20;
+                self.arena.set_activity(lr, scaled);
             }
             self.cla_inc *= 1e-20;
         }
     }
 
     /// First-UIP conflict analysis. Returns (learnt clause, backtrack level).
-    fn analyze(&mut self, mut confl: u32) -> (Vec<Lit>, u32) {
+    fn analyze(&mut self, mut confl: CRef) -> (Vec<Lit>, u32) {
         let mut learnt: Vec<Lit> = vec![Lit(0)]; // slot for the asserting lit
         let mut counter = 0u32;
         let mut p: Option<Lit> = None;
         let mut index = self.trail.len();
 
         loop {
-            let ci = confl as usize;
-            if self.clauses[ci].learnt {
-                self.bump_clause(ci);
+            if self.arena.is_learnt(confl) {
+                self.bump_clause(confl);
             }
             let start = if p.is_some() { 1 } else { 0 };
-            for k in start..self.clauses[ci].lits.len() {
-                let q = self.clauses[ci].lits[k];
+            for k in start..self.arena.len(confl) {
+                let q = self.arena.lit(confl, k);
                 let v = q.var() as usize;
                 if !self.seen[v] && self.level[v] > 0 {
                     self.seen[v] = true;
@@ -413,8 +484,7 @@ impl Solver {
                 if r == REASON_NONE {
                     return true;
                 }
-                let rc = &self.clauses[r as usize];
-                rc.lits.iter().any(|&q| {
+                self.arena.lits(r).any(|q| {
                     q.var() != l.var()
                         && !self.seen[q.var() as usize]
                         && self.level[q.var() as usize] > 0
@@ -472,42 +542,65 @@ impl Solver {
     }
 
     fn reduce_db(&mut self) {
-        let mut order: Vec<u32> = self
-            .learnts
-            .iter()
-            .copied()
-            .filter(|&ci| !self.clauses[ci as usize].deleted)
-            .collect();
+        let mut order: Vec<CRef> = self.learnts.clone();
+        // `total_cmp`, not `partial_cmp(..).unwrap()`: activities are
+        // floats and the sort must never panic — a NaN/inf-poisoned
+        // activity gets a defined position in the order instead of
+        // aborting the whole solve.
         order.sort_by(|&a, &b| {
-            self.clauses[a as usize]
-                .activity
-                .partial_cmp(&self.clauses[b as usize].activity)
-                .unwrap()
+            self.arena.activity(a).total_cmp(&self.arena.activity(b))
         });
         let target = order.len() / 2;
         let mut removed = 0usize;
-        for &ci in order.iter() {
+        for &r in order.iter() {
             if removed >= target {
                 break;
             }
-            let c = &self.clauses[ci as usize];
-            if c.lits.len() <= 2 {
+            if self.arena.len(r) <= 2 {
                 continue; // keep short clauses
             }
             // Never delete a clause that is currently a reason.
-            let is_reason = c
-                .lits
-                .first()
-                .map(|l| self.reason[l.var() as usize] == ci)
-                .unwrap_or(false);
-            if is_reason {
+            if self.reason[self.arena.lit(r, 0).var() as usize] == r {
                 continue;
             }
-            self.clauses[ci as usize].deleted = true;
+            self.arena.delete(r);
             removed += 1;
         }
         self.stats.deleted_clauses += removed as u64;
-        self.learnts.retain(|&ci| !self.clauses[ci as usize].deleted);
+        let arena = &self.arena;
+        self.learnts.retain(|&r| !arena.is_deleted(r));
+        self.garbage_collect();
+    }
+
+    /// Compact the arena, squeezing out the clauses `reduce_db` deleted,
+    /// and remap every watcher / reason / learnt reference. Deleted
+    /// learnts are actually reclaimed (the pre-arena representation
+    /// tombstoned them in the clause list forever).
+    fn garbage_collect(&mut self) {
+        if self.arena.wasted_words() == 0 {
+            return;
+        }
+        let (compacted, reclaimed) = self.arena.compact();
+        let old = std::mem::replace(&mut self.arena, compacted);
+        for ws in self.watches.iter_mut() {
+            ws.retain_mut(|w| match old.forward(w.clause) {
+                Some(nr) => {
+                    w.clause = nr;
+                    true
+                }
+                None => false, // watcher of a deleted clause
+            });
+        }
+        for r in self.reason.iter_mut() {
+            if *r != REASON_NONE {
+                *r = old.forward(*r).expect("reason clauses survive reduce_db");
+            }
+        }
+        for r in self.learnts.iter_mut() {
+            *r = old.forward(*r).expect("learnt list was pruned before GC");
+        }
+        self.stats.gc_runs += 1;
+        self.stats.arena_reclaimed_words += reclaimed as u64;
     }
 
     /// Solve under assumptions. `Some(Sat)`/`Some(Unsat)`, or `None` when
@@ -548,10 +641,10 @@ impl Solver {
                     debug_assert_eq!(self.value_lit(learnt[0]), Lbool::Undef);
                     self.unchecked_enqueue(learnt[0], REASON_NONE);
                 } else {
-                    let ci = self.attach_clause(learnt, true);
-                    let first = self.clauses[ci as usize].lits[0];
+                    let r = self.attach_clause(&learnt, true);
+                    let first = self.arena.lit(r, 0);
                     debug_assert_eq!(self.value_lit(first), Lbool::Undef);
-                    self.unchecked_enqueue(first, ci);
+                    self.unchecked_enqueue(first, r);
                 }
                 self.var_inc /= 0.95;
                 self.cla_inc /= 0.999;
@@ -615,10 +708,10 @@ impl Solver {
 
     /// Walk reasons from a conflicting clause restricted to assumption
     /// levels, collecting the failed assumptions (the UNSAT core).
-    fn analyze_final_conflict(&mut self, confl: u32, assumptions: &[Lit]) {
+    fn analyze_final_conflict(&mut self, confl: CRef, assumptions: &[Lit]) {
         self.conflict_core.clear();
         let mut seen = vec![false; self.n_vars()];
-        let mut stack: Vec<Lit> = self.clauses[confl as usize].lits.clone();
+        let mut stack: Vec<Lit> = self.arena.lits(confl).collect();
         while let Some(l) = stack.pop() {
             let v = l.var() as usize;
             if seen[v] || self.level[v] == 0 {
@@ -632,7 +725,7 @@ impl Solver {
                     self.conflict_core.push(!l);
                 }
             } else {
-                stack.extend(self.clauses[r as usize].lits.iter().copied());
+                stack.extend(self.arena.lits(r));
             }
         }
         self.backtrack_to(0);
@@ -655,7 +748,7 @@ impl Solver {
                     self.conflict_core.push(if assumptions.contains(&l) { l } else { !l });
                 }
             } else {
-                stack.extend(self.clauses[r as usize].lits.iter().copied());
+                stack.extend(self.arena.lits(r));
             }
         }
         self.backtrack_to(0);
@@ -694,6 +787,7 @@ fn luby(i: u64) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sat::arena::HEADER_WORDS;
 
     fn lit(v: Var, pos: bool) -> Lit {
         Lit::new(v, pos)
@@ -869,5 +963,136 @@ mod tests {
         if let Some(res) = r {
             assert_eq!(res, SatResult::Unsat);
         }
+    }
+
+    // ---- arena / clone / reduce_db behaviour ----
+
+    /// Attach `count` synthetic learnt clauses with strictly increasing
+    /// activities, returning their refs (test scaffolding for reduce_db).
+    fn with_synthetic_learnts(count: usize) -> (Solver, Vec<CRef>) {
+        let mut s = Solver::new();
+        let vars: Vec<Var> = (0..20).map(|_| s.new_var()).collect();
+        s.add_clause(&[Lit::pos(vars[0]), Lit::pos(vars[1])]);
+        let mut refs = Vec::new();
+        for i in 0..count {
+            let cl = [
+                Lit::pos(vars[2 + (i % 6)]),
+                Lit::neg(vars[8 + (i % 6)]),
+                Lit::pos(vars[14 + (i % 6)]),
+            ];
+            let r = s.attach_clause(&cl, true);
+            s.arena.set_activity(r, i as f32);
+            refs.push(r);
+        }
+        (s, refs)
+    }
+
+    #[test]
+    fn reduce_db_compacts_arena_and_reclaims_memory() {
+        let (mut s, _) = with_synthetic_learnts(100);
+        let words_before = s.arena_len_words();
+        s.reduce_db();
+        // Half the learnts (the low-activity ones) are gone — physically,
+        // not as tombstones.
+        assert_eq!(s.stats.deleted_clauses, 50);
+        assert_eq!(s.learnts.len(), 50);
+        assert_eq!(s.stats.gc_runs, 1);
+        let clause_words = HEADER_WORDS + 3;
+        assert_eq!(s.stats.arena_reclaimed_words, (50 * clause_words) as u64);
+        assert_eq!(s.arena_len_words(), words_before - 50 * clause_words);
+        assert_eq!(s.arena_wasted_words(), 0, "compaction must be immediate");
+        // Survivors are the high-activity half and the solver still works.
+        for &r in &s.learnts {
+            assert!(s.arena.activity(r) >= 50.0);
+        }
+        assert_eq!(s.solve(&[]), SatResult::Sat);
+    }
+
+    #[test]
+    fn reduce_db_survives_non_finite_activities() {
+        // The activity sort must not panic on NaN/inf (the pre-arena code
+        // used partial_cmp().unwrap()); total_cmp gives non-finite values
+        // a defined order and the solver stays sound.
+        let (mut s, refs) = with_synthetic_learnts(40);
+        s.arena.set_activity(refs[35], f32::NAN);
+        s.arena.set_activity(refs[36], f32::INFINITY);
+        s.arena.set_activity(refs[37], f32::NEG_INFINITY);
+        s.reduce_db();
+        assert_eq!(s.stats.deleted_clauses, 20);
+        assert_eq!(s.solve(&[]), SatResult::Sat);
+    }
+
+    #[test]
+    fn activity_rescale_keeps_values_finite_under_heavy_search() {
+        let mut s = php(8, 7);
+        s.conflict_budget = Some(20_000);
+        let _ = s.solve_limited(&[]);
+        assert!(s.stats.conflicts > 1_000, "want a real conflict workout");
+        assert!(s.var_inc.is_finite() && s.cla_inc.is_finite());
+        assert!(s.activity.iter().all(|a| a.is_finite()));
+        for &r in &s.learnts {
+            assert!(s.arena.activity(r).is_finite());
+        }
+    }
+
+    #[test]
+    fn cloned_solver_replays_identically() {
+        // Clone = snapshot: the copy must produce the same answer with
+        // the same search trace (prototype-miter cloning relies on this).
+        let orig = php(6, 5);
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        assert_eq!(a.solve(&[]), SatResult::Unsat);
+        assert_eq!(b.solve(&[]), SatResult::Unsat);
+        assert_eq!(a.stats.conflicts, b.stats.conflicts);
+        assert_eq!(a.stats.decisions, b.stats.decisions);
+        assert_eq!(a.stats.propagations, b.stats.propagations);
+    }
+
+    #[test]
+    fn clone_after_solving_preserves_learnt_state() {
+        let mut s = php(6, 5);
+        assert_eq!(s.solve(&[]), SatResult::Unsat);
+        let c = s.clone();
+        assert_eq!(c.learnts.len(), s.learnts.len());
+        assert_eq!(c.arena_len_words(), s.arena_len_words());
+        assert_eq!(c.stats.conflicts, s.stats.conflicts);
+    }
+
+    #[test]
+    fn export_clauses_round_trips_the_problem() {
+        let mut s = Solver::new();
+        let a = s.new_var();
+        let b = s.new_var();
+        let c = s.new_var();
+        s.add_clause(&[lit(a, true)]); // root unit
+        s.add_clause(&[lit(a, false), lit(b, true), lit(c, true)]);
+        s.add_clause(&[lit(b, false), lit(c, false)]);
+        let exported = s.export_clauses();
+        assert_eq!(exported.len(), 3);
+        assert!(exported.contains(&vec![lit(a, true)]));
+        // A fresh solver over the export agrees on every assumption probe.
+        let mut t = Solver::new();
+        for _ in 0..3 {
+            t.new_var();
+        }
+        for cl in &exported {
+            t.add_clause(cl);
+        }
+        for probe in [vec![], vec![lit(b, true)], vec![lit(c, true)], vec![lit(b, false)]] {
+            assert_eq!(s.solve(&probe), t.solve(&probe), "probe {probe:?}");
+        }
+    }
+
+    #[test]
+    fn export_excludes_learnts() {
+        let mut s = php(6, 5);
+        let before = s.export_clauses().len();
+        assert_eq!(s.solve(&[]), SatResult::Unsat);
+        assert!(s.stats.conflicts > 0, "UNSAT proof must have learnt something");
+        // Solving learns clauses; the export surface must not grow (the
+        // refutation adds only the empty-clause marker once `ok` drops).
+        let after = s.export_clauses().iter().filter(|c| !c.is_empty()).count();
+        assert_eq!(after, before);
     }
 }

@@ -15,20 +15,26 @@
 //!
 //! * **Cumulative** (`cell_workers == 1`): the probe miter is reused for
 //!   the whole scan and every found model is blocked into it — the
-//!   historical sequential algorithm (bit-for-bit for SHARED; the XPAT
-//!   path additionally gained first-model proxy minimisation, which the
-//!   old `search_xpat` lacked).
-//! * **Canonical** (`cell_workers > 1`): every cell is solved on a fresh
-//!   miter with exactly the probe model blocked, so a cell's result is a
-//!   pure function of the cell — independent of scheduling, worker count
-//!   and which cells ran before it. Workers race ahead speculatively;
-//!   a deterministic in-order commit pass then replays the sequential
-//!   stopping rules (max SAT cells, perfect-area early exit) over the
-//!   per-cell results and discards any speculative overshoot, so the
-//!   outcome is identical across runs and thread counts — provided the
-//!   wall-clock budget does not bind (a deadline that fires mid-scan
-//!   truncates the claimed prefix at a load-dependent point, exactly as
-//!   it truncates the sequential scan).
+//!   historical sequential algorithm (the XPAT path additionally gained
+//!   first-model proxy minimisation, which the old `search_xpat`
+//!   lacked). Deterministic across runs; exact traces can differ from
+//!   pre-arena builds (clause activities are f32 now), but results are
+//!   reproducible within any build.
+//! * **Canonical** (`cell_workers > 1`): every cell is solved on a
+//!   *clone of the search's prototype miter* — the base CNF is encoded
+//!   exactly once per geometry (with the probe model blocked), and each
+//!   cell gets a byte-identical snapshot, so a cell's result is a pure
+//!   function of the cell — independent of scheduling, worker count and
+//!   which cells ran before it. Cloning a flat-arena solver costs buffer
+//!   copies instead of the full products/outputs/distance/gate-proxy
+//!   re-encode the former fresh-build-per-cell scan paid. Workers race
+//!   ahead speculatively; a deterministic in-order commit pass then
+//!   replays the sequential stopping rules (max SAT cells, perfect-area
+//!   early exit) over the per-cell results and discards any speculative
+//!   overshoot, so the outcome is identical across runs and thread
+//!   counts — provided the wall-clock budget does not bind (a deadline
+//!   that fires mid-scan truncates the claimed prefix at a load-
+//!   dependent point, exactly as it truncates the sequential scan).
 //!
 //! Cross-worker model exchange (`share_blocked_models`) additionally
 //! blocks every model already found anywhere into each fresh miter. That
@@ -54,7 +60,15 @@ use super::runner::{SearchConfig, SearchOutcome, Solution};
 /// template, (LPP, PPO) for the nonshared XPAT template. New template
 /// families plug into the whole search/coordinator stack by implementing
 /// this trait.
-pub trait Template: Sized {
+///
+/// `Clone` is load-bearing: `build` runs once per search (or once per
+/// geometry, when the coordinator shares prototypes across jobs) and the
+/// canonical parallel scan clones the encoded prototype per lattice
+/// cell. A clone must be a snapshot — byte-identical solver state, so
+/// solving a clone replays exactly what a fresh build would do.
+/// (`Sync` because canonical-mode workers clone the shared prototype
+/// from inside scoped threads.)
+pub trait Template: Sized + Clone + Sync {
     /// Method name for diagnostics.
     const NAME: &'static str;
 
@@ -206,9 +220,7 @@ struct ScanState {
 }
 
 /// Read-only context shared by all scan workers.
-struct ScanCtx<'a> {
-    n: usize,
-    m: usize,
+struct ScanCtx<'a, T: Template> {
     et: u64,
     exact: &'a [u64],
     name: &'a str,
@@ -216,8 +228,11 @@ struct ScanCtx<'a> {
     cells: &'a [Cell],
     deadline: Instant,
     state: &'a ScanState,
-    /// The probe model, blocked into every fresh canonical-mode miter.
-    probe: Option<&'a SopParams>,
+    /// The encoded-once prototype (probe model already blocked, conflict
+    /// budget already set) that canonical-mode workers clone per cell.
+    /// `None` in cumulative mode, where the prototype itself is the
+    /// persistent scan miter and cannot be shared immutably.
+    proto: Option<&'a T>,
     /// Cross-worker model exchange (only with `share_blocked_models`).
     journal: Option<&'a Mutex<Vec<SopParams>>>,
 }
@@ -239,7 +254,7 @@ fn finish<T: Template>(
 /// Enumerate up to `solutions_per_cell` models of one cell. The first
 /// model is proxy-minimised (drives to the cell's low-area corner);
 /// further models are plain enumeration for the Fig. 4 scatter.
-fn scan_cell<T: Template>(miter: &mut T, cell: &Cell, ctx: &ScanCtx<'_>) -> CellStatus {
+fn scan_cell<T: Template>(miter: &mut T, cell: &Cell, ctx: &ScanCtx<'_, T>) -> CellStatus {
     let mut sols: Vec<Solution> = Vec::new();
     for sol_idx in 0..ctx.cfg.solutions_per_cell {
         let solved = if sol_idx == 0 {
@@ -271,10 +286,10 @@ fn scan_cell<T: Template>(miter: &mut T, cell: &Cell, ctx: &ScanCtx<'_>) -> Cell
 
 /// One scan worker: claim cells in lattice order until a stop condition
 /// fires. `persistent` is the cumulative-mode miter; canonical mode
-/// (`None`) builds a fresh miter per cell instead.
+/// (`None`) clones the prototype per cell instead.
 fn scan_worker<T: Template>(
     mut persistent: Option<&mut T>,
-    ctx: &ScanCtx<'_>,
+    ctx: &ScanCtx<'_, T>,
     tx: &mpsc::Sender<(usize, CellStatus)>,
 ) {
     loop {
@@ -292,12 +307,13 @@ fn scan_worker<T: Template>(
         let status = match persistent.as_deref_mut() {
             Some(miter) => scan_cell(miter, cell, ctx),
             None => {
-                let mut miter =
-                    T::build(ctx.n, ctx.m, ctx.cfg.pool, ctx.exact, ctx.et);
-                miter.set_conflict_budget(ctx.cfg.conflict_budget);
-                if let Some(p) = ctx.probe {
-                    miter.block(p);
-                }
+                // Canonical mode: snapshot the prototype — the base CNF,
+                // probe block and conflict budget come along for the
+                // price of a few flat-buffer copies, no re-encoding.
+                let mut miter = ctx
+                    .proto
+                    .expect("canonical scan carries a prototype")
+                    .clone();
                 if let Some(j) = ctx.journal {
                     // Snapshot under the lock, encode outside it — the
                     // block() encodes would otherwise serialize workers.
@@ -328,6 +344,23 @@ fn scan_worker<T: Template>(
 
 /// Run the full lattice search for one template family.
 pub fn run_search<T: Template>(nl: &Netlist, et: u64, cfg: &SearchConfig) -> SearchOutcome {
+    run_search_from(nl, et, cfg, None)
+}
+
+/// As [`run_search`], optionally starting from a pre-encoded *pristine*
+/// prototype (never solved, nothing blocked) for the same geometry —
+/// the seam `search::runner::MiterCache` uses to share one encode across
+/// same-geometry jobs of a sweep. The prototype MUST have been built
+/// with this `(nl, et, cfg.pool)` triple; a `None` builds it here. Only
+/// one `T::build` runs per search either way: cumulative mode probes and
+/// scans on the prototype itself, canonical mode probes on a throwaway
+/// clone and clones the pristine prototype once per cell.
+pub fn run_search_from<T: Template>(
+    nl: &Netlist,
+    et: u64,
+    cfg: &SearchConfig,
+    prototype: Option<T>,
+) -> SearchOutcome {
     let (n, m) = (nl.n_inputs(), nl.n_outputs());
     let exact = TruthTables::simulate(nl).output_values(nl);
     let start = Instant::now();
@@ -342,21 +375,44 @@ pub fn run_search<T: Template>(nl: &Netlist, et: u64, cfg: &SearchConfig) -> Sea
         elapsed_ms: 0,
     };
 
+    // The prototype: the single `T::build` of this search. In cumulative
+    // mode it doubles as the probe-and-scan miter (no snapshot, one miter
+    // alive — only canonical-mode cells clone); in canonical mode the
+    // probe runs on a throwaway clone so the prototype stays pristine for
+    // the per-cell clones.
+    let canonical = cfg.cell_workers > 1;
+    let mut proto =
+        prototype.unwrap_or_else(|| T::build(n, m, cfg.pool, &exact, et));
+    proto.set_conflict_budget(cfg.conflict_budget);
+    let mut probe_clone: Option<T> = if canonical { Some(proto.clone()) } else { None };
+
     // Weakest-cell probe: solve the unrestricted template first. It
     // yields (a) an immediate finite upper bound (no `inf` rows when the
     // strong cells are all hard-UNSAT, as on the bigger multipliers) and
     // (b) with proxy minimisation, achieved values that tell the lattice
     // scan which strictly-stronger cells are worth trying.
-    let mut probe_miter = T::build(n, m, cfg.pool, &exact, et);
-    probe_miter.set_conflict_budget(cfg.conflict_budget);
     let weakest = T::weakest_cell(n, m, cfg.pool);
     let mut achieved = f64::INFINITY;
-    let mut probe_params: Option<SopParams> = None;
     out.cells_tried += 1;
-    match probe_miter.solve_minimized_deadline(weakest.a, weakest.b, Some(deadline)) {
+    let probe_outcome = {
+        let probe_target: &mut T = match probe_clone.as_mut() {
+            Some(pm) => pm,
+            None => &mut proto,
+        };
+        let outcome =
+            probe_target.solve_minimized_deadline(weakest.a, weakest.b, Some(deadline));
+        if let SolveOutcome::Sat(params) = &outcome {
+            probe_target.block(params);
+        }
+        outcome
+    };
+    match probe_outcome {
         SolveOutcome::Sat(params) => {
-            probe_miter.block(&params);
-            probe_params = Some(params.clone());
+            if canonical {
+                // Bake the probe block into the prototype too, so the
+                // per-cell clones inherit it for free.
+                proto.block(&params);
+            }
             let sol = finish::<T>(params, &weakest, &exact, &nl.name);
             achieved = T::achieved_estimate(sol.proxy, m);
             out.solutions.push(sol);
@@ -365,6 +421,14 @@ pub fn run_search<T: Template>(nl: &Netlist, et: u64, cfg: &SearchConfig) -> Sea
         SolveOutcome::Unsat => out.cells_unsat += 1,
         SolveOutcome::Budget => out.cells_timeout += 1,
     }
+    // The canonical-mode probe clone has served its purpose.
+    drop(probe_clone);
+    // Exactly one of these owns the miter from here on: the cumulative
+    // scan mutates it in place, the canonical scan shares it read-only
+    // so workers can clone it per cell. (Two variables, so the borrow
+    // checker can see the mutable and shared paths never coexist.)
+    let (mut cumulative_miter, shared_proto): (Option<T>, Option<T>) =
+        if canonical { (None, Some(proto)) } else { (Some(proto), None) };
 
     // Cells that could still beat the probe's achieved proxies, in
     // ascending estimated-area order.
@@ -373,7 +437,6 @@ pub fn run_search<T: Template>(nl: &Netlist, et: u64, cfg: &SearchConfig) -> Sea
         .filter(|c| c.estimate < achieved)
         .collect();
 
-    let canonical = cfg.cell_workers > 1;
     let state = ScanState {
         next: AtomicUsize::new(0),
         sat_cells: AtomicUsize::new(out.cells_sat),
@@ -386,8 +449,6 @@ pub fn run_search<T: Template>(nl: &Netlist, et: u64, cfg: &SearchConfig) -> Sea
             None
         };
     let ctx = ScanCtx {
-        n,
-        m,
         et,
         exact: &exact,
         name: &nl.name,
@@ -395,14 +456,14 @@ pub fn run_search<T: Template>(nl: &Netlist, et: u64, cfg: &SearchConfig) -> Sea
         cells: &cells,
         deadline,
         state: &state,
-        probe: probe_params.as_ref(),
+        proto: shared_proto.as_ref(),
         journal: journal.as_ref(),
     };
 
     let (tx, rx) = mpsc::channel::<(usize, CellStatus)>();
     if !cells.is_empty() {
         if !canonical {
-            scan_worker(Some(&mut probe_miter), &ctx, &tx);
+            scan_worker(cumulative_miter.as_mut(), &ctx, &tx);
         } else {
             let threads = cfg.cell_workers.min(cells.len());
             let ctx_ref = &ctx;
@@ -505,6 +566,7 @@ mod tests {
     /// coordinate: 99 (the probe) and 2 are SAT, 1 exhausts the budget,
     /// everything else is UNSAT. Models invert the single input, so they
     /// are sound for the NOT-gate netlist below at ET = 0.
+    #[derive(Clone)]
     struct MockTemplate {
         pool: usize,
     }

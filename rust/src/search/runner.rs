@@ -2,11 +2,22 @@
 //! methods as thin instantiations of the generic lattice engine
 //! ([`super::engine::run_search`]) — SHARED and XPAT differ only in the
 //! [`Template`](super::engine::Template) implementation they plug in.
+//!
+//! [`MiterCache`] is the build-once/clone-cheap store for miter
+//! *prototypes*: a sweep running several jobs over the same geometry
+//! (benchmark × ET × pool) encodes the base CNF once and hands every job
+//! a clone. Prototypes are pristine (never solved), so a cache hit is
+//! byte-identical to a fresh build and results cannot depend on whether
+//! the cache was warm.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::circuit::sim::TruthTables;
 use crate::circuit::Netlist;
 use crate::template::{NonsharedMiter, SharedMiter, SopParams};
 
-use super::engine::run_search;
+use super::engine::{run_search, run_search_from};
 
 #[derive(Debug, Clone)]
 pub struct SearchConfig {
@@ -96,6 +107,92 @@ pub fn search_xpat(nl: &Netlist, et: u64, cfg: &SearchConfig) -> SearchOutcome {
     run_search::<NonsharedMiter>(nl, et, cfg)
 }
 
+/// Geometry key: everything the base miter CNF depends on — input and
+/// output counts, pool, ET and the exhaustive truth table itself, so two
+/// different functions can never alias a prototype (netlist names are
+/// caller-supplied and not trustworthy as identity).
+type GeometryKey = (usize, usize, usize, u64, Vec<u64>);
+
+/// Cross-job store of pristine miter prototypes, keyed by geometry.
+///
+/// `coordinator::sweep` keeps one cache per sweep: the first job of a
+/// geometry pays the encode, every later same-geometry job clones it.
+/// Because a prototype is never solved and never blocked, a clone from
+/// the cache is byte-identical to a fresh `build` — cache warmth cannot
+/// change any result, only the time to first solve.
+#[derive(Default)]
+pub struct MiterCache {
+    shared: Mutex<HashMap<GeometryKey, Arc<SharedMiter>>>,
+    xpat: Mutex<HashMap<GeometryKey, Arc<NonsharedMiter>>>,
+}
+
+impl MiterCache {
+    pub fn new() -> Self {
+        MiterCache::default()
+    }
+
+    /// Number of distinct geometries encoded so far (both templates).
+    pub fn len(&self) -> usize {
+        self.shared.lock().unwrap().len() + self.xpat.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn geometry_key(nl: &Netlist, et: u64, cfg: &SearchConfig) -> GeometryKey {
+        let exact = TruthTables::simulate(nl).output_values(nl);
+        (nl.n_inputs(), nl.n_outputs(), cfg.pool, et, exact)
+    }
+
+    /// Shared cache protocol. Only an `Arc` handle is touched under the
+    /// lock: a cold build can be expensive (2^n expansion) and even the
+    /// deep per-job clone is a multi-buffer copy, so both happen outside
+    /// it — workers on other geometries never stall. Two workers racing
+    /// on the same cold key both build byte-identical prototypes (the
+    /// encode is deterministic), so whichever insert wins is
+    /// indistinguishable.
+    fn proto_from<T: Clone>(
+        map: &Mutex<HashMap<GeometryKey, Arc<T>>>,
+        key: GeometryKey,
+        build: impl FnOnce(usize, usize, usize, &[u64], u64) -> T,
+    ) -> T {
+        let cached = map.lock().unwrap().get(&key).cloned();
+        let handle = match cached {
+            Some(p) => p,
+            None => {
+                let built = Arc::new(build(key.0, key.1, key.2, &key.4, key.3));
+                map.lock().unwrap().entry(key).or_insert(built).clone()
+            }
+        };
+        (*handle).clone()
+    }
+
+    /// As [`search_shared`], sourcing the prototype from this cache.
+    pub fn search_shared(
+        &self,
+        nl: &Netlist,
+        et: u64,
+        cfg: &SearchConfig,
+    ) -> SearchOutcome {
+        let key = Self::geometry_key(nl, et, cfg);
+        let proto = Self::proto_from(&self.shared, key, SharedMiter::build);
+        run_search_from::<SharedMiter>(nl, et, cfg, Some(proto))
+    }
+
+    /// As [`search_xpat`], sourcing the prototype from this cache.
+    pub fn search_xpat(
+        &self,
+        nl: &Netlist,
+        et: u64,
+        cfg: &SearchConfig,
+    ) -> SearchOutcome {
+        let key = Self::geometry_key(nl, et, cfg);
+        let proto = Self::proto_from(&self.xpat, key, NonsharedMiter::build);
+        run_search_from::<NonsharedMiter>(nl, et, cfg, Some(proto))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,6 +279,37 @@ mod tests {
             assert!(s.proxy.0 <= s.cell.0, "pit {} > cell {}", s.proxy.0, s.cell.0);
             assert!(s.proxy.1 <= s.cell.1);
             assert!(s.max_err <= 1);
+        }
+    }
+
+    #[test]
+    fn cached_prototype_search_matches_direct_search() {
+        // A MiterCache hit must be invisible in the results: same full
+        // outcome as the uncached path, for both templates and in both
+        // scan modes, on repeated same-geometry runs.
+        let nl = adder(2);
+        let key = |o: &SearchOutcome| -> (usize, usize, Vec<((usize, usize), f64)>) {
+            (
+                o.cells_tried,
+                o.cells_sat,
+                o.solutions.iter().map(|s| (s.cell, s.area)).collect(),
+            )
+        };
+        for workers in [1usize, 4] {
+            let mut cfg = quick_cfg();
+            cfg.cell_workers = workers;
+            cfg.conflict_budget = None;
+            let cache = MiterCache::new();
+            let direct_sh = search_shared(&nl, 2, &cfg);
+            let direct_xp = search_xpat(&nl, 2, &cfg);
+            // Twice through the cache: cold (build) then warm (clone).
+            for round in 0..2 {
+                let sh = cache.search_shared(&nl, 2, &cfg);
+                let xp = cache.search_xpat(&nl, 2, &cfg);
+                assert_eq!(key(&sh), key(&direct_sh), "shared w={workers} r={round}");
+                assert_eq!(key(&xp), key(&direct_xp), "xpat w={workers} r={round}");
+            }
+            assert_eq!(cache.len(), 2, "one prototype per (template, geometry)");
         }
     }
 

@@ -74,7 +74,10 @@ pub fn at_most_k(b: &mut CnfBuilder, xs: &[Lit], k: usize) {
 
 /// Build count outputs once and return the *assumption literal* that
 /// enforces `sum(xs) <= k` when assumed. Used for progressive weakening
-/// without re-encoding the formula.
+/// without re-encoding the formula. `Clone` so an encoded miter can be
+/// cloned wholesale (the outputs are plain literals into the cloned
+/// solver).
+#[derive(Clone)]
 pub struct BoundedCounter {
     outs: Vec<Lit>,
     n_inputs: usize,

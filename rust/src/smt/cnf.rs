@@ -3,10 +3,20 @@
 use crate::sat::{Lit, Solver};
 
 /// Thin wrapper owning a solver while formulas are being built.
+///
+/// Clauses stream straight into the solver's clause arena — there is no
+/// intermediate `Vec<Vec<Lit>>` stage. The builder is `Clone` (the
+/// solver's clause store is a flat buffer), which is what miter
+/// *prototypes* rely on: encode once, clone per lattice cell.
+/// [`Self::clauses_added`] counts every encoded clause so tests can
+/// assert that cloning performs no re-encoding.
+#[derive(Clone)]
 pub struct CnfBuilder {
     pub solver: Solver,
     /// Lazily-created literal that is constrained true.
     true_lit: Option<Lit>,
+    /// Clauses routed through [`Self::add_clause`] since construction.
+    clauses_added: u64,
 }
 
 impl Default for CnfBuilder {
@@ -17,7 +27,13 @@ impl Default for CnfBuilder {
 
 impl CnfBuilder {
     pub fn new() -> Self {
-        CnfBuilder { solver: Solver::new(), true_lit: None }
+        CnfBuilder { solver: Solver::new(), true_lit: None, clauses_added: 0 }
+    }
+
+    /// How many clauses this builder has encoded (clones inherit the
+    /// count — a clone that re-encoded anything would show a delta).
+    pub fn clauses_added(&self) -> u64 {
+        self.clauses_added
     }
 
     pub fn new_lit(&mut self) -> Lit {
@@ -42,6 +58,7 @@ impl CnfBuilder {
     }
 
     pub fn add_clause(&mut self, lits: &[Lit]) {
+        self.clauses_added += 1;
         self.solver.add_clause(lits);
     }
 
@@ -180,6 +197,27 @@ mod tests {
                 bits[2]
             }
         });
+    }
+
+    #[test]
+    fn clone_carries_state_without_reencoding() {
+        let mut b = CnfBuilder::new();
+        let ins: Vec<Lit> = (0..3).map(|_| b.new_lit()).collect();
+        let y = b.and(&ins);
+        let encoded = b.clauses_added();
+        assert!(encoded > 0);
+        let mut c = b.clone();
+        // The clone starts at the same count (nothing re-encoded) and
+        // answers queries identically.
+        assert_eq!(c.clauses_added(), encoded);
+        assert_eq!(c.solver.solve(&[ins[0], ins[1], ins[2]]), SatResult::Sat);
+        assert!(c.solver.model_value(y));
+        // Divergence after the clone stays local to each copy.
+        c.add_clause(&[!y]);
+        assert_eq!(c.clauses_added(), encoded + 1);
+        assert_eq!(b.clauses_added(), encoded);
+        assert_eq!(c.solver.solve(&[ins[0], ins[1], ins[2]]), SatResult::Unsat);
+        assert_eq!(b.solver.solve(&[ins[0], ins[1], ins[2]]), SatResult::Sat);
     }
 
     #[test]

@@ -29,6 +29,7 @@ use super::params::SopParams;
 use super::SolveOutcome;
 
 /// Parameter literals shared by both templates.
+#[derive(Clone)]
 pub struct ParamVars {
     pub n: usize,
     pub m: usize,
@@ -297,6 +298,16 @@ pub fn gate_count(p: &SopParams) -> usize {
 }
 
 /// The SHARED-template miter with PIT/ITS restriction counters.
+///
+/// `Clone` is the prototype mechanism: [`SharedMiter::build`] encodes
+/// the base CNF exactly once per geometry, and every clone is a byte-
+/// identical snapshot (the solver's clause store is one flat arena, so
+/// cloning is a handful of buffer copies, no re-encoding). The canonical
+/// parallel scan (`search::engine`) builds one *prototype* per search,
+/// blocks the probe model into it, and clones it per lattice cell —
+/// each clone then replays exactly the trace a fresh build would, which
+/// is why determinism is unaffected (see DESIGN.md §8).
+#[derive(Clone)]
 pub struct SharedMiter {
     pub b: CnfBuilder,
     pub params: ParamVars,
@@ -399,6 +410,10 @@ impl SharedMiter {
 
 /// The nonshared (original XPAT) miter: `t` products *per output*, each
 /// output owning a disjoint block, with LPP/PPO restriction counters.
+///
+/// `Clone` makes it a prototype exactly like [`SharedMiter`]: build once
+/// per geometry, clone per lattice cell.
+#[derive(Clone)]
 pub struct NonsharedMiter {
     pub b: CnfBuilder,
     pub params: ParamVars,
@@ -679,6 +694,49 @@ mod tests {
         let sol = miter.solve_minimized_deadline(4, 3, Some(past)).sat();
         assert!(sol.is_some(), "expired deadline must still return the first model");
         assert!(is_sound(&exact, &sol.unwrap().output_values(), 2));
+    }
+
+    #[test]
+    fn cloned_prototype_replays_fresh_build_exactly() {
+        // A clone of a pristine prototype must enumerate byte-identical
+        // models to an independently built miter (clone = snapshot; the
+        // canonical parallel scan's determinism rests on this).
+        let nl = adder(2);
+        let exact = exact_values(&nl);
+        let mut fresh = SharedMiter::build(4, 3, 6, &exact, 2);
+        let proto = SharedMiter::build(4, 3, 6, &exact, 2);
+        let mut cloned = proto.clone();
+        for round in 0..3 {
+            let a = fresh.solve_minimized(4, 10).sat();
+            let b = cloned.solve_minimized(4, 10).sat();
+            assert_eq!(a, b, "round {round}");
+            match (a, b) {
+                (Some(pa), Some(pb)) => {
+                    fresh.block(&pa);
+                    cloned.block(&pb);
+                }
+                _ => break,
+            }
+        }
+    }
+
+    #[test]
+    fn clone_performs_no_cnf_reencoding() {
+        let nl = adder(2);
+        let exact = exact_values(&nl);
+        let proto = SharedMiter::build(4, 3, 6, &exact, 2);
+        let encoded = proto.b.clauses_added();
+        let mut cloned = proto.clone();
+        assert_eq!(cloned.b.clauses_added(), encoded, "clone re-encoded");
+        // Solving is assumption-only: still no new clauses.
+        let sol = cloned.solve(4, 10).sat().expect("sat");
+        assert_eq!(cloned.b.clauses_added(), encoded);
+        // Blocking appends exactly one clause — the only growth a
+        // canonical-mode per-cell clone ever sees.
+        cloned.block(&sol);
+        assert_eq!(cloned.b.clauses_added(), encoded + 1);
+        // The prototype itself is untouched throughout.
+        assert_eq!(proto.b.clauses_added(), encoded);
     }
 
     #[test]
