@@ -3,11 +3,22 @@
 //! is approximated by each ALS method, trading multiplier area against
 //! classification accuracy. This run is recorded in EXPERIMENTS.md.
 //!
-//!     cargo run --release --offline --example nn_edge_inference
+//!     cargo run --release --offline --example nn_edge_inference [STORE_DIR]
+//!
+//! With a STORE_DIR argument (a store written by `sxpat sweep --store`),
+//! the multiplier is *not* re-synthesised: for each error budget the
+//! example asks the operator library for the cheapest stored 4x4
+//! multiplier within budget (`OpLib::best`), re-verifies it against the
+//! exhaustive oracle, and drops its truth table straight into the
+//! datapath via `MultLut::from_values` — the deployment-time flow where
+//! search and serving are decoupled. Budgets with no stored operator
+//! fall back to synthesising with MUSCAT, exactly as the store-less
+//! mode does for every row.
 
 use sxpat::baselines::{mecals, muscat};
 use sxpat::circuit::generators::benchmark_by_name;
 use sxpat::nn::{synthetic_digits, MultLut, QuantMlp};
+use sxpat::store::{OpLib, Store};
 use sxpat::synth::synthesize_area;
 
 fn main() {
@@ -22,12 +33,39 @@ fn main() {
     let mlp = QuantMlp::train(&train, 12, 15, 5);
     let exact_acc = mlp.accuracy(&test, &MultLut::exact());
     println!("exact 4x4 multiplier: area {exact_area:.2} µm², accuracy {exact_acc:.3}\n");
+
+    let lib = std::env::args().nth(1).map(|dir| {
+        let store = Store::open(std::path::Path::new(&dir))
+            .unwrap_or_else(|e| panic!("cannot open store {dir}: {e:#}"));
+        let lib = OpLib::from_store(&store);
+        println!(
+            "operator library {dir}: {} stored operators for mult_i8\n",
+            lib.frontier("mult_i8").len()
+        );
+        lib
+    });
+
     println!(
-        "{:<8} {:>4} {:>9} {:>8} {:>8} {:>9}",
-        "method", "ET", "area", "saving%", "max|err|", "accuracy"
+        "{:<8} {:>4} {:>9} {:>8} {:>8} {:>9}  {}",
+        "method", "ET", "area", "saving%", "max|err|", "accuracy", "source"
     );
 
     for et in [1u64, 2, 4, 8, 16, 32] {
+        // Library hit: serve the stored operator instead of searching.
+        if let Some(entry) = lib.as_ref().and_then(|l| l.best("mult_i8", et)) {
+            OpLib::verify(entry).expect("stored operator failed re-verification");
+            let lut = MultLut::from_values(&entry.values);
+            let acc = mlp.accuracy(&test, &lut);
+            println!(
+                "{:<8} {et:>4} {:>9.3} {:>8.1} {:>8} {acc:>9.3}  oplib {}",
+                entry.method.name(),
+                entry.area,
+                100.0 * (1.0 - entry.area / exact_area),
+                lut.max_error(),
+                entry.fingerprint,
+            );
+            continue;
+        }
         for (label, res) in [
             ("MUSCAT", muscat(&nl, et)),
             ("MECALS", mecals(&nl, et)),
@@ -35,7 +73,7 @@ fn main() {
             let lut = MultLut::from_netlist(&res.netlist);
             let acc = mlp.accuracy(&test, &lut);
             println!(
-                "{label:<8} {et:>4} {:>9.3} {:>8.1} {:>8} {acc:>9.3}",
+                "{label:<8} {et:>4} {:>9.3} {:>8.1} {:>8} {acc:>9.3}  synthesised",
                 res.area,
                 100.0 * (1.0 - res.area / exact_area),
                 lut.max_error(),

@@ -1,0 +1,131 @@
+//! Result-store microbenchmarks: WAL append/replay throughput,
+//! fingerprint hashing rate, and the headline system number — cold
+//! (all-SAT) vs resumed (all-cached) sweep wall time on the same grid.
+//! Written to `BENCH_store.json`.
+//!
+//!     cargo bench --bench store_wal
+
+use std::path::PathBuf;
+
+use sxpat::bench_support::{bench, black_box, throughput, JsonReport};
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::circuit::sim::TruthTables;
+use sxpat::coordinator::{run_sweep_stored, Method, RunRecord, SweepPlan};
+use sxpat::search::SearchConfig;
+use sxpat::store::{job_fingerprint, Fingerprint, Store};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("sxpat_store_bench_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn synthetic_record(i: u64) -> RunRecord {
+    RunRecord {
+        bench: "mult_i8",
+        method: Method::Shared,
+        et: i % 17,
+        area: 100.0 + i as f64 * 0.25,
+        max_err: i % 17,
+        mean_err: 0.375,
+        proxy: (3, 9),
+        elapsed_ms: i,
+        cached: false,
+        values: (0..256).map(|v| (v * (i + 1)) % 255).collect(),
+        all_points: vec![(3, 9, 100.0), (4, 10, 120.0)],
+        error: None,
+    }
+}
+
+fn main() {
+    let mut report = JsonReport::new();
+
+    // WAL append throughput: realistic mult_i8-sized records (256-entry
+    // truth tables) streamed one commit at a time.
+    const N: u64 = 500;
+    let dir = tmp_dir("append");
+    let store = Store::open(&dir).unwrap();
+    let mut next = 0u64;
+    let append_stats = bench("store/wal_append_500", 1, 5, || {
+        for i in 0..N {
+            let fp = Fingerprint(next * N + i);
+            store.append(fp, &synthetic_record(i)).unwrap();
+        }
+        next += 1;
+    });
+    report.push_stats("wal_append_500", &append_stats);
+    report.push(
+        "wal_append.records_per_sec",
+        throughput(&append_stats, N as usize),
+    );
+
+    // Replay (open) throughput over everything appended above.
+    let total_lines = store.lines();
+    drop(store);
+    let open_stats = bench("store/wal_replay_open", 1, 5, || {
+        black_box(Store::open(&dir).unwrap());
+    });
+    report.push_stats("wal_replay_open", &open_stats);
+    report.push(
+        "wal_replay.lines_per_sec",
+        throughput(&open_stats, total_lines),
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    // Fingerprint hashing rate on the biggest paper geometry.
+    let bench_def = benchmark_by_name("mult_i8").unwrap();
+    let nl = bench_def.netlist();
+    let exact = TruthTables::simulate(&nl).output_values(&nl);
+    let cfg = SearchConfig::default();
+    let fp_stats = bench("store/fingerprint_mult_i8_x1000", 2, 10, || {
+        for et in 0..1000u64 {
+            black_box(job_fingerprint(
+                nl.n_inputs(),
+                nl.n_outputs(),
+                &exact,
+                Method::Shared,
+                et,
+                &cfg,
+            ));
+        }
+    });
+    report.push_stats("fingerprint_x1000", &fp_stats);
+    report.push("fingerprint.per_sec", throughput(&fp_stats, 1000));
+
+    // The system number: cold sweep (every job a SAT search) vs resumed
+    // sweep (every job a store hit) on the same grid.
+    let plan = SweepPlan {
+        benches: vec![benchmark_by_name("adder_i4").unwrap()],
+        methods: vec![Method::Shared, Method::Xpat, Method::Muscat],
+        ets: Some(vec![1, 2]),
+        search: SearchConfig {
+            pool: 6,
+            solutions_per_cell: 2,
+            max_sat_cells: 2,
+            conflict_budget: Some(50_000),
+            time_budget_ms: 30_000,
+            ..Default::default()
+        },
+        workers: 2,
+    };
+    let dir = tmp_dir("sweep");
+    let store = Store::open(&dir).unwrap();
+    let cold_stats = bench("store/sweep_cold", 0, 1, || {
+        let recs = run_sweep_stored(&plan, Some(&store));
+        assert!(recs.iter().all(|r| !r.cached));
+    });
+    let resumed_stats = bench("store/sweep_resumed", 0, 3, || {
+        let recs = run_sweep_stored(&plan, Some(&store));
+        assert!(recs.iter().all(|r| r.cached), "warm store must serve 100%");
+    });
+    report.push_stats("sweep_cold", &cold_stats);
+    report.push_stats("sweep_resumed", &resumed_stats);
+    report.push(
+        "sweep_resumed.speedup_over_cold",
+        cold_stats.mean_ms / resumed_stats.mean_ms,
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    report.write("store");
+}

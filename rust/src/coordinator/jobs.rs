@@ -1,13 +1,20 @@
 //! One experiment job: a (benchmark, method, ET) triple, producing the
 //! figures' raw numbers.
+//!
+//! [`RunRecord`] round-trips through [`util::Json`](crate::util::Json)
+//! (`to_json`/`from_json`) so the persistent store (`store::wal`) can
+//! write records as JSONL and serve them back on resumed sweeps.
 
 use std::time::Instant;
 
+use anyhow::{anyhow, bail, Context, Result};
+
 use crate::baselines::{mecals, muscat};
-use crate::circuit::generators::Benchmark;
+use crate::circuit::generators::{benchmark_by_name, Benchmark};
 use crate::circuit::sim::TruthTables;
 use crate::search::{MiterCache, SearchConfig};
 use crate::synth::synthesize_area;
+use crate::util::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Method {
@@ -29,6 +36,18 @@ impl Method {
         }
     }
 
+    /// Inverse of [`Method::name`] (the form stored in WALs and CSVs).
+    pub fn from_name(name: &str) -> Option<Method> {
+        match name {
+            "SHARED" => Some(Method::Shared),
+            "XPAT" => Some(Method::Xpat),
+            "MUSCAT" => Some(Method::Muscat),
+            "MECALS" => Some(Method::Mecals),
+            "EXACT" => Some(Method::Exact),
+            _ => None,
+        }
+    }
+
     pub fn all_compared() -> [Method; 4] {
         [Method::Shared, Method::Xpat, Method::Muscat, Method::Mecals]
     }
@@ -44,7 +63,7 @@ pub struct Job {
 
 /// One figure point (Fig. 5 keeps the best per job; Fig. 4 additionally
 /// uses `all_points` for the multi-solution scatter).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunRecord {
     pub bench: &'static str,
     pub method: Method,
@@ -55,12 +74,202 @@ pub struct RunRecord {
     /// (PIT, ITS) for SHARED, (LPP, PPO) for XPAT, (0, 0) otherwise.
     pub proxy: (usize, usize),
     pub elapsed_ms: u64,
+    /// Served from the persistent store instead of solved this run
+    /// (`coordinator::sweep::run_sweep_stored`). Cached records report
+    /// `elapsed_ms = 0`.
+    pub cached: bool,
+    /// The winning operator's exhaustive output table (`2^n` entries) —
+    /// what `store::oplib` exports for the NN layer. Empty when the job
+    /// produced no operator (failed, infeasible).
+    pub values: Vec<u64>,
     /// Every enumerated solution: (proxy.0, proxy.1, area).
     pub all_points: Vec<(usize, usize, f64)>,
     /// `Some(message)` when the job crashed instead of completing (the
     /// sweep records the failure and carries on; see `sweep::run_sweep`).
     /// Failed jobs report `area = inf` so figure renderers skip them.
     pub error: Option<String>,
+}
+
+/// JSON has no ±inf/NaN: non-finite floats are stored as tagged strings.
+fn f64_to_json(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("nan".into())
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+fn f64_from_json(j: &Json, what: &str) -> Result<f64> {
+    match j {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.as_str() {
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            "nan" => Ok(f64::NAN),
+            other => bail!("{what}: bad float string {other:?}"),
+        },
+        other => bail!("{what}: expected number, got {other:?}"),
+    }
+}
+
+/// `u64` travels as a JSON number. Exact for every value that occurs in
+/// records (≤ 2^53), and the `u64::MAX` failure sentinel survives too:
+/// it rounds to 2^64 as f64 and the saturating cast brings it back.
+fn u64_from_json(j: &Json, what: &str) -> Result<u64> {
+    j.as_u64().ok_or_else(|| anyhow!("{what}: expected unsigned integer"))
+}
+
+fn usize_from_json(j: &Json, what: &str) -> Result<usize> {
+    Ok(u64_from_json(j, what)? as usize)
+}
+
+/// Resolve a deserialized benchmark name to a `&'static str`. Paper
+/// benchmarks map to their static names; unknown names (stores written
+/// against custom circuits) are interned — each distinct name leaks
+/// exactly once per process, however many WAL records carry it or how
+/// often the store is reopened — a deliberate trade for keeping
+/// `RunRecord` borrow-free.
+fn static_bench_name(name: &str) -> &'static str {
+    if let Some(b) = benchmark_by_name(name) {
+        return b.name;
+    }
+    static INTERNED: std::sync::Mutex<std::collections::BTreeSet<&'static str>> =
+        std::sync::Mutex::new(std::collections::BTreeSet::new());
+    let mut set = INTERNED.lock().unwrap();
+    if let Some(&interned) = set.get(name) {
+        return interned;
+    }
+    let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
+    set.insert(leaked);
+    leaked
+}
+
+impl RunRecord {
+    /// Serialize for the store WAL. Deterministic (sorted keys, ASCII,
+    /// single line) so identical records render byte-identically.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("bench".to_string(), Json::Str(self.bench.to_string()));
+        m.insert("method".to_string(), Json::Str(self.method.name().to_string()));
+        m.insert("et".to_string(), Json::Num(self.et as f64));
+        m.insert("area".to_string(), f64_to_json(self.area));
+        m.insert("max_err".to_string(), Json::Num(self.max_err as f64));
+        m.insert("mean_err".to_string(), f64_to_json(self.mean_err));
+        m.insert(
+            "proxy".to_string(),
+            Json::Arr(vec![
+                Json::Num(self.proxy.0 as f64),
+                Json::Num(self.proxy.1 as f64),
+            ]),
+        );
+        m.insert("elapsed_ms".to_string(), Json::Num(self.elapsed_ms as f64));
+        m.insert("cached".to_string(), Json::Bool(self.cached));
+        m.insert(
+            "values".to_string(),
+            Json::Arr(self.values.iter().map(|&v| Json::Num(v as f64)).collect()),
+        );
+        m.insert(
+            "all_points".to_string(),
+            Json::Arr(
+                self.all_points
+                    .iter()
+                    .map(|&(a, b, area)| {
+                        Json::Arr(vec![
+                            Json::Num(a as f64),
+                            Json::Num(b as f64),
+                            f64_to_json(area),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "error".to_string(),
+            match &self.error {
+                Some(e) => Json::Str(e.clone()),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`RunRecord::to_json`].
+    pub fn from_json(j: &Json) -> Result<RunRecord> {
+        let get = |key: &str| {
+            j.get(key).ok_or_else(|| anyhow!("record missing field {key:?}"))
+        };
+        let bench_name = get("bench")?
+            .as_str()
+            .ok_or_else(|| anyhow!("bench: expected string"))?;
+        let method_name = get("method")?
+            .as_str()
+            .ok_or_else(|| anyhow!("method: expected string"))?;
+        let method = Method::from_name(method_name)
+            .ok_or_else(|| anyhow!("unknown method {method_name:?}"))?;
+        let proxy_arr = get("proxy")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("proxy: expected array"))?;
+        if proxy_arr.len() != 2 {
+            bail!("proxy: expected 2 entries, got {}", proxy_arr.len());
+        }
+        let values = get("values")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("values: expected array"))?
+            .iter()
+            .map(|v| u64_from_json(v, "values[]"))
+            .collect::<Result<Vec<u64>>>()?;
+        let all_points = get("all_points")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("all_points: expected array"))?
+            .iter()
+            .map(|p| -> Result<(usize, usize, f64)> {
+                let t = p
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("all_points[]: expected array"))?;
+                if t.len() != 3 {
+                    bail!("all_points[]: expected 3 entries");
+                }
+                Ok((
+                    usize_from_json(&t[0], "all_points[].0")?,
+                    usize_from_json(&t[1], "all_points[].1")?,
+                    f64_from_json(&t[2], "all_points[].2")?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let error = match get("error")? {
+            Json::Null => None,
+            Json::Str(s) => Some(s.clone()),
+            other => bail!("error: expected string or null, got {other:?}"),
+        };
+        Ok(RunRecord {
+            bench: static_bench_name(bench_name),
+            method,
+            et: u64_from_json(get("et")?, "et")?,
+            area: f64_from_json(get("area")?, "area")?,
+            max_err: u64_from_json(get("max_err")?, "max_err")?,
+            mean_err: f64_from_json(get("mean_err")?, "mean_err")?,
+            proxy: (
+                usize_from_json(&proxy_arr[0], "proxy.0")?,
+                usize_from_json(&proxy_arr[1], "proxy.1")?,
+            ),
+            elapsed_ms: u64_from_json(get("elapsed_ms")?, "elapsed_ms")?,
+            cached: get("cached")?
+                .as_bool()
+                .ok_or_else(|| anyhow!("cached: expected bool"))?,
+            values,
+            all_points,
+            error,
+        })
+    }
+
+    /// Parse one WAL-line payload.
+    pub fn parse(src: &str) -> Result<RunRecord> {
+        RunRecord::from_json(&Json::parse(src).context("record JSON")?)
+    }
 }
 
 /// Execute one job. Every produced circuit is re-verified against the
@@ -77,6 +286,18 @@ pub fn run_job(job: &Job) -> RunRecord {
 pub fn run_job_cached(job: &Job, protos: &MiterCache) -> RunRecord {
     let nl = job.bench.netlist();
     let exact = TruthTables::simulate(&nl).output_values(&nl);
+    run_job_with(job, protos, &exact)
+}
+
+/// As [`run_job_cached`], with the benchmark's exhaustive truth table
+/// supplied by the caller. The sweep computes `exact` once per job — it
+/// is the store fingerprint input, the miter-cache geometry key, the
+/// miter encoder input and the soundness oracle — and this seam keeps it
+/// a single simulation instead of three. `exact` MUST be the exhaustive
+/// output table of `job.bench.netlist()`.
+pub fn run_job_with(job: &Job, protos: &MiterCache, exact: &[u64]) -> RunRecord {
+    let nl = job.bench.netlist();
+    debug_assert_eq!(exact.len(), 1usize << nl.n_inputs());
     let start = Instant::now();
     let rec = match job.method {
         Method::Exact => RunRecord {
@@ -88,14 +309,16 @@ pub fn run_job_cached(job: &Job, protos: &MiterCache) -> RunRecord {
             mean_err: 0.0,
             proxy: (0, 0),
             elapsed_ms: 0,
+            cached: false,
+            values: exact.to_vec(),
             all_points: Vec::new(),
             error: None,
         },
         Method::Shared | Method::Xpat => {
             let out = if job.method == Method::Shared {
-                protos.search_shared(&nl, job.et, &job.search)
+                protos.search_shared_with(&nl, job.et, &job.search, exact)
             } else {
-                protos.search_xpat(&nl, job.et, &job.search)
+                protos.search_xpat_with(&nl, job.et, &job.search, exact)
             };
             let all_points: Vec<(usize, usize, f64)> = out
                 .solutions
@@ -119,6 +342,8 @@ pub fn run_job_cached(job: &Job, protos: &MiterCache) -> RunRecord {
                         mean_err: best.mean_err,
                         proxy: best.proxy,
                         elapsed_ms: 0,
+                        cached: false,
+                        values: vals,
                         all_points,
                         error: None,
                     }
@@ -132,6 +357,8 @@ pub fn run_job_cached(job: &Job, protos: &MiterCache) -> RunRecord {
                     mean_err: f64::INFINITY,
                     proxy: (0, 0),
                     elapsed_ms: 0,
+                    cached: false,
+                    values: Vec::new(),
                     all_points,
                     error: None,
                 },
@@ -158,6 +385,8 @@ pub fn run_job_cached(job: &Job, protos: &MiterCache) -> RunRecord {
                 mean_err: res.mean_err,
                 proxy: (0, 0),
                 elapsed_ms: 0,
+                cached: false,
+                values: vals,
                 all_points: Vec::new(),
                 error: None,
             }
@@ -185,10 +414,20 @@ mod tests {
     #[test]
     fn all_methods_produce_sound_records_on_adder_i4() {
         let bench = benchmark_by_name("adder_i4").unwrap();
+        let exact = TruthTables::simulate(&bench.netlist())
+            .output_values(&bench.netlist());
         for method in Method::all_compared() {
             let rec = run_job(&Job { bench, method, et: 2, search: quick() });
             assert!(rec.area.is_finite(), "{}", method.name());
             assert!(rec.max_err <= 2, "{}", method.name());
+            assert!(!rec.cached, "{}", method.name());
+            // The exported operator table must itself be sound.
+            assert_eq!(rec.values.len(), exact.len(), "{}", method.name());
+            assert!(
+                exact.iter().zip(&rec.values).all(|(&e, &a)| e.abs_diff(a) <= 2),
+                "{}: exported values unsound",
+                method.name()
+            );
         }
     }
 
@@ -212,5 +451,63 @@ mod tests {
         });
         assert!(!rec.all_points.is_empty());
         assert!(rec.all_points.iter().any(|&(_, _, a)| a == rec.area));
+    }
+
+    #[test]
+    fn method_name_round_trip() {
+        for m in [
+            Method::Shared,
+            Method::Xpat,
+            Method::Muscat,
+            Method::Mecals,
+            Method::Exact,
+        ] {
+            assert_eq!(Method::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Method::from_name("shared"), None);
+    }
+
+    #[test]
+    fn record_json_round_trip() {
+        let rec = RunRecord {
+            bench: "adder_i4",
+            method: Method::Shared,
+            et: 2,
+            area: 12.5,
+            max_err: 2,
+            mean_err: 0.75,
+            proxy: (3, 4),
+            elapsed_ms: 17,
+            cached: false,
+            values: vec![0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15],
+            all_points: vec![(3, 4, 12.5), (4, 5, 13.0)],
+            error: None,
+        };
+        let back = RunRecord::parse(&rec.to_json().render()).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn failed_record_json_round_trip() {
+        // The failure shape: inf area, u64::MAX max_err, an error string
+        // with characters that need escaping.
+        let rec = RunRecord {
+            bench: "mult_i6",
+            method: Method::Xpat,
+            et: 8,
+            area: f64::INFINITY,
+            max_err: u64::MAX,
+            mean_err: f64::INFINITY,
+            proxy: (0, 0),
+            elapsed_ms: 3,
+            cached: false,
+            values: Vec::new(),
+            all_points: Vec::new(),
+            error: Some("panicked: \"index\\out of bounds\"\nat line 3".into()),
+        };
+        let text = rec.to_json().render();
+        assert!(text.is_ascii());
+        let back = RunRecord::parse(&text).unwrap();
+        assert_eq!(back, rec);
     }
 }

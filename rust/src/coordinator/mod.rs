@@ -8,5 +8,5 @@
 pub mod jobs;
 pub mod sweep;
 
-pub use jobs::{run_job, run_job_cached, Job, Method, RunRecord};
-pub use sweep::{run_sweep, run_sweep_with, SweepPlan};
+pub use jobs::{run_job, run_job_cached, run_job_with, Job, Method, RunRecord};
+pub use sweep::{run_sweep, run_sweep_stored, run_sweep_with, SweepPlan};

@@ -22,9 +22,11 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
 use crate::circuit::generators::{Benchmark, PAPER_BENCHMARKS};
+use crate::circuit::sim::TruthTables;
 use crate::search::{MiterCache, SearchConfig};
+use crate::store::{job_fingerprint, Store};
 
-use super::jobs::{run_job, run_job_cached, Job, Method, RunRecord};
+use super::jobs::{run_job_with, Job, Method, RunRecord};
 
 /// A declarative sweep: which benchmarks, methods and ET values to run.
 #[derive(Debug, Clone)]
@@ -80,6 +82,8 @@ fn failed_record(job: &Job, message: String) -> RunRecord {
         mean_err: f64::INFINITY,
         proxy: (0, 0),
         elapsed_ms: 0,
+        cached: false,
+        values: Vec::new(),
         all_points: Vec::new(),
         error: Some(message),
     }
@@ -99,8 +103,97 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 /// share one miter-prototype cache, so each distinct geometry is encoded
 /// once per sweep.
 pub fn run_sweep(plan: &SweepPlan) -> Vec<RunRecord> {
+    run_sweep_stored(plan, None)
+}
+
+/// As [`run_sweep`], backed by an optional persistent [`Store`]: a job
+/// whose fingerprint is already present is served from disk — no SAT
+/// search — and reported with `cached: true`, `elapsed_ms: 0`; a job
+/// solved fresh is appended to the store's WAL the moment it commits,
+/// so a sweep killed at any point resumes where it stopped.
+///
+/// Failed jobs (`error: Some`), no-solution jobs (`area = inf`) and
+/// wall-clock-truncated template jobs (elapsed reached
+/// `time_budget_ms`) are NOT persisted: a resumed sweep retries them
+/// instead of replaying the outcome forever. The latter two cases
+/// matter because a deadline that binds on a loaded machine truncates
+/// the lattice scan at a load-dependent point — caching the degraded
+/// result would permanently replace what a complete search produces
+/// (conflict-budget aborts, by contrast, are machine-independent and
+/// cache fine). A store append error is reported to stderr and the
+/// sweep carries on — losing one cache entry is not worth losing the
+/// sweep.
+///
+/// The per-job exhaustive truth table is simulated once here and
+/// threads through fingerprinting, the miter-prototype cache and the
+/// engine ([`run_job_with`]).
+pub fn run_sweep_stored(plan: &SweepPlan, store: Option<&Store>) -> Vec<RunRecord> {
     let protos = MiterCache::new();
-    run_sweep_with(plan, |job| run_job_cached(job, &protos))
+    run_sweep_with(plan, |job| {
+        let nl = job.bench.netlist();
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        let fp = store.map(|_| {
+            job_fingerprint(
+                nl.n_inputs(),
+                nl.n_outputs(),
+                &exact,
+                job.method,
+                job.et,
+                &job.search,
+            )
+        });
+        if let (Some(st), Some(fp)) = (store, fp) {
+            if let Some(rec) = st.get(fp) {
+                // Same defence-in-depth as a fresh solve: the stored
+                // operator table must re-verify against the exhaustive
+                // oracle (the disk is not part of the soundness
+                // argument). The `exact` vector is already in hand, so
+                // this zip is essentially free next to a SAT search. An
+                // unsound record is re-solved; the fresh append then
+                // overwrites it last-writer-wins.
+                let sound = rec.values.len() == exact.len()
+                    && exact
+                        .iter()
+                        .zip(&rec.values)
+                        .all(|(&e, &a)| e.abs_diff(a) <= job.et);
+                if sound {
+                    // The fingerprint pins method/ET/config/truth
+                    // table; the bench pointer is re-anchored to this
+                    // process's static (names are not part of the
+                    // fingerprint).
+                    return RunRecord {
+                        bench: job.bench.name,
+                        elapsed_ms: 0,
+                        cached: true,
+                        ..rec
+                    };
+                }
+                eprintln!(
+                    "warning: store record {fp} for {} {} et={} failed oracle \
+                     re-verification; re-solving",
+                    job.bench.name,
+                    job.method.name(),
+                    job.et
+                );
+            }
+        }
+        let rec = run_job_with(job, &protos, &exact);
+        let deadline_bound = matches!(rec.method, Method::Shared | Method::Xpat)
+            && rec.elapsed_ms >= job.search.time_budget_ms;
+        if let (Some(st), Some(fp)) = (store, fp) {
+            if rec.error.is_none() && rec.area.is_finite() && !deadline_bound {
+                if let Err(e) = st.append(fp, &rec) {
+                    eprintln!(
+                        "warning: store append failed for {} {} et={}: {e:#}",
+                        rec.bench,
+                        rec.method.name(),
+                        rec.et
+                    );
+                }
+            }
+        }
+        rec
+    })
 }
 
 /// As [`run_sweep`] with a custom job runner (the seam the resilience
@@ -165,6 +258,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::jobs::run_job;
     use crate::circuit::generators::benchmark_by_name;
 
     fn tiny_plan() -> SweepPlan {

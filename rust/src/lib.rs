@@ -25,6 +25,7 @@ pub mod runtime;
 pub mod sat;
 pub mod search;
 pub mod smt;
+pub mod store;
 pub mod synth;
 pub mod template;
 pub mod util;

@@ -3,11 +3,25 @@
 //! Subcommands:
 //!   bench-gen                      write benchmark Verilog into benchmarks/
 //!   synth      --bench B --method M --et E     one synthesis job
-//!   sweep      [--out DIR]         Fig. 5: all benches x methods x ETs
+//!   sweep      [--out DIR] [--store DIR]  Fig. 5: all benches x methods x ETs
 //!   proxy-study [--out DIR]        Fig. 4: scatter + random baseline
 //!   random-baseline --bench B --et E --count N
 //!   verify     --bench B --et E    re-verify SHARED result exhaustively
 //!   nn-eval    [--et-list 0,1,2,4] NN accuracy vs multiplier area
+//!   oplib      list|best|export    query/export the persistent operator store
+//!
+//! `sweep --store DIR` opens the persistent result store in DIR: jobs
+//! already fingerprinted there are served from disk (no SAT search,
+//! `cached=true` in the CSVs), fresh results are appended as they
+//! commit — so an interrupted sweep resumes where it stopped. The
+//! `--resume` flag is the explicit spelling of that default (it errors
+//! without `--store`, as a guard against expecting resumption with no
+//! store configured).
+//!
+//! `oplib` reads a store and serves the deployment-time lookup:
+//!   oplib list   --store DIR              per-benchmark Pareto frontiers
+//!   oplib best   --store DIR --bench B --et N   cheapest operator within budget
+//!   oplib export --store DIR [--out DIR]  frontier operators as .tt files
 //!
 //! Flags: --pool, --workers (parallel jobs), --cell-workers (parallel
 //! lattice cells within one job; `sweep` shrinks the outer job pool so
@@ -22,7 +36,7 @@
 //! reference SAT solver offline. Cell bounds default to the weakest
 //! (unrestricted) cell.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -30,12 +44,13 @@ use sxpat::baselines::random_sound_baseline;
 use sxpat::circuit::generators::{benchmark_by_name, PAPER_BENCHMARKS};
 use sxpat::circuit::sim::TruthTables;
 use sxpat::circuit::verilog::write_verilog;
-use sxpat::coordinator::{run_job, run_sweep, Job, Method, SweepPlan};
+use sxpat::coordinator::{run_job, run_sweep_stored, Job, Method, SweepPlan};
 use sxpat::evaluator::rust_eval::evaluate_batch;
 use sxpat::report::{fig4_csv, fig5_csv, fig5_markdown, records_csv};
 use sxpat::runtime::{find_artifacts_dir, Runtime};
 use sxpat::sat::dimacs::to_dimacs;
 use sxpat::search::SearchConfig;
+use sxpat::store::{OpLib, Store};
 use sxpat::synth::synthesize_area;
 use sxpat::template::{NonsharedMiter, SharedMiter, SopParams};
 use sxpat::util::cli::Args;
@@ -57,6 +72,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("random-baseline") => random_baseline(args),
         Some("verify") => verify(args),
         Some("nn-eval") => nn_eval(args),
+        Some("oplib") => oplib(args),
         _ => {
             eprintln!("{}", HELP);
             Ok(())
@@ -64,7 +80,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const HELP: &str = "usage: sxpat <bench-gen|synth|sweep|proxy-study|random-baseline|verify|nn-eval> [--flags]
+const HELP: &str = "usage: sxpat <bench-gen|synth|sweep|proxy-study|random-baseline|verify|nn-eval|oplib> [--flags]
 see rust/src/main.rs header or README.md for details";
 
 fn search_config(args: &Args) -> Result<SearchConfig> {
@@ -210,19 +226,143 @@ fn sweep(args: &Args) -> Result<()> {
         // machine's core count.
         plan.workers = (plan.workers / plan.search.cell_workers).max(1);
     }
+    let store = match args.get("store") {
+        Some(d) => Some(Store::open(Path::new(d))?),
+        None if args.has_flag("store") => {
+            // `--store` immediately followed by another flag parses as
+            // a bare flag; running a long sweep silently without
+            // persistence would be a nasty surprise.
+            bail!("--store requires a directory argument");
+        }
+        None => None,
+    };
+    if args.has_flag("resume") && store.is_none() {
+        bail!("--resume requires --store DIR (nothing to resume from)");
+    }
+    if let Some(st) = &store {
+        println!(
+            "store {}: {} completed jobs on disk",
+            st.dir().display(),
+            st.len()
+        );
+    }
     println!(
         "running {} jobs on {} workers × {} cell workers...",
         plan.jobs().len(),
         plan.workers,
         plan.search.cell_workers
     );
-    let records = run_sweep(&plan);
+    let records = run_sweep_stored(&plan, store.as_ref());
+    if store.is_some() {
+        let hits = records.iter().filter(|r| r.cached).count();
+        println!(
+            "{hits}/{} jobs served from the store, {} solved fresh",
+            records.len(),
+            records.len() - hits
+        );
+    }
     std::fs::write(dir.join("records.csv"), records_csv(&records))?;
     std::fs::write(dir.join("fig5.csv"), fig5_csv(&records))?;
     std::fs::write(dir.join("fig5.md"), fig5_markdown(&records))?;
     println!("{}", fig5_markdown(&records));
     println!("wrote {}/records.csv, fig5.csv, fig5.md", dir.display());
     Ok(())
+}
+
+/// The `oplib` subcommand: query/export the persistent operator store.
+fn oplib(args: &Args) -> Result<()> {
+    let store_dir = args
+        .get("store")
+        .ok_or_else(|| anyhow!("--store DIR required (a dir written by sweep --store)"))?;
+    let store = Store::open(Path::new(store_dir))?;
+    let lib = OpLib::from_store(&store);
+    match args.positional.get(1).map(String::as_str) {
+        Some("list") => {
+            println!(
+                "store {}: {} usable operators over {} benchmarks ({} WAL lines)",
+                store.dir().display(),
+                lib.len(),
+                lib.benches().len(),
+                store.lines()
+            );
+            for bench in lib.benches() {
+                println!("\n{bench} Pareto frontier (area vs. achieved max err):");
+                println!(
+                    "{:>8} {:>8} {:>10}  {:<8} {}",
+                    "max_err", "job_et", "area", "method", "fingerprint"
+                );
+                for e in lib.frontier(bench) {
+                    println!(
+                        "{:>8} {:>8} {:>10.3}  {:<8} {}",
+                        e.max_err,
+                        e.et,
+                        e.area,
+                        e.method.name(),
+                        e.fingerprint
+                    );
+                }
+            }
+            Ok(())
+        }
+        Some("best") => {
+            let bench = the_bench(args)?;
+            let et = args
+                .get_u64("et")?
+                .ok_or_else(|| anyhow!("--et <budget> required"))?;
+            let entry = lib.best(bench.name, et).ok_or_else(|| {
+                anyhow!("no stored operator for {} within error budget {et}", bench.name)
+            })?;
+            OpLib::verify(entry)?;
+            // Summary on stderr: stdout carries only the .tt payload,
+            // so `oplib best ... > op.tt` yields a parse_tt-clean file.
+            eprintln!(
+                "{} et≤{et}: {} area {:.3} µm², max_err {} (job et {}), fp {} — re-verified sound",
+                bench.name,
+                entry.method.name(),
+                entry.area,
+                entry.max_err,
+                entry.et,
+                entry.fingerprint
+            );
+            print!("{}", OpLib::export_tt(entry));
+            Ok(())
+        }
+        Some("export") => {
+            let dir = out_dir(args)?;
+            let mut written = 0usize;
+            let mut skipped = 0usize;
+            for bench in lib.benches() {
+                for e in lib.frontier(bench) {
+                    // One unverifiable entry (e.g. a record for a
+                    // custom benchmark this binary cannot re-simulate)
+                    // must not abort the rest of the export.
+                    if let Err(err) = OpLib::verify(e) {
+                        eprintln!(
+                            "warning: skipping {} fp {}: {err:#}",
+                            e.bench, e.fingerprint
+                        );
+                        skipped += 1;
+                        continue;
+                    }
+                    let path = dir.join(format!(
+                        "{}_err{}_{}.tt",
+                        e.bench,
+                        e.max_err,
+                        e.method.name().to_lowercase()
+                    ));
+                    std::fs::write(&path, OpLib::export_tt(e))?;
+                    written += 1;
+                }
+            }
+            println!(
+                "exported {written} re-verified frontier operators to {} \
+                 ({skipped} skipped)",
+                dir.display()
+            );
+            Ok(())
+        }
+        other => bail!("oplib <list|best|export>, got {other:?}"),
+    }
 }
 
 fn proxy_study(args: &Args) -> Result<()> {

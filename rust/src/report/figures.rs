@@ -10,14 +10,16 @@ use crate::baselines::RandomPoint;
 use crate::coordinator::{Method, RunRecord};
 
 /// Raw record dump (one row per job) — the machine-readable log.
+/// `cached` distinguishes store-served rows of a resumed sweep from
+/// fresh solves (their `elapsed_ms` is 0 by construction).
 pub fn records_csv(records: &[RunRecord]) -> String {
     let mut s = String::from(
-        "bench,method,et,area,max_err,mean_err,proxy_a,proxy_b,elapsed_ms,error\n",
+        "bench,method,et,area,max_err,mean_err,proxy_a,proxy_b,elapsed_ms,cached,error\n",
     );
     for r in records {
         let _ = writeln!(
             s,
-            "{},{},{},{:.4},{},{:.4},{},{},{},{}",
+            "{},{},{},{:.4},{},{:.4},{},{},{},{},{}",
             r.bench,
             r.method.name(),
             r.et,
@@ -27,6 +29,7 @@ pub fn records_csv(records: &[RunRecord]) -> String {
             r.proxy.0,
             r.proxy.1,
             r.elapsed_ms,
+            r.cached,
             r.error
                 .as_deref()
                 .unwrap_or("")
@@ -78,17 +81,21 @@ pub fn fig4_csv(
     s
 }
 
-/// Fig. 5 series: per (bench, method), area across the ET sweep.
+/// Fig. 5 series: per (bench, method), area across the ET sweep. The
+/// trailing `cached` column marks rows served from the result store; a
+/// resumed sweep's CSV is byte-identical to the fresh one modulo that
+/// column (asserted by `tests/store_roundtrip.rs`).
 pub fn fig5_csv(records: &[RunRecord]) -> String {
-    let mut s = String::from("bench,method,et,area\n");
+    let mut s = String::from("bench,method,et,area,cached\n");
     for r in records {
         let _ = writeln!(
             s,
-            "{},{},{},{:.4}",
+            "{},{},{},{:.4},{}",
             r.bench,
             r.method.name(),
             r.et,
-            r.area
+            r.area,
+            r.cached
         );
     }
     s
@@ -96,6 +103,8 @@ pub fn fig5_csv(records: &[RunRecord]) -> String {
 
 /// Markdown rendering of the Fig. 5 grid — one table per benchmark,
 /// methods as columns, ET values as rows; the winner per row is bolded.
+/// Cells served from the result store carry a `†` marker (explained in
+/// a footnote), so a resumed sweep is visually distinguishable.
 pub fn fig5_markdown(records: &[RunRecord]) -> String {
     let mut benches: Vec<&str> = records.iter().map(|r| r.bench).collect();
     benches.sort_unstable();
@@ -103,6 +112,7 @@ pub fn fig5_markdown(records: &[RunRecord]) -> String {
     let methods = Method::all_compared();
 
     let mut s = String::new();
+    let mut any_cached = false;
     for bench in benches {
         let _ = writeln!(s, "\n### {bench}\n");
         let mut header = String::from("| ET |");
@@ -120,27 +130,32 @@ pub fn fig5_markdown(records: &[RunRecord]) -> String {
         ets.sort_unstable();
         ets.dedup();
         for et in ets {
-            let areas: Vec<Option<f64>> = methods
+            let cells: Vec<Option<(f64, bool)>> = methods
                 .iter()
                 .map(|&m| {
                     records
                         .iter()
                         .find(|r| r.bench == bench && r.et == et && r.method == m)
-                        .map(|r| r.area)
+                        .map(|r| (r.area, r.cached))
                 })
                 .collect();
-            let best = areas
+            let best = cells
                 .iter()
                 .flatten()
-                .fold(f64::INFINITY, |a, &b| a.min(b));
+                .fold(f64::INFINITY, |a, &(b, _)| a.min(b));
             let mut row = format!("| {et} |");
-            for a in areas {
-                match a {
-                    Some(a) if (a - best).abs() < 1e-9 => {
-                        let _ = write!(row, " **{a:.3}** |");
-                    }
-                    Some(a) if a.is_finite() => {
-                        let _ = write!(row, " {a:.3} |");
+            for cell in cells {
+                match cell {
+                    Some((a, cached)) if a.is_finite() => {
+                        let mark = if cached { "†" } else { "" };
+                        if (a - best).abs() < 1e-9 {
+                            let _ = write!(row, " **{a:.3}**{mark} |");
+                        } else {
+                            let _ = write!(row, " {a:.3}{mark} |");
+                        }
+                        if cached {
+                            any_cached = true;
+                        }
                     }
                     _ => {
                         let _ = write!(row, " — |");
@@ -149,6 +164,9 @@ pub fn fig5_markdown(records: &[RunRecord]) -> String {
             }
             let _ = writeln!(s, "{row}");
         }
+    }
+    if any_cached {
+        let _ = writeln!(s, "\n† served from the result store (resumed sweep)");
     }
     s
 }
@@ -167,6 +185,8 @@ mod tests {
             mean_err: 0.5,
             proxy: (2, 3),
             elapsed_ms: 1,
+            cached: false,
+            values: vec![0, 1, 2, 3],
             all_points: vec![(2, 3, area), (3, 4, area + 1.0)],
             error: None,
         }
@@ -181,6 +201,29 @@ mod tests {
         let csv = records_csv(&rs);
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.contains("adder_i4,SHARED,1,2.0000"));
+        assert!(csv.lines().next().unwrap().contains(",cached,"));
+    }
+
+    #[test]
+    fn csvs_carry_the_cached_flag() {
+        let mut cached = rec("adder_i4", Method::Shared, 1, 2.0);
+        cached.cached = true;
+        cached.elapsed_ms = 0;
+        let rs = vec![cached, rec("adder_i4", Method::Xpat, 1, 3.0)];
+        let f5 = fig5_csv(&rs);
+        assert!(f5.starts_with("bench,method,et,area,cached\n"));
+        assert!(f5.contains("adder_i4,SHARED,1,2.0000,true"));
+        assert!(f5.contains("adder_i4,XPAT,1,3.0000,false"));
+        let rc = records_csv(&rs);
+        assert!(rc.contains(",0,true,"));
+
+        // Markdown: cached cells get the dagger + footnote; a fully
+        // fresh sweep renders no footnote.
+        let md = fig5_markdown(&rs);
+        assert!(md.contains("**2.000**†"));
+        assert!(md.contains("† served from the result store"));
+        let fresh = fig5_markdown(&[rec("adder_i4", Method::Shared, 1, 2.0)]);
+        assert!(!fresh.contains('†'));
     }
 
     #[test]

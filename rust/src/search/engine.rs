@@ -361,8 +361,25 @@ pub fn run_search_from<T: Template>(
     cfg: &SearchConfig,
     prototype: Option<T>,
 ) -> SearchOutcome {
-    let (n, m) = (nl.n_inputs(), nl.n_outputs());
     let exact = TruthTables::simulate(nl).output_values(nl);
+    run_search_exact(nl, et, cfg, prototype, &exact)
+}
+
+/// As [`run_search_from`], with the exhaustive truth table supplied by
+/// the caller instead of re-simulated here. The coordinator computes
+/// `exact` once per job (it is also the store fingerprint input and the
+/// final soundness oracle) and threads it through `MiterCache` and this
+/// function, so the `2^n`-point simulation runs once instead of three
+/// times per job. `exact` MUST be `nl`'s exhaustive output table.
+pub fn run_search_exact<T: Template>(
+    nl: &Netlist,
+    et: u64,
+    cfg: &SearchConfig,
+    prototype: Option<T>,
+    exact: &[u64],
+) -> SearchOutcome {
+    let (n, m) = (nl.n_inputs(), nl.n_outputs());
+    debug_assert_eq!(exact.len(), 1usize << n, "exact table must be exhaustive");
     let start = Instant::now();
     let deadline = start + Duration::from_millis(cfg.time_budget_ms);
 
@@ -382,7 +399,7 @@ pub fn run_search_from<T: Template>(
     // the per-cell clones.
     let canonical = cfg.cell_workers > 1;
     let mut proto =
-        prototype.unwrap_or_else(|| T::build(n, m, cfg.pool, &exact, et));
+        prototype.unwrap_or_else(|| T::build(n, m, cfg.pool, exact, et));
     proto.set_conflict_budget(cfg.conflict_budget);
     let mut probe_clone: Option<T> = if canonical { Some(proto.clone()) } else { None };
 
@@ -413,7 +430,7 @@ pub fn run_search_from<T: Template>(
                 // per-cell clones inherit it for free.
                 proto.block(&params);
             }
-            let sol = finish::<T>(params, &weakest, &exact, &nl.name);
+            let sol = finish::<T>(params, &weakest, exact, &nl.name);
             achieved = T::achieved_estimate(sol.proxy, m);
             out.solutions.push(sol);
             out.cells_sat += 1;
@@ -450,7 +467,7 @@ pub fn run_search_from<T: Template>(
         };
     let ctx = ScanCtx {
         et,
-        exact: &exact,
+        exact,
         name: &nl.name,
         cfg,
         cells: &cells,

@@ -17,7 +17,7 @@ use crate::circuit::sim::TruthTables;
 use crate::circuit::Netlist;
 use crate::template::{NonsharedMiter, SharedMiter, SopParams};
 
-use super::engine::{run_search, run_search_from};
+use super::engine::{run_search, run_search_exact};
 
 #[derive(Debug, Clone)]
 pub struct SearchConfig {
@@ -140,9 +140,13 @@ impl MiterCache {
         self.len() == 0
     }
 
-    fn geometry_key(nl: &Netlist, et: u64, cfg: &SearchConfig) -> GeometryKey {
-        let exact = TruthTables::simulate(nl).output_values(nl);
-        (nl.n_inputs(), nl.n_outputs(), cfg.pool, et, exact)
+    fn geometry_key(
+        nl: &Netlist,
+        et: u64,
+        cfg: &SearchConfig,
+        exact: &[u64],
+    ) -> GeometryKey {
+        (nl.n_inputs(), nl.n_outputs(), cfg.pool, et, exact.to_vec())
     }
 
     /// Shared cache protocol. Only an `Arc` handle is touched under the
@@ -175,9 +179,25 @@ impl MiterCache {
         et: u64,
         cfg: &SearchConfig,
     ) -> SearchOutcome {
-        let key = Self::geometry_key(nl, et, cfg);
+        let exact = TruthTables::simulate(nl).output_values(nl);
+        self.search_shared_with(nl, et, cfg, &exact)
+    }
+
+    /// As [`search_shared`] with the exhaustive truth table supplied by
+    /// the caller — the coordinator simulates it once per job (it is
+    /// also the soundness oracle and the store fingerprint input) and
+    /// threads it through here, so neither the key computation nor the
+    /// engine re-simulates. `exact` MUST be `nl`'s exhaustive table.
+    pub fn search_shared_with(
+        &self,
+        nl: &Netlist,
+        et: u64,
+        cfg: &SearchConfig,
+        exact: &[u64],
+    ) -> SearchOutcome {
+        let key = Self::geometry_key(nl, et, cfg, exact);
         let proto = Self::proto_from(&self.shared, key, SharedMiter::build);
-        run_search_from::<SharedMiter>(nl, et, cfg, Some(proto))
+        run_search_exact::<SharedMiter>(nl, et, cfg, Some(proto), exact)
     }
 
     /// As [`search_xpat`], sourcing the prototype from this cache.
@@ -187,9 +207,21 @@ impl MiterCache {
         et: u64,
         cfg: &SearchConfig,
     ) -> SearchOutcome {
-        let key = Self::geometry_key(nl, et, cfg);
+        let exact = TruthTables::simulate(nl).output_values(nl);
+        self.search_xpat_with(nl, et, cfg, &exact)
+    }
+
+    /// As [`search_shared_with`], for the nonshared template.
+    pub fn search_xpat_with(
+        &self,
+        nl: &Netlist,
+        et: u64,
+        cfg: &SearchConfig,
+        exact: &[u64],
+    ) -> SearchOutcome {
+        let key = Self::geometry_key(nl, et, cfg, exact);
         let proto = Self::proto_from(&self.xpat, key, NonsharedMiter::build);
-        run_search_from::<NonsharedMiter>(nl, et, cfg, Some(proto))
+        run_search_exact::<NonsharedMiter>(nl, et, cfg, Some(proto), exact)
     }
 }
 

@@ -1,0 +1,255 @@
+//! Stable job fingerprints for the persistent result store.
+//!
+//! A fingerprint identifies a solved job by *what was computed*, not
+//! where or how fast: the benchmark's exhaustive truth table (function
+//! identity — names are caller-supplied and untrustworthy), the method,
+//! the error threshold, and — for the template methods only — every
+//! [`SearchConfig`] field that can change the search result (pool /
+//! lattice bounds / budget knobs). MUSCAT/MECALS/EXACT never read the
+//! search config, so hashing it for them would only manufacture cache
+//! misses when a user tweaks `--time-ms` between sweeps.
+//!
+//! `cell_workers` is deliberately excluded (per the store design): the
+//! canonical scan is deterministic across worker counts, and the
+//! sequential scan agrees with it on the committed best area on the
+//! paper benchmarks (pinned by the engine's determinism tests), so the
+//! same job at any worker count hits the same store slot. The residual
+//! caveat is documented: the *scatter* (`all_points`) of a cumulative
+//! 1-worker scan can differ from a canonical scan's, so a store written
+//! at one mode serves the other mode's scatter — the figure-critical
+//! best area is the invariant, not the enumeration order.
+//! `share_blocked_models` IS included — it can change which models are
+//! enumerated.
+//!
+//! The hash is a hand-rolled FNV-1a/64 over a tagged little-endian byte
+//! serialization. `std::hash` is not used because `DefaultHasher` is
+//! explicitly unstable across releases, and fingerprints live on disk
+//! across toolchains and machines.
+
+use std::fmt;
+
+use crate::coordinator::Method;
+use crate::search::SearchConfig;
+
+/// A 64-bit content fingerprint, displayed as 16 lowercase hex digits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u64);
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+impl Fingerprint {
+    /// Parse the 16-hex-digit form produced by `Display`.
+    pub fn parse(s: &str) -> Option<Fingerprint> {
+        if s.len() != 16 {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok().map(Fingerprint)
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x00000100000001b3;
+
+/// Incremental FNV-1a/64 with per-field domain tags, so adjacent fields
+/// cannot alias (e.g. `pool=1, et=2` vs `pool=12, et=<empty>`).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(FNV_OFFSET)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(FNV_PRIME);
+    }
+
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    /// Start a new field: tag byte + implicit separator.
+    fn field(&mut self, tag: u8) {
+        self.byte(0xFE);
+        self.byte(tag);
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        for b in s.as_bytes() {
+            self.byte(*b);
+        }
+    }
+}
+
+/// Fingerprint of one (function, method, ET, search-config) job.
+///
+/// `exact` is the exhaustive output table (`2^n` entries) of the
+/// benchmark netlist; `n`/`m` are its input/output counts (included
+/// explicitly so two functions whose tables happen to agree on a prefix
+/// cannot alias).
+pub fn job_fingerprint(
+    n: usize,
+    m: usize,
+    exact: &[u64],
+    method: Method,
+    et: u64,
+    cfg: &SearchConfig,
+) -> Fingerprint {
+    let mut h = Fnv::new();
+    h.field(0x01);
+    h.u64(n as u64);
+    h.field(0x02);
+    h.u64(m as u64);
+    h.field(0x03);
+    h.u64(exact.len() as u64);
+    for &v in exact {
+        h.u64(v);
+    }
+    h.field(0x04);
+    h.str(method.name());
+    h.field(0x05);
+    h.u64(et);
+    // Search-relevant config: pool / lattice bounds / budget knobs.
+    // NOT cell_workers (determinism-neutral, see module docs), and not
+    // at all for the baseline/exact methods, which never read the
+    // config — their results must serve across config changes.
+    if matches!(method, Method::Shared | Method::Xpat) {
+        h.field(0x06);
+        h.u64(cfg.pool as u64);
+        h.field(0x07);
+        h.u64(cfg.solutions_per_cell as u64);
+        h.field(0x08);
+        h.u64(cfg.max_sat_cells as u64);
+        h.field(0x09);
+        match cfg.conflict_budget {
+            None => h.byte(0),
+            Some(b) => {
+                h.byte(1);
+                h.u64(b);
+            }
+        }
+        h.field(0x0A);
+        h.u64(cfg.time_budget_ms);
+        h.field(0x0B);
+        h.byte(cfg.share_blocked_models as u8);
+    }
+    Fingerprint(h.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SearchConfig {
+        SearchConfig::default()
+    }
+
+    fn fp(et: u64, c: &SearchConfig) -> Fingerprint {
+        job_fingerprint(4, 3, &[0, 1, 2, 3], Method::Shared, et, c)
+    }
+
+    #[test]
+    fn stable_across_worker_counts() {
+        let mut a = cfg();
+        a.cell_workers = 1;
+        let mut b = cfg();
+        b.cell_workers = 8;
+        assert_eq!(fp(2, &a), fp(2, &b), "cell_workers must not key the store");
+    }
+
+    #[test]
+    fn sensitive_to_search_relevant_fields() {
+        let base = fp(2, &cfg());
+        assert_ne!(base, fp(3, &cfg()), "et");
+        let mut c = cfg();
+        c.pool += 1;
+        assert_ne!(base, fp(2, &c), "pool");
+        let mut c = cfg();
+        c.solutions_per_cell += 1;
+        assert_ne!(base, fp(2, &c), "solutions_per_cell");
+        let mut c = cfg();
+        c.max_sat_cells += 1;
+        assert_ne!(base, fp(2, &c), "max_sat_cells");
+        let mut c = cfg();
+        c.conflict_budget = None;
+        assert_ne!(base, fp(2, &c), "conflict_budget");
+        let mut c = cfg();
+        c.time_budget_ms += 1;
+        assert_ne!(base, fp(2, &c), "time_budget_ms");
+        let mut c = cfg();
+        c.share_blocked_models = true;
+        assert_ne!(base, fp(2, &c), "share_blocked_models");
+    }
+
+    #[test]
+    fn sensitive_to_function_and_method() {
+        let base = fp(2, &cfg());
+        let other_tt =
+            job_fingerprint(4, 3, &[0, 1, 2, 4], Method::Shared, 2, &cfg());
+        assert_ne!(base, other_tt, "truth table");
+        let other_m = job_fingerprint(4, 3, &[0, 1, 2, 3], Method::Xpat, 2, &cfg());
+        assert_ne!(base, other_m, "method");
+    }
+
+    #[test]
+    fn baseline_methods_ignore_search_config() {
+        // MUSCAT/MECALS/EXACT never read SearchConfig, so their store
+        // slots must survive config tweaks between sweeps.
+        let mut other = cfg();
+        other.pool += 3;
+        other.time_budget_ms /= 2;
+        other.conflict_budget = None;
+        for m in [Method::Muscat, Method::Mecals, Method::Exact] {
+            let a = job_fingerprint(4, 3, &[0, 1, 2, 3], m, 2, &cfg());
+            let b = job_fingerprint(4, 3, &[0, 1, 2, 3], m, 2, &other);
+            assert_eq!(a, b, "{}", m.name());
+        }
+        // ...while the template methods stay config-sensitive.
+        let a = job_fingerprint(4, 3, &[0, 1, 2, 3], Method::Shared, 2, &cfg());
+        let b = job_fingerprint(4, 3, &[0, 1, 2, 3], Method::Shared, 2, &other);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn display_parse_round_trip() {
+        let f = fp(2, &cfg());
+        assert_eq!(Fingerprint::parse(&f.to_string()), Some(f));
+        assert_eq!(f.to_string().len(), 16);
+        assert!(Fingerprint::parse("xyz").is_none());
+        assert!(Fingerprint::parse("0123").is_none());
+    }
+
+    #[test]
+    fn known_value_pins_cross_version_stability() {
+        // FNV-1a over a fixed input must never change across releases:
+        // this value is what an existing on-disk store was keyed with.
+        let f = job_fingerprint(
+            1,
+            1,
+            &[0, 1],
+            Method::Shared,
+            0,
+            &SearchConfig {
+                pool: 2,
+                solutions_per_cell: 1,
+                max_sat_cells: 1,
+                conflict_budget: Some(10),
+                time_budget_ms: 1000,
+                cell_workers: 1,
+                share_blocked_models: false,
+            },
+        );
+        // Computed independently (reference FNV-1a implementation) at
+        // introduction time; a mismatch means the serialization changed
+        // and every existing store on disk silently misses.
+        assert_eq!(f, Fingerprint(0xda9fb58d1e40d6a3));
+        assert_eq!(f.to_string(), "da9fb58d1e40d6a3");
+    }
+}

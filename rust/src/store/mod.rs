@@ -1,0 +1,25 @@
+//! Persistent result store: content-addressed caching of solved jobs
+//! and the operator library that serves deployment-time lookups.
+//!
+//! * [`fingerprint`] — stable (FNV-1a/64) job identity over the
+//!   benchmark truth table, method, ET and the search-relevant config
+//!   fields; worker counts are excluded (determinism-neutral).
+//! * [`wal`] — append-only JSONL log of [`RunRecord`]s keyed by
+//!   fingerprint, with torn-tail recovery and last-writer-wins replay.
+//! * [`oplib`] — Pareto-frontier view (area vs. error) over the store,
+//!   exporting operators as truth tables the NN layer consumes.
+//!
+//! `coordinator::sweep::run_sweep_stored` is the producer seam: jobs
+//! already fingerprinted in the store are served from disk (marked
+//! `cached`), fresh results are appended as each job commits — a sweep
+//! killed at any point resumes where it stopped.
+//!
+//! [`RunRecord`]: crate::coordinator::RunRecord
+
+pub mod fingerprint;
+pub mod oplib;
+pub mod wal;
+
+pub use fingerprint::{job_fingerprint, Fingerprint};
+pub use oplib::{OpEntry, OpLib};
+pub use wal::Store;

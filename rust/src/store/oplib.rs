@@ -1,0 +1,338 @@
+//! The operator library: a Pareto view over the persistent store.
+//!
+//! The store accumulates solved jobs; the deployment-time question is
+//! the inverse lookup — *given a benchmark and an error budget, which
+//! stored operator should the accelerator instantiate?* This is the
+//! per-layer operator-selection primitive of QoS-Nets-style NN
+//! deployment (see PAPERS.md): the NN layer asks for "the cheapest 4x4
+//! multiplier whose worst-case error is within my budget" and gets a
+//! truth table it can drop into `MultLut::from_values`.
+//!
+//! [`OpLib::from_store`] folds every usable record (finite area, a
+//! non-empty exported truth table, no error) into per-benchmark entry
+//! lists; [`OpLib::frontier`] reduces one benchmark to its Pareto
+//! frontier (area vs. achieved max error — an entry is kept iff no
+//! stored operator has both a smaller-or-equal error and a smaller
+//! area); [`OpLib::best`] answers the budget query by *achieved*
+//! `max_err`, not the ET the job was run at, so an ET=4 search that
+//! happened to land a max-error-2 operator serves ET≥2 budgets too.
+//!
+//! Every export path re-verifies the operator against the exhaustive
+//! oracle ([`OpLib::verify`]) — records come from disk and disks/hands
+//! are not part of the soundness argument.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::circuit::generators::benchmark_by_name;
+use crate::circuit::sim::TruthTables;
+use crate::coordinator::Method;
+
+use super::fingerprint::Fingerprint;
+use super::wal::Store;
+
+/// One stored operator, ready to serve.
+#[derive(Debug, Clone)]
+pub struct OpEntry {
+    pub bench: &'static str,
+    pub method: Method,
+    /// The ET the producing job was run at.
+    pub et: u64,
+    /// The operator's *achieved* worst-case error (≤ `et`) — the field
+    /// budget queries match against.
+    pub max_err: u64,
+    pub mean_err: f64,
+    pub area: f64,
+    /// Exhaustive output table (`2^n` entries), LSB-first input
+    /// indexing — `MultLut::from_values` shape.
+    pub values: Vec<u64>,
+    pub fingerprint: Fingerprint,
+}
+
+/// In-memory library view; rebuild cheaply from the store after sweeps.
+pub struct OpLib {
+    /// bench -> entries sorted by (max_err, area, method name, fp) —
+    /// a deterministic order regardless of WAL history.
+    per_bench: BTreeMap<&'static str, Vec<OpEntry>>,
+}
+
+impl OpLib {
+    pub fn from_store(store: &Store) -> OpLib {
+        let mut per_bench: BTreeMap<&'static str, Vec<OpEntry>> = BTreeMap::new();
+        for (fp, rec) in store.records() {
+            if rec.error.is_some() || !rec.area.is_finite() || rec.values.is_empty() {
+                continue;
+            }
+            per_bench.entry(rec.bench).or_default().push(OpEntry {
+                bench: rec.bench,
+                method: rec.method,
+                et: rec.et,
+                max_err: rec.max_err,
+                mean_err: rec.mean_err,
+                area: rec.area,
+                values: rec.values,
+                fingerprint: fp,
+            });
+        }
+        for entries in per_bench.values_mut() {
+            entries.sort_by(|a, b| {
+                (a.max_err, a.area, a.method.name(), a.fingerprint).partial_cmp(&(
+                    b.max_err,
+                    b.area,
+                    b.method.name(),
+                    b.fingerprint,
+                ))
+                .expect("areas are finite here")
+            });
+        }
+        OpLib { per_bench }
+    }
+
+    /// Benchmarks with at least one stored operator.
+    pub fn benches(&self) -> Vec<&'static str> {
+        self.per_bench.keys().copied().collect()
+    }
+
+    /// Total operators across all benchmarks.
+    pub fn len(&self) -> usize {
+        self.per_bench.values().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The benchmark's Pareto frontier in ascending `max_err` order:
+    /// each kept entry strictly improves area over everything with
+    /// smaller-or-equal error. Dominated operators (bigger AND no more
+    /// accurate than a kept one) are folded away.
+    pub fn frontier(&self, bench: &str) -> Vec<&OpEntry> {
+        let mut out: Vec<&OpEntry> = Vec::new();
+        let mut best_area = f64::INFINITY;
+        for e in self.per_bench.get(bench).map(Vec::as_slice).unwrap_or(&[]) {
+            // Entries arrive sorted by (max_err, area): within one
+            // max_err the first is the cheapest, and a later entry only
+            // earns a slot by beating every lower-error area.
+            if e.area < best_area {
+                best_area = e.area;
+                out.push(e);
+            }
+        }
+        out
+    }
+
+    /// The cheapest stored operator sound for error budget `et`:
+    /// minimum area among entries with `max_err <= et`, ties broken
+    /// deterministically by (max_err, method name, fingerprint).
+    pub fn best(&self, bench: &str, et: u64) -> Option<&OpEntry> {
+        self.per_bench
+            .get(bench)?
+            .iter()
+            .filter(|e| e.max_err <= et)
+            .min_by(|a, b| {
+                (a.area, a.max_err, a.method.name(), a.fingerprint)
+                    .partial_cmp(&(b.area, b.max_err, b.method.name(), b.fingerprint))
+                    .expect("areas are finite here")
+            })
+    }
+
+    /// Re-verify a stored operator against the exhaustive oracle: the
+    /// benchmark must be known, the table exhaustive, and every output
+    /// within the entry's recorded `max_err` of the exact value.
+    pub fn verify(entry: &OpEntry) -> Result<()> {
+        let bench = benchmark_by_name(entry.bench).ok_or_else(|| {
+            anyhow!("{}: not a known benchmark, cannot re-verify", entry.bench)
+        })?;
+        let nl = bench.netlist();
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        if entry.values.len() != exact.len() {
+            bail!(
+                "{}: stored table has {} entries, oracle has {}",
+                entry.bench,
+                entry.values.len(),
+                exact.len()
+            );
+        }
+        for (i, (&e, &a)) in exact.iter().zip(&entry.values).enumerate() {
+            if e.abs_diff(a) > entry.max_err {
+                bail!(
+                    "{}: point {i}: |{e} - {a}| > recorded max_err {}",
+                    entry.bench,
+                    entry.max_err
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Render one operator as a portable truth-table file: comment
+    /// header, then one output value per line in input-index order.
+    pub fn export_tt(entry: &OpEntry) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "# sxpat operator bench={} method={} et={} max_err={} area={:.4} fp={}",
+            entry.bench,
+            entry.method.name(),
+            entry.et,
+            entry.max_err,
+            entry.area,
+            entry.fingerprint,
+        );
+        let _ = writeln!(
+            s,
+            "# {} output values, input index = sum_i x_i << i (LSB-first)",
+            entry.values.len()
+        );
+        for v in &entry.values {
+            let _ = writeln!(s, "{v}");
+        }
+        s
+    }
+
+    /// Parse [`export_tt`](Self::export_tt)'s format back to values.
+    pub fn parse_tt(src: &str) -> Result<Vec<u64>> {
+        src.lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .map(|l| l.parse::<u64>().map_err(|_| anyhow!("bad value line {l:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RunRecord;
+    use std::path::PathBuf;
+
+    fn entry_rec(
+        bench: &'static str,
+        method: Method,
+        et: u64,
+        max_err: u64,
+        area: f64,
+        values: Vec<u64>,
+    ) -> RunRecord {
+        RunRecord {
+            bench,
+            method,
+            et,
+            area,
+            max_err,
+            mean_err: 0.1,
+            proxy: (0, 0),
+            elapsed_ms: 1,
+            cached: false,
+            values,
+            all_points: Vec::new(),
+            error: None,
+        }
+    }
+
+    fn tmp_store(tag: &str) -> (PathBuf, Store) {
+        let d = std::env::temp_dir()
+            .join(format!("sxpat_oplib_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        let st = Store::open(&d).unwrap();
+        (d, st)
+    }
+
+    #[test]
+    fn fold_best_and_frontier() {
+        let (dir, st) = tmp_store("fold");
+        let vals = vec![0u64; 16];
+        st.append(
+            Fingerprint(1),
+            &entry_rec("adder_i4", Method::Shared, 1, 1, 8.0, vals.clone()),
+        )
+        .unwrap();
+        st.append(
+            Fingerprint(2),
+            &entry_rec("adder_i4", Method::Xpat, 1, 1, 10.0, vals.clone()),
+        )
+        .unwrap();
+        st.append(
+            Fingerprint(3),
+            &entry_rec("adder_i4", Method::Shared, 2, 2, 5.0, vals.clone()),
+        )
+        .unwrap();
+        // Dominated: same error as fp=3 but bigger.
+        st.append(
+            Fingerprint(4),
+            &entry_rec("adder_i4", Method::Muscat, 2, 2, 9.0, vals.clone()),
+        )
+        .unwrap();
+        // Unusable records never enter the library.
+        st.append(
+            Fingerprint(5),
+            &entry_rec("adder_i4", Method::Shared, 4, u64::MAX, f64::INFINITY, vec![]),
+        )
+        .unwrap();
+        let lib = OpLib::from_store(&st);
+        assert_eq!(lib.len(), 4);
+        assert_eq!(lib.benches(), vec!["adder_i4"]);
+
+        // Budget queries go by achieved error, minimum area wins.
+        assert_eq!(lib.best("adder_i4", 0).map(|e| e.fingerprint), None);
+        assert_eq!(lib.best("adder_i4", 1).unwrap().fingerprint, Fingerprint(1));
+        assert_eq!(lib.best("adder_i4", 2).unwrap().fingerprint, Fingerprint(3));
+        assert_eq!(lib.best("adder_i4", 99).unwrap().fingerprint, Fingerprint(3));
+        assert!(lib.best("mult_i4", 1).is_none());
+
+        // Frontier: (err 1, area 8.0) then (err 2, area 5.0).
+        let front: Vec<Fingerprint> =
+            lib.frontier("adder_i4").iter().map(|e| e.fingerprint).collect();
+        assert_eq!(front, vec![Fingerprint(1), Fingerprint(3)]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn verify_checks_against_oracle() {
+        let bench = benchmark_by_name("adder_i4").unwrap();
+        let nl = bench.netlist();
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        let good = OpEntry {
+            bench: "adder_i4",
+            method: Method::Exact,
+            et: 0,
+            max_err: 0,
+            mean_err: 0.0,
+            area: 1.0,
+            values: exact.clone(),
+            fingerprint: Fingerprint(1),
+        };
+        assert!(OpLib::verify(&good).is_ok());
+
+        let mut bad = good.clone();
+        bad.values[3] += 5; // err 5 > recorded max_err 0
+        assert!(OpLib::verify(&bad).is_err());
+
+        let mut short = good.clone();
+        short.values.pop();
+        assert!(OpLib::verify(&short).is_err());
+
+        let mut unknown = good;
+        unknown.bench = "divider_i4";
+        assert!(OpLib::verify(&unknown).is_err());
+    }
+
+    #[test]
+    fn export_parse_round_trip() {
+        let e = OpEntry {
+            bench: "mult_i4",
+            method: Method::Shared,
+            et: 2,
+            max_err: 2,
+            mean_err: 0.4,
+            area: 12.25,
+            values: vec![0, 1, 2, 3, 4, 5, 6, 9],
+            fingerprint: Fingerprint(0xFEED),
+        };
+        let text = OpLib::export_tt(&e);
+        assert!(text.starts_with("# sxpat operator bench=mult_i4"));
+        assert_eq!(OpLib::parse_tt(&text).unwrap(), e.values);
+    }
+}

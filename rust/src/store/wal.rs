@@ -1,0 +1,367 @@
+//! Append-only JSONL write-ahead log of completed [`RunRecord`]s keyed
+//! by job fingerprint — the durable half of the result store.
+//!
+//! On-disk layout (`<dir>/wal.jsonl`): one line per committed record,
+//!
+//! ```text
+//! {"fp":"<16 hex digits>","record":{...RunRecord::to_json()...}}
+//! ```
+//!
+//! Crash-safety model (process crashes, not power loss): each append
+//! hands one whole line to the kernel in a single `write_all` before
+//! the in-memory index is updated, so a *process* killed mid-append
+//! leaves at most one torn final line. `Store::open` detects a final
+//! line that does not parse (or lacks its newline), drops it, and
+//! truncates the file back to the last good line so the next append
+//! starts clean — a torn tail never corrupts the record after it. A
+//! malformed line *before* the tail is real corruption and fails the
+//! open loudly rather than silently dropping solved work. Surviving
+//! power loss / kernel crashes would need an `fsync` per append; the
+//! store deliberately does not pay that — every record is recomputable,
+//! so the worst case is re-solving the tail of one sweep.
+//!
+//! Duplicate fingerprints are legal (back-to-back sweeps over
+//! overlapping grids, a record re-solved after failing oracle
+//! re-verification) and resolve last-writer-wins: the in-memory index
+//! keeps the latest occurrence, matching what a full replay of the log
+//! would produce.
+//!
+//! Writer model: **one writing process at a time**. Within a process a
+//! `Store` is freely shared across sweep workers (appends are
+//! mutex-serialized); a second *process* appending to the same
+//! directory concurrently is not supported — the open-time tail repair
+//! and the append-failure rollback both truncate against this
+//! process's view of the file and would cut another writer's committed
+//! lines. Readers of a store no process is writing are always safe.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::RunRecord;
+use crate::util::Json;
+
+use super::fingerprint::Fingerprint;
+
+const WAL_FILE: &str = "wal.jsonl";
+
+struct Inner {
+    /// fp -> latest record (last-writer-wins).
+    map: HashMap<Fingerprint, RunRecord>,
+    /// Append handle, positioned at end-of-log.
+    file: File,
+    /// Total lines appended over the store's life, including
+    /// overwritten duplicates (telemetry; `len()` is the deduped size).
+    lines: usize,
+    /// Byte length of the WAL after the last good line — the rollback
+    /// point when an append fails partway (see [`Store::append`]).
+    end: u64,
+}
+
+/// The persistent result store: an in-memory fingerprint index over an
+/// append-only JSONL WAL. Shareable across sweep workers (`&Store` is
+/// `Sync`; all mutation is behind one mutex — appends are rare relative
+/// to SAT solving, so contention is irrelevant).
+pub struct Store {
+    dir: PathBuf,
+    inner: Mutex<Inner>,
+}
+
+impl Store {
+    /// Open (creating if needed) the store in `dir`, replaying the WAL.
+    pub fn open(dir: &Path) -> Result<Store> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating store dir {}", dir.display()))?;
+        let wal_path = dir.join(WAL_FILE);
+        let mut map = HashMap::new();
+        let mut lines = 0usize;
+        let mut keep_bytes = 0u64;
+        if wal_path.exists() {
+            let text = std::fs::read_to_string(&wal_path)
+                .with_context(|| format!("reading {}", wal_path.display()))?;
+            let mut offset = 0u64;
+            for (i, raw) in text.split_inclusive('\n').enumerate() {
+                offset += raw.len() as u64;
+                if !raw.ends_with('\n') {
+                    // Only the final piece can lack its newline, and
+                    // under the single-`write_all` append model a
+                    // cut-off append is exactly this shape (even if the
+                    // prefix happens to parse): a torn tail. Drop it;
+                    // the truncate below repairs the file so the next
+                    // append starts on a clean line.
+                    break;
+                }
+                let line = raw.trim_end_matches('\n').trim_end_matches('\r');
+                if line.is_empty() {
+                    keep_bytes = offset;
+                    continue;
+                }
+                match parse_wal_line(line) {
+                    Ok((fp, rec)) => {
+                        map.insert(fp, rec);
+                        lines += 1;
+                        keep_bytes = offset;
+                    }
+                    // A newline-terminated line that fails to parse is
+                    // NOT a crash artefact — appends are whole lines —
+                    // so even in tail position it is real corruption
+                    // and must fail loudly, not be silently truncated
+                    // away with a solved record inside it.
+                    Err(e) => {
+                        bail!(
+                            "{}: corrupt WAL line {}: {e:#}",
+                            wal_path.display(),
+                            i + 1
+                        );
+                    }
+                }
+            }
+            if keep_bytes < text.len() as u64 {
+                let f = OpenOptions::new()
+                    .write(true)
+                    .open(&wal_path)
+                    .with_context(|| format!("repairing {}", wal_path.display()))?;
+                f.set_len(keep_bytes).context("truncating torn WAL tail")?;
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&wal_path)
+            .with_context(|| format!("opening {} for append", wal_path.display()))?;
+        Ok(Store {
+            dir: dir.to_path_buf(),
+            inner: Mutex::new(Inner { map, file, lines, end: keep_bytes }),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of distinct fingerprints stored.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total WAL lines ever appended (≥ `len()`; the excess is
+    /// last-writer-wins overwrites).
+    pub fn lines(&self) -> usize {
+        self.inner.lock().unwrap().lines
+    }
+
+    /// Look a completed job up by fingerprint.
+    pub fn get(&self, fp: Fingerprint) -> Option<RunRecord> {
+        self.inner.lock().unwrap().map.get(&fp).cloned()
+    }
+
+    pub fn contains(&self, fp: Fingerprint) -> bool {
+        self.inner.lock().unwrap().map.contains_key(&fp)
+    }
+
+    /// Commit one record: append one whole line to the WAL (a single
+    /// `write_all`, so the kernel sees it before the index does — see
+    /// the module docs for the exact crash model) and insert into the
+    /// in-memory map.
+    ///
+    /// A *failed* append (disk full, I/O error) rolls the file back to
+    /// the last good line before returning the error: a partial line
+    /// left in place would otherwise glue onto the next append and turn
+    /// into mid-log corruption that `open` refuses to load.
+    pub fn append(&self, fp: Fingerprint, rec: &RunRecord) -> Result<()> {
+        let mut line = wal_line(fp, rec);
+        line.push('\n');
+        let mut inner = self.inner.lock().unwrap();
+        if let Err(e) = inner.file.write_all(line.as_bytes()) {
+            let end = inner.end;
+            // Best effort: if the truncate also fails the torn bytes
+            // stay, and the next open's tail repair handles them as
+            // long as nothing else is appended after.
+            let _ = inner.file.set_len(end);
+            return Err(e).context("appending WAL line");
+        }
+        inner.end += line.len() as u64;
+        inner.map.insert(fp, rec.clone());
+        inner.lines += 1;
+        Ok(())
+    }
+
+    /// Snapshot of every stored (fingerprint, record) pair, in
+    /// deterministic fingerprint order — the oplib fold input.
+    pub fn records(&self) -> Vec<(Fingerprint, RunRecord)> {
+        let inner = self.inner.lock().unwrap();
+        let mut out: Vec<(Fingerprint, RunRecord)> =
+            inner.map.iter().map(|(k, v)| (*k, v.clone())).collect();
+        out.sort_by_key(|(fp, _)| *fp);
+        out
+    }
+}
+
+/// Render one WAL line (without the trailing newline). Deterministic:
+/// `Json::render` sorts keys and escapes to ASCII.
+fn wal_line(fp: Fingerprint, rec: &RunRecord) -> String {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("fp".to_string(), Json::Str(fp.to_string()));
+    m.insert("record".to_string(), rec.to_json());
+    Json::Obj(m).render()
+}
+
+fn parse_wal_line(line: &str) -> Result<(Fingerprint, RunRecord)> {
+    let j = Json::parse(line)?;
+    let fp_str = j
+        .get("fp")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("missing \"fp\""))?;
+    let fp = Fingerprint::parse(fp_str)
+        .ok_or_else(|| anyhow!("bad fingerprint {fp_str:?}"))?;
+    let rec = RunRecord::from_json(
+        j.get("record").ok_or_else(|| anyhow!("missing \"record\""))?,
+    )?;
+    Ok((fp, rec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Method;
+
+    fn rec(et: u64, area: f64) -> RunRecord {
+        RunRecord {
+            bench: "adder_i4",
+            method: Method::Shared,
+            et,
+            area,
+            max_err: et,
+            mean_err: 0.5,
+            proxy: (1, 2),
+            elapsed_ms: 9,
+            cached: false,
+            values: vec![0, 1, 2, 3],
+            all_points: vec![(1, 2, area)],
+            error: None,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("sxpat_wal_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn append_get_reopen() {
+        let dir = tmp_dir("basic");
+        let fp = Fingerprint(0xABCD);
+        {
+            let st = Store::open(&dir).unwrap();
+            assert!(st.is_empty());
+            st.append(fp, &rec(2, 10.0)).unwrap();
+            assert_eq!(st.get(fp).unwrap().area, 10.0);
+            assert_eq!(st.len(), 1);
+        }
+        let st = Store::open(&dir).unwrap();
+        assert_eq!(st.len(), 1);
+        assert_eq!(st.get(fp).unwrap(), rec(2, 10.0));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn duplicate_keys_resolve_last_writer_wins() {
+        let dir = tmp_dir("lww");
+        let fp = Fingerprint(7);
+        {
+            let st = Store::open(&dir).unwrap();
+            st.append(fp, &rec(2, 10.0)).unwrap();
+            st.append(fp, &rec(2, 8.5)).unwrap();
+            assert_eq!(st.len(), 1, "one key");
+            assert_eq!(st.lines(), 2, "two physical lines");
+            assert_eq!(st.get(fp).unwrap().area, 8.5);
+        }
+        let st = Store::open(&dir).unwrap();
+        assert_eq!(st.get(fp).unwrap().area, 8.5, "replay keeps the last");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_and_repaired() {
+        let dir = tmp_dir("torn");
+        {
+            let st = Store::open(&dir).unwrap();
+            st.append(Fingerprint(1), &rec(1, 5.0)).unwrap();
+            st.append(Fingerprint(2), &rec(2, 6.0)).unwrap();
+        }
+        // Simulate a crash mid-append: half a line, no newline.
+        let wal = dir.join(WAL_FILE);
+        let mut f = OpenOptions::new().append(true).open(&wal).unwrap();
+        f.write_all(b"{\"fp\":\"00000000000000").unwrap();
+        drop(f);
+        let st = Store::open(&dir).unwrap();
+        assert_eq!(st.len(), 2, "torn tail dropped, good lines kept");
+        // The repair truncated the torn bytes: a fresh append and reopen
+        // must see 3 clean records.
+        st.append(Fingerprint(3), &rec(4, 7.0)).unwrap();
+        drop(st);
+        let st = Store::open(&dir).unwrap();
+        assert_eq!(st.len(), 3);
+        assert_eq!(st.get(Fingerprint(3)).unwrap().area, 7.0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn complete_parsable_tail_without_newline_is_torn() {
+        // Even a tail that parses is torn if its newline is missing —
+        // keeping it would glue the next append onto it.
+        let dir = tmp_dir("noeol");
+        {
+            let st = Store::open(&dir).unwrap();
+            st.append(Fingerprint(1), &rec(1, 5.0)).unwrap();
+            st.append(Fingerprint(2), &rec(2, 6.0)).unwrap();
+        }
+        let wal = dir.join(WAL_FILE);
+        let text = std::fs::read_to_string(&wal).unwrap();
+        std::fs::write(&wal, text.trim_end_matches('\n')).unwrap();
+        let st = Store::open(&dir).unwrap();
+        assert_eq!(st.len(), 1, "newline-less tail treated as torn");
+        assert!(st.get(Fingerprint(1)).is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_middle_line_fails_loudly() {
+        let dir = tmp_dir("midcorrupt");
+        {
+            let st = Store::open(&dir).unwrap();
+            st.append(Fingerprint(1), &rec(1, 5.0)).unwrap();
+        }
+        let wal = dir.join(WAL_FILE);
+        let mut text = std::fs::read_to_string(&wal).unwrap();
+        text = format!("garbage not json\n{text}");
+        std::fs::write(&wal, text).unwrap();
+        assert!(Store::open(&dir).is_err(), "mid-log corruption must not be silent");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn error_strings_survive_the_wal() {
+        let dir = tmp_dir("err");
+        let mut r = rec(2, f64::INFINITY);
+        r.error = Some("worker panicked: \"boom\"\n\tat cell (3, 4)".into());
+        r.values = Vec::new();
+        {
+            let st = Store::open(&dir).unwrap();
+            st.append(Fingerprint(9), &r).unwrap();
+        }
+        let st = Store::open(&dir).unwrap();
+        assert_eq!(st.get(Fingerprint(9)).unwrap(), r);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

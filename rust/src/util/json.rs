@@ -1,9 +1,13 @@
-//! Minimal JSON reader — just enough for `artifacts/manifest.json`
-//! (objects, strings, integers/floats, bools, null, arrays). No escapes
-//! beyond `\" \\ \/ \n \t`, no unicode surrogates: the manifest is
-//! machine-written by `python/compile/aot.py`.
+//! Minimal JSON reader/writer — enough for `artifacts/manifest.json`
+//! and the result store's WAL (`store::wal`): objects, strings,
+//! integers/floats, bools, null, arrays. The parser accepts the full
+//! JSON escape set (including `\uXXXX` with surrogate pairs) and raw
+//! UTF-8; the writer emits ASCII-only output (non-ASCII escaped as
+//! `\uXXXX`) with object keys in sorted order, so rendering is
+//! deterministic and a rendered value re-parses to itself.
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 
 use anyhow::{bail, Result};
 
@@ -50,17 +54,199 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
             _ => None,
         }
     }
+
+    /// Serialize to a single-line JSON string. Deterministic: object
+    /// keys are already sorted (`BTreeMap`), no insignificant
+    /// whitespace, non-ASCII escaped. `Num` values that JSON cannot
+    /// represent (NaN/±inf) render as `null` — callers that need them
+    /// must encode them at the schema level (see
+    /// `coordinator::jobs::RunRecord::to_json`).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(x) if x.is_finite() => {
+                // Rust's shortest round-trip float formatting; integral
+                // values print without a fractional part and re-parse
+                // to the same f64.
+                let _ = write!(out, "{x}");
+            }
+            Json::Num(_) => out.push_str("null"),
+            Json::Str(s) => render_string(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_string(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn render_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c if c.is_ascii() => out.push(c),
+            c => {
+                // Non-ASCII: escape so the output is pure ASCII. Chars
+                // outside the BMP become a UTF-16 surrogate pair, the
+                // exact form the parser reassembles.
+                let cp = c as u32;
+                if cp <= 0xFFFF {
+                    let _ = write!(out, "\\u{cp:04x}");
+                } else {
+                    let v = cp - 0x10000;
+                    let hi = 0xD800 + (v >> 10);
+                    let lo = 0xDC00 + (v & 0x3FF);
+                    let _ = write!(out, "\\u{hi:04x}\\u{lo:04x}");
+                }
+            }
+        }
+    }
+    out.push('"');
 }
 
 fn skip_ws(b: &[u8], pos: &mut usize) {
     while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
         *pos += 1;
+    }
+}
+
+/// Parse the 4 hex digits of a `\uXXXX` escape (cursor on the first
+/// digit); advances past them.
+fn parse_hex4(b: &[u8], pos: &mut usize) -> Result<u32> {
+    if *pos + 4 > b.len() {
+        bail!("truncated \\u escape at byte {pos}");
+    }
+    let mut v = 0u32;
+    for _ in 0..4 {
+        let d = match b[*pos] {
+            c @ b'0'..=b'9' => (c - b'0') as u32,
+            c @ b'a'..=b'f' => (c - b'a' + 10) as u32,
+            c @ b'A'..=b'F' => (c - b'A' + 10) as u32,
+            c => bail!("bad hex digit {:?} in \\u escape", c as char),
+        };
+        v = (v << 4) | d;
+        *pos += 1;
+    }
+    Ok(v)
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    // Accumulate raw bytes so multi-byte UTF-8 in the source survives,
+    // then validate once at the end.
+    let mut s: Vec<u8> = Vec::new();
+    loop {
+        match b.get(*pos) {
+            None => bail!("unterminated string"),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(String::from_utf8(s)?);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => s.push(b'"'),
+                    Some(b'\\') => s.push(b'\\'),
+                    Some(b'/') => s.push(b'/'),
+                    Some(b'b') => s.push(0x08),
+                    Some(b'f') => s.push(0x0C),
+                    Some(b'n') => s.push(b'\n'),
+                    Some(b'r') => s.push(b'\r'),
+                    Some(b't') => s.push(b'\t'),
+                    Some(b'u') => {
+                        *pos += 1;
+                        let hi = parse_hex4(b, pos)?;
+                        let cp = if (0xD800..0xDC00).contains(&hi) {
+                            // High surrogate: a low-surrogate escape
+                            // must follow.
+                            if b.get(*pos) != Some(&b'\\') || b.get(*pos + 1) != Some(&b'u') {
+                                bail!("lone high surrogate \\u{hi:04x}");
+                            }
+                            *pos += 2;
+                            let lo = parse_hex4(b, pos)?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                bail!("invalid low surrogate \\u{lo:04x}");
+                            }
+                            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                        } else if (0xDC00..0xE000).contains(&hi) {
+                            bail!("lone low surrogate \\u{hi:04x}");
+                        } else {
+                            hi
+                        };
+                        match char::from_u32(cp) {
+                            Some(c) => {
+                                let mut buf = [0u8; 4];
+                                s.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                            }
+                            None => bail!("invalid codepoint U+{cp:X}"),
+                        }
+                        // parse_hex4 already advanced past the digits.
+                        continue;
+                    }
+                    other => bail!("unsupported escape {other:?}"),
+                }
+                *pos += 1;
+            }
+            Some(&c) => {
+                s.push(c);
+                *pos += 1;
+            }
+        }
     }
 }
 
@@ -125,32 +311,7 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
         }
         b'"' => {
             *pos += 1;
-            let mut s = String::new();
-            loop {
-                match b.get(*pos) {
-                    None => bail!("unterminated string"),
-                    Some(b'"') => {
-                        *pos += 1;
-                        return Ok(Json::Str(s));
-                    }
-                    Some(b'\\') => {
-                        *pos += 1;
-                        match b.get(*pos) {
-                            Some(b'"') => s.push('"'),
-                            Some(b'\\') => s.push('\\'),
-                            Some(b'/') => s.push('/'),
-                            Some(b'n') => s.push('\n'),
-                            Some(b't') => s.push('\t'),
-                            other => bail!("unsupported escape {other:?}"),
-                        }
-                        *pos += 1;
-                    }
-                    Some(&c) => {
-                        s.push(c as char);
-                        *pos += 1;
-                    }
-                }
-            }
+            Ok(Json::Str(parse_string(b, pos)?))
         }
         b't' if b[*pos..].starts_with(b"true") => {
             *pos += 4;
@@ -212,6 +373,65 @@ mod tests {
                 Json::Arr(vec![])
             ])
         );
+    }
+
+    #[test]
+    fn parses_full_escape_set() {
+        assert_eq!(
+            Json::parse(r#""\b\f\r\t\n\"\\\/""#).unwrap(),
+            Json::Str("\u{8}\u{c}\r\t\n\"\\/".into())
+        );
+        assert_eq!(Json::parse(r#""\u0041""#).unwrap(), Json::Str("A".into()));
+        assert_eq!(
+            Json::parse(r#""\u00e9\u20ac""#).unwrap(),
+            Json::Str("é€".into())
+        );
+        // Surrogate pair: U+1F600.
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00""#).unwrap(),
+            Json::Str("\u{1F600}".into())
+        );
+        // Raw (unescaped) UTF-8 survives too.
+        assert_eq!(Json::parse("\"héllo\"").unwrap(), Json::Str("héllo".into()));
+    }
+
+    #[test]
+    fn rejects_bad_unicode_escapes() {
+        assert!(Json::parse(r#""\u12""#).is_err()); // truncated
+        assert!(Json::parse(r#""\uzzzz""#).is_err()); // non-hex
+        assert!(Json::parse(r#""\ud83d""#).is_err()); // lone high surrogate
+        assert!(Json::parse(r#""\ude00""#).is_err()); // lone low surrogate
+        assert!(Json::parse(r#""\ud83d\u0041""#).is_err()); // bad pair
+    }
+
+    #[test]
+    fn render_parse_round_trip() {
+        let src = Json::Obj(
+            [
+                ("s".to_string(), Json::Str("a\n\"b\"\\é\u{1F600}\u{1}".into())),
+                ("n".to_string(), Json::Num(-2.5)),
+                ("i".to_string(), Json::Num(1e19)),
+                ("b".to_string(), Json::Bool(true)),
+                ("z".to_string(), Json::Null),
+                (
+                    "a".to_string(),
+                    Json::Arr(vec![Json::Num(1.0), Json::Str("x".into())]),
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        let text = src.render();
+        assert!(text.is_ascii(), "renderer must emit ASCII: {text}");
+        assert_eq!(Json::parse(&text).unwrap(), src);
+        // Deterministic: render twice, byte-identical.
+        assert_eq!(text, Json::parse(&text).unwrap().render());
+    }
+
+    #[test]
+    fn render_nonfinite_as_null() {
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
     }
 
     #[test]

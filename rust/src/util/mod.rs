@@ -1,6 +1,7 @@
 //! Small in-tree utilities replacing crates the offline build environment
-//! does not provide: a splittable PRNG (`rng`), a minimal JSON reader for
-//! the artifact manifest (`json`), and a tiny argv parser (`cli`).
+//! does not provide: a splittable PRNG (`rng`), a minimal JSON
+//! reader/writer for the artifact manifest and the result-store WAL
+//! (`json`), and a tiny argv parser (`cli`).
 
 pub mod cli;
 pub mod json;

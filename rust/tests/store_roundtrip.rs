@@ -1,0 +1,288 @@
+//! Persistent-store integration: the resumable-sweep contract end to
+//! end — solve everything via SAT once, serve 100% from disk on the
+//! rerun with byte-identical figures (modulo the cached/elapsed
+//! columns), survive crash-torn WALs, and serve sound operators out of
+//! the library. Part of the tier-1 test path (plain `cargo test`).
+
+use std::path::PathBuf;
+
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::circuit::sim::TruthTables;
+use sxpat::coordinator::{run_sweep_stored, Method, RunRecord, SweepPlan};
+use sxpat::nn::MultLut;
+use sxpat::report::fig5_csv;
+use sxpat::search::SearchConfig;
+use sxpat::store::{job_fingerprint, OpLib, Store};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("sxpat_store_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn tiny_plan() -> SweepPlan {
+    SweepPlan {
+        benches: vec![benchmark_by_name("adder_i4").unwrap()],
+        methods: vec![Method::Shared, Method::Muscat],
+        ets: Some(vec![1, 2]),
+        search: SearchConfig {
+            pool: 5,
+            solutions_per_cell: 1,
+            max_sat_cells: 1,
+            conflict_budget: Some(20_000),
+            time_budget_ms: 20_000,
+            ..Default::default()
+        },
+        workers: 2,
+    }
+}
+
+/// Everything that must survive the store round trip (all fields except
+/// the provenance pair `elapsed_ms`/`cached`).
+fn result_key(r: &RunRecord) -> impl PartialEq + std::fmt::Debug {
+    (
+        r.bench,
+        r.method,
+        r.et,
+        r.area.to_bits(),
+        r.max_err,
+        r.mean_err.to_bits(),
+        r.proxy,
+        r.values.clone(),
+        r.all_points.len(),
+        r.error.clone(),
+    )
+}
+
+/// Drop the trailing `cached` column from every fig5 CSV row.
+fn strip_cached_column(csv: &str) -> String {
+    csv.lines()
+        .map(|l| match l.rsplit_once(',') {
+            Some((head, _)) => head.to_string(),
+            None => l.to_string(),
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn second_sweep_is_served_entirely_from_the_store() {
+    let dir = tmp_dir("resume");
+    let plan = tiny_plan();
+
+    let store = Store::open(&dir).unwrap();
+    let fresh = run_sweep_stored(&plan, Some(&store));
+    assert!(fresh.iter().all(|r| r.error.is_none()));
+    assert!(
+        fresh.iter().all(|r| !r.cached),
+        "first run must solve everything via SAT"
+    );
+    assert_eq!(store.len(), fresh.len(), "every job committed to the WAL");
+    drop(store);
+
+    // Fresh process over the same dir: 100% store hits, zero solves.
+    let store = Store::open(&dir).unwrap();
+    let resumed = run_sweep_stored(&plan, Some(&store));
+    assert_eq!(resumed.len(), fresh.len());
+    assert!(
+        resumed.iter().all(|r| r.cached),
+        "second run must serve every job from the store"
+    );
+    assert!(resumed.iter().all(|r| r.elapsed_ms == 0));
+    for (a, b) in fresh.iter().zip(&resumed) {
+        assert_eq!(result_key(a), result_key(b));
+    }
+
+    // The acceptance bar: byte-identical fig5 CSVs modulo `cached`.
+    assert_eq!(
+        strip_cached_column(&fig5_csv(&fresh)),
+        strip_cached_column(&fig5_csv(&resumed))
+    );
+    assert_ne!(fig5_csv(&fresh), fig5_csv(&resumed), "cached column differs");
+
+    // No duplicate WAL lines were appended by the resumed run.
+    assert_eq!(store.lines(), fresh.len());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn worker_count_does_not_change_store_keys() {
+    // The fingerprint contract at the sweep level: a store written by a
+    // 1-worker sweep serves a 4-cell-worker sweep of the same grid.
+    let dir = tmp_dir("workers");
+    let mut plan = tiny_plan();
+    plan.search.cell_workers = 1;
+
+    let store = Store::open(&dir).unwrap();
+    let first = run_sweep_stored(&plan, Some(&store));
+
+    plan.search.cell_workers = 4;
+    plan.workers = 1;
+    let second = run_sweep_stored(&plan, Some(&store));
+    assert!(
+        second.iter().all(|r| r.cached),
+        "cell_workers must not key the store"
+    );
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.area.to_bits(), b.area.to_bits());
+    }
+
+    // A different ET grid does miss.
+    plan.ets = Some(vec![1, 2, 3]);
+    let third = run_sweep_stored(&plan, Some(&store));
+    assert!(third.iter().filter(|r| r.et == 3).all(|r| !r.cached));
+    assert!(third.iter().filter(|r| r.et != 3).all(|r| r.cached));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn torn_wal_tail_resumes_with_partial_credit() {
+    // Crash mid-sweep: the WAL holds N good lines plus a torn tail. The
+    // resumed sweep serves the good jobs and re-solves the torn one.
+    let dir = tmp_dir("torn");
+    let plan = tiny_plan();
+    {
+        let store = Store::open(&dir).unwrap();
+        run_sweep_stored(&plan, Some(&store));
+    }
+    let wal = dir.join("wal.jsonl");
+    let text = std::fs::read_to_string(&wal).unwrap();
+    let n_lines = text.lines().count();
+    // Tear the last line in half.
+    let keep = text.len() - text.lines().last().unwrap().len() / 2 - 1;
+    std::fs::write(&wal, &text[..keep]).unwrap();
+
+    let store = Store::open(&dir).unwrap();
+    assert_eq!(store.len(), n_lines - 1, "torn tail dropped");
+    let resumed = run_sweep_stored(&plan, Some(&store));
+    assert_eq!(resumed.iter().filter(|r| r.cached).count(), n_lines - 1);
+    assert_eq!(resumed.iter().filter(|r| !r.cached).count(), 1);
+    assert!(resumed.iter().all(|r| r.error.is_none()));
+    // And now the store is whole again.
+    assert_eq!(store.len(), n_lines);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn oplib_best_serves_min_area_sound_operator() {
+    let dir = tmp_dir("oplib");
+    let plan = tiny_plan();
+    let store = Store::open(&dir).unwrap();
+    let records = run_sweep_stored(&plan, Some(&store));
+
+    let lib = OpLib::from_store(&store);
+    let bench = benchmark_by_name("adder_i4").unwrap();
+    for et in [1u64, 2] {
+        let entry = lib.best("adder_i4", et).expect("stored operator expected");
+        // Minimum area over every stored record whose achieved error
+        // fits the budget.
+        let min_area = records
+            .iter()
+            .filter(|r| r.max_err <= et && r.area.is_finite())
+            .map(|r| r.area)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(entry.area, min_area, "et={et}");
+
+        // The exported truth table re-verifies against the oracle.
+        OpLib::verify(entry).unwrap();
+        let nl = bench.netlist();
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        assert!(exact
+            .iter()
+            .zip(&entry.values)
+            .all(|(&e, &a)| e.abs_diff(a) <= et));
+
+        // And round-trips through the portable .tt text format.
+        let tt = OpLib::export_tt(entry);
+        assert_eq!(OpLib::parse_tt(&tt).unwrap(), entry.values);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn oplib_values_drop_into_a_multlut() {
+    // The NN-serving path on the real 4x4 multiplier geometry: sweep
+    // mult_i8 with the fast sound baseline, pull the best operator for
+    // an ET-8 budget from the library, build a MultLut from it.
+    let dir = tmp_dir("multlut");
+    let plan = SweepPlan {
+        benches: vec![benchmark_by_name("mult_i8").unwrap()],
+        methods: vec![Method::Muscat],
+        ets: Some(vec![4, 8]),
+        search: SearchConfig::default(),
+        workers: 2,
+    };
+    let store = Store::open(&dir).unwrap();
+    run_sweep_stored(&plan, Some(&store));
+
+    let lib = OpLib::from_store(&store);
+    let entry = lib.best("mult_i8", 8).expect("mult_i8 operator expected");
+    OpLib::verify(entry).unwrap();
+    let lut = MultLut::from_values(&entry.values);
+    assert!(u64::from(lut.max_error()) <= 8);
+    assert_eq!(u64::from(lut.max_error()), entry.max_err, "LUT error = recorded error");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn tampered_store_record_is_rejected_and_resolved() {
+    // The oracle re-check on the serve path: a stored record whose
+    // operator table no longer verifies (bit-rot, hand-editing) must be
+    // re-solved, not served — and the fresh solve heals the store via
+    // last-writer-wins.
+    let dir = tmp_dir("tamper");
+    let plan = tiny_plan();
+    let store = Store::open(&dir).unwrap();
+    let fresh = run_sweep_stored(&plan, Some(&store));
+
+    // Overwrite one job's record with an unsound operator table.
+    let job = &plan.jobs()[0];
+    let nl = job.bench.netlist();
+    let exact = TruthTables::simulate(&nl).output_values(&nl);
+    let fp = job_fingerprint(
+        nl.n_inputs(),
+        nl.n_outputs(),
+        &exact,
+        job.method,
+        job.et,
+        &job.search,
+    );
+    let mut bad = store.get(fp).unwrap();
+    bad.values[0] += 1000;
+    store.append(fp, &bad).unwrap();
+
+    let resumed = run_sweep_stored(&plan, Some(&store));
+    assert!(!resumed[0].cached, "tampered record must be re-solved");
+    assert!(resumed[1..].iter().all(|r| r.cached), "others still serve");
+    assert_eq!(resumed[0].area.to_bits(), fresh[0].area.to_bits());
+    // Healed: the store's copy verifies again.
+    let healed = store.get(fp).unwrap();
+    let et = job.et;
+    assert!(exact.iter().zip(&healed.values).all(|(&e, &a)| e.abs_diff(a) <= et));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn fingerprints_match_between_sweep_and_direct_computation() {
+    // The sweep and an external tool (e.g. a future serving daemon)
+    // must derive the same key for the same job.
+    let dir = tmp_dir("fpmatch");
+    let plan = tiny_plan();
+    let store = Store::open(&dir).unwrap();
+    run_sweep_stored(&plan, Some(&store));
+    for job in plan.jobs() {
+        let nl = job.bench.netlist();
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        let fp = job_fingerprint(
+            nl.n_inputs(),
+            nl.n_outputs(),
+            &exact,
+            job.method,
+            job.et,
+            &job.search,
+        );
+        assert!(store.contains(fp), "{} {} et={}", job.bench.name, job.method.name(), job.et);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
