@@ -6,20 +6,26 @@
 //!     cargo run --release --offline --example nn_edge_inference [STORE_DIR]
 //!
 //! With a STORE_DIR argument (a store written by `sxpat sweep --store`),
-//! the multiplier is *not* re-synthesised: for each error budget the
-//! example asks the operator library for the cheapest stored 4x4
-//! multiplier within budget (`OpLib::best`), re-verifies it against the
-//! exhaustive oracle, and drops its truth table straight into the
-//! datapath via `MultLut::from_values` — the deployment-time flow where
-//! search and serving are decoupled. Budgets with no stored operator
-//! fall back to synthesising with MUSCAT, exactly as the store-less
-//! mode does for every row.
+//! the multiplier is *not* re-synthesised: each error budget becomes a
+//! QoS tier in a `serve::Registry` — the same tiered resolution the
+//! serving layer uses — which resolves it to the cheapest stored 4x4
+//! multiplier within budget (re-verified against the exhaustive
+//! oracle) and hands back a ready `MultLut`. Budgets the library
+//! cannot serve resolve to the exact-multiplier fallback, and for
+//! those this example synthesises with MUSCAT/MECALS instead, exactly
+//! as the store-less mode does for every row.
 
 use sxpat::baselines::{mecals, muscat};
 use sxpat::circuit::generators::benchmark_by_name;
 use sxpat::nn::{synthetic_digits, MultLut, QuantMlp};
-use sxpat::store::{OpLib, Store};
+use sxpat::serve::{Registry, TierSource, TierSpec};
 use sxpat::synth::synthesize_area;
+
+const ETS: [u64; 6] = [1, 2, 4, 8, 16, 32];
+
+fn tier_name(et: u64) -> String {
+    format!("et{et}")
+}
 
 fn main() {
     let bench = benchmark_by_name("mult_i8").unwrap();
@@ -34,15 +40,23 @@ fn main() {
     let exact_acc = mlp.accuracy(&test, &MultLut::exact());
     println!("exact 4x4 multiplier: area {exact_area:.2} µm², accuracy {exact_acc:.3}\n");
 
-    let lib = std::env::args().nth(1).map(|dir| {
-        let store = Store::open(std::path::Path::new(&dir))
-            .unwrap_or_else(|e| panic!("cannot open store {dir}: {e:#}"));
-        let lib = OpLib::from_store(&store);
+    let registry = std::env::args().nth(1).map(|dir| {
+        let tiers: Vec<TierSpec> = ETS
+            .iter()
+            .map(|&et| TierSpec { name: tier_name(et), et })
+            .collect();
+        let reg = Registry::open("mult_i8", tiers, Some(std::path::Path::new(&dir)))
+            .unwrap_or_else(|e| panic!("cannot open operator registry on {dir}: {e:#}"));
+        let served = reg
+            .snapshot()
+            .values()
+            .filter(|t| matches!(t.source, TierSource::OpLib { .. }))
+            .count();
         println!(
-            "operator library {dir}: {} stored operators for mult_i8\n",
-            lib.frontier("mult_i8").len()
+            "operator registry over {dir}: {served}/{} tiers resolved from the library\n",
+            ETS.len()
         );
-        lib
+        reg
     });
 
     println!(
@@ -50,27 +64,36 @@ fn main() {
         "method", "ET", "area", "saving%", "max|err|", "accuracy", "source"
     );
 
-    for et in [1u64, 2, 4, 8, 16, 32] {
-        // Library hit: serve the stored operator instead of searching.
-        if let Some(entry) = lib.as_ref().and_then(|l| l.best("mult_i8", et)) {
-            OpLib::verify(entry).expect("stored operator failed re-verification");
-            let lut = MultLut::from_values(&entry.values);
-            let acc = mlp.accuracy(&test, &lut);
-            println!(
-                "{:<8} {et:>4} {:>9.3} {:>8.1} {:>8} {acc:>9.3}  oplib {}",
-                entry.method.name(),
-                entry.area,
-                100.0 * (1.0 - entry.area / exact_area),
-                lut.max_error(),
-                entry.fingerprint,
-            );
-            continue;
+    for et in ETS {
+        // Registry hit: serve the stored operator instead of searching.
+        let tier = registry.as_ref().and_then(|r| r.resolve(&tier_name(et)));
+        if let Some(tier) = tier {
+            if let TierSource::OpLib { method, fingerprint } = &tier.source {
+                let acc = mlp.accuracy(&test, &tier.lut);
+                println!(
+                    "{:<8} {et:>4} {:>9.3} {:>8.1} {:>8} {acc:>9.3}  oplib {}",
+                    method,
+                    tier.area,
+                    100.0 * (1.0 - tier.area / exact_area),
+                    tier.lut.max_error(),
+                    fingerprint,
+                );
+                continue;
+            }
+            // ExactFallback = nothing stored within budget: synthesise
+            // below, as the store-less mode does.
         }
         for (label, res) in [
             ("MUSCAT", muscat(&nl, et)),
             ("MECALS", mecals(&nl, et)),
         ] {
-            let lut = MultLut::from_netlist(&res.netlist);
+            let lut = match MultLut::try_from_netlist(&res.netlist) {
+                Ok(lut) => lut,
+                Err(e) => {
+                    println!("{label:<8} {et:>4} synthesis produced a malformed multiplier: {e}");
+                    continue;
+                }
+            };
             let acc = mlp.accuracy(&test, &lut);
             println!(
                 "{label:<8} {et:>4} {:>9.3} {:>8.1} {:>8} {acc:>9.3}  synthesised",

@@ -1,0 +1,101 @@
+//! Serving-layer throughput: closed-loop requests/sec vs worker count
+//! and batch size over real localhost TCP, plus server-side batch
+//! occupancy and per-tier latency percentiles. Written to
+//! `BENCH_serve.json`.
+//!
+//!     cargo bench --bench serve
+
+use std::path::PathBuf;
+
+use sxpat::bench_support::JsonReport;
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::coordinator::{run_sweep_stored, Method, SweepPlan};
+use sxpat::search::SearchConfig;
+use sxpat::serve::{
+    parse_tiers, run_loadgen, serving_mlp, LoadgenConfig, Registry, ServeConfig, Server,
+    DEFAULT_TIERS,
+};
+use sxpat::store::Store;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("sxpat_serve_bench_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn main() {
+    let mut report = JsonReport::new();
+
+    // One store of sound mult_i8 operators feeds every configuration.
+    let dir = tmp_dir("store");
+    {
+        let plan = SweepPlan {
+            benches: vec![benchmark_by_name("mult_i8").unwrap()],
+            methods: vec![Method::Muscat],
+            ets: Some(vec![4, 8, 16]),
+            search: SearchConfig::default(),
+            workers: 2,
+        };
+        let store = Store::open(&dir).unwrap();
+        run_sweep_stored(&plan, Some(&store));
+    }
+    let mlp = serving_mlp();
+    let tier_names: Vec<String> =
+        parse_tiers(DEFAULT_TIERS).unwrap().into_iter().map(|t| t.name).collect();
+
+    // The grid: worker count x batch size, fixed closed-loop load.
+    const CLIENTS: usize = 8;
+    const REQUESTS: usize = 250;
+    for (workers, batch) in [(1usize, 1usize), (1, 8), (2, 8), (4, 16)] {
+        let key = format!("serve_w{workers}_b{batch}");
+        let registry =
+            Registry::open("mult_i8", parse_tiers(DEFAULT_TIERS).unwrap(), Some(dir.as_path()))
+                .unwrap();
+        let server = Server::start(
+            &ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                workers,
+                batch,
+                batch_wait_ms: 1,
+                queue_cap: 4096,
+            },
+            registry,
+            mlp.clone(),
+        )
+        .unwrap();
+
+        let stats = run_loadgen(&LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients: CLIENTS,
+            requests_per_client: REQUESTS,
+            tiers: tier_names.clone(),
+            seed: 42,
+        })
+        .unwrap();
+        assert_eq!(stats.errors, 0, "{key}: load must serve clean");
+        println!(
+            "bench serve/{key:<16} {:>8.0} req/s (p50 {} µs, p99 {} µs, n={})",
+            stats.rps, stats.p50_us, stats.p99_us, stats.sent
+        );
+        report.push(&format!("{key}.requests_per_sec"), stats.rps);
+        report.push(&format!("{key}.p50_us"), stats.p50_us as f64);
+        report.push(&format!("{key}.p99_us"), stats.p99_us as f64);
+
+        server.shutdown();
+        let server_metrics = server.join();
+        // Fold the server-side view (batch occupancy, per-tier counts)
+        // into the suite under this configuration's prefix.
+        for (k, v) in server_metrics.entries() {
+            if k == "mean_batch_occupancy"
+                || k == "max_batch_occupancy"
+                || k == "batches"
+            {
+                report.push(&format!("{key}.{k}"), *v);
+            }
+        }
+    }
+
+    std::fs::remove_dir_all(&dir).unwrap();
+    report.write("serve");
+}

@@ -79,6 +79,13 @@ impl JsonReport {
         self.entries.push((key.to_string(), value));
     }
 
+    /// The recorded metrics, in insertion order — for callers that
+    /// merge one report into another (e.g. the serve bench folding
+    /// server-side metrics into its own suite).
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+
     /// Record the standard fields of a [`BenchStats`] under `prefix`.
     pub fn push_stats(&mut self, prefix: &str, stats: &BenchStats) {
         self.push(&format!("{prefix}.mean_ms"), stats.mean_ms);

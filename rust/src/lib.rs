@@ -24,6 +24,7 @@ pub mod report;
 pub mod runtime;
 pub mod sat;
 pub mod search;
+pub mod serve;
 pub mod smt;
 pub mod store;
 pub mod synth;

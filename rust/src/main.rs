@@ -9,6 +9,8 @@
 //!   verify     --bench B --et E    re-verify SHARED result exhaustively
 //!   nn-eval    [--et-list 0,1,2,4] NN accuracy vs multiplier area
 //!   oplib      list|best|export    query/export the persistent operator store
+//!   serve      [--store DIR]       QoS-tiered batched inference server (TCP)
+//!   loadgen    [--addr A]          closed-loop load generator for `serve`
 //!
 //! `sweep --store DIR` opens the persistent result store in DIR: jobs
 //! already fingerprinted there are served from disk (no SAT search,
@@ -29,6 +31,21 @@
 //! blocked models across cell workers; faster dedup, non-deterministic),
 //! --budget (SAT conflicts), --pjrt (use the AOT artifact for bulk
 //! evaluation), --artifacts DIR.
+//!
+//! `serve` binds a line-delimited-JSON TCP endpoint (see
+//! `serve::protocol`) and answers digit-classification requests at
+//! named QoS tiers (`--tiers gold=0,silver=4,bronze=16`): each tier is
+//! resolved at startup to the min-area operator on the store's Pareto
+//! frontier within the tier's error budget (re-verified against the
+//! exhaustive oracle, falling back to the exact multiplier when the
+//! library has nothing within budget), and a `reload` request
+//! atomically re-resolves after new sweeps land in the store. Requests
+//! are micro-batched (`--batch`, `--batch-wait-ms`) across
+//! `--serve-workers` worker threads; `--dump-metrics` writes
+//! `BENCH_serve.json` on shutdown. `loadgen` drives a running server
+//! closed-loop (`--clients`, `--requests` per client, `--tier-names`)
+//! and prints throughput/latency; `--stats` also fetches the server's
+//! metrics, `--shutdown` stops the server afterwards.
 //!
 //! `synth --dump-cnf DIR [--cell-a A --cell-b B]` skips the search and
 //! instead exports the cell's miter (base CNF + the cell's restriction
@@ -73,6 +90,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("verify") => verify(args),
         Some("nn-eval") => nn_eval(args),
         Some("oplib") => oplib(args),
+        Some("serve") => serve(args),
+        Some("loadgen") => loadgen(args),
         _ => {
             eprintln!("{}", HELP);
             Ok(())
@@ -80,7 +99,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const HELP: &str = "usage: sxpat <bench-gen|synth|sweep|proxy-study|random-baseline|verify|nn-eval|oplib> [--flags]
+const HELP: &str = "usage: sxpat <bench-gen|synth|sweep|proxy-study|random-baseline|verify|nn-eval|oplib|serve|loadgen> [--flags]
 see rust/src/main.rs header or README.md for details";
 
 fn search_config(args: &Args) -> Result<SearchConfig> {
@@ -365,6 +384,109 @@ fn oplib(args: &Args) -> Result<()> {
     }
 }
 
+/// The `serve` subcommand: QoS-tiered batched inference over TCP.
+fn serve(args: &Args) -> Result<()> {
+    use sxpat::serve::{parse_tiers, Registry, ServeConfig, Server, DEFAULT_TIERS};
+
+    let bench_name = args.get_or("bench", "mult_i8");
+    let bench = benchmark_by_name(&bench_name)
+        .ok_or_else(|| anyhow!("unknown benchmark {bench_name}"))?;
+    let tiers = parse_tiers(&args.get_or("tiers", DEFAULT_TIERS))?;
+    let store_dir = args.get("store").map(Path::new);
+    if store_dir.is_none() {
+        println!(
+            "note: no --store DIR given — every tier serves the exact multiplier"
+        );
+    }
+    let registry = Registry::open(bench.name, tiers, store_dir)?;
+    println!("tier resolution for {}:", bench.name);
+    for (name, t) in registry.snapshot().iter() {
+        println!(
+            "  {:<12} et<={:<4} max_err {:<4} area {:>8.3} µm²  {}",
+            name,
+            t.et,
+            t.max_err,
+            t.area,
+            t.source_str()
+        );
+    }
+    let cfg = ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:7878"),
+        workers: args.get_usize_or("serve-workers", 4)?,
+        batch: args.get_usize_or("batch", 8)?,
+        batch_wait_ms: args.get_u64("batch-wait-ms")?.unwrap_or(2),
+        queue_cap: args.get_usize_or("queue-cap", 1024)?,
+    };
+    println!("training the serving MLP on the synthetic digits workload...");
+    let mlp = sxpat::serve::serving_mlp();
+    let server = Server::start(&cfg, registry, mlp)?;
+    println!(
+        "serving {} on {} ({} workers, batch {} / {} ms); \
+         send {{\"type\":\"shutdown\"}} to stop",
+        bench.name,
+        server.addr(),
+        cfg.workers,
+        cfg.batch,
+        cfg.batch_wait_ms
+    );
+    let report = server.join();
+    println!("server stopped");
+    if args.has_flag("dump-metrics") {
+        report.write("serve");
+    }
+    Ok(())
+}
+
+/// The `loadgen` subcommand: closed-loop client workload for `serve`.
+fn loadgen(args: &Args) -> Result<()> {
+    use sxpat::serve::protocol;
+    use sxpat::serve::{parse_tiers, run_loadgen, LoadgenConfig, DEFAULT_TIERS};
+    use std::io::{BufRead, BufReader, Write};
+
+    let tiers: Vec<String> = match args.get("tier-names") {
+        Some(list) => list.split(',').map(str::trim).map(str::to_string).collect(),
+        None => parse_tiers(DEFAULT_TIERS)?.into_iter().map(|t| t.name).collect(),
+    };
+    let cfg = LoadgenConfig {
+        addr: args.get_or("addr", "127.0.0.1:7878"),
+        clients: args.get_usize_or("clients", 4)?,
+        requests_per_client: args.get_usize_or("requests", 200)?,
+        tiers,
+        seed: args.get_u64("seed")?.unwrap_or(7),
+    };
+    println!(
+        "loadgen: {} clients x {} requests against {} (tiers {})",
+        cfg.clients,
+        cfg.requests_per_client,
+        cfg.addr,
+        cfg.tiers.join(",")
+    );
+    let stats = run_loadgen(&cfg)?;
+    stats.report();
+
+    if args.has_flag("stats") || args.has_flag("shutdown") {
+        let stream = std::net::TcpStream::connect(&cfg.addr)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        if args.has_flag("stats") {
+            writer.write_all(protocol::render_control_request("stats", 1).as_bytes())?;
+            writer.write_all(b"\n")?;
+            reader.read_line(&mut line)?;
+            println!("server stats: {}", line.trim());
+        }
+        if args.has_flag("shutdown") {
+            writer
+                .write_all(protocol::render_control_request("shutdown", 2).as_bytes())?;
+            writer.write_all(b"\n")?;
+            line.clear();
+            reader.read_line(&mut line)?;
+            println!("server acknowledged shutdown");
+        }
+    }
+    Ok(())
+}
+
 fn proxy_study(args: &Args) -> Result<()> {
     let dir = out_dir(args)?;
     let count = args.get_usize_or("count", 1000)?;
@@ -511,7 +633,8 @@ fn nn_eval(args: &Args) -> Result<()> {
         }
         // MUSCAT is the fast sound method at i8 scale.
         let res = sxpat::baselines::muscat(&bench.netlist(), et);
-        let lut = MultLut::from_netlist(&res.netlist);
+        let lut = MultLut::try_from_netlist(&res.netlist)
+            .map_err(|e| anyhow!("et={et}: {e}"))?;
         let acc = mlp.accuracy(&test, &lut);
         println!(
             "{et},{:.3},{:.1},{},{acc:.3}",

@@ -31,19 +31,48 @@ impl MultLut {
     }
 
     /// Build from any 8-input circuit with the mult_i8 bus convention
-    /// (inputs 0..4 = operand A LSB-first, 4..8 = operand B).
+    /// (inputs 0..4 = operand A LSB-first, 4..8 = operand B). Thin
+    /// panicking wrapper over [`MultLut::try_from_netlist`] for tests
+    /// and trusted local synthesis results.
     pub fn from_netlist(nl: &Netlist) -> Self {
-        assert_eq!(nl.n_inputs(), 8, "expected a 4x4 multiplier");
+        Self::try_from_netlist(nl).expect("malformed multiplier netlist")
+    }
+
+    /// Fallible [`MultLut::from_netlist`] for library-serving paths: a
+    /// malformed store entry or circuit must degrade to an error
+    /// response, not kill a serving worker.
+    pub fn try_from_netlist(nl: &Netlist) -> Result<Self, String> {
+        if nl.n_inputs() != 8 {
+            return Err(format!(
+                "expected a 4x4 multiplier (8 inputs), got {} inputs",
+                nl.n_inputs()
+            ));
+        }
         let vals = TruthTables::simulate(nl).output_values(nl);
-        let table = vals.iter().map(|&v| v as u16).collect();
-        MultLut { table }
+        Self::try_from_values(&vals)
     }
 
     /// Build directly from precomputed output values (e.g. the PJRT
-    /// evaluator's `values` vector for a template instantiation).
+    /// evaluator's `values` vector for a template instantiation). Thin
+    /// panicking wrapper over [`MultLut::try_from_values`].
     pub fn from_values(vals: &[u64]) -> Self {
-        assert_eq!(vals.len(), 256);
-        MultLut { table: vals.iter().map(|&v| v as u16).collect() }
+        Self::try_from_values(vals).expect("malformed multiplier table")
+    }
+
+    /// Fallible [`MultLut::from_values`]: the table must be exhaustive
+    /// over 8 inputs and every entry must fit the 16-bit output bus —
+    /// the silent-truncation hazard of `as u16` on a hand-edited or
+    /// bit-rotted store entry.
+    pub fn try_from_values(vals: &[u64]) -> Result<Self, String> {
+        if vals.len() != 256 {
+            return Err(format!("expected 256 table entries, got {}", vals.len()));
+        }
+        if let Some((i, &v)) =
+            vals.iter().enumerate().find(|&(_, &v)| v > u64::from(u16::MAX))
+        {
+            return Err(format!("table entry {i} = {v} exceeds the 16-bit output bus"));
+        }
+        Ok(MultLut { table: vals.iter().map(|&v| v as u16).collect() })
     }
 
     #[inline]
@@ -157,6 +186,55 @@ impl QuantMlp {
         argmax_i32(&o)
     }
 
+    /// Batched forward pass: one weight decode + LUT dispatch serves
+    /// the whole micro-batch (the serving layer's hot path). The
+    /// result is byte-identical to calling [`QuantMlp::infer`] per
+    /// image: for each (image, unit) pair the products are accumulated
+    /// in the same `i = 0..n_in` order, and the per-image re-quantise /
+    /// output stages reuse the exact scalar code, so the integer
+    /// numerics cannot drift between the batched and sequential paths.
+    pub fn classify_batch(&self, images: &[&[u8]], lut: &MultLut) -> Vec<usize> {
+        if images.is_empty() {
+            return Vec::new();
+        }
+        let n_in = images[0].len();
+        debug_assert!(images.iter().all(|img| img.len() == n_in));
+        let nb = images.len();
+        let mut h = vec![0i32; nb * self.hidden];
+        for u in 0..self.hidden {
+            for i in 0..n_in {
+                let (mag, neg) = self.w1[u * n_in + i];
+                for (b, img) in images.iter().enumerate() {
+                    let p = lut.mul(mag, img[i]) as i32;
+                    h[b * self.hidden + u] += if neg { -p } else { p };
+                }
+            }
+        }
+        (0..nb)
+            .map(|b| {
+                let hrow = &mut h[b * self.hidden..(b + 1) * self.hidden];
+                for v in hrow.iter_mut() {
+                    *v = (*v).max(0);
+                }
+                let hmax = hrow.iter().copied().max().unwrap_or(1).max(1);
+                let hq: Vec<u8> =
+                    hrow.iter().map(|&v| ((v * 15) / hmax) as u8).collect();
+                let o: Vec<i32> = (0..N_CLASSES)
+                    .map(|c| {
+                        let mut acc = 0i32;
+                        for u in 0..self.hidden {
+                            let (mag, neg) = self.w2[c * self.hidden + u];
+                            let p = lut.mul(mag, hq[u]) as i32;
+                            acc += if neg { -p } else { p };
+                        }
+                        acc
+                    })
+                    .collect();
+                argmax_i32(&o)
+            })
+            .collect()
+    }
+
     /// Classification accuracy over a dataset with the given multiplier.
     pub fn accuracy(&self, data: &[Sample], lut: &MultLut) -> f64 {
         let correct = data
@@ -175,9 +253,11 @@ fn quantise(w: &[f64]) -> Vec<(u8, bool)> {
 }
 
 fn argmax(xs: &[f64]) -> usize {
+    // total_cmp, not partial_cmp().unwrap(): a NaN training score must
+    // not panic (same fix PR 2 applied to the arena's activity sort).
     xs.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap()
 }
@@ -216,6 +296,46 @@ mod tests {
         let mlp = QuantMlp::train(&train, 12, 12, 5);
         let acc = mlp.accuracy(&test, &MultLut::exact());
         assert!(acc > 0.5, "accuracy {acc} not above chance (0.1)");
+    }
+
+    #[test]
+    fn try_constructors_reject_malformed_inputs() {
+        // Wrong operand width: a 3x3 multiplier has 6 inputs.
+        let err = MultLut::try_from_netlist(&multiplier(3)).unwrap_err();
+        assert!(err.contains("8 inputs"), "{err}");
+        // Wrong table size.
+        assert!(MultLut::try_from_values(&[0u64; 255]).is_err());
+        // Entry that `as u16` would silently truncate.
+        let mut vals = vec![0u64; 256];
+        vals[7] = u64::from(u16::MAX) + 1;
+        let err = MultLut::try_from_values(&vals).unwrap_err();
+        assert!(err.contains("entry 7"), "{err}");
+        // The happy path still round-trips.
+        let vals: Vec<u64> = (0..256u64).map(|x| (x & 15) * (x >> 4)).collect();
+        assert_eq!(MultLut::try_from_values(&vals).unwrap().max_error(), 0);
+    }
+
+    #[test]
+    fn classify_batch_matches_sequential_inference() {
+        let train = synthetic_digits(200, 11);
+        let test = synthetic_digits(60, 77);
+        let mlp = QuantMlp::train(&train, 12, 12, 5);
+        let approx: Vec<u64> = (0..256u64)
+            .map(|x| ((x & 15) * (x >> 4)) & !3)
+            .collect();
+        for lut in [MultLut::exact(), MultLut::from_values(&approx)] {
+            for chunk in [1usize, 2, 7, 60] {
+                for batch in test.chunks(chunk) {
+                    let images: Vec<&[u8]> =
+                        batch.iter().map(|s| s.pixels.as_slice()).collect();
+                    let got = mlp.classify_batch(&images, &lut);
+                    let want: Vec<usize> =
+                        batch.iter().map(|s| mlp.infer(&s.pixels, &lut)).collect();
+                    assert_eq!(got, want, "chunk={chunk}");
+                }
+            }
+        }
+        assert!(mlp.classify_batch(&[], &MultLut::exact()).is_empty());
     }
 
     #[test]

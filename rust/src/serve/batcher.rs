@@ -1,0 +1,248 @@
+//! Bounded, sharded micro-batching queue.
+//!
+//! Connection threads `push` work items; each serving worker owns one
+//! shard and `pop_batch`es from it. A batch flushes when it reaches
+//! `batch` items or when `max_wait` has elapsed since the worker saw
+//! the first queued item — the classic latency/throughput micro-batch
+//! knob. Pushes are round-robin across shards with failover to the
+//! next non-full shard; when every shard is at capacity the push fails
+//! and the caller turns that into a structured backpressure error
+//! response instead of buffering unboundedly.
+//!
+//! [`Batcher::close`] begins graceful shutdown: further pushes fail
+//! with [`PushError::Closed`], while `pop_batch` keeps draining queued
+//! items and returns `None` only once its shard is empty — so every
+//! request accepted before shutdown is answered.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+pub struct BatcherConfig {
+    /// One shard per serving worker.
+    pub shards: usize,
+    /// Flush threshold: a batch never exceeds this many items.
+    pub batch: usize,
+    /// Flush deadline measured from when a worker observes the first
+    /// item of a forming batch.
+    pub max_wait: Duration,
+    /// Bound on queued items per shard (backpressure).
+    pub capacity_per_shard: usize,
+}
+
+struct Shard<T> {
+    q: Mutex<VecDeque<T>>,
+    cv: Condvar,
+}
+
+pub struct Batcher<T> {
+    shards: Vec<Shard<T>>,
+    batch: usize,
+    max_wait: Duration,
+    capacity: usize,
+    next: AtomicUsize,
+    closed: AtomicBool,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// Every shard is at capacity; the item is handed back.
+    Full(T),
+    /// The batcher is shutting down; the item is handed back.
+    Closed(T),
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Batcher<T> {
+        let shards = cfg.shards.max(1);
+        let batch = cfg.batch.max(1);
+        Batcher {
+            shards: (0..shards)
+                .map(|_| Shard { q: Mutex::new(VecDeque::new()), cv: Condvar::new() })
+                .collect(),
+            batch,
+            max_wait: cfg.max_wait,
+            capacity: cfg.capacity_per_shard.max(batch),
+            next: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Enqueue one item: round-robin over shards, failing over past
+    /// full ones. O(1) in the common case, O(shards) under saturation.
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        let n = self.shards.len();
+        for k in 0..n {
+            let shard = &self.shards[(start + k) % n];
+            let mut q = shard.q.lock().unwrap();
+            // The closed check must happen *under the shard lock*: the
+            // mutex serializes it against the worker's final
+            // empty-and-closed observation, so an item can never land
+            // in a shard whose worker has already exited (it would be
+            // stranded forever, never answered).
+            if self.is_closed() {
+                drop(q);
+                return Err(PushError::Closed(item));
+            }
+            if q.len() < self.capacity {
+                q.push_back(item);
+                drop(q);
+                shard.cv.notify_one();
+                return Ok(());
+            }
+        }
+        Err(PushError::Full(item))
+    }
+
+    /// Block until shard `shard_idx` has work, then drain up to `batch`
+    /// items, waiting at most `max_wait` past the first observed item
+    /// for the batch to fill. Returns `None` once the batcher is closed
+    /// and the shard drained — the worker's exit signal.
+    pub fn pop_batch(&self, shard_idx: usize) -> Option<Vec<T>> {
+        let shard = &self.shards[shard_idx];
+        let mut q = shard.q.lock().unwrap();
+        loop {
+            if !q.is_empty() {
+                break;
+            }
+            if self.is_closed() {
+                return None;
+            }
+            q = shard.cv.wait(q).unwrap();
+        }
+        let deadline = Instant::now() + self.max_wait;
+        while q.len() < self.batch && !self.is_closed() {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, res) = shard.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+            if res.timed_out() {
+                break;
+            }
+        }
+        let n = q.len().min(self.batch);
+        Some(q.drain(..n).collect())
+    }
+
+    /// Begin graceful shutdown. Locking each shard before notifying
+    /// closes the check-then-wait race, so no worker sleeps through it.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        for shard in &self.shards {
+            let _guard = shard.q.lock().unwrap();
+            shard.cv.notify_all();
+        }
+    }
+
+    /// Total queued items right now (racy; telemetry only).
+    pub fn queued(&self) -> usize {
+        self.shards.iter().map(|s| s.q.lock().unwrap().len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batcher(shards: usize, batch: usize, wait_ms: u64, cap: usize) -> Batcher<u32> {
+        Batcher::new(BatcherConfig {
+            shards,
+            batch,
+            max_wait: Duration::from_millis(wait_ms),
+            capacity_per_shard: cap,
+        })
+    }
+
+    #[test]
+    fn flushes_at_batch_size_without_waiting() {
+        // max_wait is far beyond the test timeout: a full batch must
+        // flush immediately.
+        let b = batcher(1, 4, 60_000, 100);
+        for i in 0..4 {
+            b.push(i).unwrap();
+        }
+        let start = Instant::now();
+        assert_eq!(b.pop_batch(0).unwrap(), vec![0, 1, 2, 3]);
+        assert!(start.elapsed() < Duration::from_secs(10));
+    }
+
+    #[test]
+    fn partial_batch_flushes_at_the_deadline() {
+        let b = batcher(1, 8, 30, 100);
+        b.push(7).unwrap();
+        b.push(8).unwrap();
+        let got = b.pop_batch(0).unwrap();
+        assert_eq!(got, vec![7, 8], "deadline flush delivers the partial batch");
+    }
+
+    #[test]
+    fn oversize_backlog_drains_in_batch_sized_chunks() {
+        let b = batcher(1, 3, 1, 100);
+        for i in 0..7 {
+            b.push(i).unwrap();
+        }
+        assert_eq!(b.pop_batch(0).unwrap().len(), 3);
+        assert_eq!(b.pop_batch(0).unwrap().len(), 3);
+        assert_eq!(b.pop_batch(0).unwrap(), vec![6]);
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let b = batcher(1, 2, 1, 100);
+        for i in 0..3 {
+            b.push(i).unwrap();
+        }
+        b.close();
+        assert_eq!(b.push(9), Err(PushError::Closed(9)));
+        assert_eq!(b.pop_batch(0).unwrap(), vec![0, 1]);
+        assert_eq!(b.pop_batch(0).unwrap(), vec![2]);
+        assert_eq!(b.pop_batch(0), None, "closed and drained");
+    }
+
+    #[test]
+    fn full_queue_rejects_with_backpressure() {
+        let b = batcher(2, 1, 1, 2);
+        for i in 0..4 {
+            b.push(i).unwrap(); // 2 per shard
+        }
+        match b.push(99) {
+            Err(PushError::Full(99)) => {}
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(b.queued(), 4);
+    }
+
+    #[test]
+    fn round_robin_spreads_across_shards() {
+        let b = batcher(2, 10, 1, 100);
+        for i in 0..6 {
+            b.push(i).unwrap();
+        }
+        let a = b.pop_batch(0).unwrap();
+        let c = b.pop_batch(1).unwrap();
+        assert_eq!(a.len() + c.len(), 6);
+        assert_eq!(a.len(), 3, "round-robin balance");
+    }
+
+    #[test]
+    fn blocked_worker_wakes_on_close() {
+        let b = std::sync::Arc::new(batcher(1, 4, 1000, 100));
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.pop_batch(0));
+        std::thread::sleep(Duration::from_millis(50));
+        b.close();
+        assert_eq!(t.join().unwrap(), None);
+    }
+}

@@ -1,0 +1,152 @@
+//! Closed-loop load generator: N client threads, each holding one TCP
+//! connection and issuing one request at a time (send, wait for the
+//! response, repeat) over the synthetic-digits workload with a
+//! round-robin QoS-tier rotation. Closed-loop clients measure the
+//! latency a real caller would see — including micro-batching delay —
+//! and requests/sec at a fixed concurrency, the serve bench's headline
+//! number.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::synthetic_digits;
+
+use super::percentile;
+use super::protocol::{self, ParsedResponse};
+
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:7878`.
+    pub addr: String,
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Requests each client issues.
+    pub requests_per_client: usize,
+    /// Tier rotation (client `c`'s request `k` uses
+    /// `tiers[(c + k) % len]`).
+    pub tiers: Vec<String>,
+    /// Seed for the image workload.
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            clients: 4,
+            requests_per_client: 200,
+            tiers: vec!["gold".to_string(), "silver".to_string(), "bronze".to_string()],
+            seed: 7,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LoadgenStats {
+    pub sent: usize,
+    pub ok: usize,
+    pub errors: usize,
+    pub elapsed_ms: f64,
+    /// Completed requests per second across all clients.
+    pub rps: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl LoadgenStats {
+    pub fn report(&self) {
+        println!(
+            "loadgen: {} requests ({} ok, {} errors) in {:.1} ms -> {:.0} req/s, \
+             latency p50 {} µs, p99 {} µs, max {} µs",
+            self.sent, self.ok, self.errors, self.elapsed_ms, self.rps, self.p50_us,
+            self.p99_us, self.max_us
+        );
+    }
+}
+
+struct ClientStats {
+    ok: usize,
+    errors: usize,
+    lat_us: Vec<u64>,
+}
+
+fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientStats> {
+    let stream = TcpStream::connect(&cfg.addr)
+        .with_context(|| format!("client {client}: connecting {}", cfg.addr))?;
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .context("setting read timeout")?;
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    let mut reader = BufReader::new(stream);
+    // Per-client image pool; different seeds keep clients from sending
+    // identical byte streams.
+    let pool = synthetic_digits(64, cfg.seed.wrapping_add(client as u64));
+    let mut stats = ClientStats { ok: 0, errors: 0, lat_us: Vec::new() };
+    let mut line = String::new();
+    for k in 0..cfg.requests_per_client {
+        let tier = &cfg.tiers[(client + k) % cfg.tiers.len()];
+        let img = &pool[k % pool.len()];
+        let id = ((client as u64) << 32) | k as u64;
+        let req = protocol::render_infer_request(id, tier, &img.pixels);
+        let start = Instant::now();
+        writer.write_all(req.as_bytes()).context("sending request")?;
+        writer.write_all(b"\n").context("sending request")?;
+        line.clear();
+        let n = reader.read_line(&mut line).context("reading response")?;
+        if n == 0 {
+            bail!("client {client}: server closed the connection");
+        }
+        let resp: ParsedResponse = protocol::parse_response(line.trim())
+            .map_err(|e| anyhow::anyhow!("client {client}: {e}"))?;
+        if resp.id != id {
+            bail!("client {client}: response id {} for request {id}", resp.id);
+        }
+        stats.lat_us.push(start.elapsed().as_micros() as u64);
+        if resp.ok {
+            stats.ok += 1;
+        } else {
+            stats.errors += 1;
+        }
+    }
+    Ok(stats)
+}
+
+/// Run the closed-loop workload; blocks until every client finishes.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenStats> {
+    if cfg.clients == 0 || cfg.requests_per_client == 0 || cfg.tiers.is_empty() {
+        bail!("loadgen needs at least one client, one request and one tier");
+    }
+    let start = Instant::now();
+    let handles: Vec<_> = (0..cfg.clients)
+        .map(|c| {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || run_client(&cfg, c))
+        })
+        .collect();
+    let mut ok = 0usize;
+    let mut errors = 0usize;
+    let mut lat_us: Vec<u64> = Vec::new();
+    for h in handles {
+        let cs = h.join().map_err(|_| anyhow::anyhow!("loadgen client panicked"))??;
+        ok += cs.ok;
+        errors += cs.errors;
+        lat_us.extend(cs.lat_us);
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    lat_us.sort_unstable();
+    Ok(LoadgenStats {
+        sent: ok + errors,
+        ok,
+        errors,
+        elapsed_ms: elapsed * 1e3,
+        rps: (ok + errors) as f64 / elapsed.max(1e-9),
+        p50_us: percentile(&lat_us, 0.50),
+        p99_us: percentile(&lat_us, 0.99),
+        max_us: lat_us.last().copied().unwrap_or(0),
+    })
+}

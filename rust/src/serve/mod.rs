@@ -1,0 +1,45 @@
+//! Batched QoS-aware inference serving on top of the operator library
+//! — the deployment layer that turns synthesis results into a running
+//! service (the QoS-Nets-style adaptive-approximation flow; see
+//! PAPERS.md).
+//!
+//! A request is a digit image plus a QoS tier (a named error budget
+//! `et`); the server answers with the MLP's label computed through the
+//! cheapest *verified* approximate multiplier on the store's Pareto
+//! frontier for that budget. Pieces:
+//!
+//! - [`protocol`] — line-delimited JSON over TCP (`std::net` +
+//!   `util::Json` only; no external dependencies).
+//! - [`registry`] — QoS tier → verified min-area `MultLut`, resolved
+//!   from the operator library at startup, atomically hot-swappable
+//!   via `reload` after new sweeps land in the store.
+//! - [`batcher`] — bounded sharded queue with micro-batching (flush at
+//!   `--batch` requests or a deadline).
+//! - [`server`] — accept loop, worker pool, per-tier metrics, graceful
+//!   shutdown.
+//! - [`loadgen`] — closed-loop load generator (the serve bench's
+//!   client half).
+//!
+//! See DESIGN.md §10 for the architecture and the determinism
+//! argument.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod protocol;
+pub mod registry;
+pub mod server;
+
+/// Nearest-rank percentile over already-sorted samples — the one
+/// convention shared by the server's per-tier metrics and the load
+/// generator's client-side latencies, so the two halves of
+/// `BENCH_serve.json` cannot drift apart.
+pub fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+pub use loadgen::{run_loadgen, LoadgenConfig, LoadgenStats};
+pub use registry::{parse_tiers, Registry, ResolvedTier, TierSource, TierSpec, DEFAULT_TIERS};
+pub use server::{serving_mlp, ServeConfig, Server};

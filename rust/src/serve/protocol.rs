@@ -1,0 +1,299 @@
+//! The serving wire protocol: line-delimited JSON over TCP, one
+//! request or response per line, reusing [`util::Json`](crate::util::Json)
+//! (std::net only — no external dependencies).
+//!
+//! Requests (`"id"` is an opaque client token echoed back, so clients
+//! may pipeline and match responses out of order; like every JSON
+//! number it travels as an f64, so ids must stay below 2^53 to be
+//! echoed exactly — the same interop bound JS clients live with):
+//!
+//! ```text
+//! {"type":"infer","id":7,"tier":"silver","pixels":[0,...,15]}   64 4-bit pixels
+//! {"type":"stats","id":8}                                       metrics snapshot
+//! {"type":"reload","id":9}                                      re-resolve tiers from the store
+//! {"type":"shutdown","id":10}                                   graceful shutdown
+//! ```
+//!
+//! An `infer` request may also name a `"bench"`; the server answers
+//! with a structured error unless it matches the served benchmark.
+//!
+//! Responses always carry `"id"` and `"ok"`. Successful inference adds
+//! the label and the serving operator's provenance (`tier`, achieved
+//! `max_err`, `area`, `source`); the provenance fields are exactly the
+//! registry's resolution, so a response line is a *deterministic*
+//! function of (request, store contents) — the worker-count/batch-size
+//! invariance test compares raw response bytes across server
+//! configurations. Failures render as `{"id":..,"ok":false,"error":..}`
+//! and never kill the connection or a worker.
+
+use std::collections::BTreeMap;
+
+use crate::util::Json;
+
+/// Hard cap on one request line; longer lines get an error response
+/// instead of unbounded buffering.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// 4-bit pixels: the LUT datapath's operand range.
+pub const MAX_PIXEL: u64 = 15;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    Infer {
+        id: u64,
+        tier: String,
+        /// Optional benchmark name; must match the served bench.
+        bench: Option<String>,
+        pixels: Vec<u8>,
+    },
+    Stats { id: u64 },
+    Reload { id: u64 },
+    Shutdown { id: u64 },
+}
+
+/// Parse one request line. The error string is ready to embed in a
+/// structured error response (the caller recovers the id separately
+/// via [`request_id`] when possible).
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    if line.len() > MAX_LINE_BYTES {
+        return Err(format!(
+            "request line of {} bytes exceeds the {MAX_LINE_BYTES}-byte cap",
+            line.len()
+        ));
+    }
+    let j = Json::parse(line).map_err(|e| format!("bad JSON: {e:#}"))?;
+    let id = j.get("id").and_then(Json::as_u64).unwrap_or(0);
+    let ty = j
+        .get("type")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "missing \"type\" field".to_string())?;
+    match ty {
+        "stats" => Ok(Request::Stats { id }),
+        "reload" => Ok(Request::Reload { id }),
+        "shutdown" => Ok(Request::Shutdown { id }),
+        "infer" => {
+            let tier = j
+                .get("tier")
+                .and_then(Json::as_str)
+                .ok_or_else(|| "infer: missing \"tier\" field".to_string())?
+                .to_string();
+            let bench = j.get("bench").and_then(Json::as_str).map(str::to_string);
+            let arr = j
+                .get("pixels")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| "infer: missing \"pixels\" array".to_string())?;
+            let mut pixels = Vec::with_capacity(arr.len());
+            for (i, v) in arr.iter().enumerate() {
+                let x = v
+                    .as_u64()
+                    .ok_or_else(|| format!("pixels[{i}]: expected an integer"))?;
+                if x > MAX_PIXEL {
+                    return Err(format!("pixels[{i}] = {x} outside the 4-bit range"));
+                }
+                pixels.push(x as u8);
+            }
+            Ok(Request::Infer { id, tier, bench, pixels })
+        }
+        other => Err(format!("unknown request type {other:?}")),
+    }
+}
+
+/// Best-effort id recovery from a line that failed full parsing, so
+/// even malformed-request errors can be matched by pipelined clients.
+pub fn request_id(line: &str) -> u64 {
+    Json::parse(line)
+        .ok()
+        .and_then(|j| j.get("id").and_then(Json::as_u64))
+        .unwrap_or(0)
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Infer {
+        id: u64,
+        label: usize,
+        tier: String,
+        /// The serving operator's achieved worst-case error.
+        max_err: u64,
+        /// The serving operator's area (µm²).
+        area: f64,
+        /// Provenance: `oplib:<METHOD>:<fingerprint>` or `exact`.
+        source: String,
+    },
+    Stats { id: u64, stats: Json },
+    /// Acknowledgement for `reload` / `shutdown`.
+    Ack { id: u64, info: String },
+    Error { id: u64, error: String },
+}
+
+impl Response {
+    /// Render as one deterministic JSON line (no trailing newline):
+    /// `Json::render` sorts keys and escapes to ASCII.
+    pub fn render(&self) -> String {
+        let mut m = BTreeMap::new();
+        match self {
+            Response::Infer { id, label, tier, max_err, area, source } => {
+                m.insert("id".to_string(), Json::Num(*id as f64));
+                m.insert("ok".to_string(), Json::Bool(true));
+                m.insert("label".to_string(), Json::Num(*label as f64));
+                m.insert("tier".to_string(), Json::Str(tier.clone()));
+                m.insert("max_err".to_string(), Json::Num(*max_err as f64));
+                m.insert("area".to_string(), Json::Num(*area));
+                m.insert("source".to_string(), Json::Str(source.clone()));
+            }
+            Response::Stats { id, stats } => {
+                m.insert("id".to_string(), Json::Num(*id as f64));
+                m.insert("ok".to_string(), Json::Bool(true));
+                m.insert("stats".to_string(), stats.clone());
+            }
+            Response::Ack { id, info } => {
+                m.insert("id".to_string(), Json::Num(*id as f64));
+                m.insert("ok".to_string(), Json::Bool(true));
+                m.insert("info".to_string(), Json::Str(info.clone()));
+            }
+            Response::Error { id, error } => {
+                m.insert("id".to_string(), Json::Num(*id as f64));
+                m.insert("ok".to_string(), Json::Bool(false));
+                m.insert("error".to_string(), Json::Str(error.clone()));
+            }
+        }
+        Json::Obj(m).render()
+    }
+}
+
+/// Render an `infer` request line (no trailing newline) — the client
+/// half used by the load generator and the integration tests.
+pub fn render_infer_request(id: u64, tier: &str, pixels: &[u8]) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("type".to_string(), Json::Str("infer".to_string()));
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert("tier".to_string(), Json::Str(tier.to_string()));
+    m.insert(
+        "pixels".to_string(),
+        Json::Arr(pixels.iter().map(|&p| Json::Num(f64::from(p))).collect()),
+    );
+    Json::Obj(m).render()
+}
+
+/// Render a control request line (`stats` / `reload` / `shutdown`).
+pub fn render_control_request(ty: &str, id: u64) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("type".to_string(), Json::Str(ty.to_string()));
+    m.insert("id".to_string(), Json::Num(id as f64));
+    Json::Obj(m).render()
+}
+
+/// Client-side view of one response line.
+#[derive(Debug, Clone)]
+pub struct ParsedResponse {
+    pub id: u64,
+    pub ok: bool,
+    /// Present on successful `infer` responses.
+    pub label: Option<u64>,
+    /// Present on error responses.
+    pub error: Option<String>,
+    /// The whole payload, for provenance fields (`area`, `source`, ...).
+    pub raw: Json,
+}
+
+pub fn parse_response(line: &str) -> Result<ParsedResponse, String> {
+    let j = Json::parse(line).map_err(|e| format!("bad response JSON: {e:#}"))?;
+    let id = j
+        .get("id")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| "response missing \"id\"".to_string())?;
+    let ok = j
+        .get("ok")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| "response missing \"ok\"".to_string())?;
+    Ok(ParsedResponse {
+        id,
+        ok,
+        label: j.get("label").and_then(Json::as_u64),
+        error: j.get("error").and_then(Json::as_str).map(str::to_string),
+        raw: j,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_request_round_trip() {
+        let pixels: Vec<u8> = (0..64).map(|i| (i % 16) as u8).collect();
+        let line = render_infer_request(42, "silver", &pixels);
+        match parse_request(&line).unwrap() {
+            Request::Infer { id, tier, bench, pixels: got } => {
+                assert_eq!(id, 42);
+                assert_eq!(tier, "silver");
+                assert_eq!(bench, None);
+                assert_eq!(got, pixels);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_requests_round_trip() {
+        for ty in ["stats", "reload", "shutdown"] {
+            let line = render_control_request(ty, 9);
+            let req = parse_request(&line).unwrap();
+            let id = match (ty, &req) {
+                ("stats", Request::Stats { id }) => *id,
+                ("reload", Request::Reload { id }) => *id,
+                ("shutdown", Request::Shutdown { id }) => *id,
+                _ => panic!("{ty}: wrong request {req:?}"),
+            };
+            assert_eq!(id, 9);
+        }
+    }
+
+    #[test]
+    fn malformed_requests_are_structured_errors() {
+        assert!(parse_request("not json at all").is_err());
+        assert!(parse_request("{\"id\":1}").unwrap_err().contains("type"));
+        assert!(parse_request("{\"type\":\"dance\",\"id\":1}")
+            .unwrap_err()
+            .contains("dance"));
+        // Pixels outside the 4-bit operand range.
+        let err = parse_request(
+            "{\"type\":\"infer\",\"id\":1,\"tier\":\"t\",\"pixels\":[1,99]}",
+        )
+        .unwrap_err();
+        assert!(err.contains("4-bit"), "{err}");
+        // id is still recoverable from partially valid lines.
+        assert_eq!(request_id("{\"id\":7,\"type\":\"dance\"}"), 7);
+        assert_eq!(request_id("garbage"), 0);
+    }
+
+    #[test]
+    fn oversized_line_is_rejected() {
+        let huge = format!("{{\"type\":\"stats\",\"pad\":\"{}\"}}", "x".repeat(MAX_LINE_BYTES));
+        assert!(parse_request(&huge).unwrap_err().contains("cap"));
+    }
+
+    #[test]
+    fn responses_render_deterministically() {
+        let r = Response::Infer {
+            id: 3,
+            label: 7,
+            tier: "gold".to_string(),
+            max_err: 2,
+            area: 54.25,
+            source: "oplib:SHARED:00000000deadbeef".to_string(),
+        };
+        let line = r.render();
+        assert_eq!(line, r.render());
+        let parsed = parse_response(&line).unwrap();
+        assert!(parsed.ok);
+        assert_eq!(parsed.id, 3);
+        assert_eq!(parsed.label, Some(7));
+        assert_eq!(parsed.raw.get("area"), Some(&Json::Num(54.25)));
+
+        let e = Response::Error { id: 5, error: "unknown tier \"x\"".to_string() };
+        let parsed = parse_response(&e.render()).unwrap();
+        assert!(!parsed.ok);
+        assert!(parsed.error.unwrap().contains("unknown tier"));
+    }
+}

@@ -1,0 +1,373 @@
+//! The tiered operator registry: QoS tier name → verified min-area
+//! multiplier LUT.
+//!
+//! A tier is a named error budget (`gold=0,silver=4,bronze=16`). At
+//! startup every tier is resolved against the operator library's
+//! Pareto frontier: the min-area stored operator whose *achieved*
+//! worst-case error fits the budget ([`OpLib::best_verified`] — the
+//! entry is re-verified against the exhaustive oracle exactly as
+//! `oplib best` does), falling back to the exact multiplier when the
+//! library has nothing within budget (the exact LUT is sound for every
+//! budget; it just saves no area). A malformed or tampered store entry
+//! therefore surfaces as a resolution *error*, never as a panic inside
+//! a serving worker.
+//!
+//! [`Registry::reload`] re-resolves every tier from the store
+//! *directory* (reopened, so operators appended by a sweep in another
+//! process since startup are picked up) and atomically swaps the tier
+//! map. In-flight requests keep the `Arc<ResolvedTier>` they already
+//! resolved, so a reload never drops or corrupts requests mid-batch; a
+//! failed reload (store unreadable, best entry fails re-verification)
+//! leaves the current map serving untouched.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::circuit::generators::benchmark_by_name;
+use crate::nn::MultLut;
+use crate::store::{OpLib, Store};
+use crate::synth::synthesize_area;
+
+/// The default QoS ladder: tier name = quality class, value = error
+/// budget `et` for the served 4x4 multiplier.
+pub const DEFAULT_TIERS: &str = "gold=0,silver=4,bronze=16";
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TierSpec {
+    pub name: String,
+    pub et: u64,
+}
+
+/// Parse a `name=et,name=et,...` tier specification.
+pub fn parse_tiers(spec: &str) -> Result<Vec<TierSpec>> {
+    let mut out: Vec<TierSpec> = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (name, et) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("tier {part:?}: expected name=et"))?;
+        let name = name.trim();
+        let et: u64 = et
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("tier {part:?}: bad error budget"))?;
+        if name.is_empty() {
+            bail!("tier {part:?}: empty name");
+        }
+        if out.iter().any(|t| t.name == name) {
+            bail!("duplicate tier {name:?}");
+        }
+        out.push(TierSpec { name: name.to_string(), et });
+    }
+    if out.is_empty() {
+        bail!("no tiers in {spec:?}");
+    }
+    Ok(out)
+}
+
+/// Where a tier's operator came from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TierSource {
+    /// Min-area hit on the library's Pareto frontier.
+    OpLib { method: &'static str, fingerprint: String },
+    /// Nothing stored within budget: the exact multiplier (sound for
+    /// every budget, zero area saving).
+    ExactFallback,
+}
+
+/// One resolved tier, immutable once published; workers hold it via
+/// `Arc` across a whole micro-batch.
+#[derive(Debug, Clone)]
+pub struct ResolvedTier {
+    pub name: String,
+    pub et: u64,
+    /// The serving operator's achieved worst-case error (0 for exact).
+    pub max_err: u64,
+    pub area: f64,
+    pub source: TierSource,
+    pub lut: MultLut,
+}
+
+impl ResolvedTier {
+    /// Provenance string for responses: `oplib:<METHOD>:<fp>` / `exact`.
+    pub fn source_str(&self) -> String {
+        match &self.source {
+            TierSource::OpLib { method, fingerprint } => {
+                format!("oplib:{method}:{fingerprint}")
+            }
+            TierSource::ExactFallback => "exact".to_string(),
+        }
+    }
+}
+
+type TierMap = BTreeMap<String, Arc<ResolvedTier>>;
+
+pub struct Registry {
+    bench: &'static str,
+    tiers: Vec<TierSpec>,
+    store_dir: Option<PathBuf>,
+    current: RwLock<Arc<TierMap>>,
+    /// Serializes whole reloads (resolve + publish): without it, two
+    /// concurrent reloads could publish their maps in the opposite
+    /// order of their store reads, leaving the *older* snapshot live.
+    reload_lock: Mutex<()>,
+}
+
+impl Registry {
+    /// Resolve every tier once at startup. `store_dir = None` is the
+    /// degenerate no-library mode: every tier serves the exact LUT.
+    pub fn open(
+        bench: &'static str,
+        tiers: Vec<TierSpec>,
+        store_dir: Option<&Path>,
+    ) -> Result<Registry> {
+        let b = benchmark_by_name(bench)
+            .ok_or_else(|| anyhow!("unknown benchmark {bench:?}"))?;
+        if b.netlist().n_inputs() != 8 {
+            bail!(
+                "serving needs a 4x4 multiplier benchmark (8 inputs); {bench} has {}",
+                b.netlist().n_inputs()
+            );
+        }
+        if tiers.is_empty() {
+            bail!("at least one QoS tier required");
+        }
+        let map = resolve_all(bench, &tiers, store_dir)?;
+        Ok(Registry {
+            bench,
+            tiers,
+            store_dir: store_dir.map(Path::to_path_buf),
+            current: RwLock::new(Arc::new(map)),
+            reload_lock: Mutex::new(()),
+        })
+    }
+
+    pub fn bench(&self) -> &'static str {
+        self.bench
+    }
+
+    /// The current resolution of one tier. `None` = unknown tier name
+    /// (the tier *set* is fixed for the registry's lifetime; reloads
+    /// only change what each tier resolves to).
+    pub fn resolve(&self, tier: &str) -> Option<Arc<ResolvedTier>> {
+        self.current.read().unwrap().get(tier).cloned()
+    }
+
+    /// Snapshot of the whole tier map (stats reporting).
+    pub fn snapshot(&self) -> Arc<TierMap> {
+        self.current.read().unwrap().clone()
+    }
+
+    /// Known tier names, for error messages.
+    pub fn tier_names(&self) -> Vec<String> {
+        self.tiers.iter().map(|t| t.name.clone()).collect()
+    }
+
+    /// Re-resolve every tier from the store directory and atomically
+    /// publish the new map. Returns a human-readable summary. On error
+    /// the previous map keeps serving.
+    pub fn reload(&self) -> Result<String> {
+        // One reload at a time: the store read and the publish must not
+        // interleave with another reload's, or a stale snapshot could
+        // be published last.
+        let _serialized = self.reload_lock.lock().unwrap();
+        let map = resolve_all(self.bench, &self.tiers, self.store_dir.as_deref())?;
+        let from_lib = map
+            .values()
+            .filter(|t| matches!(t.source, TierSource::OpLib { .. }))
+            .count();
+        let summary = format!(
+            "reloaded {} tiers for {} ({from_lib} from the library, {} exact fallback)",
+            map.len(),
+            self.bench,
+            map.len() - from_lib
+        );
+        *self.current.write().unwrap() = Arc::new(map);
+        Ok(summary)
+    }
+}
+
+fn resolve_all(
+    bench: &'static str,
+    tiers: &[TierSpec],
+    store_dir: Option<&Path>,
+) -> Result<TierMap> {
+    let lib = match store_dir {
+        Some(d) => {
+            let store = Store::open(d)
+                .with_context(|| format!("opening operator store {}", d.display()))?;
+            Some(OpLib::from_store(&store))
+        }
+        None => None,
+    };
+    let exact_area = synthesize_area(&benchmark_by_name(bench).unwrap().netlist());
+    let mut map = TierMap::new();
+    for t in tiers {
+        let entry = match &lib {
+            Some(l) => l
+                .best_verified(bench, t.et)
+                .with_context(|| format!("resolving tier {:?} (et<={})", t.name, t.et))?,
+            None => None,
+        };
+        let resolved = match entry {
+            Some(e) => ResolvedTier {
+                name: t.name.clone(),
+                et: t.et,
+                max_err: e.max_err,
+                area: e.area,
+                source: TierSource::OpLib {
+                    method: e.method.name(),
+                    fingerprint: e.fingerprint.to_string(),
+                },
+                lut: MultLut::try_from_values(&e.values).map_err(|m| {
+                    anyhow!("tier {:?}: stored operator {}: {m}", t.name, e.fingerprint)
+                })?,
+            },
+            None => ResolvedTier {
+                name: t.name.clone(),
+                et: t.et,
+                max_err: 0,
+                area: exact_area,
+                source: TierSource::ExactFallback,
+                lut: MultLut::exact(),
+            },
+        };
+        map.insert(t.name.clone(), Arc::new(resolved));
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Method, RunRecord};
+    use crate::store::Fingerprint;
+
+    fn tmp_store(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("sxpat_registry_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// A sound mult_i8 record: exact products with the low `mask_bits`
+    /// output bits cleared, max_err recorded honestly.
+    fn masked_mult_record(mask_bits: u32, area: f64) -> RunRecord {
+        let mask = !((1u64 << mask_bits) - 1);
+        let values: Vec<u64> =
+            (0..256u64).map(|x| ((x & 15) * (x >> 4)) & mask).collect();
+        let max_err = (0..256u64)
+            .map(|x| ((x & 15) * (x >> 4)).abs_diff(((x & 15) * (x >> 4)) & mask))
+            .max()
+            .unwrap();
+        RunRecord {
+            bench: "mult_i8",
+            method: Method::Shared,
+            et: max_err,
+            area,
+            max_err,
+            mean_err: 0.5,
+            proxy: (0, 0),
+            elapsed_ms: 1,
+            cached: false,
+            values,
+            all_points: Vec::new(),
+            error: None,
+        }
+    }
+
+    #[test]
+    fn parse_tiers_accepts_and_rejects() {
+        let tiers = parse_tiers(" gold=0, silver=4 ,bronze=16").unwrap();
+        assert_eq!(tiers.len(), 3);
+        assert_eq!(tiers[1], TierSpec { name: "silver".to_string(), et: 4 });
+        assert!(parse_tiers("").is_err());
+        assert!(parse_tiers("gold").is_err());
+        assert!(parse_tiers("gold=x").is_err());
+        assert!(parse_tiers("=3").is_err());
+        assert!(parse_tiers("a=1,a=2").is_err());
+        parse_tiers(DEFAULT_TIERS).unwrap();
+    }
+
+    #[test]
+    fn no_store_registry_serves_exact_everywhere() {
+        let reg = Registry::open("mult_i8", parse_tiers(DEFAULT_TIERS).unwrap(), None)
+            .unwrap();
+        for name in reg.tier_names() {
+            let t = reg.resolve(&name).unwrap();
+            assert_eq!(t.source, TierSource::ExactFallback);
+            assert_eq!(t.max_err, 0);
+            assert_eq!(t.lut.max_error(), 0);
+        }
+        assert!(reg.resolve("platinum").is_none());
+        // Non-multiplier geometry is rejected up front.
+        assert!(Registry::open(
+            "adder_i4",
+            parse_tiers(DEFAULT_TIERS).unwrap(),
+            None
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn reload_swaps_in_better_operators_atomically() {
+        let dir = tmp_store("reload");
+        {
+            let st = Store::open(&dir).unwrap();
+            st.append(Fingerprint(1), &masked_mult_record(2, 40.0)).unwrap();
+        }
+        let reg = Registry::open(
+            "mult_i8",
+            parse_tiers("silver=4,gold=0").unwrap(),
+            Some(dir.as_path()),
+        )
+        .unwrap();
+        let silver = reg.resolve("silver").unwrap();
+        assert_eq!(silver.area, 40.0);
+        assert!(matches!(silver.source, TierSource::OpLib { .. }));
+        // gold (et=0) has no stored operator -> exact fallback.
+        assert_eq!(reg.resolve("gold").unwrap().source, TierSource::ExactFallback);
+
+        // A strictly better operator lands in the WAL (another sweep).
+        {
+            let st = Store::open(&dir).unwrap();
+            st.append(Fingerprint(2), &masked_mult_record(1, 9.5)).unwrap();
+        }
+        // Not visible until reload...
+        assert_eq!(reg.resolve("silver").unwrap().area, 40.0);
+        let summary = reg.reload().unwrap();
+        assert!(summary.contains("2 tiers"), "{summary}");
+        assert_eq!(reg.resolve("silver").unwrap().area, 9.5);
+        // ...and the Arc held across the swap stays valid (in-flight
+        // requests keep their operator).
+        assert_eq!(silver.area, 40.0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn failed_reload_keeps_serving_the_old_map() {
+        let dir = tmp_store("badreload");
+        {
+            let st = Store::open(&dir).unwrap();
+            st.append(Fingerprint(1), &masked_mult_record(2, 40.0)).unwrap();
+        }
+        let reg =
+            Registry::open("mult_i8", parse_tiers("silver=4").unwrap(), Some(dir.as_path()))
+                .unwrap();
+        // A tampered "better" record: smaller area but an unsound table
+        // (claims max_err 0 with wrong values) — re-verification on the
+        // resolve path must reject it.
+        {
+            let st = Store::open(&dir).unwrap();
+            let mut bad = masked_mult_record(0, 1.0);
+            bad.values[10] += 100;
+            st.append(Fingerprint(3), &bad).unwrap();
+        }
+        assert!(reg.reload().is_err());
+        let silver = reg.resolve("silver").unwrap();
+        assert_eq!(silver.area, 40.0, "old map must keep serving");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

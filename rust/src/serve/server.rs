@@ -1,0 +1,566 @@
+//! The inference server: accept loop, per-connection reader/writer
+//! threads, a sharded micro-batching worker pool, per-tier metrics and
+//! graceful shutdown.
+//!
+//! Data flow: a connection reader parses each request line; control
+//! requests (`stats`/`reload`/`shutdown`) are handled inline, `infer`
+//! requests become [`WorkItem`]s pushed onto the [`Batcher`]. Each
+//! worker owns one shard: it pops a micro-batch, groups it by tier,
+//! resolves each tier once through the [`Registry`] (one `Arc` held
+//! across the whole group, so a concurrent `reload` cannot swap an
+//! operator mid-batch) and answers the group with a single
+//! [`QuantMlp::classify_batch`] dispatch. Responses flow back through
+//! a per-connection mpsc channel drained by a writer thread, so worker
+//! threads never interleave bytes on a shared socket.
+//!
+//! Determinism: a response line is a pure function of (request line,
+//! store contents) — inference is integer-exact, `classify_batch` is
+//! byte-identical to the sequential path, and the response renderer is
+//! deterministic — so worker count, batch size and arrival order
+//! change only the *order* lines appear on the wire, never their
+//! bytes. Clients match by `id`.
+//!
+//! Robustness: malformed lines, unknown tiers/benches, oversized
+//! requests and queue-full backpressure all produce structured error
+//! responses; a panic while processing a batch is caught and turned
+//! into error responses for that batch — serving workers never die.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::bench_support::JsonReport;
+use crate::nn::digits::IMG;
+use crate::nn::{synthetic_digits, QuantMlp};
+use crate::util::Json;
+
+use super::batcher::{Batcher, BatcherConfig, PushError};
+use super::percentile;
+use super::protocol::{self, Request, Response};
+use super::registry::Registry;
+
+/// The canonical served model: the server, the integration tests, the
+/// NN example and the load generator all train this exact MLP (same
+/// data, geometry, seed), so server responses are reproducible against
+/// direct local inference.
+pub fn serving_mlp() -> QuantMlp {
+    QuantMlp::train(&synthetic_digits(300, 11), 12, 15, 5)
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; `127.0.0.1:0` picks an ephemeral port (tests).
+    pub addr: String,
+    /// Serving workers (= batcher shards).
+    pub workers: usize,
+    /// Micro-batch flush threshold.
+    pub batch: usize,
+    /// Micro-batch flush deadline in milliseconds.
+    pub batch_wait_ms: u64,
+    /// Queued-request bound per worker shard (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            workers: 4,
+            batch: 8,
+            batch_wait_ms: 2,
+            queue_cap: 1024,
+        }
+    }
+}
+
+struct WorkItem {
+    id: u64,
+    tier: String,
+    pixels: Vec<u8>,
+    resp: Sender<String>,
+    enqueued: Instant,
+}
+
+/// Latency samples kept per tier (ring overwrite past the cap, so the
+/// percentiles track recent traffic on long-running servers).
+const LAT_CAP: usize = 4096;
+
+#[derive(Default)]
+struct TierStats {
+    requests: u64,
+    lat_us: Vec<u64>,
+}
+
+impl TierStats {
+    fn record(&mut self, us: u64) {
+        if self.lat_us.len() < LAT_CAP {
+            self.lat_us.push(us);
+        } else {
+            self.lat_us[self.requests as usize % LAT_CAP] = us;
+        }
+        self.requests += 1;
+    }
+}
+
+#[derive(Default)]
+struct Metrics {
+    tiers: Mutex<BTreeMap<String, TierStats>>,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    max_batch: AtomicU64,
+    rejected: AtomicU64,
+    request_errors: AtomicU64,
+    connections: AtomicU64,
+}
+
+impl Metrics {
+    fn record_infer(&self, tier: &str, lat_us: u64) {
+        let mut tiers = self.tiers.lock().unwrap();
+        tiers.entry(tier.to_string()).or_default().record(lat_us);
+    }
+
+    fn note_batch(&self, occupancy: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(occupancy as u64, Ordering::Relaxed);
+        self.max_batch.fetch_max(occupancy as u64, Ordering::Relaxed);
+    }
+
+    fn note_errors(&self, n: usize) {
+        self.request_errors.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// (requests, p50_us, p99_us) per tier, sorted by tier name.
+    fn tier_rows(&self) -> Vec<(String, u64, u64, u64)> {
+        let tiers = self.tiers.lock().unwrap();
+        tiers
+            .iter()
+            .map(|(name, t)| {
+                let mut lat = t.lat_us.clone();
+                lat.sort_unstable();
+                (name.clone(), t.requests, percentile(&lat, 0.50), percentile(&lat, 0.99))
+            })
+            .collect()
+    }
+
+    /// The machine-readable metrics block (`BENCH_serve.json` shape).
+    fn fill_report(&self, registry: &Registry, report: &mut JsonReport) {
+        for (name, requests, p50, p99) in self.tier_rows() {
+            report.push(&format!("tier.{name}.requests"), requests as f64);
+            report.push(&format!("tier.{name}.p50_us"), p50 as f64);
+            report.push(&format!("tier.{name}.p99_us"), p99 as f64);
+            if let Some(t) = registry.resolve(&name) {
+                report.push(&format!("tier.{name}.area"), t.area);
+                report.push(&format!("tier.{name}.max_err"), t.max_err as f64);
+            }
+        }
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batched = self.batched_requests.load(Ordering::Relaxed);
+        report.push("batches", batches as f64);
+        report.push("batched_requests", batched as f64);
+        report.push(
+            "mean_batch_occupancy",
+            if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
+        );
+        report.push("max_batch_occupancy", self.max_batch.load(Ordering::Relaxed) as f64);
+        report.push("rejected", self.rejected.load(Ordering::Relaxed) as f64);
+        report.push("request_errors", self.request_errors.load(Ordering::Relaxed) as f64);
+        report.push("connections", self.connections.load(Ordering::Relaxed) as f64);
+    }
+}
+
+struct Shared {
+    registry: Registry,
+    mlp: QuantMlp,
+    batcher: Batcher<WorkItem>,
+    metrics: Metrics,
+    shutting_down: AtomicBool,
+    addr: SocketAddr,
+}
+
+impl Shared {
+    fn initiate_shutdown(&self) {
+        if self.shutting_down.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Stop accepting new work; queued items still drain.
+        self.batcher.close();
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+pub struct Server {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, spawn the worker pool and the accept loop, return
+    /// immediately. The server runs until a `shutdown` request arrives
+    /// or [`Server::shutdown`] is called.
+    pub fn start(cfg: &ServeConfig, registry: Registry, mlp: QuantMlp) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let workers_n = cfg.workers.max(1);
+        let shared = Arc::new(Shared {
+            registry,
+            mlp,
+            batcher: Batcher::new(BatcherConfig {
+                shards: workers_n,
+                batch: cfg.batch,
+                max_wait: Duration::from_millis(cfg.batch_wait_ms),
+                capacity_per_shard: cfg.queue_cap,
+            }),
+            metrics: Metrics::default(),
+            shutting_down: AtomicBool::new(false),
+            addr,
+        });
+        let workers = (0..workers_n)
+            .map(|w| {
+                let sh = shared.clone();
+                std::thread::spawn(move || worker_loop(sh, w))
+            })
+            .collect();
+        let accept = {
+            let sh = shared.clone();
+            std::thread::spawn(move || accept_loop(sh, listener))
+        };
+        Ok(Server { shared, accept: Some(accept), workers })
+    }
+
+    /// The actually-bound address (ephemeral ports resolved).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Programmatic graceful shutdown (the TCP `shutdown` request is
+    /// the remote spelling of this).
+    pub fn shutdown(&self) {
+        self.shared.initiate_shutdown();
+    }
+
+    /// Block until the accept loop and every worker exit (i.e. until
+    /// shutdown completes), then return the final metrics as a
+    /// [`JsonReport`] ready for `BENCH_serve.json`.
+    pub fn join(mut self) -> JsonReport {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let mut report = JsonReport::new();
+        self.shared.metrics.fill_report(&self.shared.registry, &mut report);
+        report
+    }
+}
+
+fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
+    for stream in listener.incoming() {
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Ok(stream) = stream {
+            shared.metrics.connections.fetch_add(1, Ordering::Relaxed);
+            let sh = shared.clone();
+            std::thread::spawn(move || handle_conn(sh, stream));
+        }
+    }
+}
+
+fn handle_conn(shared: Arc<Shared>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = channel::<String>();
+    let mut write_half = stream;
+    let writer = std::thread::spawn(move || {
+        // Drains until every Sender clone (reader + in-flight work
+        // items) is gone; a dead peer just ends the loop.
+        while let Ok(line) = rx.recv() {
+            if write_half
+                .write_all(line.as_bytes())
+                .and_then(|_| write_half.write_all(b"\n"))
+                .is_err()
+            {
+                break;
+            }
+        }
+    });
+
+    let mut reader = BufReader::new(read_half);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        // Cap the bytes one line may buffer; an over-cap line without a
+        // newline cannot be re-framed, so it ends the connection after
+        // a structured error.
+        let mut limited = (&mut reader).take(protocol::MAX_LINE_BYTES as u64 + 2);
+        match limited.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        if !line.ends_with('\n') && line.len() > protocol::MAX_LINE_BYTES {
+            let _ = tx.send(
+                Response::Error {
+                    id: 0,
+                    error: format!(
+                        "request line exceeds the {}-byte cap",
+                        protocol::MAX_LINE_BYTES
+                    ),
+                }
+                .render(),
+            );
+            break;
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        handle_request(&shared, trimmed, &tx);
+    }
+    drop(tx);
+    let _ = writer.join();
+}
+
+fn send(tx: &Sender<String>, resp: Response) {
+    let _ = tx.send(resp.render());
+}
+
+fn handle_request(shared: &Arc<Shared>, line: &str, tx: &Sender<String>) {
+    let req = match protocol::parse_request(line) {
+        Ok(r) => r,
+        Err(error) => {
+            shared.metrics.note_errors(1);
+            send(tx, Response::Error { id: protocol::request_id(line), error });
+            return;
+        }
+    };
+    match req {
+        Request::Stats { id } => {
+            send(tx, Response::Stats { id, stats: stats_snapshot(shared) });
+        }
+        Request::Reload { id } => {
+            let resp = match shared.registry.reload() {
+                Ok(info) => Response::Ack { id, info },
+                Err(e) => Response::Error { id, error: format!("reload failed: {e:#}") },
+            };
+            send(tx, resp);
+        }
+        Request::Shutdown { id } => {
+            send(tx, Response::Ack { id, info: "shutting down".to_string() });
+            shared.initiate_shutdown();
+        }
+        Request::Infer { id, tier, bench, pixels } => {
+            if let Some(b) = &bench {
+                if b != shared.registry.bench() {
+                    shared.metrics.note_errors(1);
+                    send(
+                        tx,
+                        Response::Error {
+                            id,
+                            error: format!(
+                                "unknown bench {b:?} (this server serves {})",
+                                shared.registry.bench()
+                            ),
+                        },
+                    );
+                    return;
+                }
+            }
+            if pixels.len() != IMG * IMG {
+                shared.metrics.note_errors(1);
+                send(
+                    tx,
+                    Response::Error {
+                        id,
+                        error: format!(
+                            "expected {} pixels, got {}",
+                            IMG * IMG,
+                            pixels.len()
+                        ),
+                    },
+                );
+                return;
+            }
+            if shared.registry.resolve(&tier).is_none() {
+                shared.metrics.note_errors(1);
+                send(
+                    tx,
+                    Response::Error {
+                        id,
+                        error: format!(
+                            "unknown tier {tier:?}; have: {}",
+                            shared.registry.tier_names().join(", ")
+                        ),
+                    },
+                );
+                return;
+            }
+            let item =
+                WorkItem { id, tier, pixels, resp: tx.clone(), enqueued: Instant::now() };
+            match shared.batcher.push(item) {
+                Ok(()) => {}
+                Err(PushError::Full(item)) => {
+                    shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    send(
+                        tx,
+                        Response::Error {
+                            id: item.id,
+                            error: "server overloaded: request queue full".to_string(),
+                        },
+                    );
+                }
+                Err(PushError::Closed(item)) => {
+                    send(
+                        tx,
+                        Response::Error {
+                            id: item.id,
+                            error: "server shutting down".to_string(),
+                        },
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, shard: usize) {
+    while let Some(batch) = shared.batcher.pop_batch(shard) {
+        if batch.is_empty() {
+            continue;
+        }
+        shared.metrics.note_batch(batch.len());
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            process_batch(&shared, &batch)
+        }));
+        if outcome.is_err() {
+            // A worker must never die. Every item gets an error
+            // response; items already answered before the panic may see
+            // a duplicate id, which beats a silent drop.
+            shared.metrics.note_errors(batch.len());
+            for item in &batch {
+                let _ = item.resp.send(
+                    Response::Error {
+                        id: item.id,
+                        error: "internal error while processing batch".to_string(),
+                    }
+                    .render(),
+                );
+            }
+        }
+    }
+}
+
+fn process_batch(shared: &Shared, batch: &[WorkItem]) {
+    // Group by tier so each tier costs one registry resolution and one
+    // batched LUT dispatch; the Arc pins the operator across the group
+    // even if a reload swaps the registry mid-batch.
+    let mut groups: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (i, item) in batch.iter().enumerate() {
+        groups.entry(item.tier.as_str()).or_default().push(i);
+    }
+    for (tier, idxs) in groups {
+        let Some(resolved) = shared.registry.resolve(tier) else {
+            // Tier sets are fixed per registry, so this is unreachable
+            // in practice — but a missing tier must degrade, not panic.
+            shared.metrics.note_errors(idxs.len());
+            for &i in &idxs {
+                let item = &batch[i];
+                let _ = item.resp.send(
+                    Response::Error {
+                        id: item.id,
+                        error: format!("unknown tier {tier:?}"),
+                    }
+                    .render(),
+                );
+            }
+            continue;
+        };
+        let images: Vec<&[u8]> = idxs.iter().map(|&i| batch[i].pixels.as_slice()).collect();
+        let labels = shared.mlp.classify_batch(&images, &resolved.lut);
+        let source = resolved.source_str();
+        for (&i, label) in idxs.iter().zip(labels) {
+            let item = &batch[i];
+            shared
+                .metrics
+                .record_infer(tier, item.enqueued.elapsed().as_micros() as u64);
+            let _ = item.resp.send(
+                Response::Infer {
+                    id: item.id,
+                    label,
+                    tier: tier.to_string(),
+                    max_err: resolved.max_err,
+                    area: resolved.area,
+                    source: source.clone(),
+                }
+                .render(),
+            );
+        }
+    }
+}
+
+/// The `stats` response payload: a flat object mirroring
+/// `BENCH_serve.json` plus per-tier registry provenance.
+fn stats_snapshot(shared: &Shared) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("bench".to_string(), Json::Str(shared.registry.bench().to_string()));
+    m.insert(
+        "queued".to_string(),
+        Json::Num(shared.batcher.queued() as f64),
+    );
+    let mut report = JsonReport::new();
+    shared.metrics.fill_report(&shared.registry, &mut report);
+    for (k, v) in report.entries() {
+        m.insert(
+            k.clone(),
+            if v.is_finite() { Json::Num(*v) } else { Json::Null },
+        );
+    }
+    for (name, tier) in shared.registry.snapshot().iter() {
+        m.insert(format!("tier.{name}.et"), Json::Num(tier.et as f64));
+        m.insert(format!("tier.{name}.source"), Json::Str(tier.source_str()));
+    }
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_picks_expected_ranks() {
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[7], 0.99), 7);
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.0), 1);
+        assert_eq!(percentile(&v, 0.5), 51); // round((99)*0.5)=50 -> v[50]
+        assert_eq!(percentile(&v, 0.99), 99);
+        assert_eq!(percentile(&v, 1.0), 100);
+    }
+
+    #[test]
+    fn tier_stats_ring_overwrites_past_cap() {
+        let mut t = TierStats::default();
+        for i in 0..(LAT_CAP as u64 + 10) {
+            t.record(i);
+        }
+        assert_eq!(t.requests, LAT_CAP as u64 + 10);
+        assert_eq!(t.lat_us.len(), LAT_CAP);
+        // The first 10 slots were overwritten by the newest samples.
+        assert_eq!(t.lat_us[0], LAT_CAP as u64);
+        assert_eq!(t.lat_us[9], LAT_CAP as u64 + 9);
+        assert_eq!(t.lat_us[10], 10);
+    }
+}

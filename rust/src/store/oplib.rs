@@ -138,6 +138,22 @@ impl OpLib {
             })
     }
 
+    /// Tier resolution for serving paths: [`OpLib::best`] plus the
+    /// mandatory oracle re-verification in one call, so no caller can
+    /// forget the verify step. `Ok(None)` means the library has nothing
+    /// within budget (the caller picks its fallback); `Err` means the
+    /// best stored operator failed re-verification and must not be
+    /// served.
+    pub fn best_verified(&self, bench: &str, et: u64) -> Result<Option<&OpEntry>> {
+        match self.best(bench, et) {
+            None => Ok(None),
+            Some(e) => {
+                Self::verify(e)?;
+                Ok(Some(e))
+            }
+        }
+    }
+
     /// Re-verify a stored operator against the exhaustive oracle: the
     /// benchmark must be known, the table exhaustive, and every output
     /// within the entry's recorded `max_err` of the exact value.

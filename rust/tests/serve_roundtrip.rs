@@ -1,0 +1,330 @@
+//! Serving-layer integration: the QoS protocol end to end over real
+//! TCP — batched responses byte-identical to direct sequential
+//! inference, worker-count/batch-size invariance, structured errors
+//! for malformed traffic, and registry hot-reload without dropping
+//! in-flight requests. Part of the tier-1 test path (plain
+//! `cargo test`) and its own named CI step.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::coordinator::{run_sweep_stored, Method, RunRecord, SweepPlan};
+use sxpat::nn::synthetic_digits;
+use sxpat::search::SearchConfig;
+use sxpat::serve::protocol::{
+    parse_response, render_control_request, render_infer_request, ParsedResponse,
+};
+use sxpat::serve::{parse_tiers, serving_mlp, Registry, ServeConfig, Server};
+use sxpat::store::{Fingerprint, Store};
+use sxpat::util::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("sxpat_serve_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Populate a store with sound mult_i8 operators (MUSCAT is the fast
+/// sound method at i8 scale).
+fn build_store(dir: &Path, ets: &[u64]) {
+    let plan = SweepPlan {
+        benches: vec![benchmark_by_name("mult_i8").unwrap()],
+        methods: vec![Method::Muscat],
+        ets: Some(ets.to_vec()),
+        search: SearchConfig::default(),
+        workers: 2,
+    };
+    let store = Store::open(dir).unwrap();
+    let recs = run_sweep_stored(&plan, Some(&store));
+    assert!(recs.iter().all(|r| r.error.is_none()));
+}
+
+fn start_server(dir: Option<&Path>, tiers: &str, workers: usize, batch: usize) -> Server {
+    let registry =
+        Registry::open("mult_i8", parse_tiers(tiers).unwrap(), dir).unwrap();
+    Server::start(
+        &ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers,
+            batch,
+            batch_wait_ms: 2,
+            queue_cap: 1024,
+        },
+        registry,
+        serving_mlp(),
+    )
+    .unwrap()
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        let _ = stream.set_nodelay(true);
+        // A hung server fails the test instead of hanging CI.
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+    }
+
+    /// Read one raw response line (trimmed).
+    fn recv_line(&mut self) -> String {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "server closed the connection");
+        line.trim().to_string()
+    }
+
+    fn recv(&mut self) -> ParsedResponse {
+        let line = self.recv_line();
+        parse_response(&line).unwrap()
+    }
+
+    fn roundtrip(&mut self, line: &str) -> ParsedResponse {
+        self.send(line);
+        self.recv()
+    }
+}
+
+/// A sound mult_i8 record with the low `mask_bits` output bits cleared
+/// and an artificially tiny area — "a strictly better operator".
+fn masked_mult_record(mask_bits: u32, area: f64) -> RunRecord {
+    let mask = !((1u64 << mask_bits) - 1);
+    let values: Vec<u64> = (0..256u64).map(|x| ((x & 15) * (x >> 4)) & mask).collect();
+    let max_err = (0..256u64)
+        .map(|x| ((x & 15) * (x >> 4)).abs_diff(((x & 15) * (x >> 4)) & mask))
+        .max()
+        .unwrap();
+    RunRecord {
+        bench: "mult_i8",
+        method: Method::Shared,
+        et: max_err,
+        area,
+        max_err,
+        mean_err: 0.25,
+        proxy: (0, 0),
+        elapsed_ms: 1,
+        cached: false,
+        values,
+        all_points: Vec::new(),
+        error: None,
+    }
+}
+
+#[test]
+fn mixed_tier_responses_match_direct_inference() {
+    let dir = tmp_dir("mixed");
+    build_store(&dir, &[4, 8]);
+    let tiers = "gold=0,silver=4,bronze=16";
+    let server = start_server(Some(dir.as_path()), tiers, 2, 4);
+
+    // An identical, independent resolution for the direct path.
+    let reference =
+        Registry::open("mult_i8", parse_tiers(tiers).unwrap(), Some(dir.as_path())).unwrap();
+    let mlp = serving_mlp();
+
+    let names = ["gold", "silver", "bronze"];
+    let images = synthetic_digits(30, 123);
+    let mut c = Client::connect(server.addr());
+    for (i, s) in images.iter().enumerate() {
+        let tier = names[i % names.len()];
+        let resp = c.roundtrip(&render_infer_request(i as u64, tier, &s.pixels));
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.id, i as u64);
+        let resolved = reference.resolve(tier).unwrap();
+        let want = mlp.infer(&s.pixels, &resolved.lut);
+        assert_eq!(resp.label, Some(want as u64), "request {i} tier {tier}");
+        // Provenance mirrors the registry resolution exactly.
+        assert_eq!(resp.raw.get("area"), Some(&Json::Num(resolved.area)));
+        assert_eq!(
+            resp.raw.get("source").and_then(Json::as_str),
+            Some(resolved.source_str().as_str())
+        );
+    }
+
+    // The silver/bronze tiers really serve library operators (the
+    // store has sound MUSCAT results within those budgets).
+    for tier in ["silver", "bronze"] {
+        let src = reference.resolve(tier).unwrap().source_str();
+        assert!(src.starts_with("oplib:MUSCAT:"), "{tier}: {src}");
+    }
+
+    // Per-tier metrics are queryable over the wire.
+    let stats = c.roundtrip(&render_control_request("stats", 999));
+    assert!(stats.ok);
+    let snap = stats.raw.get("stats").expect("stats payload");
+    assert_eq!(snap.get("tier.gold.requests").and_then(Json::as_u64), Some(10));
+    assert_eq!(snap.get("tier.silver.requests").and_then(Json::as_u64), Some(10));
+    assert_eq!(snap.get("bench").and_then(Json::as_str), Some("mult_i8"));
+
+    server.shutdown();
+    server.join();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Pipeline a fixed mixed-tier workload and collect id -> raw response
+/// line (responses may arrive in any order across batches).
+fn run_workload(addr: SocketAddr, n: usize) -> BTreeMap<u64, String> {
+    let names = ["gold", "silver", "bronze"];
+    let images = synthetic_digits(n, 321);
+    let mut c = Client::connect(addr);
+    for (i, s) in images.iter().enumerate() {
+        c.send(&render_infer_request(i as u64, names[i % names.len()], &s.pixels));
+    }
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let line = c.recv_line();
+        let resp = parse_response(&line).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert!(out.insert(resp.id, line).is_none(), "duplicate id");
+    }
+    out
+}
+
+#[test]
+fn responses_are_invariant_across_workers_and_batch_size() {
+    let dir = tmp_dir("invariant");
+    build_store(&dir, &[4, 8]);
+    let tiers = "gold=0,silver=4,bronze=16";
+
+    let sequential = start_server(Some(dir.as_path()), tiers, 1, 1);
+    let first = run_workload(sequential.addr(), 42);
+    let second = run_workload(sequential.addr(), 42);
+    assert_eq!(first, second, "single-worker batch=1 must be deterministic");
+    sequential.shutdown();
+    sequential.join();
+
+    let batched = start_server(Some(dir.as_path()), tiers, 4, 8);
+    let third = run_workload(batched.addr(), 42);
+    assert_eq!(
+        first, third,
+        "4 workers / batch 8 must produce byte-identical response lines"
+    );
+    batched.shutdown();
+    batched.join();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn malformed_traffic_gets_structured_errors_and_serving_survives() {
+    // No store: every tier resolves to the exact fallback.
+    let server = start_server(None, "gold=0,silver=4", 2, 2);
+    let mlp = serving_mlp();
+    let img = &synthetic_digits(1, 9)[0];
+    let mut c = Client::connect(server.addr());
+
+    // Unknown tier.
+    let resp = c.roundtrip(&render_infer_request(1, "platinum", &img.pixels));
+    assert!(!resp.ok);
+    assert!(resp.error.as_deref().unwrap().contains("unknown tier"), "{resp:?}");
+
+    // Unknown bench.
+    let resp = c.roundtrip(
+        "{\"type\":\"infer\",\"id\":2,\"tier\":\"gold\",\"bench\":\"adder_i4\",\
+         \"pixels\":[]}",
+    );
+    assert!(!resp.ok);
+    assert!(resp.error.as_deref().unwrap().contains("unknown bench"), "{resp:?}");
+
+    // Not JSON at all.
+    let resp = c.roundtrip("this is not json");
+    assert!(!resp.ok);
+
+    // Wrong pixel count.
+    let resp = c.roundtrip(&render_infer_request(3, "gold", &[1, 2, 3]));
+    assert!(!resp.ok);
+    assert!(resp.error.as_deref().unwrap().contains("64 pixels"), "{resp:?}");
+
+    // Pixels outside the 4-bit range.
+    let resp = c.roundtrip(
+        "{\"type\":\"infer\",\"id\":4,\"tier\":\"gold\",\"pixels\":[99]}",
+    );
+    assert!(!resp.ok);
+
+    // After all of that, the same connection and workers still serve.
+    let resp = c.roundtrip(&render_infer_request(5, "gold", &img.pixels));
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(
+        resp.label,
+        Some(mlp.infer(&img.pixels, &sxpat::nn::MultLut::exact()) as u64)
+    );
+
+    // Graceful shutdown via the wire protocol.
+    let resp = c.roundtrip(&render_control_request("shutdown", 6));
+    assert!(resp.ok);
+    server.join();
+}
+
+#[test]
+fn reload_serves_new_operator_without_dropping_in_flight_requests() {
+    let dir = tmp_dir("reload");
+    build_store(&dir, &[8]);
+    let server = start_server(Some(dir.as_path()), "silver=8", 2, 4);
+    let images = synthetic_digits(10, 55);
+    let mut c = Client::connect(server.addr());
+
+    // Baseline: silver serves the swept MUSCAT operator.
+    let before = c.roundtrip(&render_infer_request(1000, "silver", &images[0].pixels));
+    assert!(before.ok);
+    let before_src =
+        before.raw.get("source").and_then(Json::as_str).unwrap().to_string();
+    assert!(before_src.starts_with("oplib:MUSCAT:"), "{before_src}");
+
+    // A strictly better operator lands in the WAL (as a concurrent
+    // sweep would append it): lower achieved error AND smaller area.
+    {
+        let store = Store::open(&dir).unwrap();
+        store.append(Fingerprint(0xBEEF), &masked_mult_record(3, 0.5)).unwrap();
+    }
+
+    // Pipeline: 5 infers, the reload, 5 more infers — every request is
+    // answered (nothing dropped across the atomic swap).
+    for (i, s) in images[..5].iter().enumerate() {
+        c.send(&render_infer_request(i as u64, "silver", &s.pixels));
+    }
+    c.send(&render_control_request("reload", 77));
+    for (i, s) in images[5..].iter().enumerate() {
+        c.send(&render_infer_request(5 + i as u64, "silver", &s.pixels));
+    }
+    let mut infer_ok = 0;
+    let mut reload_ok = false;
+    for _ in 0..11 {
+        let resp = c.recv();
+        assert!(resp.ok, "{:?}", resp.error);
+        if resp.id == 77 {
+            assert!(
+                resp.raw.get("info").and_then(Json::as_str).unwrap().contains("reload"),
+            );
+            reload_ok = true;
+        } else {
+            infer_ok += 1;
+        }
+    }
+    assert_eq!(infer_ok, 10);
+    assert!(reload_ok);
+
+    // Post-reload, silver serves the new operator.
+    let after = c.roundtrip(&render_infer_request(2000, "silver", &images[0].pixels));
+    assert!(after.ok);
+    assert_eq!(after.raw.get("area"), Some(&Json::Num(0.5)));
+    let after_src = after.raw.get("source").and_then(Json::as_str).unwrap();
+    assert!(after_src.starts_with("oplib:SHARED:"), "{after_src}");
+    assert_ne!(after_src, before_src);
+
+    server.shutdown();
+    server.join();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
