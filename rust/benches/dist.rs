@@ -1,0 +1,102 @@
+//! Distributed-fabric throughput: jobs/sec and speedup over a 1/2/4
+//! worker grid, real loopback TCP, in-process workers, plus the local
+//! single-process sweep as the zero-overhead reference. Written to
+//! `BENCH_dist.json`.
+//!
+//!     cargo bench --bench dist
+
+use std::time::Instant;
+
+use sxpat::bench_support::JsonReport;
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::coordinator::{run_sweep, Method, SweepPlan};
+use sxpat::dist::{Coordinator, DistConfig, WorkerConfig};
+use sxpat::search::SearchConfig;
+
+/// Enough jobs that a 4-worker fleet stays busy, small enough that the
+/// grid finishes in seconds: 2 benches × 2 methods × 4 ETs = 16 jobs.
+fn bench_plan() -> SweepPlan {
+    SweepPlan {
+        benches: vec![
+            benchmark_by_name("adder_i4").unwrap(),
+            benchmark_by_name("mult_i4").unwrap(),
+        ],
+        methods: vec![Method::Shared, Method::Muscat],
+        ets: Some(vec![1, 2, 3, 4]),
+        search: SearchConfig {
+            pool: 5,
+            solutions_per_cell: 1,
+            max_sat_cells: 1,
+            conflict_budget: Some(20_000),
+            time_budget_ms: 20_000,
+            ..Default::default()
+        },
+        workers: 1,
+    }
+}
+
+/// One distributed run (no store: measuring the fabric, not the cache);
+/// returns wall seconds.
+fn run_distributed(plan: &SweepPlan, workers: usize) -> f64 {
+    let cfg = DistConfig { addr: "127.0.0.1:0".to_string(), lease_ms: 120_000, wait_ms: 10 };
+    let t = Instant::now();
+    let records = std::thread::scope(|s| {
+        let coord = Coordinator::bind(plan, None, &cfg).unwrap();
+        let addr = coord.addr();
+        let run = s.spawn(move || coord.run().unwrap());
+        for i in 0..workers {
+            s.spawn(move || {
+                sxpat::dist::run_worker(&WorkerConfig {
+                    addr: addr.to_string(),
+                    name: format!("bench-w{i}"),
+                    cell_workers: None,
+                    max_jobs: None,
+                })
+                .unwrap()
+            });
+        }
+        run.join().unwrap()
+    });
+    assert_eq!(records.len(), plan.n_jobs());
+    assert!(records.iter().all(|r| r.error.is_none()));
+    t.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let mut report = JsonReport::new();
+    let plan = bench_plan();
+    let n_jobs = plan.n_jobs() as f64;
+    report.push("jobs", n_jobs);
+
+    // Local single-process reference (the fabric's overhead floor).
+    let t = Instant::now();
+    let local = run_sweep(&plan);
+    let local_s = t.elapsed().as_secs_f64();
+    assert_eq!(local.len(), plan.n_jobs());
+    println!(
+        "bench dist/local_w1        {:>8.2} jobs/s ({:.3} s)",
+        n_jobs / local_s,
+        local_s
+    );
+    report.push("local_w1.jobs_per_sec", n_jobs / local_s);
+
+    let mut one_worker_s = f64::NAN;
+    for workers in [1usize, 2, 4] {
+        let secs = run_distributed(&plan, workers);
+        let jps = n_jobs / secs;
+        if workers == 1 {
+            one_worker_s = secs;
+        }
+        let speedup = one_worker_s / secs;
+        println!(
+            "bench dist/dist_w{workers}         {jps:>8.2} jobs/s ({secs:.3} s, \
+             speedup x{speedup:.2})"
+        );
+        report.push(&format!("dist_w{workers}.jobs_per_sec"), jps);
+        report.push(&format!("dist_w{workers}.speedup_over_w1"), speedup);
+    }
+    // Fabric tax: 1 distributed worker vs the same sweep in-process.
+    report.push("dist_w1.overhead_vs_local", one_worker_s / local_s);
+
+    report.write("dist");
+}

@@ -17,6 +17,7 @@
 //! job of a geometry (benchmark × ET × pool) encodes the miter, every
 //! later same-geometry job clones the prototype instead of re-encoding.
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -24,7 +25,7 @@ use std::sync::{Arc, Mutex};
 use crate::circuit::generators::{Benchmark, PAPER_BENCHMARKS};
 use crate::circuit::sim::TruthTables;
 use crate::search::{MiterCache, SearchConfig};
-use crate::store::{job_fingerprint, Store};
+use crate::store::{job_fingerprint, Fingerprint, Store};
 
 use super::jobs::{run_job_with, Job, Method, RunRecord};
 
@@ -54,25 +55,49 @@ impl Default for SweepPlan {
 }
 
 impl SweepPlan {
-    pub fn jobs(&self) -> Vec<Job> {
-        let mut jobs = Vec::new();
-        for &bench in &self.benches {
+    /// Lazy job enumeration in the canonical order (benchmark, method,
+    /// ET) — the job *index* in this order is the identity the
+    /// distributed coordinator leases by and the slot every record
+    /// commits into, so changing the order is a wire-compatibility
+    /// break. Pull-based: a million-job plan costs nothing until
+    /// pulled, which is what lets the coordinator keep at most one
+    /// unleased job materialized.
+    pub fn job_iter(&self) -> impl Iterator<Item = Job> + '_ {
+        self.benches.iter().flat_map(move |&bench| {
             let ets = self.ets.clone().unwrap_or_else(|| bench.et_sweep());
-            for &method in &self.methods {
-                for &et in &ets {
-                    jobs.push(Job { bench, method, et, search: self.search.clone() });
-                }
-            }
-        }
-        jobs
+            self.methods.iter().flat_map(move |&method| {
+                let search = self.search.clone();
+                ets.clone().into_iter().map(move |et| Job {
+                    bench,
+                    method,
+                    et,
+                    search: search.clone(),
+                })
+            })
+        })
+    }
+
+    /// Total job count, without materializing any job.
+    pub fn n_jobs(&self) -> usize {
+        let ets_for = |b: &Benchmark| match &self.ets {
+            Some(v) => v.len(),
+            None => b.et_sweep().len(),
+        };
+        self.benches.iter().map(|&b| ets_for(b) * self.methods.len()).sum()
+    }
+
+    pub fn jobs(&self) -> Vec<Job> {
+        self.job_iter().collect()
     }
 }
 
 /// Record standing in for a job that crashed or was lost to a dead
 /// worker: infinite area (the markdown renderer shows those as "—", and
 /// the CSVs carry them verbatim alongside the error column so nothing is
-/// silently dropped) plus the failure message.
-fn failed_record(job: &Job, message: String) -> RunRecord {
+/// silently dropped) plus the failure message. Shared with the
+/// distributed fabric (`dist`), whose remote workers and reject-capped
+/// jobs fail with exactly the same shape.
+pub fn failed_record(job: &Job, message: String) -> RunRecord {
     RunRecord {
         bench: job.bench.name,
         method: job.method,
@@ -89,7 +114,10 @@ fn failed_record(job: &Job, message: String) -> RunRecord {
     }
 }
 
-fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+/// Human-readable text out of a panic payload (shared with `dist`'s
+/// worker loop, which catches job panics the same way the local pool
+/// does).
+pub fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -130,58 +158,17 @@ pub fn run_sweep(plan: &SweepPlan) -> Vec<RunRecord> {
 pub fn run_sweep_stored(plan: &SweepPlan, store: Option<&Store>) -> Vec<RunRecord> {
     let protos = MiterCache::new();
     run_sweep_with(plan, |job| {
-        let nl = job.bench.netlist();
-        let exact = TruthTables::simulate(&nl).output_values(&nl);
-        let fp = store.map(|_| {
-            job_fingerprint(
-                nl.n_inputs(),
-                nl.n_outputs(),
-                &exact,
-                job.method,
-                job.et,
-                &job.search,
-            )
-        });
-        if let (Some(st), Some(fp)) = (store, fp) {
-            if let Some(rec) = st.get(fp) {
-                // Same defence-in-depth as a fresh solve: the stored
-                // operator table must re-verify against the exhaustive
-                // oracle (the disk is not part of the soundness
-                // argument). The `exact` vector is already in hand, so
-                // this zip is essentially free next to a SAT search. An
-                // unsound record is re-solved; the fresh append then
-                // overwrites it last-writer-wins.
-                let sound = rec.values.len() == exact.len()
-                    && exact
-                        .iter()
-                        .zip(&rec.values)
-                        .all(|(&e, &a)| e.abs_diff(a) <= job.et);
-                if sound {
-                    // The fingerprint pins method/ET/config/truth
-                    // table; the bench pointer is re-anchored to this
-                    // process's static (names are not part of the
-                    // fingerprint).
-                    return RunRecord {
-                        bench: job.bench.name,
-                        elapsed_ms: 0,
-                        cached: true,
-                        ..rec
-                    };
-                }
-                eprintln!(
-                    "warning: store record {fp} for {} {} et={} failed oracle \
-                     re-verification; re-solving",
-                    job.bench.name,
-                    job.method.name(),
-                    job.et
-                );
-            }
+        // One store consultation path for every sweep flavour (the
+        // distributed coordinator uses the same helper): oracle
+        // simulated once, hit re-verified, unsound record flagged for
+        // a last-writer-wins heal.
+        let probe = probe_store(job, store);
+        if let Some(cached) = probe.cached {
+            return cached;
         }
-        let rec = run_job_with(job, &protos, &exact);
-        let deadline_bound = matches!(rec.method, Method::Shared | Method::Xpat)
-            && rec.elapsed_ms >= job.search.time_budget_ms;
-        if let (Some(st), Some(fp)) = (store, fp) {
-            if rec.error.is_none() && rec.area.is_finite() && !deadline_bound {
+        let rec = run_job_with(job, &protos, &probe.exact);
+        if let (Some(st), Some(fp)) = (store, probe.fp) {
+            if wal_persistable(&rec, job.search.time_budget_ms) {
                 if let Err(e) = st.append(fp, &rec) {
                     eprintln!(
                         "warning: store append failed for {} {} et={}: {e:#}",
@@ -196,6 +183,78 @@ pub fn run_sweep_stored(plan: &SweepPlan, store: Option<&Store>) -> Vec<RunRecor
     })
 }
 
+/// Everything the store knows about one job, plus the oracle table the
+/// lookup needed anyway. The single source of truth for cache-serving
+/// semantics: both the local stored sweep above and the distributed
+/// coordinator (`dist::coordinator`) consult the store through this
+/// helper, so the two paths cannot drift — which is what makes the
+/// dist-vs-local byte-identity contract (`tests/dist_roundtrip.rs`)
+/// hold by construction.
+pub struct StoreProbe {
+    /// The job's exhaustive oracle table, simulated once here.
+    pub exact: Vec<u64>,
+    /// Store fingerprint (`None` when no store is attached).
+    pub fp: Option<Fingerprint>,
+    /// A sound stored record, rebuilt for serving (`cached: true`,
+    /// `elapsed_ms: 0`, bench name re-anchored to this process).
+    pub cached: Option<RunRecord>,
+    /// A stored record existed but failed oracle re-verification: the
+    /// fresh solve must overwrite it last-writer-wins.
+    pub heal: bool,
+}
+
+/// Simulate the oracle, fingerprint the job and consult the store. A
+/// hit is served only after re-verifying the stored operator table
+/// against the oracle (the disk is not part of the soundness
+/// argument); an unsound record is reported and flagged for healing.
+pub fn probe_store(job: &Job, store: Option<&Store>) -> StoreProbe {
+    let nl = job.bench.netlist();
+    let exact = TruthTables::simulate(&nl).output_values(&nl);
+    let fp = store.map(|_| {
+        job_fingerprint(nl.n_inputs(), nl.n_outputs(), &exact, job.method, job.et, &job.search)
+    });
+    let mut heal = false;
+    if let (Some(st), Some(fp)) = (store, fp) {
+        if let Some(rec) = st.get(fp) {
+            let sound = rec.values.len() == exact.len()
+                && exact.iter().zip(&rec.values).all(|(&e, &a)| e.abs_diff(a) <= job.et);
+            if sound {
+                // The fingerprint pins method/ET/config/truth table;
+                // the bench pointer is re-anchored to this process's
+                // static (names are not part of the fingerprint).
+                let cached = RunRecord {
+                    bench: job.bench.name,
+                    elapsed_ms: 0,
+                    cached: true,
+                    ..rec
+                };
+                return StoreProbe { exact, fp: Some(fp), cached: Some(cached), heal: false };
+            }
+            eprintln!(
+                "warning: store record {fp} for {} {} et={} failed oracle \
+                 re-verification; re-solving",
+                job.bench.name,
+                job.method.name(),
+                job.et
+            );
+            heal = true;
+        }
+    }
+    StoreProbe { exact, fp, cached: None, heal }
+}
+
+/// Should a fresh record be written to the WAL? Failed jobs,
+/// no-solution jobs and wall-clock-truncated template jobs are not
+/// persisted — a resumed sweep retries them (a binding deadline
+/// truncates the scan at a load-dependent point; caching that would
+/// permanently replace what a complete search produces). Shared by the
+/// local stored sweep and the distributed commit path.
+pub fn wal_persistable(rec: &RunRecord, time_budget_ms: u64) -> bool {
+    let deadline_bound = matches!(rec.method, Method::Shared | Method::Xpat)
+        && rec.elapsed_ms >= time_budget_ms;
+    rec.error.is_none() && rec.area.is_finite() && !deadline_bound
+}
+
 /// As [`run_sweep`] with a custom job runner (the seam the resilience
 /// tests use). A panicking runner yields a `failed_record`, never a
 /// missing slot or a dead sweep.
@@ -208,8 +267,12 @@ where
     if n_jobs == 0 {
         return Vec::new();
     }
+    // FIFO: jobs dispatch in plan order, so a 1-worker sweep runs (and
+    // commits to a store's WAL) in exactly job-index order — the order
+    // the distributed coordinator's in-order commit frontier reproduces
+    // (`tests/dist_roundtrip.rs` pins the two WALs byte-identical).
     let queue = Arc::new(Mutex::new(
-        jobs.iter().cloned().enumerate().collect::<Vec<(usize, Job)>>(),
+        jobs.iter().cloned().enumerate().collect::<VecDeque<(usize, Job)>>(),
     ));
     let (tx, rx) = mpsc::channel::<(usize, RunRecord)>();
     let workers = plan.workers.clamp(1, n_jobs);
@@ -220,7 +283,7 @@ where
             let queue = Arc::clone(&queue);
             let tx = tx.clone();
             scope.spawn(move || loop {
-                let next = queue.lock().unwrap().pop();
+                let next = queue.lock().unwrap().pop_front();
                 match next {
                     Some((idx, job)) => {
                         let rec = catch_unwind(AssertUnwindSafe(|| runner(&job)))
@@ -337,5 +400,24 @@ mod tests {
             .map(|b| b.et_sweep().len() * 4)
             .sum();
         assert_eq!(jobs.len(), expected);
+        assert_eq!(plan.n_jobs(), expected, "count must not require materializing");
+    }
+
+    #[test]
+    fn job_iter_is_lazy_and_matches_jobs() {
+        let plan = tiny_plan();
+        let eager = plan.jobs();
+        let lazy: Vec<Job> = plan.job_iter().collect();
+        assert_eq!(eager.len(), lazy.len());
+        assert_eq!(plan.n_jobs(), eager.len());
+        for (a, b) in eager.iter().zip(&lazy) {
+            assert_eq!(a.bench.name, b.bench.name);
+            assert_eq!(a.method, b.method);
+            assert_eq!(a.et, b.et);
+        }
+        // Pulling one job must not have enumerated the rest.
+        let first = plan.job_iter().next().unwrap();
+        assert_eq!(first.bench.name, eager[0].bench.name);
+        assert_eq!(first.et, eager[0].et);
     }
 }

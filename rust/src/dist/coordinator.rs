@@ -1,0 +1,424 @@
+//! The coordinator node: owns the plan, the store and the scheduler;
+//! serves leases to workers over TCP and is the **single WAL writer**.
+//!
+//! Threading model (everything under one `std::thread::scope`, so
+//! `run` borrows the plan and store without `Arc`):
+//!
+//! * the **accept loop** takes connections and spawns one connection
+//!   thread each (strict request/response: the connection thread both
+//!   reads and writes, no per-connection writer thread needed);
+//! * a **reaper** ticks a few times per lease period and requeues
+//!   expired leases;
+//! * the **main thread** parks on a condvar until every job is
+//!   resolved, then tears the fabric down: connection sockets are
+//!   `shutdown()` (unblocking their readers at EOF) and a throwaway
+//!   self-connection unblocks the accept loop — no read timeouts, no
+//!   detached threads.
+//!
+//! Job flow is pull-based end to end: the plan's lazy `job_iter` is
+//! only advanced when the scheduler has nothing leasable, each pulled
+//! job is probed against the store (cache hits commit locally and
+//! never cross the wire, exactly like `run_sweep_stored`), and at most
+//! one prepared miss is parked awaiting the next lease request.
+//!
+//! Determinism: worker records pass the same oracle re-verification as
+//! local results, slots collect in job order, and WAL lines are
+//! released by the scheduler's in-order commit frontier — so both the
+//! record vector and the WAL are byte-identical (modulo `elapsed_ms`)
+//! to a single-worker local `run_sweep_stored`, regardless of worker
+//! count, completion order, worker deaths or lease expiries.
+
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{probe_store, Job, RunRecord, SweepPlan};
+use crate::store::Store;
+use crate::util::jsonl::{self, LineRead};
+
+use super::lease::{CommitEvent, PreparedJob, Rejection, Scheduler, Submission};
+use super::protocol::{CoordMsg, WorkerMsg, PROTO_VERSION};
+
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    /// Bind address; `127.0.0.1:0` picks an ephemeral port (tests).
+    pub addr: String,
+    /// Lease length in milliseconds; 0 = auto (twice the plan's
+    /// per-job wall-clock budget plus slack, so a lease only expires
+    /// on a genuinely wedged worker).
+    pub lease_ms: u64,
+    /// Backoff hint handed to workers when nothing is leasable yet.
+    pub wait_ms: u64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig { addr: "127.0.0.1:7979".to_string(), lease_ms: 0, wait_ms: 500 }
+    }
+}
+
+/// A bound-but-not-yet-running coordinator. Splitting `bind` from
+/// [`Coordinator::run`] lets callers (tests, the in-process bench)
+/// learn the ephemeral port before blocking.
+pub struct Coordinator<'a> {
+    plan: &'a SweepPlan,
+    store: Option<&'a Store>,
+    listener: TcpListener,
+    addr: SocketAddr,
+    lease_ms: u64,
+    wait_ms: u64,
+}
+
+/// Scheduler plus the lazy job feed, guarded by one mutex: every
+/// scheduling decision and every WAL append happens under it, which is
+/// what makes the commit frontier's ordering guarantee hold.
+struct SchedState<'a> {
+    sched: Scheduler,
+    feed: Box<dyn Iterator<Item = (usize, Job)> + Send + 'a>,
+    exhausted: bool,
+}
+
+struct Shared<'a> {
+    sched: Mutex<SchedState<'a>>,
+    all_done: Condvar,
+    shutting_down: AtomicBool,
+    /// One clone per *live* connection, for teardown shutdown; each
+    /// entry is removed when its connection thread exits, so churning
+    /// short-lived workers cannot accumulate file descriptors.
+    conns: Mutex<std::collections::HashMap<u64, TcpStream>>,
+    next_conn: AtomicU64,
+    store: Option<&'a Store>,
+    n_jobs: usize,
+    lease_ms: u64,
+    wait_ms: u64,
+}
+
+impl<'a> Coordinator<'a> {
+    pub fn bind(
+        plan: &'a SweepPlan,
+        store: Option<&'a Store>,
+        cfg: &DistConfig,
+    ) -> Result<Coordinator<'a>> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding coordinator on {}", cfg.addr))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let lease_ms = if cfg.lease_ms == 0 {
+            plan.search.time_budget_ms.saturating_mul(2).saturating_add(30_000)
+        } else {
+            cfg.lease_ms
+        };
+        Ok(Coordinator { plan, store, listener, addr, lease_ms, wait_ms: cfg.wait_ms })
+    }
+
+    /// The actually-bound address (ephemeral ports resolved).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve the sweep to completion and return the records in job
+    /// order. Blocks until every job is resolved — with no workers
+    /// connected, cache hits still resolve locally, and the call waits
+    /// for workers to show up for the rest.
+    pub fn run(self) -> Result<Vec<RunRecord>> {
+        let Coordinator { plan, store, listener, addr, lease_ms, wait_ms } = self;
+        let n_jobs = plan.n_jobs();
+        let shared = Shared {
+            sched: Mutex::new(SchedState {
+                sched: Scheduler::new(n_jobs, Duration::from_millis(lease_ms)),
+                feed: Box::new(plan.job_iter().enumerate()),
+                exhausted: false,
+            }),
+            all_done: Condvar::new(),
+            shutting_down: AtomicBool::new(false),
+            conns: Mutex::new(std::collections::HashMap::new()),
+            next_conn: AtomicU64::new(1),
+            store,
+            n_jobs,
+            lease_ms,
+            wait_ms,
+        };
+
+        // Pre-drain: commit every leading cache hit and park the first
+        // miss before any worker connects, so an all-cached plan
+        // finishes with zero workers.
+        refill(&shared, &mut shared.sched.lock().unwrap());
+
+        std::thread::scope(|s| {
+            // `s` is Copy; spawned closures capture it (and plain
+            // references to the locals) by value, because the accept
+            // thread can outlive this closure's body — it only stops
+            // at the teardown self-connection below.
+            let sh = &shared;
+            let listener = &listener;
+            s.spawn(move || reaper(sh));
+            s.spawn(move || {
+                for stream in listener.incoming() {
+                    if sh.shutting_down.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else {
+                        // Transient accept failure (fd pressure, reset
+                        // in the backlog): back off instead of spinning.
+                        std::thread::sleep(Duration::from_millis(50));
+                        continue;
+                    };
+                    let conn_id = sh.next_conn.fetch_add(1, Ordering::Relaxed);
+                    if let Ok(clone) = stream.try_clone() {
+                        sh.conns.lock().unwrap().insert(conn_id, clone);
+                    }
+                    s.spawn(move || handle_conn(sh, stream, conn_id));
+                }
+            });
+
+            // Park until the last slot fills, then tear the fabric
+            // down so every scoped thread joins.
+            let mut g = shared.sched.lock().unwrap();
+            while !g.sched.done() {
+                g = shared.all_done.wait(g).unwrap();
+            }
+            drop(g);
+            shared.shutting_down.store(true, Ordering::SeqCst);
+            for c in shared.conns.lock().unwrap().values() {
+                let _ = c.shutdown(Shutdown::Both);
+            }
+            let _ = TcpStream::connect(addr);
+        });
+
+        let state = shared.sched.into_inner().unwrap();
+        Ok(state.sched.into_records())
+    }
+}
+
+/// One-call convenience: bind on `cfg.addr` and serve to completion.
+pub fn run_distributed_sweep(
+    plan: &SweepPlan,
+    store: Option<&Store>,
+    cfg: &DistConfig,
+) -> Result<Vec<RunRecord>> {
+    Coordinator::bind(plan, store, cfg)?.run()
+}
+
+/// What the store already knows about a job.
+enum Probe {
+    /// Sound stored record: serve it locally, never lease it.
+    Cached(RunRecord),
+    /// Miss (or unsound stored record — `heal` set): lease it out.
+    Miss(PreparedJob),
+}
+
+/// Consult the store via the one shared helper
+/// ([`probe_store`](crate::coordinator::probe_store)) — identical
+/// serving semantics to `run_sweep_stored` by construction, which is
+/// what the dist-vs-local byte-identity contract rests on.
+fn probe(idx: usize, job: Job, store: Option<&Store>) -> Probe {
+    let p = probe_store(&job, store);
+    match p.cached {
+        Some(rec) => Probe::Cached(rec),
+        None => Probe::Miss(PreparedJob {
+            idx,
+            job,
+            exact: std::sync::Arc::new(p.exact),
+            fp: p.fp,
+            heal: p.heal,
+        }),
+    }
+}
+
+/// Advance the lazy feed until something is leasable (or the feed is
+/// dry): cache hits commit locally as they stream past, the first miss
+/// parks. Runs under the scheduler lock — the probe's oracle
+/// simulation is microseconds next to a SAT solve, and serializing it
+/// keeps the cached-commit order deterministic.
+fn refill(shared: &Shared<'_>, g: &mut MutexGuard<'_, SchedState<'_>>) {
+    while !g.exhausted && g.sched.needs_fresh() {
+        match g.feed.next() {
+            None => g.exhausted = true,
+            Some((idx, job)) => match probe(idx, job, shared.store) {
+                Probe::Cached(rec) => {
+                    let events = g.sched.commit_local(idx, rec, None);
+                    persist(shared.store, &events);
+                    if g.sched.done() {
+                        shared.all_done.notify_all();
+                    }
+                }
+                Probe::Miss(prepared) => g.sched.park(prepared),
+            },
+        }
+    }
+}
+
+/// Write released commit events to the WAL, in the order the frontier
+/// released them. Healing overwrites last-writer-wins; everything else
+/// dedups on fingerprint (first committed wins — a requeued job
+/// completed twice must not grow the WAL). Append failures are
+/// reported and skipped: losing one cache line is not worth losing the
+/// sweep (same policy as the local path).
+fn persist(store: Option<&Store>, events: &[CommitEvent]) {
+    let Some(st) = store else { return };
+    for ev in events {
+        let res = if ev.heal {
+            st.append(ev.fp, &ev.record).map(|_| true)
+        } else {
+            st.append_if_absent(ev.fp, &ev.record)
+        };
+        if let Err(e) = res {
+            eprintln!(
+                "warning: store append failed for {} {} et={}: {e:#}",
+                ev.record.bench,
+                ev.record.method.name(),
+                ev.record.et
+            );
+        }
+    }
+}
+
+fn reaper(shared: &Shared<'_>) {
+    // A few ticks per lease period, bounded so tests with tiny leases
+    // still expire promptly and production leases don't spin.
+    let tick = Duration::from_millis((shared.lease_ms / 4).clamp(10, 250));
+    while !shared.shutting_down.load(Ordering::SeqCst) {
+        std::thread::sleep(tick);
+        let mut g = shared.sched.lock().unwrap();
+        let expired = g.sched.expire(Instant::now());
+        if !expired.is_empty() {
+            eprintln!(
+                "coordinator: requeued {} expired lease(s): {expired:?}",
+                expired.len()
+            );
+        }
+    }
+}
+
+fn handle_conn(shared: &Shared<'_>, stream: TcpStream, conn_id: u64) {
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let mut hello_done = false;
+    loop {
+        match jsonl::read_line(&mut reader) {
+            LineRead::Eof => break,
+            LineRead::Oversized => {
+                let resp = CoordMsg::Error {
+                    error: format!(
+                        "request line exceeds the {}-byte cap",
+                        jsonl::MAX_LINE_BYTES
+                    ),
+                };
+                let _ = jsonl::send_line(&mut writer, &resp.render());
+                break;
+            }
+            LineRead::Line(line) => {
+                if line.is_empty() {
+                    continue;
+                }
+                let resp = match WorkerMsg::parse(&line) {
+                    Err(error) => CoordMsg::Error { error },
+                    Ok(msg) => handle_msg(shared, conn_id, msg, &mut hello_done),
+                };
+                if jsonl::send_line(&mut writer, &resp.render()).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    // Release this connection's teardown clone (the fd) and requeue
+    // whatever the worker still held.
+    shared.conns.lock().unwrap().remove(&conn_id);
+    let lost = shared.sched.lock().unwrap().sched.fail_conn(conn_id);
+    if !lost.is_empty() {
+        eprintln!(
+            "coordinator: worker connection {conn_id} died; requeued job(s) {lost:?}"
+        );
+    }
+}
+
+fn handle_msg(
+    shared: &Shared<'_>,
+    conn_id: u64,
+    msg: WorkerMsg,
+    hello_done: &mut bool,
+) -> CoordMsg {
+    match msg {
+        WorkerMsg::Hello { name: _, proto } => {
+            if proto != PROTO_VERSION {
+                return CoordMsg::Error {
+                    error: format!(
+                        "protocol version {proto} unsupported (coordinator speaks \
+                         {PROTO_VERSION})"
+                    ),
+                };
+            }
+            *hello_done = true;
+            CoordMsg::Welcome { jobs: shared.n_jobs, lease_ms: shared.lease_ms }
+        }
+        _ if !*hello_done => {
+            CoordMsg::Error { error: "hello required before anything else".to_string() }
+        }
+        WorkerMsg::LeaseRequest => {
+            let mut g = shared.sched.lock().unwrap();
+            loop {
+                if g.sched.done() {
+                    return CoordMsg::Done;
+                }
+                if let Some(grant) = g.sched.grant(conn_id, Instant::now()) {
+                    return CoordMsg::Lease {
+                        job: grant.idx,
+                        bench: grant.job.bench.name.to_string(),
+                        method: grant.job.method,
+                        et: grant.job.et,
+                        search: grant.job.search,
+                    };
+                }
+                if !g.exhausted && g.sched.needs_fresh() {
+                    refill(shared, &mut g);
+                    continue;
+                }
+                // Everything is leased out or resolved; this worker
+                // should ask again shortly (a lease may expire).
+                return CoordMsg::Wait { ms: shared.wait_ms };
+            }
+        }
+        WorkerMsg::Result { job, record } => {
+            let mut g = shared.sched.lock().unwrap();
+            match g.sched.submit(job, record, conn_id) {
+                Submission::Fresh(events) => {
+                    persist(shared.store, &events);
+                    if g.sched.done() {
+                        shared.all_done.notify_all();
+                    }
+                    CoordMsg::Committed { job, fresh: true }
+                }
+                Submission::Stale => CoordMsg::Committed { job, fresh: false },
+                Submission::Unsound(why) => {
+                    eprintln!(
+                        "coordinator: discarding result for job {job} from \
+                         connection {conn_id}: {why}"
+                    );
+                    CoordMsg::Error { error: why }
+                }
+            }
+        }
+        WorkerMsg::Reject { job, reason } => {
+            let mut g = shared.sched.lock().unwrap();
+            match g.sched.reject(job, conn_id, &reason) {
+                Rejection::Requeued | Rejection::Stale => CoordMsg::Requeued { job },
+                Rejection::FailedOut(events) => {
+                    persist(shared.store, &events);
+                    eprintln!(
+                        "coordinator: job {job} failed out after repeated rejections \
+                         (last: {reason})"
+                    );
+                    if g.sched.done() {
+                        shared.all_done.notify_all();
+                    }
+                    CoordMsg::Committed { job, fresh: true }
+                }
+            }
+        }
+    }
+}

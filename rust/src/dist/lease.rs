@@ -1,0 +1,596 @@
+//! The lease scheduler: the coordinator's entire scheduling brain as a
+//! pure state machine — no sockets, no threads, no clock of its own
+//! (every time-dependent transition takes `now` as an argument) — so
+//! each transition is unit-testable without networking.
+//!
+//! Job lifecycle:
+//!
+//! ```text
+//!            park()                 grant()
+//!  iterator ───────► ready ───────────────────► active lease
+//!     │                ▲                        │  │      │
+//!     │ cache hit      │ requeue: expire(),     │  │      └ submit() sound
+//!     ▼                │ fail_conn(), reject()  │  │        ─► resolved slot
+//!  commit_local()      └────────────────────────┘  └ reject() × REJECT_CAP
+//!     ─► resolved slot                               ─► resolved slot (failed)
+//! ```
+//!
+//! Invariants the tests pin:
+//!
+//! * **At most one active lease per job.** A requeued job's original
+//!   worker may still finish; whichever *sound* result reaches
+//!   [`Scheduler::submit`] first wins the slot, every later submission
+//!   is [`Submission::Stale`] — and the WAL dedup
+//!   (`Store::append_if_absent`) makes the same guarantee a second
+//!   time at the fingerprint level.
+//! * **In-order commit.** [`CommitEvent`]s are emitted by a frontier
+//!   walk: events for job *i* appear only after every job *< i* holds
+//!   a record, so the coordinator's WAL line order equals a
+//!   single-worker local sweep's regardless of completion order —
+//!   the same trick as the lattice scan's in-order cell commit.
+//! * **Unsound results never commit.** A record that fails the oracle
+//!   re-check (or contradicts its lease's job identity) requeues the
+//!   job instead; trusting a worker's arithmetic is not required, only
+//!   its liveness.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{failed_record, wal_persistable, Job, RunRecord};
+use crate::store::Fingerprint;
+
+/// Rejections (worker says "cannot run this lease") tolerated per job
+/// before the coordinator fails the job locally instead of bouncing it
+/// between version-skewed workers forever.
+pub const REJECT_CAP: usize = 3;
+
+/// One job fully prepared for scheduling: its sweep-order index, the
+/// job itself, the exhaustive oracle table (fingerprint input and
+/// soundness check), and — when a store is attached — the fingerprint
+/// plus whether a stored-but-unsound record must be healed by a
+/// last-writer-wins overwrite.
+pub struct PreparedJob {
+    pub idx: usize,
+    pub job: Job,
+    pub exact: Arc<Vec<u64>>,
+    pub fp: Option<Fingerprint>,
+    pub heal: bool,
+}
+
+/// A granted lease, ready to render as a wire message.
+pub struct LeaseGrant {
+    pub idx: usize,
+    pub job: Job,
+}
+
+struct ActiveLease {
+    prepared: PreparedJob,
+    conn: u64,
+    deadline: Instant,
+}
+
+/// One record the coordinator must persist now, in WAL order.
+pub struct CommitEvent {
+    pub idx: usize,
+    pub record: RunRecord,
+    pub fp: Fingerprint,
+    /// `true`: overwrite last-writer-wins (healing an unsound stored
+    /// record); `false`: append only if absent (duplicate dedup).
+    pub heal: bool,
+}
+
+/// Outcome of a worker's result submission.
+pub enum Submission {
+    /// First completion of the job — the slot is filled; `.0` holds
+    /// any WAL commits the frontier walk released.
+    Fresh(Vec<CommitEvent>),
+    /// The job was already resolved (expired lease, another worker
+    /// won): correct protocol behaviour, nothing to do.
+    Stale,
+    /// The record failed the oracle re-check or contradicted the
+    /// lease; the job has been requeued for another worker.
+    Unsound(String),
+}
+
+/// Outcome of a worker's lease rejection.
+pub enum Rejection {
+    /// Requeued for another worker.
+    Requeued,
+    /// `REJECT_CAP` workers refused: failed locally, slot filled.
+    FailedOut(Vec<CommitEvent>),
+    /// The job is no longer this worker's to reject.
+    Stale,
+}
+
+struct Slot {
+    record: RunRecord,
+    /// Pending persistence, consumed by the frontier walk. `None` for
+    /// records that never touch the WAL (cache hits, failures,
+    /// wall-clock-truncated results, storeless sweeps).
+    persist: Option<(Fingerprint, bool)>,
+}
+
+pub struct Scheduler {
+    lease: Duration,
+    /// At most one freshly pulled job parked by the coordinator
+    /// ([`Scheduler::park`]) — the pull-based iteration contract.
+    ready: Option<PreparedJob>,
+    /// Jobs bounced off a dead/slow/rejecting worker, ready to re-grant.
+    requeue: VecDeque<PreparedJob>,
+    active: HashMap<usize, ActiveLease>,
+    rejects: HashMap<usize, usize>,
+    slots: Vec<Option<Slot>>,
+    resolved: usize,
+    /// First index whose slot is still empty — the WAL commit frontier.
+    frontier: usize,
+}
+
+impl Scheduler {
+    pub fn new(n_jobs: usize, lease: Duration) -> Scheduler {
+        Scheduler {
+            lease,
+            ready: None,
+            requeue: VecDeque::new(),
+            active: HashMap::new(),
+            rejects: HashMap::new(),
+            slots: (0..n_jobs).map(|_| None).collect(),
+            resolved: 0,
+            frontier: 0,
+        }
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn done(&self) -> bool {
+        self.resolved == self.slots.len()
+    }
+
+    pub fn resolved(&self) -> usize {
+        self.resolved
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.active.len()
+    }
+
+    /// The coordinator should pull the next job off the plan iterator
+    /// exactly when nothing is leasable without it.
+    pub fn needs_fresh(&self) -> bool {
+        self.ready.is_none() && self.requeue.is_empty()
+    }
+
+    /// Park one freshly pulled job for the next grant. At most one job
+    /// is ever parked — callers pull only when [`needs_fresh`] says so.
+    ///
+    /// [`needs_fresh`]: Scheduler::needs_fresh
+    pub fn park(&mut self, prepared: PreparedJob) {
+        debug_assert!(self.ready.is_none(), "park() over an unleased parked job");
+        self.ready = Some(prepared);
+    }
+
+    /// Resolve a job locally, without a lease: store cache hits and
+    /// reject-capped failures. `persist` is `Some` only when a WAL
+    /// line must be written once the frontier reaches the job.
+    pub fn commit_local(
+        &mut self,
+        idx: usize,
+        record: RunRecord,
+        persist: Option<(Fingerprint, bool)>,
+    ) -> Vec<CommitEvent> {
+        debug_assert!(self.slots[idx].is_none(), "job {idx} resolved twice");
+        self.slots[idx] = Some(Slot { record, persist });
+        self.resolved += 1;
+        self.advance_frontier()
+    }
+
+    /// Grant a lease to `conn`: requeued jobs first (they block the
+    /// commit frontier, and their prepared state is already paid for),
+    /// then the parked fresh job.
+    pub fn grant(&mut self, conn: u64, now: Instant) -> Option<LeaseGrant> {
+        let prepared = self.requeue.pop_front().or_else(|| self.ready.take())?;
+        let grant = LeaseGrant { idx: prepared.idx, job: prepared.job.clone() };
+        self.active.insert(
+            prepared.idx,
+            ActiveLease { prepared, conn, deadline: now + self.lease },
+        );
+        Some(grant)
+    }
+
+    /// A worker finished job `idx`. First sound submission wins the
+    /// slot whether or not the submitter still holds the lease (its
+    /// lease may have expired and been requeued — the work is done
+    /// either way); everything later is stale.
+    pub fn submit(&mut self, idx: usize, record: RunRecord, conn: u64) -> Submission {
+        if idx >= self.slots.len() {
+            return Submission::Unsound(format!("job index {idx} out of range"));
+        }
+        if self.slots[idx].is_some() {
+            return Submission::Stale;
+        }
+        // The prepared state lives in the active lease or (after an
+        // expiry) back in the requeue; a submission for a job in
+        // neither place never had a lease at all.
+        let prepared = if let Some(l) = self.active.get(&idx) {
+            &l.prepared
+        } else if let Some(p) = self.requeue.iter().find(|p| p.idx == idx) {
+            p
+        } else {
+            return Submission::Unsound(format!("job {idx} was never leased"));
+        };
+
+        if let Err(why) = validate_record(&prepared.job, &prepared.exact, &record) {
+            // A lease that produced garbage is over: bounce the job to
+            // another worker — but ONLY if the garbage came from the
+            // lease's current holder. A stale worker (expired lease,
+            // job since re-granted) submitting junk must not yank the
+            // live holder's lease and spawn duplicate grants.
+            if self.active.get(&idx).is_some_and(|l| l.conn == conn) {
+                let l = self.active.remove(&idx).unwrap();
+                self.requeue.push_back(l.prepared);
+            }
+            return Submission::Unsound(why);
+        }
+
+        let persist = self
+            .active
+            .get(&idx)
+            .map(|l| &l.prepared)
+            .or_else(|| self.requeue.iter().find(|p| p.idx == idx))
+            .and_then(|p| persistable(p, &record));
+        self.active.remove(&idx);
+        self.requeue.retain(|p| p.idx != idx);
+        Submission::Fresh(self.commit_local(idx, record, persist))
+    }
+
+    /// A worker refused a lease it was granted.
+    pub fn reject(&mut self, idx: usize, conn: u64, reason: &str) -> Rejection {
+        match self.active.get(&idx) {
+            Some(l) if l.conn == conn => {}
+            // Expired/re-granted/resolved: nothing of this worker's to
+            // reject any more.
+            _ => return Rejection::Stale,
+        }
+        let l = self.active.remove(&idx).unwrap();
+        let count = self.rejects.entry(idx).or_insert(0);
+        *count += 1;
+        if *count >= REJECT_CAP {
+            let rec = failed_record(
+                &l.prepared.job,
+                format!("rejected by {REJECT_CAP} workers (last: {reason})"),
+            );
+            // Failures are never persisted: a resumed sweep retries.
+            Rejection::FailedOut(self.commit_local(idx, rec, None))
+        } else {
+            self.requeue.push_back(l.prepared);
+            Rejection::Requeued
+        }
+    }
+
+    /// A connection died: every lease it held goes back to the queue.
+    /// Returns the requeued job indices (for logging).
+    pub fn fail_conn(&mut self, conn: u64) -> Vec<usize> {
+        let idxs: Vec<usize> = self
+            .active
+            .iter()
+            .filter(|(_, l)| l.conn == conn)
+            .map(|(&idx, _)| idx)
+            .collect();
+        for &idx in &idxs {
+            let l = self.active.remove(&idx).unwrap();
+            self.requeue.push_back(l.prepared);
+        }
+        idxs
+    }
+
+    /// Requeue every lease whose deadline has passed (worker wedged,
+    /// network black hole, job slower than the lease). Returns the
+    /// expired job indices.
+    pub fn expire(&mut self, now: Instant) -> Vec<usize> {
+        let idxs: Vec<usize> = self
+            .active
+            .iter()
+            .filter(|(_, l)| now >= l.deadline)
+            .map(|(&idx, _)| idx)
+            .collect();
+        for &idx in &idxs {
+            let l = self.active.remove(&idx).unwrap();
+            self.requeue.push_back(l.prepared);
+        }
+        idxs
+    }
+
+    /// The finished record set, in job order. Callable only when
+    /// [`Scheduler::done`].
+    pub fn into_records(self) -> Vec<RunRecord> {
+        assert!(self.resolved == self.slots.len(), "into_records before done");
+        self.slots
+            .into_iter()
+            .map(|s| s.expect("done scheduler has every slot filled").record)
+            .collect()
+    }
+
+    fn advance_frontier(&mut self) -> Vec<CommitEvent> {
+        let mut out = Vec::new();
+        while self.frontier < self.slots.len() {
+            let Some(slot) = self.slots[self.frontier].as_mut() else { break };
+            if let Some((fp, heal)) = slot.persist.take() {
+                out.push(CommitEvent {
+                    idx: self.frontier,
+                    record: slot.record.clone(),
+                    fp,
+                    heal,
+                });
+            }
+            self.frontier += 1;
+        }
+        out
+    }
+}
+
+/// A worker-supplied record must describe the leased job and — when it
+/// claims an operator — re-verify against the exhaustive oracle. The
+/// coordinator trusts workers' liveness, never their arithmetic (the
+/// same defence-in-depth as every other serving path in the tree).
+fn validate_record(job: &Job, exact: &[u64], rec: &RunRecord) -> Result<(), String> {
+    if rec.bench != job.bench.name || rec.method != job.method || rec.et != job.et {
+        return Err(format!(
+            "record identity ({} {} et={}) does not match the lease ({} {} et={})",
+            rec.bench,
+            rec.method.name(),
+            rec.et,
+            job.bench.name,
+            job.method.name(),
+            job.et
+        ));
+    }
+    if rec.error.is_none() && rec.area.is_finite() {
+        if rec.values.len() != exact.len() {
+            return Err(format!(
+                "operator table has {} entries, oracle has {}",
+                rec.values.len(),
+                exact.len()
+            ));
+        }
+        if let Some(i) =
+            (0..exact.len()).find(|&i| exact[i].abs_diff(rec.values[i]) > job.et)
+        {
+            return Err(format!(
+                "operator unsound at input {i}: |{} - {}| > et {}",
+                exact[i], rec.values[i], job.et
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Should this fresh record be written to the WAL once the frontier
+/// reaches it? The rule itself is the shared
+/// [`wal_persistable`](crate::coordinator::wal_persistable) — exactly
+/// `run_sweep_stored`'s — plus the dist-only heal bit: a job whose
+/// stored record failed oracle re-verification overwrites it
+/// last-writer-wins instead of deduping on fingerprint.
+fn persistable(p: &PreparedJob, rec: &RunRecord) -> Option<(Fingerprint, bool)> {
+    let fp = p.fp?;
+    if wal_persistable(rec, p.job.search.time_budget_ms) {
+        Some((fp, p.heal))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::generators::benchmark_by_name;
+    use crate::coordinator::Method;
+    use crate::search::SearchConfig;
+
+    const LEASE: Duration = Duration::from_millis(500);
+
+    fn prepared(idx: usize, et: u64) -> PreparedJob {
+        let bench = benchmark_by_name("adder_i4").unwrap();
+        PreparedJob {
+            idx,
+            job: Job { bench, method: Method::Shared, et, search: SearchConfig::default() },
+            exact: Arc::new(vec![0, 1, 2, 3]),
+            fp: Some(Fingerprint(100 + idx as u64)),
+            heal: false,
+        }
+    }
+
+    fn sound_record(p: &PreparedJob) -> RunRecord {
+        RunRecord {
+            bench: p.job.bench.name,
+            method: p.job.method,
+            et: p.job.et,
+            area: 10.0,
+            max_err: p.job.et,
+            mean_err: 0.5,
+            proxy: (1, 1),
+            elapsed_ms: 5,
+            cached: false,
+            values: vec![0, 1, 2, 3],
+            all_points: Vec::new(),
+            error: None,
+        }
+    }
+
+    fn now() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn grant_submit_resolves_in_order() {
+        let mut s = Scheduler::new(2, LEASE);
+        assert!(s.needs_fresh());
+        s.park(prepared(0, 2));
+        assert!(!s.needs_fresh());
+        let g0 = s.grant(1, now()).unwrap();
+        assert_eq!(g0.idx, 0);
+        assert!(s.grant(1, now()).is_none(), "nothing else leasable");
+        s.park(prepared(1, 2));
+        let g1 = s.grant(2, now()).unwrap();
+        assert_eq!(g1.idx, 1);
+
+        // Out-of-order completion: job 1 first — no commits released.
+        let rec1 = sound_record(&prepared(1, 2));
+        match s.submit(1, rec1, 2) {
+            Submission::Fresh(events) => assert!(events.is_empty(), "frontier blocked"),
+            _ => panic!("expected fresh"),
+        }
+        // Job 0 lands: both WAL commits release, in index order.
+        let rec0 = sound_record(&prepared(0, 2));
+        match s.submit(0, rec0, 1) {
+            Submission::Fresh(events) => {
+                assert_eq!(events.len(), 2);
+                assert_eq!(events[0].idx, 0);
+                assert_eq!(events[1].idx, 1);
+                assert!(!events[0].heal);
+            }
+            _ => panic!("expected fresh"),
+        }
+        assert!(s.done());
+        let recs = s.into_records();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].et, 2);
+    }
+
+    #[test]
+    fn expired_lease_requeues_and_first_committed_wins() {
+        let mut s = Scheduler::new(1, Duration::from_millis(0));
+        s.park(prepared(0, 2));
+        let t0 = now();
+        s.grant(1, t0).unwrap();
+        // Zero-length lease: immediately expired.
+        assert_eq!(s.expire(t0 + Duration::from_millis(1)), vec![0]);
+        assert_eq!(s.in_flight(), 0);
+        // The original worker still finishes first — accepted.
+        match s.submit(0, sound_record(&prepared(0, 2)), 1) {
+            Submission::Fresh(events) => assert_eq!(events.len(), 1),
+            _ => panic!("first sound submission must win"),
+        }
+        // The requeue entry is gone: no second grant, and the job is
+        // not leasable again.
+        assert!(s.grant(2, now()).is_none());
+        // A late duplicate (the re-granted worker, had there been one)
+        // is stale.
+        assert!(matches!(
+            s.submit(0, sound_record(&prepared(0, 2)), 2),
+            Submission::Stale
+        ));
+        assert!(s.done());
+    }
+
+    #[test]
+    fn dead_connection_requeues_all_its_leases() {
+        let mut s = Scheduler::new(2, LEASE);
+        s.park(prepared(0, 2));
+        s.grant(7, now()).unwrap();
+        s.park(prepared(1, 2));
+        s.grant(7, now()).unwrap();
+        let mut lost = s.fail_conn(7);
+        lost.sort_unstable();
+        assert_eq!(lost, vec![0, 1]);
+        // Both jobs re-grantable to a healthy worker.
+        assert!(s.grant(8, now()).is_some());
+        assert!(s.grant(8, now()).is_some());
+        assert!(s.grant(8, now()).is_none());
+    }
+
+    #[test]
+    fn unsound_results_requeue_instead_of_committing() {
+        let mut s = Scheduler::new(1, LEASE);
+        s.park(prepared(0, 2));
+        s.grant(1, now()).unwrap();
+        // Unsound values: off by more than et at input 0.
+        let mut bad = sound_record(&prepared(0, 2));
+        bad.values = vec![99, 1, 2, 3];
+        match s.submit(0, bad, 1) {
+            Submission::Unsound(why) => assert!(why.contains("unsound"), "{why}"),
+            _ => panic!("unsound record must not commit"),
+        }
+        assert!(!s.done());
+        // Identity mismatch is also refused.
+        let g = s.grant(2, now()).unwrap();
+        assert_eq!(g.idx, 0);
+        let mut wrong = sound_record(&prepared(0, 2));
+        wrong.et = 5;
+        assert!(matches!(s.submit(0, wrong, 2), Submission::Unsound(_)));
+        // A sound result finally lands.
+        s.grant(3, now()).unwrap();
+        assert!(matches!(s.submit(0, sound_record(&prepared(0, 2)), 3), Submission::Fresh(_)));
+        assert!(s.done());
+    }
+
+    #[test]
+    fn stale_unsound_submission_leaves_the_live_lease_alone() {
+        let mut s = Scheduler::new(1, Duration::from_millis(0));
+        s.park(prepared(0, 2));
+        let t0 = now();
+        s.grant(1, t0).unwrap(); // worker A
+        s.expire(t0 + Duration::from_millis(1)); // A's lease expires
+        s.grant(2, now()).unwrap(); // re-granted to worker B
+        // Stale A submits garbage: B's live lease must survive, and no
+        // duplicate grant may spawn.
+        let mut bad = sound_record(&prepared(0, 2));
+        bad.values = vec![99, 1, 2, 3];
+        assert!(matches!(s.submit(0, bad, 1), Submission::Unsound(_)));
+        assert_eq!(s.in_flight(), 1, "B's live lease untouched");
+        assert!(s.grant(3, now()).is_none(), "no duplicate grant spawned");
+        // B still completes the job.
+        assert!(matches!(
+            s.submit(0, sound_record(&prepared(0, 2)), 2),
+            Submission::Fresh(_)
+        ));
+        assert!(s.done());
+    }
+
+    #[test]
+    fn reject_cap_fails_the_job_locally() {
+        let mut s = Scheduler::new(1, LEASE);
+        s.park(prepared(0, 2));
+        for attempt in 0..REJECT_CAP {
+            let g = s.grant(attempt as u64, now()).unwrap();
+            assert_eq!(g.idx, 0);
+            match s.reject(0, attempt as u64, "unknown benchmark") {
+                Rejection::Requeued => assert!(attempt + 1 < REJECT_CAP),
+                Rejection::FailedOut(events) => {
+                    assert_eq!(attempt + 1, REJECT_CAP);
+                    assert!(events.is_empty(), "failures are never persisted");
+                }
+                Rejection::Stale => panic!("live lease cannot be stale"),
+            }
+        }
+        assert!(s.done());
+        let recs = s.into_records();
+        assert!(recs[0].area.is_infinite());
+        assert!(recs[0].error.as_deref().unwrap().contains("rejected"));
+    }
+
+    #[test]
+    fn failures_and_timeouts_are_not_persisted() {
+        let p = prepared(0, 2);
+        let mut failed = sound_record(&p);
+        failed.error = Some("boom".to_string());
+        failed.area = f64::INFINITY;
+        assert!(persistable(&p, &failed).is_none());
+
+        let mut truncated = sound_record(&p);
+        truncated.elapsed_ms = p.job.search.time_budget_ms;
+        assert!(persistable(&p, &truncated).is_none(), "deadline-bound template result");
+
+        let good = sound_record(&p);
+        assert_eq!(persistable(&p, &good), Some((p.fp.unwrap(), false)));
+
+        let mut storeless = prepared(0, 2);
+        storeless.fp = None;
+        assert!(persistable(&storeless, &good).is_none());
+
+        let mut healing = prepared(0, 2);
+        healing.heal = true;
+        assert_eq!(persistable(&healing, &good), Some((healing.fp.unwrap(), true)));
+    }
+}

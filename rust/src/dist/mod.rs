@@ -1,0 +1,36 @@
+//! Distributed sweep fabric: coordinator/worker nodes over TCP with
+//! lease-based scheduling and store-backed resume — the subsystem that
+//! turns a one-machine sweep into a horizontally scalable synthesis
+//! service (every (benchmark, method, ET) job is an independent SAT
+//! search, so the methodology is embarrassingly parallel at the job
+//! level).
+//!
+//! * [`protocol`] — the worker↔coordinator verb set over the shared
+//!   line-delimited-JSON wire discipline
+//!   ([`util::jsonl`](crate::util::jsonl)).
+//! * [`lease`] — the scheduling state machine: leases with wall-clock
+//!   expiry, requeue on worker death, first-committed-wins dedup and
+//!   the in-order WAL commit frontier. Pure state, unit-tested without
+//!   sockets.
+//! * [`coordinator`] — the TCP server around the scheduler: pull-based
+//!   job iteration, store probing (cache hits never cross the wire),
+//!   single-writer WAL commits, teardown.
+//! * [`worker`] — the remote executor: lease → `run_job_with` (with a
+//!   per-process miter-prototype cache) → result, in a loop.
+//!
+//! The contract, proven end to end by `tests/dist_roundtrip.rs`: a
+//! distributed sweep's record set, fig5 CSV and WAL are byte-identical
+//! (modulo the `cached`/`elapsed_ms` provenance columns) to a
+//! sequential `run_sweep_stored` run, regardless of worker count,
+//! arrival order, worker crashes or lease expiries. See DESIGN.md §11
+//! for the wire protocol, the lease state machine and the determinism
+//! argument.
+
+pub mod coordinator;
+pub mod lease;
+pub mod protocol;
+pub mod worker;
+
+pub use coordinator::{run_distributed_sweep, Coordinator, DistConfig};
+pub use lease::{Scheduler, REJECT_CAP};
+pub use worker::{run_worker, WorkerConfig, WorkerStats};

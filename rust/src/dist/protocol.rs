@@ -1,0 +1,321 @@
+//! The distributed-sweep wire vocabulary: strict request/response,
+//! line-delimited JSON over TCP, framed by the shared
+//! [`util::jsonl`](crate::util::jsonl) discipline (64KB line cap,
+//! structured `{"ok":false,...}` errors) — the same wire rules as the
+//! serving protocol, with a different verb set.
+//!
+//! A **worker** connects, says hello, and then loops: request a lease,
+//! run the leased job, send the result, repeat. Every worker line gets
+//! exactly one coordinator line back, so neither side ever needs to
+//! demultiplex:
+//!
+//! ```text
+//! worker                                coordinator
+//! {"type":"hello","name":"w1","proto":1}
+//!                     {"jobs":8,"lease_ms":60000,"ok":true,"type":"welcome"}
+//! {"type":"lease_request"}
+//!                     {"bench":"adder_i4","et":2,"job":3,"method":"SHARED",
+//!                      "ok":true,"search":{...},"type":"lease"}
+//! {"type":"result","job":3,"record":{...RunRecord...}}
+//!                     {"fresh":true,"job":3,"ok":true,"type":"committed"}
+//! {"type":"lease_request"}
+//!                     {"ms":500,"ok":true,"type":"wait"}     (nothing leasable *yet*)
+//!                     {"ok":true,"type":"done"}              (sweep complete: disconnect)
+//! ```
+//!
+//! `reject` is the worker's "I cannot run this lease" (unknown
+//! benchmark after a version skew, undecodable config): the
+//! coordinator requeues the job for someone else and answers
+//! `requeued`. `fresh:false` on a commit means the result was a stale
+//! duplicate (the lease had expired and another worker's commit won) —
+//! correct behaviour, not an error.
+//!
+//! Requests and responses are rendered with `Json::render` (sorted
+//! keys, ASCII), so every message is byte-deterministic.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::{Method, RunRecord};
+use crate::search::SearchConfig;
+use crate::util::jsonl;
+use crate::util::Json;
+
+/// Wire protocol version; bumped on incompatible message changes. The
+/// coordinator refuses hellos from other versions (a worker from a
+/// different build could silently disagree about job identity).
+pub const PROTO_VERSION: u64 = 1;
+
+/// A message from a worker to the coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkerMsg {
+    Hello { name: String, proto: u64 },
+    LeaseRequest,
+    Result { job: usize, record: RunRecord },
+    Reject { job: usize, reason: String },
+}
+
+/// A coordinator response. Exactly one per worker message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CoordMsg {
+    Welcome { jobs: usize, lease_ms: u64 },
+    Lease { job: usize, bench: String, method: Method, et: u64, search: SearchConfig },
+    Wait { ms: u64 },
+    Done,
+    Committed { job: usize, fresh: bool },
+    Requeued { job: usize },
+    Error { error: String },
+}
+
+impl WorkerMsg {
+    pub fn render(&self) -> String {
+        let mut m = BTreeMap::new();
+        match self {
+            WorkerMsg::Hello { name, proto } => {
+                m.insert("type".to_string(), Json::Str("hello".to_string()));
+                m.insert("name".to_string(), Json::Str(name.clone()));
+                m.insert("proto".to_string(), Json::Num(*proto as f64));
+            }
+            WorkerMsg::LeaseRequest => {
+                m.insert("type".to_string(), Json::Str("lease_request".to_string()));
+            }
+            WorkerMsg::Result { job, record } => {
+                m.insert("type".to_string(), Json::Str("result".to_string()));
+                m.insert("job".to_string(), Json::Num(*job as f64));
+                m.insert("record".to_string(), record.to_json());
+            }
+            WorkerMsg::Reject { job, reason } => {
+                m.insert("type".to_string(), Json::Str("reject".to_string()));
+                m.insert("job".to_string(), Json::Num(*job as f64));
+                m.insert("reason".to_string(), Json::Str(reason.clone()));
+            }
+        }
+        Json::Obj(m).render()
+    }
+
+    /// Parse one worker line; the error string is ready to embed in a
+    /// structured error response.
+    pub fn parse(line: &str) -> Result<WorkerMsg, String> {
+        let j = Json::parse(line).map_err(|e| format!("bad JSON: {e:#}"))?;
+        let ty = j
+            .get("type")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "missing \"type\" field".to_string())?;
+        let job = || {
+            j.get("job")
+                .and_then(Json::as_u64)
+                .map(|v| v as usize)
+                .ok_or_else(|| format!("{ty}: missing \"job\" index"))
+        };
+        match ty {
+            "hello" => Ok(WorkerMsg::Hello {
+                name: j
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("anonymous")
+                    .to_string(),
+                proto: j.get("proto").and_then(Json::as_u64).unwrap_or(0),
+            }),
+            "lease_request" => Ok(WorkerMsg::LeaseRequest),
+            "result" => Ok(WorkerMsg::Result {
+                job: job()?,
+                record: RunRecord::from_json(
+                    j.get("record").ok_or_else(|| "result: missing \"record\"".to_string())?,
+                )
+                .map_err(|e| format!("result: bad record: {e:#}"))?,
+            }),
+            "reject" => Ok(WorkerMsg::Reject {
+                job: job()?,
+                reason: j
+                    .get("reason")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unspecified")
+                    .to_string(),
+            }),
+            other => Err(format!("unknown worker message type {other:?}")),
+        }
+    }
+}
+
+impl CoordMsg {
+    pub fn render(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("ok".to_string(), Json::Bool(true));
+        match self {
+            CoordMsg::Welcome { jobs, lease_ms } => {
+                m.insert("type".to_string(), Json::Str("welcome".to_string()));
+                m.insert("jobs".to_string(), Json::Num(*jobs as f64));
+                m.insert("lease_ms".to_string(), Json::Num(*lease_ms as f64));
+            }
+            CoordMsg::Lease { job, bench, method, et, search } => {
+                m.insert("type".to_string(), Json::Str("lease".to_string()));
+                m.insert("job".to_string(), Json::Num(*job as f64));
+                m.insert("bench".to_string(), Json::Str(bench.clone()));
+                m.insert("method".to_string(), Json::Str(method.name().to_string()));
+                m.insert("et".to_string(), Json::Num(*et as f64));
+                m.insert("search".to_string(), search.to_json());
+            }
+            CoordMsg::Wait { ms } => {
+                m.insert("type".to_string(), Json::Str("wait".to_string()));
+                m.insert("ms".to_string(), Json::Num(*ms as f64));
+            }
+            CoordMsg::Done => {
+                m.insert("type".to_string(), Json::Str("done".to_string()));
+            }
+            CoordMsg::Committed { job, fresh } => {
+                m.insert("type".to_string(), Json::Str("committed".to_string()));
+                m.insert("job".to_string(), Json::Num(*job as f64));
+                m.insert("fresh".to_string(), Json::Bool(*fresh));
+            }
+            CoordMsg::Requeued { job } => {
+                m.insert("type".to_string(), Json::Str("requeued".to_string()));
+                m.insert("job".to_string(), Json::Num(*job as f64));
+            }
+            CoordMsg::Error { error } => {
+                // The shared structured-error shape (no request ids in
+                // this strict request/response protocol: id 0).
+                return jsonl::error_line(0, error);
+            }
+        }
+        Json::Obj(m).render()
+    }
+
+    /// Parse one coordinator line — the worker/client half.
+    pub fn parse(line: &str) -> Result<CoordMsg, String> {
+        let j = Json::parse(line).map_err(|e| format!("bad JSON: {e:#}"))?;
+        let ok = j
+            .get("ok")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| "response missing \"ok\"".to_string())?;
+        if !ok {
+            return Ok(CoordMsg::Error {
+                error: j
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unspecified coordinator error")
+                    .to_string(),
+            });
+        }
+        let ty = j
+            .get("type")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "response missing \"type\"".to_string())?;
+        let num = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("{ty}: missing \"{key}\""))
+        };
+        match ty {
+            "welcome" => Ok(CoordMsg::Welcome {
+                jobs: num("jobs")? as usize,
+                lease_ms: num("lease_ms")?,
+            }),
+            "lease" => Ok(CoordMsg::Lease {
+                job: num("job")? as usize,
+                bench: j
+                    .get("bench")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "lease: missing \"bench\"".to_string())?
+                    .to_string(),
+                method: j
+                    .get("method")
+                    .and_then(Json::as_str)
+                    .and_then(Method::from_name)
+                    .ok_or_else(|| "lease: missing/unknown \"method\"".to_string())?,
+                et: num("et")?,
+                search: SearchConfig::from_json(
+                    j.get("search").ok_or_else(|| "lease: missing \"search\"".to_string())?,
+                )
+                .map_err(|e| format!("lease: {e:#}"))?,
+            }),
+            "wait" => Ok(CoordMsg::Wait { ms: num("ms")? }),
+            "done" => Ok(CoordMsg::Done),
+            "committed" => Ok(CoordMsg::Committed {
+                job: num("job")? as usize,
+                fresh: j.get("fresh").and_then(Json::as_bool).unwrap_or(false),
+            }),
+            "requeued" => Ok(CoordMsg::Requeued { job: num("job")? as usize }),
+            other => Err(format!("unknown coordinator message type {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record() -> RunRecord {
+        RunRecord {
+            bench: "adder_i4",
+            method: Method::Shared,
+            et: 2,
+            area: 12.5,
+            max_err: 2,
+            mean_err: 0.75,
+            proxy: (3, 4),
+            elapsed_ms: 17,
+            cached: false,
+            values: vec![0, 1, 2, 3],
+            all_points: vec![(3, 4, 12.5)],
+            error: None,
+        }
+    }
+
+    #[test]
+    fn worker_messages_round_trip() {
+        let msgs = [
+            WorkerMsg::Hello { name: "w1".to_string(), proto: PROTO_VERSION },
+            WorkerMsg::LeaseRequest,
+            WorkerMsg::Result { job: 3, record: record() },
+            WorkerMsg::Reject { job: 9, reason: "unknown benchmark".to_string() },
+        ];
+        for m in msgs {
+            let line = m.render();
+            assert_eq!(line, m.render(), "deterministic rendering");
+            assert_eq!(WorkerMsg::parse(&line).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn coordinator_messages_round_trip() {
+        let msgs = [
+            CoordMsg::Welcome { jobs: 8, lease_ms: 60_000 },
+            CoordMsg::Lease {
+                job: 3,
+                bench: "adder_i4".to_string(),
+                method: Method::Xpat,
+                et: 2,
+                search: SearchConfig::default(),
+            },
+            CoordMsg::Wait { ms: 500 },
+            CoordMsg::Done,
+            CoordMsg::Committed { job: 3, fresh: true },
+            CoordMsg::Requeued { job: 9 },
+        ];
+        for m in msgs {
+            let line = m.render();
+            assert_eq!(line, m.render(), "deterministic rendering");
+            assert_eq!(CoordMsg::parse(&line).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn errors_use_the_shared_shape() {
+        let line = CoordMsg::Error { error: "no such job".to_string() }.render();
+        assert_eq!(line, "{\"error\":\"no such job\",\"id\":0,\"ok\":false}");
+        match CoordMsg::parse(&line).unwrap() {
+            CoordMsg::Error { error } => assert!(error.contains("no such job")),
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_lines_are_string_errors() {
+        assert!(WorkerMsg::parse("not json").is_err());
+        assert!(WorkerMsg::parse("{\"type\":\"dance\"}").unwrap_err().contains("dance"));
+        assert!(WorkerMsg::parse("{\"type\":\"result\",\"job\":1}")
+            .unwrap_err()
+            .contains("record"));
+        assert!(CoordMsg::parse("{\"ok\":true}").is_err());
+        assert!(CoordMsg::parse("{\"ok\":true,\"type\":\"lease\",\"job\":1}").is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! The worker node: connect to a coordinator, pull leases, run jobs
+//! through the exact same execution path a local sweep uses
+//! ([`run_job_with`] plus a per-process [`MiterCache`], so a worker
+//! that runs ten same-geometry jobs encodes the miter once), stream
+//! the records back.
+//!
+//! Workers are deliberately stateless and trustless-by-construction:
+//! they never see the store (the coordinator is the single WAL
+//! writer), every record they return is re-verified against the
+//! coordinator's own oracle table, and a worker that dies mid-job
+//! simply lets its lease expire. A panic inside a job is caught and
+//! shipped back as the standard failure record — the same shape the
+//! local pool produces — so one poisoned job cannot kill the worker.
+//!
+//! The coordinator tearing down (sweep finished while this worker was
+//! still solving a requeued-elsewhere job) surfaces as EOF mid-loop;
+//! that is a graceful end, not an error.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::circuit::generators::benchmark_by_name;
+use crate::circuit::sim::TruthTables;
+use crate::coordinator::{failed_record, panic_message, run_job_with, Job};
+use crate::search::MiterCache;
+use crate::util::jsonl::{self, LineRead};
+
+use super::protocol::{CoordMsg, WorkerMsg, PROTO_VERSION};
+
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Coordinator address, e.g. `127.0.0.1:7979`.
+    pub addr: String,
+    /// Name reported in the hello (logs only; identity is the
+    /// connection).
+    pub name: String,
+    /// Override the leased config's `cell_workers` with this node's
+    /// core budget — determinism-neutral, so heterogeneous workers
+    /// still produce identical records.
+    pub cell_workers: Option<usize>,
+    /// Disconnect after this many completed jobs (tests, canaries).
+    pub max_jobs: Option<usize>,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            addr: "127.0.0.1:7979".to_string(),
+            name: format!("worker-{}", std::process::id()),
+            cell_workers: None,
+            max_jobs: None,
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct WorkerStats {
+    /// Jobs run to completion and submitted (including failure records).
+    pub completed: usize,
+    /// Submissions the coordinator discarded as duplicates (our lease
+    /// had expired and another worker's commit won).
+    pub stale: usize,
+    /// Leases this worker refused (unknown benchmark etc.).
+    pub rejected: usize,
+    /// `wait` backoffs served.
+    pub waits: usize,
+}
+
+/// One request/response exchange. `Ok(None)` means the coordinator is
+/// gone (EOF / reset) — for a worker that is a graceful end of the
+/// sweep, not an error.
+fn exchange(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    msg: &WorkerMsg,
+) -> Result<Option<CoordMsg>> {
+    if jsonl::send_line(writer, &msg.render()).is_err() {
+        return Ok(None);
+    }
+    loop {
+        return match jsonl::read_line(reader) {
+            LineRead::Eof => Ok(None),
+            LineRead::Oversized => bail!("oversized coordinator response line"),
+            LineRead::Line(l) if l.is_empty() => continue,
+            LineRead::Line(l) => match CoordMsg::parse(&l) {
+                Ok(m) => Ok(Some(m)),
+                Err(e) => bail!("bad coordinator response: {e}"),
+            },
+        };
+    }
+}
+
+/// Run one worker until the coordinator reports the sweep done (or
+/// disconnects, or `max_jobs` is reached).
+pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerStats> {
+    let stream = TcpStream::connect(&cfg.addr)
+        .with_context(|| format!("connecting to coordinator {}", cfg.addr))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut writer = stream;
+    let mut stats = WorkerStats::default();
+
+    let hello =
+        WorkerMsg::Hello { name: cfg.name.clone(), proto: PROTO_VERSION };
+    match exchange(&mut writer, &mut reader, &hello)? {
+        Some(CoordMsg::Welcome { .. }) => {}
+        Some(CoordMsg::Error { error }) => bail!("coordinator refused hello: {error}"),
+        Some(other) => bail!("unexpected hello response: {other:?}"),
+        None => bail!("coordinator {} hung up during hello", cfg.addr),
+    }
+
+    // One miter-prototype cache per worker process: same-geometry
+    // leases clone instead of re-encoding, exactly as in a local sweep.
+    let protos = MiterCache::new();
+    loop {
+        if cfg.max_jobs.is_some_and(|cap| stats.completed >= cap) {
+            break;
+        }
+        let Some(resp) = exchange(&mut writer, &mut reader, &WorkerMsg::LeaseRequest)?
+        else {
+            break; // coordinator gone: sweep is over for us
+        };
+        match resp {
+            CoordMsg::Lease { job: idx, bench, method, et, search } => {
+                let msg = match benchmark_by_name(&bench) {
+                    None => {
+                        stats.rejected += 1;
+                        WorkerMsg::Reject {
+                            job: idx,
+                            reason: format!("unknown benchmark {bench:?}"),
+                        }
+                    }
+                    Some(b) => {
+                        let mut search = search;
+                        if let Some(cw) = cfg.cell_workers {
+                            search.cell_workers = cw.max(1);
+                        }
+                        let job = Job { bench: b, method, et, search };
+                        let nl = job.bench.netlist();
+                        let exact = TruthTables::simulate(&nl).output_values(&nl);
+                        let record =
+                            catch_unwind(AssertUnwindSafe(|| {
+                                run_job_with(&job, &protos, &exact)
+                            }))
+                            .unwrap_or_else(|p| failed_record(&job, panic_message(p)));
+                        stats.completed += 1;
+                        let mut msg = WorkerMsg::Result { job: idx, record };
+                        // A record too large for the wire discipline
+                        // would livelock the sweep (oversized line →
+                        // dropped connection → requeue → the identical
+                        // line again, forever). Fail the job visibly
+                        // instead; it can still run in a local sweep,
+                        // whose WAL path has no line cap.
+                        let line_len = msg.render().len();
+                        if line_len > jsonl::MAX_LINE_BYTES {
+                            let why = format!(
+                                "result of {line_len} bytes exceeds the {}-byte wire \
+                                 cap (huge all_points/values?); run this job locally",
+                                jsonl::MAX_LINE_BYTES
+                            );
+                            eprintln!("worker {}: job {idx}: {why}", cfg.name);
+                            msg = WorkerMsg::Result {
+                                job: idx,
+                                record: failed_record(&job, why),
+                            };
+                        }
+                        msg
+                    }
+                };
+                match exchange(&mut writer, &mut reader, &msg)? {
+                    None => break,
+                    Some(CoordMsg::Committed { fresh, .. }) => {
+                        if !fresh {
+                            stats.stale += 1;
+                        }
+                    }
+                    Some(CoordMsg::Requeued { .. }) => {}
+                    Some(CoordMsg::Error { error }) => {
+                        // E.g. our record failed the coordinator's
+                        // oracle re-check; the job was requeued. Keep
+                        // serving — the coordinator decides our fate.
+                        eprintln!("worker {}: coordinator: {error}", cfg.name);
+                    }
+                    Some(other) => bail!("unexpected result response: {other:?}"),
+                }
+            }
+            CoordMsg::Wait { ms } => {
+                stats.waits += 1;
+                std::thread::sleep(Duration::from_millis(ms.min(5_000)));
+            }
+            CoordMsg::Done => break,
+            CoordMsg::Error { error } => bail!("coordinator error: {error}"),
+            other => bail!("unexpected lease response: {other:?}"),
+        }
+    }
+    Ok(stats)
+}

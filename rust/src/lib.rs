@@ -18,6 +18,7 @@ pub mod baselines;
 pub mod bench_support;
 pub mod circuit;
 pub mod coordinator;
+pub mod dist;
 pub mod evaluator;
 pub mod nn;
 pub mod report;

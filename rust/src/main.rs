@@ -11,6 +11,7 @@
 //!   oplib      list|best|export    query/export the persistent operator store
 //!   serve      [--store DIR]       QoS-tiered batched inference server (TCP)
 //!   loadgen    [--addr A]          closed-loop load generator for `serve`
+//!   worker     --connect ADDR      distributed-sweep worker node
 //!
 //! `sweep --store DIR` opens the persistent result store in DIR: jobs
 //! already fingerprinted there are served from disk (no SAT search,
@@ -19,6 +20,18 @@
 //! `--resume` flag is the explicit spelling of that default (it errors
 //! without `--store`, as a guard against expecting resumption with no
 //! store configured).
+//!
+//! `sweep --distributed ADDR` (alias `--listen ADDR`) runs the sweep
+//! as a *coordinator*: it binds ADDR, serves store cache hits locally,
+//! and leases the remaining jobs to `worker` nodes over TCP
+//! (line-delimited JSON; see `dist::protocol` and DESIGN.md §11). The
+//! coordinator is the single WAL writer; leases that expire
+//! (`--lease-ms`, default 2×time budget + 30s) or belong to a dead
+//! connection are requeued, and the record set is byte-identical to a
+//! local sweep regardless of worker count. `worker --connect ADDR
+//! [--name N] [--cell-workers K] [--max-jobs N]` runs one worker node;
+//! its search config comes from each lease, with only the
+//! determinism-neutral `cell_workers` overridable per node.
 //!
 //! `oplib` reads a store and serves the deployment-time lookup:
 //!   oplib list   --store DIR              per-benchmark Pareto frontiers
@@ -62,6 +75,7 @@ use sxpat::circuit::generators::{benchmark_by_name, PAPER_BENCHMARKS};
 use sxpat::circuit::sim::TruthTables;
 use sxpat::circuit::verilog::write_verilog;
 use sxpat::coordinator::{run_job, run_sweep_stored, Job, Method, SweepPlan};
+use sxpat::dist::{run_worker, Coordinator, DistConfig, WorkerConfig};
 use sxpat::evaluator::rust_eval::evaluate_batch;
 use sxpat::report::{fig4_csv, fig5_csv, fig5_markdown, records_csv};
 use sxpat::runtime::{find_artifacts_dir, Runtime};
@@ -92,6 +106,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("oplib") => oplib(args),
         Some("serve") => serve(args),
         Some("loadgen") => loadgen(args),
+        Some("worker") => worker(args),
         _ => {
             eprintln!("{}", HELP);
             Ok(())
@@ -99,7 +114,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const HELP: &str = "usage: sxpat <bench-gen|synth|sweep|proxy-study|random-baseline|verify|nn-eval|oplib|serve|loadgen> [--flags]
+const HELP: &str = "usage: sxpat <bench-gen|synth|sweep|proxy-study|random-baseline|verify|nn-eval|oplib|serve|loadgen|worker> [--flags]
 see rust/src/main.rs header or README.md for details";
 
 fn search_config(args: &Args) -> Result<SearchConfig> {
@@ -255,6 +270,15 @@ fn sweep(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    // `--resume DIR` parses as an *option*, silently skipping the flag
+    // guard below — the classic misuse is `sweep --resume results/store`
+    // by a user who thinks --resume names the store. Reject both shapes
+    // loudly: a "resumable" sweep with no store would re-solve the world.
+    if let Some(v) = args.get("resume") {
+        bail!(
+            "--resume takes no value (got {v:?}); spell it `--store {v} --resume`"
+        );
+    }
     if args.has_flag("resume") && store.is_none() {
         bail!("--resume requires --store DIR (nothing to resume from)");
     }
@@ -265,13 +289,36 @@ fn sweep(args: &Args) -> Result<()> {
             st.len()
         );
     }
-    println!(
-        "running {} jobs on {} workers × {} cell workers...",
-        plan.jobs().len(),
-        plan.workers,
-        plan.search.cell_workers
-    );
-    let records = run_sweep_stored(&plan, store.as_ref());
+    if args.has_flag("distributed") || args.has_flag("listen") {
+        bail!("--distributed/--listen require a bind address (e.g. 127.0.0.1:7979)");
+    }
+    let records = match args.get("distributed").or_else(|| args.get("listen")) {
+        Some(addr) => {
+            let cfg = DistConfig {
+                addr: addr.to_string(),
+                lease_ms: args.get_u64("lease-ms")?.unwrap_or(0),
+                wait_ms: args.get_u64("wait-ms")?.unwrap_or(500),
+            };
+            let coord = Coordinator::bind(&plan, store.as_ref(), &cfg)?;
+            println!(
+                "coordinator listening on {} ({} jobs); start workers with \
+                 `sxpat worker --connect {}`",
+                coord.addr(),
+                plan.n_jobs(),
+                coord.addr()
+            );
+            coord.run()?
+        }
+        None => {
+            println!(
+                "running {} jobs on {} workers × {} cell workers...",
+                plan.n_jobs(),
+                plan.workers,
+                plan.search.cell_workers
+            );
+            run_sweep_stored(&plan, store.as_ref())
+        }
+    };
     if store.is_some() {
         let hits = records.iter().filter(|r| r.cached).count();
         println!(
@@ -293,7 +340,9 @@ fn oplib(args: &Args) -> Result<()> {
     let store_dir = args
         .get("store")
         .ok_or_else(|| anyhow!("--store DIR required (a dir written by sweep --store)"))?;
-    let store = Store::open(Path::new(store_dir))?;
+    // Queries never write: a read-only open works alongside a live
+    // sweep holding the writer lock.
+    let store = Store::open_read_only(Path::new(store_dir))?;
     let lib = OpLib::from_store(&store);
     match args.positional.get(1).map(String::as_str) {
         Some("list") => {
@@ -382,6 +431,24 @@ fn oplib(args: &Args) -> Result<()> {
         }
         other => bail!("oplib <list|best|export>, got {other:?}"),
     }
+}
+
+/// The `worker` subcommand: one distributed-sweep worker node.
+fn worker(args: &Args) -> Result<()> {
+    let cfg = WorkerConfig {
+        addr: args.get_or("connect", "127.0.0.1:7979"),
+        name: args.get_or("name", &format!("worker-{}", std::process::id())),
+        cell_workers: args.get_u64("cell-workers")?.map(|x| x as usize),
+        max_jobs: args.get_u64("max-jobs")?.map(|x| x as usize),
+    };
+    println!("worker {} connecting to {}...", cfg.name, cfg.addr);
+    let stats = run_worker(&cfg)?;
+    println!(
+        "worker {} done: {} jobs completed ({} stale duplicates, {} leases \
+         rejected, {} idle waits)",
+        cfg.name, stats.completed, stats.stale, stats.rejected, stats.waits
+    );
+    Ok(())
 }
 
 /// The `serve` subcommand: QoS-tiered batched inference over TCP.

@@ -19,7 +19,7 @@ use crate::template::{NonsharedMiter, SharedMiter, SopParams};
 
 use super::engine::{run_search, run_search_exact};
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SearchConfig {
     /// Product-pool size (SHARED) / per-output slots (XPAT).
     pub pool: usize,
@@ -56,6 +56,68 @@ impl Default for SearchConfig {
             cell_workers: 1,
             share_blocked_models: false,
         }
+    }
+}
+
+impl SearchConfig {
+    /// Serialize for the distributed-sweep wire (`dist::protocol`):
+    /// every field travels, including the determinism-neutral ones
+    /// (`cell_workers`, `share_blocked_models`) — a worker may override
+    /// those locally, but the coordinator's values are the defaults.
+    /// Deterministic rendering via `Json::render` (sorted keys, ASCII).
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("pool".to_string(), Json::Num(self.pool as f64));
+        m.insert(
+            "solutions_per_cell".to_string(),
+            Json::Num(self.solutions_per_cell as f64),
+        );
+        m.insert("max_sat_cells".to_string(), Json::Num(self.max_sat_cells as f64));
+        m.insert(
+            "conflict_budget".to_string(),
+            match self.conflict_budget {
+                Some(b) => Json::Num(b as f64),
+                None => Json::Null,
+            },
+        );
+        m.insert("time_budget_ms".to_string(), Json::Num(self.time_budget_ms as f64));
+        m.insert("cell_workers".to_string(), Json::Num(self.cell_workers as f64));
+        m.insert(
+            "share_blocked_models".to_string(),
+            Json::Bool(self.share_blocked_models),
+        );
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`SearchConfig::to_json`].
+    pub fn from_json(j: &crate::util::Json) -> anyhow::Result<SearchConfig> {
+        use anyhow::anyhow;
+        use crate::util::Json;
+        let num = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("search config: missing/invalid {key:?}"))
+        };
+        let conflict_budget = match j.get("conflict_budget") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_u64()
+                    .ok_or_else(|| anyhow!("search config: bad conflict_budget"))?,
+            ),
+        };
+        Ok(SearchConfig {
+            pool: num("pool")? as usize,
+            solutions_per_cell: num("solutions_per_cell")? as usize,
+            max_sat_cells: num("max_sat_cells")? as usize,
+            conflict_budget,
+            time_budget_ms: num("time_budget_ms")?,
+            cell_workers: num("cell_workers")?.max(1) as usize,
+            share_blocked_models: j
+                .get("share_blocked_models")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+        })
     }
 }
 
@@ -245,6 +307,23 @@ mod tests {
             time_budget_ms: 30_000,
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn search_config_json_round_trip() {
+        let mut cfg = quick_cfg();
+        cfg.cell_workers = 4;
+        cfg.share_blocked_models = true;
+        let back = SearchConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+        // None conflict budget survives as JSON null.
+        cfg.conflict_budget = None;
+        let text = cfg.to_json().render();
+        assert!(text.contains("\"conflict_budget\":null"), "{text}");
+        let back = SearchConfig::from_json(&crate::util::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.conflict_budget, None);
+        // Missing fields fail loudly, not with defaults.
+        assert!(SearchConfig::from_json(&crate::util::Json::parse("{}").unwrap()).is_err());
     }
 
     #[test]

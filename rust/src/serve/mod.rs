@@ -8,8 +8,10 @@
 //! cheapest *verified* approximate multiplier on the store's Pareto
 //! frontier for that budget. Pieces:
 //!
-//! - [`protocol`] — line-delimited JSON over TCP (`std::net` +
-//!   `util::Json` only; no external dependencies).
+//! - [`protocol`] — the request/response vocabulary, framed by the
+//!   shared line-delimited-JSON wire discipline
+//!   ([`util::jsonl`](crate::util::jsonl); `std::net` + `util::Json`
+//!   only, no external dependencies).
 //! - [`registry`] — QoS tier → verified min-area `MultLut`, resolved
 //!   from the operator library at startup, atomically hot-swappable
 //!   via `reload` after new sweeps land in the store.

@@ -30,9 +30,10 @@ use std::collections::BTreeMap;
 
 use crate::util::Json;
 
-/// Hard cap on one request line; longer lines get an error response
-/// instead of unbounded buffering.
-pub const MAX_LINE_BYTES: usize = 64 * 1024;
+/// The line cap is the shared wire discipline's
+/// ([`util::jsonl`](crate::util::jsonl)), re-exported so protocol
+/// users need not know where framing lives.
+pub use crate::util::jsonl::MAX_LINE_BYTES;
 
 /// 4-bit pixels: the LUT datapath's operand range.
 pub const MAX_PIXEL: u64 = 15;
@@ -99,12 +100,10 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
 }
 
 /// Best-effort id recovery from a line that failed full parsing, so
-/// even malformed-request errors can be matched by pipelined clients.
+/// even malformed-request errors can be matched by pipelined clients
+/// (the shared [`jsonl::recover_id`](crate::util::jsonl::recover_id)).
 pub fn request_id(line: &str) -> u64 {
-    Json::parse(line)
-        .ok()
-        .and_then(|j| j.get("id").and_then(Json::as_u64))
-        .unwrap_or(0)
+    crate::util::jsonl::recover_id(line)
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -152,9 +151,8 @@ impl Response {
                 m.insert("info".to_string(), Json::Str(info.clone()));
             }
             Response::Error { id, error } => {
-                m.insert("id".to_string(), Json::Num(*id as f64));
-                m.insert("ok".to_string(), Json::Bool(false));
-                m.insert("error".to_string(), Json::Str(error.clone()));
+                // The shared structured-error shape, byte for byte.
+                return crate::util::jsonl::error_line(*id, error);
             }
         }
         Json::Obj(m).render()

@@ -196,7 +196,10 @@ fn resolve_all(
 ) -> Result<TierMap> {
     let lib = match store_dir {
         Some(d) => {
-            let store = Store::open(d)
+            // Read-only: tier resolution must work (and reload must
+            // keep working) while a sweep process holds the store's
+            // writer lock.
+            let store = Store::open_read_only(d)
                 .with_context(|| format!("opening operator store {}", d.display()))?;
             Some(OpLib::from_store(&store))
         }

@@ -26,7 +26,7 @@
 //! into error responses for that batch — serving workers never die.
 
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -39,6 +39,7 @@ use anyhow::{Context, Result};
 use crate::bench_support::JsonReport;
 use crate::nn::digits::IMG;
 use crate::nn::{synthetic_digits, QuantMlp};
+use crate::util::jsonl::{self, LineRead};
 use crate::util::Json;
 
 use super::batcher::{Batcher, BatcherConfig, PushError};
@@ -284,51 +285,37 @@ fn handle_conn(shared: Arc<Shared>, stream: TcpStream) {
         Err(_) => return,
     };
     let (tx, rx) = channel::<String>();
-    let mut write_half = stream;
-    let writer = std::thread::spawn(move || {
-        // Drains until every Sender clone (reader + in-flight work
-        // items) is gone; a dead peer just ends the loop.
-        while let Ok(line) = rx.recv() {
-            if write_half
-                .write_all(line.as_bytes())
-                .and_then(|_| write_half.write_all(b"\n"))
-                .is_err()
-            {
-                break;
-            }
-        }
-    });
+    // Shared wire discipline (util::jsonl): one writer thread per
+    // connection, capped line reads, structured errors.
+    let writer = jsonl::spawn_writer(stream, rx);
 
     let mut reader = BufReader::new(read_half);
-    let mut line = String::new();
     loop {
-        line.clear();
-        // Cap the bytes one line may buffer; an over-cap line without a
-        // newline cannot be re-framed, so it ends the connection after
-        // a structured error.
-        let mut limited = (&mut reader).take(protocol::MAX_LINE_BYTES as u64 + 2);
-        match limited.read_line(&mut line) {
-            Ok(0) | Err(_) => break,
-            Ok(_) => {}
-        }
-        if !line.ends_with('\n') && line.len() > protocol::MAX_LINE_BYTES {
-            let _ = tx.send(
-                Response::Error {
-                    id: 0,
-                    error: format!(
-                        "request line exceeds the {}-byte cap",
-                        protocol::MAX_LINE_BYTES
-                    ),
+        match jsonl::read_line(&mut reader) {
+            LineRead::Eof => break,
+            LineRead::Oversized => {
+                // An over-cap line without a newline cannot be
+                // re-framed, so it ends the connection after a
+                // structured error.
+                let _ = tx.send(
+                    Response::Error {
+                        id: 0,
+                        error: format!(
+                            "request line exceeds the {}-byte cap",
+                            protocol::MAX_LINE_BYTES
+                        ),
+                    }
+                    .render(),
+                );
+                break;
+            }
+            LineRead::Line(line) => {
+                if line.is_empty() {
+                    continue;
                 }
-                .render(),
-            );
-            break;
+                handle_request(&shared, &line, &tx);
+            }
         }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        handle_request(&shared, trimmed, &tx);
     }
     drop(tx);
     let _ = writer.join();

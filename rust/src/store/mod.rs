@@ -5,7 +5,10 @@
 //!   benchmark truth table, method, ET and the search-relevant config
 //!   fields; worker counts are excluded (determinism-neutral).
 //! * [`wal`] — append-only JSONL log of [`RunRecord`]s keyed by
-//!   fingerprint, with torn-tail recovery and last-writer-wins replay.
+//!   fingerprint, with torn-tail recovery, last-writer-wins replay and
+//!   an advisory single-writer lock (`Store::open` writes, with
+//!   cross-process exclusion; `Store::open_read_only` queries alongside
+//!   a live writer).
 //! * [`oplib`] — Pareto-frontier view (area vs. error) over the store,
 //!   exporting operators as truth tables the NN layer consumes.
 //!

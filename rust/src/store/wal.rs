@@ -26,13 +26,21 @@
 //! keeps the latest occurrence, matching what a full replay of the log
 //! would produce.
 //!
-//! Writer model: **one writing process at a time**. Within a process a
-//! `Store` is freely shared across sweep workers (appends are
-//! mutex-serialized); a second *process* appending to the same
-//! directory concurrently is not supported — the open-time tail repair
-//! and the append-failure rollback both truncate against this
-//! process's view of the file and would cut another writer's committed
-//! lines. Readers of a store no process is writing are always safe.
+//! Writer model: **one writing `Store` at a time**, now *enforced* by
+//! an advisory lock file (`<dir>/LOCK`, containing the holder's pid)
+//! acquired by [`Store::open`] and released on drop. Within a process
+//! a `Store` is freely shared across sweep workers (appends are
+//! mutex-serialized); a second writer on the same directory — another
+//! process, or a second `Store::open` in this one — fails loudly at
+//! open instead of interleaving WAL appends: the open-time tail repair
+//! and the append-failure rollback both truncate against one writer's
+//! view of the file and would cut another writer's committed lines. A
+//! lock left behind by a *dead* process (crash before drop) is
+//! detected on Linux via `/proc/<pid>` and reclaimed; elsewhere it
+//! must be removed by hand (the error message names the file).
+//! Pure readers use [`Store::open_read_only`], which takes no lock,
+//! never repairs the file, and refuses appends — safe alongside a live
+//! writer up to WAL-tail staleness.
 
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
@@ -48,12 +56,124 @@ use crate::util::Json;
 use super::fingerprint::Fingerprint;
 
 const WAL_FILE: &str = "wal.jsonl";
+const LOCK_FILE: &str = "LOCK";
+
+/// RAII half of the advisory single-writer guard: the lock file is
+/// removed when the owning [`Store`] drops (or when `open` fails after
+/// acquisition, e.g. on a corrupt WAL).
+struct LockGuard {
+    path: PathBuf,
+}
+
+impl Drop for LockGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Is the pid recorded in a lock file still alive? Only Linux can
+/// answer cheaply without libc (`/proc/<pid>` existence); elsewhere
+/// every holder is presumed alive, so stale locks need manual removal.
+fn lock_holder_alive(pid: u32) -> bool {
+    if cfg!(target_os = "linux") {
+        Path::new(&format!("/proc/{pid}")).exists()
+    } else {
+        true
+    }
+}
+
+/// Acquire `<dir>/LOCK` with `create_new` (the atomic arbiter), writing
+/// our pid into it. One reclaim attempt is made when the recorded
+/// holder is provably dead.
+fn acquire_lock(dir: &Path) -> Result<LockGuard> {
+    let path = dir.join(LOCK_FILE);
+    for attempt in 0..2 {
+        match OpenOptions::new().write(true).create_new(true).open(&path) {
+            Ok(mut f) => {
+                let _ = write!(f, "{}", std::process::id());
+                return Ok(LockGuard { path });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                let holder = std::fs::read_to_string(&path)
+                    .ok()
+                    .and_then(|s| s.trim().parse::<u32>().ok());
+                let stale = match holder {
+                    // Our own pid means a second live writer in this
+                    // very process — just as unsafe, never stale.
+                    Some(pid) => pid != std::process::id() && !lock_holder_alive(pid),
+                    // Unreadable/empty: a writer between create_new and
+                    // the pid write. Treat as held.
+                    None => false,
+                };
+                if stale && attempt == 0 {
+                    reclaim_stale_lock(&path, holder.unwrap())?;
+                    continue;
+                }
+                bail!(
+                    "store {} is already locked by a writer (pid {}, lock file {}); \
+                     a second concurrent writer would interleave WAL appends — \
+                     wait for it, or remove the lock file if that process is dead",
+                    dir.display(),
+                    holder.map_or("unknown".to_string(), |p| p.to_string()),
+                    path.display()
+                );
+            }
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("creating lock file {}", path.display()))
+            }
+        }
+    }
+    unreachable!("second attempt either locks or bails");
+}
+
+/// Remove a lock whose recorded pid is provably dead. A bare
+/// read-then-unlink would race: two openers could both judge the lock
+/// stale, one reclaims it and *re-creates* it live, and the other's
+/// unlink then deletes the fresh lock — two live writers. So removal
+/// itself is arbitrated by a second `create_new` file (`LOCK.reclaim`)
+/// and the dead pid is re-verified under it immediately before the
+/// unlink: a lock that changed hands since we judged it stale is left
+/// alone (the caller's retry then sees the live holder and bails). A
+/// reclaim guard orphaned by a crash *during this tiny window* is not
+/// auto-reclaimed — reclaiming reclaim locks would recurse — so it
+/// fails loudly here and is removed by hand.
+fn reclaim_stale_lock(path: &Path, dead_pid: u32) -> Result<()> {
+    let guard_path = path.with_extension("reclaim");
+    let mut f = match OpenOptions::new().write(true).create_new(true).open(&guard_path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+            bail!(
+                "stale lock {} is being reclaimed by another process (guard {}); \
+                 retry shortly, or remove the guard if its owner crashed",
+                path.display(),
+                guard_path.display()
+            );
+        }
+        Err(e) => {
+            return Err(e)
+                .with_context(|| format!("creating reclaim guard {}", guard_path.display()))
+        }
+    };
+    let _ = write!(f, "{}", std::process::id());
+    // RAII: every exit below releases the guard file.
+    let _guard = LockGuard { path: guard_path };
+    let still_dead = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| s.trim().parse::<u32>().ok())
+        .is_some_and(|pid| pid == dead_pid && !lock_holder_alive(pid));
+    if still_dead {
+        let _ = std::fs::remove_file(path);
+    }
+    Ok(())
+}
 
 struct Inner {
     /// fp -> latest record (last-writer-wins).
     map: HashMap<Fingerprint, RunRecord>,
-    /// Append handle, positioned at end-of-log.
-    file: File,
+    /// Append handle, positioned at end-of-log. `None` in read-only
+    /// stores, whose appends fail instead.
+    file: Option<File>,
     /// Total lines appended over the store's life, including
     /// overwritten duplicates (telemetry; `len()` is the deduped size).
     lines: usize,
@@ -69,13 +189,34 @@ struct Inner {
 pub struct Store {
     dir: PathBuf,
     inner: Mutex<Inner>,
+    /// Held for the store's lifetime by writers; `None` when read-only.
+    _lock: Option<LockGuard>,
 }
 
 impl Store {
-    /// Open (creating if needed) the store in `dir`, replaying the WAL.
+    /// Open (creating if needed) the store in `dir` for writing,
+    /// replaying the WAL. Acquires the advisory single-writer lock —
+    /// a concurrent writer on the same directory fails here, loudly,
+    /// instead of interleaving WAL appends.
     pub fn open(dir: &Path) -> Result<Store> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating store dir {}", dir.display()))?;
+        let lock = acquire_lock(dir)?;
+        Store::open_inner(dir, Some(lock))
+    }
+
+    /// Open the store without the writer lock: no lock file, no
+    /// torn-tail *repair* (a torn tail is still dropped from the
+    /// in-memory view, just not truncated on disk), and appends fail.
+    /// Safe to use while a writer is live (the operator-library and
+    /// `oplib` query paths); a missing directory or WAL is an empty
+    /// store, exactly as for writers.
+    pub fn open_read_only(dir: &Path) -> Result<Store> {
+        Store::open_inner(dir, None)
+    }
+
+    fn open_inner(dir: &Path, lock: Option<LockGuard>) -> Result<Store> {
+        let writable = lock.is_some();
         let wal_path = dir.join(WAL_FILE);
         let mut map = HashMap::new();
         let mut lines = 0usize;
@@ -120,7 +261,7 @@ impl Store {
                     }
                 }
             }
-            if keep_bytes < text.len() as u64 {
+            if writable && keep_bytes < text.len() as u64 {
                 let f = OpenOptions::new()
                     .write(true)
                     .open(&wal_path)
@@ -128,14 +269,23 @@ impl Store {
                 f.set_len(keep_bytes).context("truncating torn WAL tail")?;
             }
         }
-        let file = OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(&wal_path)
-            .with_context(|| format!("opening {} for append", wal_path.display()))?;
+        let file = if writable {
+            Some(
+                OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(&wal_path)
+                    .with_context(|| {
+                        format!("opening {} for append", wal_path.display())
+                    })?,
+            )
+        } else {
+            None
+        };
         Ok(Store {
             dir: dir.to_path_buf(),
             inner: Mutex::new(Inner { map, file, lines, end: keep_bytes }),
+            _lock: lock,
         })
     }
 
@@ -177,21 +327,45 @@ impl Store {
     /// left in place would otherwise glue onto the next append and turn
     /// into mid-log corruption that `open` refuses to load.
     pub fn append(&self, fp: Fingerprint, rec: &RunRecord) -> Result<()> {
+        self.append_inner(fp, rec, false).map(|_| ())
+    }
+
+    /// Commit `rec` only if `fp` is not already stored; returns whether
+    /// a line was appended (checked and appended under one lock hold).
+    /// The fingerprint-keyed dedup for paths that can legitimately
+    /// produce duplicate completions of one job (the distributed
+    /// sweep's lease-expiry requeue: first committed wins, a late
+    /// duplicate must not grow the WAL). Callers that *want* the
+    /// last-writer-wins overwrite (oracle-failure healing) use
+    /// [`Store::append`].
+    pub fn append_if_absent(&self, fp: Fingerprint, rec: &RunRecord) -> Result<bool> {
+        self.append_inner(fp, rec, true)
+    }
+
+    fn append_inner(&self, fp: Fingerprint, rec: &RunRecord, only_absent: bool) -> Result<bool> {
         let mut line = wal_line(fp, rec);
         line.push('\n');
         let mut inner = self.inner.lock().unwrap();
-        if let Err(e) = inner.file.write_all(line.as_bytes()) {
+        if only_absent && inner.map.contains_key(&fp) {
+            return Ok(false);
+        }
+        let Some(file) = inner.file.as_mut() else {
+            bail!("store {} was opened read-only; appends are refused", self.dir.display());
+        };
+        if let Err(e) = file.write_all(line.as_bytes()) {
             let end = inner.end;
             // Best effort: if the truncate also fails the torn bytes
             // stay, and the next open's tail repair handles them as
             // long as nothing else is appended after.
-            let _ = inner.file.set_len(end);
+            if let Some(file) = inner.file.as_ref() {
+                let _ = file.set_len(end);
+            }
             return Err(e).context("appending WAL line");
         }
         inner.end += line.len() as u64;
         inner.map.insert(fp, rec.clone());
         inner.lines += 1;
-        Ok(())
+        Ok(true)
     }
 
     /// Snapshot of every stored (fingerprint, record) pair, in
@@ -347,6 +521,104 @@ mod tests {
         text = format!("garbage not json\n{text}");
         std::fs::write(&wal, text).unwrap();
         assert!(Store::open(&dir).is_err(), "mid-log corruption must not be silent");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn second_writer_is_locked_out() {
+        let dir = tmp_dir("lock");
+        let st = Store::open(&dir).unwrap();
+        let err = Store::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("locked"), "{err}");
+        assert!(err.contains("LOCK"), "must name the lock file: {err}");
+        // Readers are not locked out while the writer is live.
+        st.append(Fingerprint(1), &rec(1, 5.0)).unwrap();
+        let ro = Store::open_read_only(&dir).unwrap();
+        assert_eq!(ro.get(Fingerprint(1)).unwrap().area, 5.0);
+        assert!(ro.append(Fingerprint(2), &rec(2, 6.0)).is_err(), "read-only refuses appends");
+        // Dropping the writer releases the lock.
+        drop(st);
+        let st = Store::open(&dir).unwrap();
+        assert_eq!(st.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn stale_lock_from_dead_process_is_reclaimed() {
+        let dir = tmp_dir("stale");
+        std::fs::create_dir_all(&dir).unwrap();
+        // A pid far above any default pid_max: provably not alive.
+        std::fs::write(dir.join(LOCK_FILE), "999999999").unwrap();
+        let st = Store::open(&dir).unwrap();
+        st.append(Fingerprint(1), &rec(1, 5.0)).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn orphaned_reclaim_guard_blocks_stale_reclaim() {
+        let dir = tmp_dir("reguard");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(LOCK_FILE), "999999999").unwrap();
+        std::fs::write(dir.join("LOCK.reclaim"), "999999998").unwrap();
+        let err = Store::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("reclaim"), "{err}");
+        // Removing the orphaned guard unblocks the reclaim.
+        std::fs::remove_file(dir.join("LOCK.reclaim")).unwrap();
+        let st = Store::open(&dir).unwrap();
+        drop(st);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unreadable_lock_is_treated_as_held() {
+        let dir = tmp_dir("badlock");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(LOCK_FILE), "not a pid").unwrap();
+        assert!(Store::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn read_only_store_leaves_torn_tail_on_disk() {
+        let dir = tmp_dir("rotorn");
+        {
+            let st = Store::open(&dir).unwrap();
+            st.append(Fingerprint(1), &rec(1, 5.0)).unwrap();
+        }
+        let wal = dir.join(WAL_FILE);
+        let mut f = OpenOptions::new().append(true).open(&wal).unwrap();
+        f.write_all(b"{\"fp\":\"torn").unwrap();
+        drop(f);
+        let before = std::fs::metadata(&wal).unwrap().len();
+        let ro = Store::open_read_only(&dir).unwrap();
+        assert_eq!(ro.len(), 1, "torn tail dropped from the view");
+        assert_eq!(
+            std::fs::metadata(&wal).unwrap().len(),
+            before,
+            "read-only open must not repair the file"
+        );
+        // Missing directories are empty stores, not errors.
+        let missing = tmp_dir("romissing");
+        let empty = Store::open_read_only(&missing).unwrap();
+        assert!(empty.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn append_if_absent_keeps_first_committed() {
+        let dir = tmp_dir("dedup");
+        let st = Store::open(&dir).unwrap();
+        let fp = Fingerprint(5);
+        assert!(st.append_if_absent(fp, &rec(2, 10.0)).unwrap());
+        assert!(!st.append_if_absent(fp, &rec(2, 99.0)).unwrap(), "duplicate skipped");
+        assert_eq!(st.lines(), 1, "no WAL growth on the duplicate");
+        assert_eq!(st.get(fp).unwrap().area, 10.0, "first committed wins");
+        // Plain append still overwrites last-writer-wins (healing).
+        st.append(fp, &rec(2, 8.0)).unwrap();
+        assert_eq!(st.get(fp).unwrap().area, 8.0);
+        assert_eq!(st.lines(), 2);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -1,0 +1,187 @@
+//! The line-delimited-JSON wire discipline shared by every TCP
+//! endpoint in the tree (`serve` and `dist`): one JSON value per line,
+//! a hard cap on line length, a per-connection writer thread so
+//! concurrent producers never interleave bytes on a socket, and the
+//! structured `{"ok":false,"error":...}` failure shape. The framing
+//! exists exactly once, so the two protocols cannot drift apart.
+//!
+//! Framing rules:
+//!
+//! * One request or response per `\n`-terminated line; blank lines are
+//!   legal no-ops.
+//! * A line longer than [`MAX_LINE_BYTES`] without its newline cannot
+//!   be re-framed (the reader has no way to find the next boundary),
+//!   so the connection must close after one structured error.
+//! * Failures render as `{"id":N,"ok":false,"error":"..."}` — peers
+//!   without request ids send 0 — and never kill the connection except
+//!   for the oversize case above.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Read, Write};
+use std::sync::mpsc::Receiver;
+use std::thread::JoinHandle;
+
+use crate::util::Json;
+
+/// Hard cap on one wire line; longer lines get an error response
+/// instead of unbounded buffering.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// One framed read off a line-delimited-JSON stream.
+#[derive(Debug, PartialEq, Eq)]
+pub enum LineRead {
+    /// A complete line, whitespace-trimmed (may be empty).
+    Line(String),
+    /// The peer closed the stream, or an I/O error ended it.
+    Eof,
+    /// The line exceeded [`MAX_LINE_BYTES`] before its newline arrived;
+    /// the stream cannot be re-framed and must close.
+    Oversized,
+}
+
+/// Read one capped line. The `take` guard bounds how much one line may
+/// buffer: a well-formed line of exactly `MAX_LINE_BYTES` plus its
+/// newline still fits, anything longer surfaces as
+/// [`LineRead::Oversized`]. A final EOF-terminated line that lost its
+/// newline but fits the cap is returned as a normal line.
+pub fn read_line<R: BufRead>(reader: &mut R) -> LineRead {
+    let mut line = String::new();
+    // +2 so a MAX-byte line still fits with its (CR)LF; the cap is
+    // then enforced on the content with the line ending stripped, so
+    // the boundary cases (MAX+1 content plus newline) cannot slip
+    // through the "ends with newline" shape.
+    let mut limited = reader.by_ref().take(MAX_LINE_BYTES as u64 + 2);
+    match limited.read_line(&mut line) {
+        Ok(0) | Err(_) => LineRead::Eof,
+        Ok(_) => {
+            let content = line.strip_suffix('\n').unwrap_or(&line);
+            let content = content.strip_suffix('\r').unwrap_or(content);
+            if content.len() > MAX_LINE_BYTES {
+                LineRead::Oversized
+            } else {
+                LineRead::Line(content.trim().to_string())
+            }
+        }
+    }
+}
+
+/// Write one line (appending the newline) in two `write_all`s — the
+/// client half of the discipline for strict request/response peers
+/// that own their socket exclusively.
+pub fn send_line<W: Write>(w: &mut W, line: &str) -> std::io::Result<()> {
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")
+}
+
+/// Spawn the per-connection writer thread: drains `rx` onto `sink`
+/// until every `Sender` clone is gone (reader thread plus any in-flight
+/// work items), so concurrent producers never interleave bytes on a
+/// shared socket. A dead peer just ends the loop.
+pub fn spawn_writer<W: Write + Send + 'static>(
+    mut sink: W,
+    rx: Receiver<String>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        while let Ok(line) = rx.recv() {
+            if send_line(&mut sink, &line).is_err() {
+                break;
+            }
+        }
+    })
+}
+
+/// Render the structured failure line `{"error":...,"id":N,"ok":false}`
+/// (sorted keys, ASCII — the `Json::render` guarantees). Peers whose
+/// protocol has no request ids pass 0.
+pub fn error_line(id: u64, error: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert("ok".to_string(), Json::Bool(false));
+    m.insert("error".to_string(), Json::Str(error.to_string()));
+    Json::Obj(m).render()
+}
+
+/// Best-effort `"id"` recovery from a line that failed full parsing,
+/// so even malformed-request errors can be matched by pipelined
+/// clients. Lines with no recoverable id report 0.
+pub fn recover_id(line: &str) -> u64 {
+    Json::parse(line)
+        .ok()
+        .and_then(|j| j.get("id").and_then(Json::as_u64))
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn reader(s: &str) -> BufReader<&[u8]> {
+        BufReader::new(s.as_bytes())
+    }
+
+    #[test]
+    fn reads_lines_blanks_and_eof() {
+        let mut r = reader("{\"a\":1}\n\n  {\"b\":2}  \nno newline tail");
+        assert_eq!(read_line(&mut r), LineRead::Line("{\"a\":1}".to_string()));
+        assert_eq!(read_line(&mut r), LineRead::Line(String::new()));
+        assert_eq!(read_line(&mut r), LineRead::Line("{\"b\":2}".to_string()));
+        // An EOF-terminated line under the cap is still a line...
+        assert_eq!(read_line(&mut r), LineRead::Line("no newline tail".to_string()));
+        // ...and then the stream is over.
+        assert_eq!(read_line(&mut r), LineRead::Eof);
+    }
+
+    #[test]
+    fn oversized_line_cannot_be_reframed() {
+        let huge = "x".repeat(MAX_LINE_BYTES + 1);
+        let mut r = reader(&huge);
+        assert_eq!(read_line(&mut r), LineRead::Oversized);
+        // Exactly at the cap (with newline) is fine — also with CRLF.
+        for ending in ["\n", "\r\n"] {
+            let fits = format!("{}{ending}", "y".repeat(MAX_LINE_BYTES));
+            let mut r = reader(&fits);
+            assert!(
+                matches!(read_line(&mut r), LineRead::Line(l) if l.len() == MAX_LINE_BYTES)
+            );
+        }
+        // One content byte over the cap is Oversized even when its
+        // newline arrived within the read limit (the boundary shape a
+        // tail-length check would miss).
+        let boundary = format!("{}\n", "z".repeat(MAX_LINE_BYTES + 1));
+        let mut r = reader(&boundary);
+        assert_eq!(read_line(&mut r), LineRead::Oversized);
+    }
+
+    #[test]
+    fn writer_thread_serializes_lines() {
+        let (tx, rx) = std::sync::mpsc::channel::<String>();
+        let buf: Vec<u8> = Vec::new();
+        let shared = std::sync::Arc::new(std::sync::Mutex::new(buf));
+        struct Sink(std::sync::Arc<std::sync::Mutex<Vec<u8>>>);
+        impl Write for Sink {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let h = spawn_writer(Sink(shared.clone()), rx);
+        tx.send("one".to_string()).unwrap();
+        tx.send("two".to_string()).unwrap();
+        drop(tx);
+        h.join().unwrap();
+        assert_eq!(&*shared.lock().unwrap(), b"one\ntwo\n");
+    }
+
+    #[test]
+    fn error_shape_and_id_recovery() {
+        let line = error_line(7, "bad thing");
+        assert_eq!(line, "{\"error\":\"bad thing\",\"id\":7,\"ok\":false}");
+        assert_eq!(recover_id(&line), 7);
+        assert_eq!(recover_id("{\"id\":42,\"type\":\"junk\"}"), 42);
+        assert_eq!(recover_id("garbage"), 0);
+    }
+}

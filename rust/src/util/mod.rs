@@ -1,10 +1,12 @@
 //! Small in-tree utilities replacing crates the offline build environment
 //! does not provide: a splittable PRNG (`rng`), a minimal JSON
 //! reader/writer for the artifact manifest and the result-store WAL
-//! (`json`), and a tiny argv parser (`cli`).
+//! (`json`), a tiny argv parser (`cli`), and the line-delimited-JSON
+//! wire discipline shared by the TCP endpoints (`jsonl`).
 
 pub mod cli;
 pub mod json;
+pub mod jsonl;
 pub mod rng;
 
 pub use json::Json;

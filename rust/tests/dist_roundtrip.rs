@@ -1,0 +1,370 @@
+//! Distributed-sweep integration: real multi-worker sweeps over
+//! loopback TCP, in-process. The acceptance bar: a 4-worker
+//! distributed sweep yields a record set, fig5 CSV and WAL
+//! byte-identical (modulo the `cached`/`elapsed_ms` provenance
+//! columns) to the sequential `run_sweep_stored` baseline — including
+//! across the worker-kill and lease-expiry requeue paths — with
+//! exactly one WAL line per job (fingerprint dedup, first-committed
+//! wins). Part of the tier-1 test path (plain `cargo test`).
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::coordinator::{run_job, run_sweep_stored, Job, Method, RunRecord, SweepPlan};
+use sxpat::dist::protocol::{CoordMsg, WorkerMsg, PROTO_VERSION};
+use sxpat::dist::{Coordinator, DistConfig, WorkerConfig};
+use sxpat::report::fig5_csv;
+use sxpat::search::SearchConfig;
+use sxpat::store::Store;
+use sxpat::util::jsonl::{self, LineRead};
+use sxpat::util::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("sxpat_dist_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn tiny_plan() -> SweepPlan {
+    SweepPlan {
+        benches: vec![benchmark_by_name("adder_i4").unwrap()],
+        methods: vec![Method::Shared, Method::Muscat],
+        ets: Some(vec![1, 2]),
+        search: SearchConfig {
+            pool: 5,
+            solutions_per_cell: 1,
+            max_sat_cells: 1,
+            conflict_budget: Some(20_000),
+            time_budget_ms: 20_000,
+            ..Default::default()
+        },
+        workers: 1,
+    }
+}
+
+fn dist_cfg() -> DistConfig {
+    DistConfig {
+        addr: "127.0.0.1:0".to_string(),
+        lease_ms: 60_000,
+        wait_ms: 25,
+    }
+}
+
+/// Everything that must agree between a local and a distributed run of
+/// the same job (all fields except the provenance pair
+/// `elapsed_ms`/`cached`).
+fn result_key(r: &RunRecord) -> impl PartialEq + std::fmt::Debug {
+    (
+        r.bench,
+        r.method,
+        r.et,
+        r.area.to_bits(),
+        r.max_err,
+        r.mean_err.to_bits(),
+        r.proxy,
+        r.values.clone(),
+        r.all_points.len(),
+        r.error.clone(),
+    )
+}
+
+/// Drop the trailing `cached` column from every fig5 CSV row.
+fn strip_cached_column(csv: &str) -> String {
+    csv.lines()
+        .map(|l| match l.rsplit_once(',') {
+            Some((head, _)) => head.to_string(),
+            None => l.to_string(),
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// The WAL with every record's `elapsed_ms` zeroed — the only field a
+/// distributed run may legitimately differ in (it reports the remote
+/// worker's clock).
+fn normalized_wal(dir: &Path) -> Vec<String> {
+    let text = std::fs::read_to_string(dir.join("wal.jsonl")).unwrap();
+    text.lines()
+        .map(|l| {
+            let j = Json::parse(l).unwrap();
+            let fp = j.get("fp").and_then(Json::as_str).unwrap().to_string();
+            let mut rec = RunRecord::from_json(j.get("record").unwrap()).unwrap();
+            rec.elapsed_ms = 0;
+            let mut m = BTreeMap::new();
+            m.insert("fp".to_string(), Json::Str(fp));
+            m.insert("record".to_string(), rec.to_json());
+            Json::Obj(m).render()
+        })
+        .collect()
+}
+
+fn wal_fingerprints(dir: &Path) -> Vec<String> {
+    std::fs::read_to_string(dir.join("wal.jsonl"))
+        .unwrap()
+        .lines()
+        .map(|l| {
+            Json::parse(l).unwrap().get("fp").and_then(Json::as_str).unwrap().to_string()
+        })
+        .collect()
+}
+
+/// A protocol-level client for playing misbehaving workers.
+struct RawClient {
+    reader: std::io::BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl RawClient {
+    fn connect(addr: SocketAddr) -> RawClient {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        RawClient { reader, writer: stream }
+    }
+
+    /// Send one message; `None` when the coordinator has hung up.
+    fn exchange(&mut self, msg: &WorkerMsg) -> Option<CoordMsg> {
+        if jsonl::send_line(&mut self.writer, &msg.render()).is_err() {
+            return None;
+        }
+        match jsonl::read_line(&mut self.reader) {
+            LineRead::Line(l) => Some(CoordMsg::parse(&l).unwrap()),
+            _ => None,
+        }
+    }
+
+    fn hello(&mut self) {
+        let msg = WorkerMsg::Hello { name: "griefer".to_string(), proto: PROTO_VERSION };
+        match self.exchange(&msg) {
+            Some(CoordMsg::Welcome { .. }) => {}
+            other => panic!("expected welcome, got {other:?}"),
+        }
+    }
+
+    fn take_lease(&mut self) -> (usize, Job) {
+        match self.exchange(&WorkerMsg::LeaseRequest) {
+            Some(CoordMsg::Lease { job, bench, method, et, search }) => (
+                job,
+                Job { bench: benchmark_by_name(&bench).unwrap(), method, et, search },
+            ),
+            other => panic!("expected a lease, got {other:?}"),
+        }
+    }
+}
+
+fn spawn_workers<'s, 'e>(
+    s: &'s std::thread::Scope<'s, 'e>,
+    addr: SocketAddr,
+    n: usize,
+) -> Vec<std::thread::ScopedJoinHandle<'s, sxpat::dist::WorkerStats>> {
+    (0..n)
+        .map(|i| {
+            s.spawn(move || {
+                sxpat::dist::run_worker(&WorkerConfig {
+                    addr: addr.to_string(),
+                    name: format!("w{i}"),
+                    cell_workers: None,
+                    max_jobs: None,
+                })
+                .unwrap()
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn four_worker_sweep_matches_sequential_baseline() {
+    let plan = tiny_plan();
+
+    // Sequential baseline: one worker, so WAL lines land in job order —
+    // the order the distributed commit frontier must reproduce.
+    let base_dir = tmp_dir("base");
+    let base = {
+        let store = Store::open(&base_dir).unwrap();
+        run_sweep_stored(&plan, Some(&store))
+    };
+    assert!(base.iter().all(|r| r.error.is_none() && !r.cached));
+
+    let dist_dir = tmp_dir("dist4");
+    let store = Store::open(&dist_dir).unwrap();
+    let (records, stats) = std::thread::scope(|s| {
+        let coord = Coordinator::bind(&plan, Some(&store), &dist_cfg()).unwrap();
+        let addr = coord.addr();
+        let run = s.spawn(move || coord.run().unwrap());
+        let workers = spawn_workers(s, addr, 4);
+        let records = run.join().unwrap();
+        let stats: Vec<_> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+        (records, stats)
+    });
+
+    // Every job ran remotely, exactly once across the fleet.
+    assert_eq!(records.len(), plan.n_jobs());
+    assert!(records.iter().all(|r| !r.cached && r.error.is_none()));
+    let completed: usize = stats.iter().map(|st| st.completed).sum();
+    assert_eq!(completed, plan.n_jobs(), "each job solved exactly once");
+
+    // Record-set equality, modulo provenance.
+    for (a, b) in base.iter().zip(&records) {
+        assert_eq!(result_key(a), result_key(b));
+    }
+
+    // fig5 CSV byte-identical modulo the cached column.
+    assert_eq!(
+        strip_cached_column(&fig5_csv(&base)),
+        strip_cached_column(&fig5_csv(&records))
+    );
+
+    // WAL byte-identical modulo elapsed_ms — including line ORDER
+    // (in-order commit by job index, regardless of completion order).
+    assert_eq!(normalized_wal(&base_dir), normalized_wal(&dist_dir));
+
+    drop(store);
+    std::fs::remove_dir_all(&base_dir).unwrap();
+    std::fs::remove_dir_all(&dist_dir).unwrap();
+}
+
+#[test]
+fn storeless_distributed_sweep_matches_local_run() {
+    let plan = tiny_plan();
+    let base = run_sweep_stored(&plan, None);
+    let records = std::thread::scope(|s| {
+        let coord = Coordinator::bind(&plan, None, &dist_cfg()).unwrap();
+        let addr = coord.addr();
+        let run = s.spawn(move || coord.run().unwrap());
+        let _ = spawn_workers(s, addr, 2);
+        run.join().unwrap()
+    });
+    for (a, b) in base.iter().zip(&records) {
+        assert_eq!(result_key(a), result_key(b));
+    }
+}
+
+#[test]
+fn killed_and_wedged_workers_requeue_with_one_wal_line_per_job() {
+    // Two jobs, two griefers, then a real fleet:
+    //  - griefer A takes a lease and disconnects (death → immediate requeue);
+    //  - griefer B takes a lease and goes silent past the lease deadline
+    //    (expiry → reaper requeue), then submits late anyway.
+    // Invariants: the sweep completes, the records match the sequential
+    // baseline, and the WAL holds exactly one line per job.
+    let plan = SweepPlan { methods: vec![Method::Shared], ..tiny_plan() };
+    assert_eq!(plan.n_jobs(), 2);
+
+    let base_dir = tmp_dir("kbase");
+    let base = {
+        let store = Store::open(&base_dir).unwrap();
+        run_sweep_stored(&plan, Some(&store))
+    };
+
+    let dist_dir = tmp_dir("kill");
+    let store = Store::open(&dist_dir).unwrap();
+    let cfg = DistConfig { lease_ms: 300, ..dist_cfg() };
+    let records = std::thread::scope(|s| {
+        let coord = Coordinator::bind(&plan, Some(&store), &cfg).unwrap();
+        let addr = coord.addr();
+        let run = s.spawn(move || coord.run().unwrap());
+
+        // Griefer A: lease, die.
+        let mut a = RawClient::connect(addr);
+        a.hello();
+        let (idx_a, _) = a.take_lease();
+        drop(a);
+
+        // Griefer B: lease, wedge past the deadline.
+        let mut b = RawClient::connect(addr);
+        b.hello();
+        let (idx_b, job_b) = b.take_lease();
+        assert_ne!(idx_a, idx_b, "two jobs, two distinct leases");
+        std::thread::sleep(Duration::from_millis(600));
+
+        // B's job has been requeued by now, but B finishes anyway and
+        // submits first: first-committed wins, the work is accepted.
+        let record = run_job(&job_b);
+        match b.exchange(&WorkerMsg::Result { job: idx_b, record: record.clone() }) {
+            Some(CoordMsg::Committed { job, fresh }) => {
+                assert_eq!(job, idx_b);
+                assert!(fresh, "first sound submission must win");
+            }
+            other => panic!("expected committed, got {other:?}"),
+        }
+        // A second submission of the same job is a stale duplicate.
+        match b.exchange(&WorkerMsg::Result { job: idx_b, record }) {
+            Some(CoordMsg::Committed { fresh, .. }) => {
+                assert!(!fresh, "duplicate must be discarded")
+            }
+            other => panic!("expected stale committed, got {other:?}"),
+        }
+
+        // The real fleet completes A's requeued job (and would pick up
+        // B's had B never delivered).
+        let workers = spawn_workers(s, addr, 2);
+        let records = run.join().unwrap();
+        for w in workers {
+            let _ = w.join().unwrap();
+        }
+        drop(b);
+        records
+    });
+
+    assert_eq!(records.len(), 2);
+    assert!(records.iter().all(|r| r.error.is_none() && !r.cached));
+    for (x, y) in base.iter().zip(&records) {
+        assert_eq!(result_key(x), result_key(y));
+    }
+
+    // Exactly one WAL line per job — the requeue/duplicate dance must
+    // not grow the log — and the lines equal the baseline's.
+    let fps = wal_fingerprints(&dist_dir);
+    assert_eq!(fps.len(), 2);
+    assert_ne!(fps[0], fps[1]);
+    assert_eq!(normalized_wal(&base_dir), normalized_wal(&dist_dir));
+
+    drop(store);
+    std::fs::remove_dir_all(&base_dir).unwrap();
+    std::fs::remove_dir_all(&dist_dir).unwrap();
+}
+
+#[test]
+fn warm_store_hits_are_served_locally_and_never_leased() {
+    // Warm the store with the et=1 half of the grid, then run the full
+    // et∈{1,2} grid distributed: the cached half must resolve on the
+    // coordinator (cached=true, elapsed 0, no wire traffic), only the
+    // cold half crosses to the worker, and the WAL grows by exactly
+    // the cold half.
+    let mut warm = tiny_plan();
+    warm.ets = Some(vec![1]);
+    let dir = tmp_dir("warm");
+    {
+        let store = Store::open(&dir).unwrap();
+        run_sweep_stored(&warm, Some(&store));
+    }
+    let plan = tiny_plan();
+    let store = Store::open(&dir).unwrap();
+    let lines_before = store.lines();
+    assert_eq!(lines_before, warm.n_jobs());
+    let (records, stats) = std::thread::scope(|s| {
+        let coord = Coordinator::bind(&plan, Some(&store), &dist_cfg()).unwrap();
+        let addr = coord.addr();
+        let run = s.spawn(move || coord.run().unwrap());
+        let workers = spawn_workers(s, addr, 1);
+        let records = run.join().unwrap();
+        let stats: Vec<_> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+        (records, stats)
+    });
+    assert_eq!(records.len(), plan.n_jobs());
+    for r in &records {
+        if r.et == 1 {
+            assert!(r.cached && r.elapsed_ms == 0, "warm half serves from disk");
+        } else {
+            assert!(!r.cached, "cold half solved remotely");
+        }
+    }
+    let cold = records.iter().filter(|r| !r.cached).count();
+    assert_eq!(stats[0].completed, cold, "only cold jobs crossed the wire");
+    assert_eq!(store.lines(), lines_before + cold, "WAL grew by the cold half only");
+    drop(store);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
