@@ -1,14 +1,19 @@
 //! SAT-substrate microbenchmarks: propagation rate on miter CNFs and on
-//! pigeonhole instances, plus the arena headline — prototype *clone*
-//! versus fresh *build* cost per miter. Feeds EXPERIMENTS.md §Perf (L3
-//! targets) and writes machine-readable results to `BENCH_sat.json`.
+//! pigeonhole instances, the arena headline — prototype *clone* versus
+//! fresh *build* cost per miter — and the heuristics A/B: the legacy
+//! policies (Luby restarts, activity-only reduce, no preprocessing)
+//! against the Glucose-class defaults (EMA restarts, LBD-tiered reduce,
+//! prototype preprocessing) on the same miter corpus, reporting
+//! conflicts/sec plus the restart/LBD/preprocessing counters so
+//! `BENCH_sat.json` records *why* solve time moved. Feeds EXPERIMENTS.md
+//! §Perf (L3 targets).
 //!
 //!     cargo bench --bench sat_solver
 
 use sxpat::bench_support::{bench, bench_clone_vs_build, JsonReport};
 use sxpat::circuit::generators::benchmark_by_name;
 use sxpat::circuit::sim::TruthTables;
-use sxpat::sat::{Lit, SatResult, Solver};
+use sxpat::sat::{Heuristics, Lit, SatResult, Solver, Stats};
 use sxpat::template::SharedMiter;
 
 fn php(pigeons: usize, holes: usize) -> Solver {
@@ -54,7 +59,11 @@ fn main() {
         report.push(&format!("php_{}_{n}.arena_reclaimed_words", n + 1), reclaimed as f64);
     }
 
-    // Miter solving: the workload the search actually runs.
+    // Miter solving: the workload the search actually runs, A/B'd
+    // between the legacy and Glucose-class policies on an identical
+    // corpus. Each iteration clones the (optionally preprocessed)
+    // prototype and solves a cold lattice prefix — exactly the per-cell
+    // pattern of the canonical scan.
     for (name, et) in [("adder_i4", 1u64), ("mult_i4", 2), ("adder_i6", 8)] {
         let b = benchmark_by_name(name).unwrap();
         let nl = b.netlist();
@@ -67,19 +76,41 @@ fn main() {
             SharedMiter::build(n, m, 8, &exact, et)
         });
 
-        let mut miter = SharedMiter::build(n, m, 8, &exact, et);
-        let solve_stats = bench(&format!("sat/miter_solve_{name}_et{et}"), 1, 3, || {
-            // Re-solve the same lattice prefix each iteration: the
-            // solver is incremental, so this measures warm solving.
-            for pit in 1..=4usize {
-                if miter.solve(pit, 3 * pit).is_sat() {
-                    break;
-                }
+        for (policy, heur, preprocess) in [
+            ("legacy", Heuristics::legacy(), false),
+            ("glucose", Heuristics::default(), true),
+        ] {
+            let mut base = SharedMiter::build(n, m, 8, &exact, et);
+            base.b.solver.heuristics = heur;
+            if preprocess {
+                base.preprocess();
             }
-        });
-        report.push_stats(&format!("miter_solve_{name}_et{et}"), &solve_stats);
-        let props = miter.b.solver.stats.propagations;
-        report.push(&format!("miter_solve_{name}_et{et}.total_propagations"), props as f64);
+            let mut last = Stats::default();
+            let key = format!("miter_solve_{name}_et{et}.{policy}");
+            let solve_stats = bench(&format!("sat/{key}"), 1, 3, || {
+                let mut miter = base.clone();
+                for pit in 1..=4usize {
+                    if miter.solve(pit, 3 * pit).is_sat() {
+                        break;
+                    }
+                }
+                last = miter.b.solver.stats.clone();
+            });
+            let secs = solve_stats.mean_ms / 1e3;
+            let conflicts_per_sec = last.conflicts as f64 / secs;
+            let props_per_sec = last.propagations as f64 / secs;
+            println!(
+                "  {policy}: {conflicts_per_sec:.0} conflicts/s, \
+                 {:.1} M props/s, {} restarts ({} blocked)",
+                props_per_sec / 1e6,
+                last.restarts,
+                last.restarts_blocked
+            );
+            report.push_stats(&key, &solve_stats);
+            report.push(&format!("{key}.conflicts_per_sec"), conflicts_per_sec);
+            report.push(&format!("{key}.props_per_sec"), props_per_sec);
+            report.push_sat_stats(&key, &last);
+        }
     }
 
     report.write("sat");

@@ -93,6 +93,36 @@ impl JsonReport {
         self.push(&format!("{prefix}.iters"), stats.iters as f64);
     }
 
+    /// Record the restart/LBD/preprocessing counters of a solver run
+    /// under `prefix` — the "why did solve time move" half of the sat
+    /// suite (`BENCH_sat.json`), next to the wall-clock numbers.
+    pub fn push_sat_stats(&mut self, prefix: &str, stats: &crate::sat::Stats) {
+        self.push(&format!("{prefix}.conflicts"), stats.conflicts as f64);
+        self.push(&format!("{prefix}.restarts"), stats.restarts as f64);
+        self.push(
+            &format!("{prefix}.restarts_blocked"),
+            stats.restarts_blocked as f64,
+        );
+        let mean_lbd = if stats.conflicts > 0 {
+            stats.lbd_sum as f64 / stats.conflicts as f64
+        } else {
+            0.0
+        };
+        self.push(&format!("{prefix}.mean_lbd"), mean_lbd);
+        self.push(
+            &format!("{prefix}.deleted_clauses"),
+            stats.deleted_clauses as f64,
+        );
+        self.push(
+            &format!("{prefix}.preprocess_probes"),
+            stats.preprocess_probes as f64,
+        );
+        self.push(
+            &format!("{prefix}.preprocess_subsumed"),
+            stats.preprocess_subsumed as f64,
+        );
+    }
+
     pub fn render(&self) -> String {
         let mut out = String::from("{\n");
         for (i, (k, v)) in self.entries.iter().enumerate() {

@@ -64,7 +64,11 @@
 //! instead exports the cell's miter (base CNF + the cell's restriction
 //! assumptions as units) as DIMACS, for cross-checking against a
 //! reference SAT solver offline. Cell bounds default to the weakest
-//! (unrestricted) cell.
+//! (unrestricted) cell. The inverse, `synth --solve-dimacs FILE`, replays
+//! such a dump through this repo's own solver (preprocessing + the
+//! Glucose-class heuristics) and prints a DIMACS-style `s` answer line
+//! plus `c` statistics lines — the standalone surface for solver A/B
+//! debugging, also exercised by the CI smoke job.
 
 use std::path::{Path, PathBuf};
 
@@ -79,7 +83,8 @@ use sxpat::dist::{run_worker, Coordinator, DistConfig, WorkerConfig};
 use sxpat::evaluator::rust_eval::evaluate_batch;
 use sxpat::report::{fig4_csv, fig5_csv, fig5_markdown, records_csv};
 use sxpat::runtime::{find_artifacts_dir, Runtime};
-use sxpat::sat::dimacs::to_dimacs;
+use sxpat::sat::dimacs::{solve_dimacs, to_dimacs};
+use sxpat::sat::SatResult;
 use sxpat::search::SearchConfig;
 use sxpat::store::{OpLib, Store};
 use sxpat::synth::synthesize_area;
@@ -159,6 +164,11 @@ fn bench_gen(args: &Args) -> Result<()> {
 }
 
 fn synth(args: &Args) -> Result<()> {
+    // Standalone replay of a dumped instance: no --bench needed, the
+    // formula is fully described by the file.
+    if let Some(path) = args.get("solve-dimacs") {
+        return solve_dimacs_file(Path::new(path));
+    }
     let bench = the_bench(args)?;
     let et = args.get_u64("et")?.unwrap_or(bench.fig4_et());
     let method = match args.get_or("method", "shared").as_str() {
@@ -242,6 +252,43 @@ fn dump_cnf(
         clauses.len(),
         cell.0,
         cell.1
+    );
+    Ok(())
+}
+
+/// Replay a dumped DIMACS miter (the inverse of `--dump-cnf`): load the
+/// file, run the solver's one-time preprocessing plus the Glucose-class
+/// search, and print `c` statistics lines followed by a DIMACS-style
+/// answer line (`s SATISFIABLE` / `s UNSATISFIABLE`) that scripts and
+/// the CI smoke job can grep.
+fn solve_dimacs_file(path: &Path) -> Result<()> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    let (result, stats) = solve_dimacs(&src)?;
+    let mean_lbd = if stats.conflicts > 0 {
+        stats.lbd_sum as f64 / stats.conflicts as f64
+    } else {
+        0.0
+    };
+    println!("c file {}", path.display());
+    println!(
+        "c conflicts {} propagations {} decisions {}",
+        stats.conflicts, stats.propagations, stats.decisions
+    );
+    println!(
+        "c restarts {} blocked {} mean_lbd {mean_lbd:.2}",
+        stats.restarts, stats.restarts_blocked
+    );
+    println!(
+        "c preprocess probes {} subsumed {}",
+        stats.preprocess_probes, stats.preprocess_subsumed
+    );
+    println!(
+        "s {}",
+        match result {
+            SatResult::Sat => "SATISFIABLE",
+            SatResult::Unsat => "UNSATISFIABLE",
+        }
     );
     Ok(())
 }

@@ -8,7 +8,9 @@
 //!   word 0   header: len << 3 | RELOCED << 2 | DELETED << 1 | LEARNT
 //!   word 1   activity as f32 bits (learnt clauses; 0 otherwise)
 //!            — or the forwarding CRef while RELOCED during compaction
-//!   word 2.. the `len` literals, one `Lit` per word
+//!   word 2   LBD ("glue") of learnt clauses, maintained by the solver
+//!            (0 for problem clauses)
+//!   word 3.. the `len` literals, one `Lit` per word
 //! ```
 //!
 //! Why it matters here:
@@ -27,7 +29,7 @@ use super::solver::Lit;
 pub type CRef = u32;
 
 /// Words of metadata preceding the literals of every clause.
-pub const HEADER_WORDS: usize = 2;
+pub const HEADER_WORDS: usize = 3;
 
 const FLAG_LEARNT: u32 = 1;
 const FLAG_DELETED: u32 = 1 << 1;
@@ -68,6 +70,7 @@ impl ClauseArena {
         let header = ((lits.len() as u32) << LEN_SHIFT) | u32::from(learnt);
         self.data.push(header);
         self.data.push(0); // activity
+        self.data.push(0); // LBD
         self.data.extend(lits.iter().map(|l| l.0));
         r
     }
@@ -115,6 +118,18 @@ impl ClauseArena {
     #[inline]
     pub fn set_activity(&mut self, r: CRef, a: f32) {
         self.data[r as usize + 1] = a.to_bits();
+    }
+
+    /// Literals-block-distance recorded for a learnt clause (0 until the
+    /// solver stores one).
+    #[inline]
+    pub fn lbd(&self, r: CRef) -> u32 {
+        self.data[r as usize + 2]
+    }
+
+    #[inline]
+    pub fn set_lbd(&mut self, r: CRef, lbd: u32) {
+        self.data[r as usize + 2] = lbd;
     }
 
     /// Iterate the literals of a clause (borrow-friendly copy-out).
@@ -236,6 +251,25 @@ mod tests {
         assert_eq!(to.lits(n3).collect::<Vec<_>>(), lits(&[6, 11, 13, 15]));
         assert!(to.is_learnt(n3));
         assert_eq!(to.refs().collect::<Vec<_>>(), vec![n1, n3]);
+    }
+
+    #[test]
+    fn lbd_round_trips_and_survives_compaction() {
+        let mut a = ClauseArena::new();
+        let r1 = a.alloc(&lits(&[2, 5, 7]), true);
+        let r2 = a.alloc(&lits(&[4, 9]), true);
+        assert_eq!(a.lbd(r1), 0, "fresh clauses carry no glue yet");
+        a.set_lbd(r1, 7);
+        a.set_lbd(r2, 2);
+        a.set_activity(r1, 1.5);
+        assert_eq!(a.lbd(r1), 7);
+        assert_eq!(a.lbd(r2), 2);
+        a.delete(r2);
+        let (to, _) = a.compact();
+        let n1 = a.forward(r1).unwrap();
+        assert_eq!(to.lbd(n1), 7, "compaction must carry the LBD word");
+        assert_eq!(to.activity(n1), 1.5);
+        assert_eq!(to.lits(n1).collect::<Vec<_>>(), lits(&[2, 5, 7]));
     }
 
     #[test]

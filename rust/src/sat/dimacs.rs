@@ -3,7 +3,7 @@
 
 use anyhow::{bail, Result};
 
-use super::solver::{Lit, Solver, Var};
+use super::solver::{Lit, SatResult, Solver, Stats, Var};
 
 /// Parse DIMACS CNF into clauses (1-based DIMACS vars -> 0-based).
 pub fn parse_dimacs(src: &str) -> Result<(usize, Vec<Vec<Lit>>)> {
@@ -56,6 +56,19 @@ pub fn solver_from_dimacs(src: &str) -> Result<(Solver, bool)> {
     Ok((s, ok))
 }
 
+/// Solve a DIMACS instance standalone, the way `synth --solve-dimacs`
+/// replays a `--dump-cnf` export: load, preprocess, solve with the
+/// default (Glucose-class) heuristics, and report the final statistics.
+pub fn solve_dimacs(src: &str) -> Result<(SatResult, Stats)> {
+    let (mut s, ok) = solver_from_dimacs(src)?;
+    if !ok {
+        return Ok((SatResult::Unsat, s.stats.clone()));
+    }
+    s.preprocess();
+    let result = s.solve(&[]);
+    Ok((result, s.stats.clone()))
+}
+
 /// Render clauses as DIMACS.
 pub fn to_dimacs(n_vars: usize, clauses: &[Vec<Lit>]) -> String {
     let mut s = format!("p cnf {} {}\n", n_vars, clauses.len());
@@ -91,6 +104,34 @@ mod tests {
         let (n2, clauses2) = parse_dimacs(&again).unwrap();
         assert_eq!(n, n2);
         assert_eq!(clauses, clauses2);
+    }
+
+    #[test]
+    fn solve_dimacs_round_trips_a_dumped_cell() {
+        // The --solve-dimacs surface: a dumped miter cell (base CNF plus
+        // restriction units, exactly what --dump-cnf writes) must solve
+        // standalone to the same answer the miter gives in-process.
+        use crate::circuit::generators::adder;
+        use crate::circuit::sim::TruthTables;
+        use crate::template::SharedMiter;
+        let nl = adder(2);
+        let exact = TruthTables::simulate(&nl).output_values(&nl);
+        let (n, m) = (nl.n_inputs(), nl.n_outputs());
+        for (pit, its) in [(0usize, 0usize), (4, 12)] {
+            let mut miter = SharedMiter::build(n, m, 6, &exact, 2);
+            let mut clauses = miter.b.solver.export_clauses();
+            clauses.extend(miter.restrict(pit, its).into_iter().map(|l| vec![l]));
+            let dimacs = to_dimacs(miter.b.solver.n_vars(), &clauses);
+            let (result, stats) = solve_dimacs(&dimacs).unwrap();
+            let want_sat = miter.solve(pit, its).is_sat();
+            assert_eq!(
+                result == SatResult::Sat,
+                want_sat,
+                "cell ({pit}, {its}) disagrees after the DIMACS round trip"
+            );
+            // The standalone path preprocesses, so the stats must say so.
+            assert!(stats.preprocess_probes > 0, "preprocessing must have run");
+        }
     }
 
     #[test]

@@ -4,16 +4,22 @@
 //!
 //! Features: flat-arena clause storage ([`arena`]) with compacting
 //! garbage collection, two-watched-literal propagation, EVSIDS decision
-//! heuristic with an indexed heap, phase saving, Luby restarts, first-UIP
-//! conflict analysis with self-subsumption minimisation, activity-driven
-//! learnt clause DB reduction, incremental solving under assumptions with
-//! UNSAT-core extraction, cheap whole-solver cloning (the substrate for
+//! heuristic with an indexed heap, phase saving, first-UIP conflict
+//! analysis with self-subsumption minimisation, Glucose-class search
+//! heuristics (per-clause LBD with glue refresh, EMA-driven dynamic
+//! restarts with trail blocking, LBD-tiered learnt DB reduction — see
+//! DESIGN.md §8), once-per-formula preprocessing (failed-literal probing
+//! and binary-clause subsumption, amortised across miter-prototype
+//! clones), incremental solving under assumptions with UNSAT-core
+//! extraction, cheap whole-solver cloning (the substrate for
 //! `template::miter` prototypes), and DIMACS I/O for differential
-//! testing.
+//! testing. The pre-Glucose policies (Luby restarts, activity-only
+//! reduction) stay selectable via [`Heuristics::legacy`] for A/B
+//! benchmarking.
 
 pub mod arena;
 pub mod dimacs;
 pub mod heap;
 pub mod solver;
 
-pub use solver::{Lbool, Lit, SatResult, Solver, Var};
+pub use solver::{Heuristics, Lbool, Lit, SatResult, Solver, Stats, Var};

@@ -7,6 +7,21 @@
 //! are reclaimed, not tombstoned), and the whole solver is `Clone` — a
 //! handful of flat-buffer copies — which is what makes the build-once/
 //! clone-cheap miter prototypes of `template::miter` viable.
+//!
+//! Search heuristics are Glucose-4.1-class ([`Heuristics`], on by
+//! default): every learnt clause carries its LBD ("glue" — the number of
+//! distinct decision levels it spans) in the arena header, refreshed
+//! downward when conflict analysis reuses the clause; restarts are
+//! forced dynamically when a fast EMA of conflict LBD runs above the
+//! slow one (recent learnts worse than the long-run average) and blocked
+//! when the trail grows far past its own EMA (the search looks close to
+//! a total assignment); and `reduce_db` retains by LBD tier — core glue
+//! clauses are immortal, the high-LBD local tier drains first, activity
+//! only breaks ties. [`Solver::preprocess`] adds a once-per-formula
+//! root-level pass (failed-literal probing + subsumption against the
+//! binary clauses) intended to run on a miter prototype *before* it is
+//! cloned per lattice cell. All heuristic state is plain solver fields —
+//! no wall-clock, no randomness — so clones still replay byte-for-byte.
 
 use super::arena::{CRef, ClauseArena};
 use super::heap::VarHeap;
@@ -86,6 +101,80 @@ struct Watcher {
 
 const REASON_NONE: CRef = u32::MAX;
 
+/// Learnt clauses at or below this LBD are "core" glue: never deleted by
+/// the tiered `reduce_db` and exempt from glue refreshes (they cannot
+/// improve).
+const CORE_LBD: u32 = 2;
+/// Smoothing factors of the restart EMAs: the fast LBD average reacts
+/// within ~32 conflicts, the slow LBD and trail averages track the
+/// long-run behaviour of the solve.
+const EMA_FAST_ALPHA: f64 = 1.0 / 32.0;
+const EMA_SLOW_ALPHA: f64 = 1.0 / 4096.0;
+/// Force a restart when `fast > K * slow` (recent learnt quality well
+/// below the long-run average).
+const RESTART_FORCE_K: f64 = 1.25;
+/// Block a forced restart when the trail is this factor above its EMA.
+const RESTART_BLOCK_R: f64 = 1.4;
+/// Minimum conflicts between dynamic restarts (or blocked attempts).
+const RESTART_MIN_CONFLICTS: u64 = 50;
+
+/// Policy switches for the Glucose-class heuristics, all on by default.
+///
+/// The legacy policies stay selectable so `benches/sat_solver.rs` can
+/// A/B old-vs-new on the same miter corpus. Every decision behind these
+/// flags is a pure function of the conflict sequence — no wall-clock, no
+/// randomness — so either setting preserves the clone-replay contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Heuristics {
+    /// EMA-forced / trail-blocked dynamic restarts; `false` falls back
+    /// to the fixed Luby×100 schedule.
+    pub ema_restarts: bool,
+    /// LBD-tiered learnt retention in `reduce_db`; `false` falls back to
+    /// the pure activity sort.
+    pub lbd_reduce: bool,
+}
+
+impl Default for Heuristics {
+    fn default() -> Self {
+        Heuristics { ema_restarts: true, lbd_reduce: true }
+    }
+}
+
+impl Heuristics {
+    /// The pre-Glucose policies (Luby restarts, activity-only reduce).
+    pub fn legacy() -> Self {
+        Heuristics { ema_restarts: false, lbd_reduce: false }
+    }
+}
+
+/// Deterministic exponential moving average, seeded by its first sample
+/// (no bias-correction clock, nothing time-dependent).
+#[derive(Debug, Clone, Copy)]
+struct Ema {
+    val: f64,
+    alpha: f64,
+    seeded: bool,
+}
+
+impl Ema {
+    fn new(alpha: f64) -> Ema {
+        Ema { val: 0.0, alpha, seeded: false }
+    }
+
+    fn update(&mut self, x: f64) {
+        if self.seeded {
+            self.val += self.alpha * (x - self.val);
+        } else {
+            self.val = x;
+            self.seeded = true;
+        }
+    }
+
+    fn get(&self) -> f64 {
+        self.val
+    }
+}
+
 /// Solver statistics, exposed for the benches and EXPERIMENTS.md §Perf.
 #[derive(Debug, Default, Clone)]
 pub struct Stats {
@@ -99,6 +188,17 @@ pub struct Stats {
     pub gc_runs: u64,
     /// `u32` words of clause storage reclaimed by compaction.
     pub arena_reclaimed_words: u64,
+    /// Sum of learnt-clause LBDs at learn time; `lbd_sum / conflicts` is
+    /// the mean glue, the quality measure the restart policy watches.
+    pub lbd_sum: u64,
+    /// Restarts the trail-size EMA vetoed (deep trail = likely close to
+    /// a satisfying assignment, so the search was left running).
+    pub restarts_blocked: u64,
+    /// Failed-literal probes attempted by [`Solver::preprocess`].
+    pub preprocess_probes: u64,
+    /// Clauses deleted or strengthened by [`Solver::preprocess`]
+    /// (root simplification + subsumption against binary clauses).
+    pub preprocess_subsumed: u64,
 }
 
 #[derive(Clone)]
@@ -131,6 +231,22 @@ pub struct Solver {
     /// Abort knob: give up (returning Unsat-as-timeout is wrong, so we
     /// surface `None` from `solve_limited`) after this many conflicts.
     pub conflict_budget: Option<u64>,
+    /// Heuristic policy switches (Glucose-class defaults).
+    pub heuristics: Heuristics,
+    /// Stamp array for LBD computation, indexed by decision level and
+    /// grown on demand (assumption levels can outrun the var count).
+    lbd_seen: Vec<u64>,
+    lbd_stamp: u64,
+    /// Fast/slow EMAs over learnt-clause LBD. They persist across
+    /// incremental solves, like the activities do, and clone with the
+    /// solver — part of the replay snapshot.
+    ema_lbd_fast: Ema,
+    ema_lbd_slow: Ema,
+    /// EMA over trail size at conflicts, for blocking restarts.
+    ema_trail: Ema,
+    /// [`Self::preprocess`] already ran (it is once-per-formula; clones
+    /// inherit the flag, so the engine may call it unconditionally).
+    preprocessed: bool,
 }
 
 impl Default for Solver {
@@ -165,6 +281,13 @@ impl Solver {
             root_units: Vec::new(),
             stats: Stats::default(),
             conflict_budget: None,
+            heuristics: Heuristics::default(),
+            lbd_seen: Vec::new(),
+            lbd_stamp: 0,
+            ema_lbd_fast: Ema::new(EMA_FAST_ALPHA),
+            ema_lbd_slow: Ema::new(EMA_SLOW_ALPHA),
+            ema_trail: Ema::new(EMA_SLOW_ALPHA),
+            preprocessed: false,
         }
     }
 
@@ -425,8 +548,53 @@ impl Solver {
         }
     }
 
-    /// First-UIP conflict analysis. Returns (learnt clause, backtrack level).
-    fn analyze(&mut self, mut confl: CRef) -> (Vec<Lit>, u32) {
+    /// Literals-block-distance of a literal set under the current
+    /// assignment: the number of distinct non-root decision levels among
+    /// the (assigned) literals. Glucose's clause-quality measure — a low
+    /// LBD clause glues few levels together and keeps propagating across
+    /// restarts.
+    fn lits_lbd(&mut self, lits: &[Lit]) -> u32 {
+        self.lbd_stamp += 1;
+        let mut lbd = 0u32;
+        for &l in lits {
+            lbd += self.mark_level(l);
+        }
+        lbd
+    }
+
+    /// As [`Self::lits_lbd`], over an arena clause (no allocation).
+    fn clause_lbd(&mut self, r: CRef) -> u32 {
+        self.lbd_stamp += 1;
+        let mut lbd = 0u32;
+        for k in 0..self.arena.len(r) {
+            let l = self.arena.lit(r, k);
+            lbd += self.mark_level(l);
+        }
+        lbd
+    }
+
+    /// 1 if `l`'s decision level is non-root and unseen at the current
+    /// stamp (marking it seen), 0 otherwise.
+    #[inline]
+    fn mark_level(&mut self, l: Lit) -> u32 {
+        let lvl = self.level[l.var() as usize] as usize;
+        if lvl == 0 {
+            return 0;
+        }
+        if lvl >= self.lbd_seen.len() {
+            self.lbd_seen.resize(lvl + 1, 0);
+        }
+        if self.lbd_seen[lvl] != self.lbd_stamp {
+            self.lbd_seen[lvl] = self.lbd_stamp;
+            1
+        } else {
+            0
+        }
+    }
+
+    /// First-UIP conflict analysis. Returns (learnt clause, backtrack
+    /// level, LBD of the learnt clause).
+    fn analyze(&mut self, mut confl: CRef) -> (Vec<Lit>, u32, u32) {
         let mut learnt: Vec<Lit> = vec![Lit(0)]; // slot for the asserting lit
         let mut counter = 0u32;
         let mut p: Option<Lit> = None;
@@ -435,6 +603,16 @@ impl Solver {
         loop {
             if self.arena.is_learnt(confl) {
                 self.bump_clause(confl);
+                // Glucose-style glue refresh: a learnt clause pulled
+                // back into conflict analysis may span fewer decision
+                // levels now than when it was learnt — keep the lower
+                // value so the tiered reduce_db promotes it.
+                if self.arena.lbd(confl) > CORE_LBD {
+                    let cur = self.clause_lbd(confl);
+                    if cur < self.arena.lbd(confl) {
+                        self.arena.set_lbd(confl, cur);
+                    }
+                }
             }
             let start = if p.is_some() { 1 } else { 0 };
             for k in start..self.arena.len(confl) {
@@ -511,7 +689,10 @@ impl Solver {
             self.level[out[1].var() as usize]
         };
         self.stats.learnt_literals += out.len() as u64;
-        (out, bt)
+        // LBD is computed before backtracking, while every literal of
+        // the learnt clause is still assigned.
+        let lbd = self.lits_lbd(&out);
+        (out, bt, lbd)
     }
 
     fn backtrack_to(&mut self, lvl: u32) {
@@ -541,14 +722,34 @@ impl Solver {
         None
     }
 
+    /// Halve the learnt-clause DB. The tiered policy (default) retains
+    /// by glue: *core* clauses (LBD ≤ 2) are never candidates, and the
+    /// rest is deleted worst-first by (LBD descending, activity
+    /// ascending) — the high-LBD *local* tier drains before mid-glue
+    /// *tier2* clauses, with activity only breaking ties inside an LBD
+    /// band. The legacy policy is the pure activity sort.
     fn reduce_db(&mut self) {
-        let mut order: Vec<CRef> = self.learnts.clone();
+        let tiered = self.heuristics.lbd_reduce;
+        let mut order: Vec<CRef> = if tiered {
+            self.learnts
+                .iter()
+                .copied()
+                .filter(|&r| self.arena.lbd(r) > CORE_LBD)
+                .collect()
+        } else {
+            self.learnts.clone()
+        };
         // `total_cmp`, not `partial_cmp(..).unwrap()`: activities are
         // floats and the sort must never panic — a NaN/inf-poisoned
         // activity gets a defined position in the order instead of
         // aborting the whole solve.
         order.sort_by(|&a, &b| {
-            self.arena.activity(a).total_cmp(&self.arena.activity(b))
+            let by_lbd = if tiered {
+                self.arena.lbd(b).cmp(&self.arena.lbd(a))
+            } else {
+                std::cmp::Ordering::Equal
+            };
+            by_lbd.then(self.arena.activity(a).total_cmp(&self.arena.activity(b)))
         });
         let target = order.len() / 2;
         let mut removed = 0usize;
@@ -603,6 +804,262 @@ impl Solver {
         self.stats.arena_reclaimed_words += reclaimed as u64;
     }
 
+    /// Once-per-formula preprocessing: root-level failed-literal probing
+    /// plus subsumption / self-subsuming resolution against the binary
+    /// clauses. Built for the miter-prototype workflow — run it on the
+    /// prototype *before* cloning and every per-cell clone inherits the
+    /// simplified formula, so the cost is amortised across the lattice.
+    ///
+    /// Every rewrite is model-preserving: probing only asserts units the
+    /// formula already implies (unit propagation refutes the opposite
+    /// phase), and strengthening/deleting a clause against a binary is
+    /// plain resolution/subsumption — the set of satisfying assignments
+    /// is untouched, so SAT/UNSAT answers and enumerated models cannot
+    /// change feasibility. It is deterministic (fixed candidate order,
+    /// bounded by a work *counter*, never by wall-clock) and idempotent
+    /// (flag-guarded), so callers may invoke it unconditionally on both
+    /// cold-built and cache-provided prototypes.
+    pub fn preprocess(&mut self) {
+        if self.preprocessed {
+            return;
+        }
+        self.preprocessed = true;
+        if !self.ok {
+            return;
+        }
+        debug_assert_eq!(self.decision_level(), 0, "preprocess runs at root");
+        // Root-level reasons are never resolved on again (analysis stops
+        // at level 0), so clear them before clauses start moving — a
+        // deleted clause must not be reachable through `reason`.
+        self.clear_root_reasons();
+        self.failed_literal_probing();
+        if self.ok {
+            self.subsume_with_binaries();
+        }
+        // Preprocessing may have deleted clauses that are satisfied by
+        // *derived* root units; promote every root assignment into
+        // `root_units` so `export_clauses` stays equivalent to the
+        // original formula (the units are implied, so adding them is
+        // always sound).
+        for &l in &self.trail {
+            if !self.root_units.contains(&l) {
+                self.root_units.push(l);
+            }
+        }
+        self.clear_root_reasons();
+        self.garbage_collect();
+    }
+
+    /// Forget the reasons of root-level assignments. Safe at any point:
+    /// level-0 variables are skipped by `analyze`, `analyze_final_conflict`
+    /// and `core_from_lit`, and never unassigned by `backtrack_to`.
+    fn clear_root_reasons(&mut self) {
+        debug_assert_eq!(self.decision_level(), 0);
+        for &l in &self.trail {
+            self.reason[l.var() as usize] = REASON_NONE;
+        }
+    }
+
+    /// Probe the negations of binary-clause literals (the only probes
+    /// whose propagation can reach beyond one clause); a probe that unit
+    /// propagates to a conflict proves the opposite literal at root.
+    fn failed_literal_probing(&mut self) {
+        // Deterministic candidate order: binary clauses in allocation
+        // order, each contributing the negations of its two literals.
+        let mut cand: Vec<Lit> = Vec::new();
+        let mut is_cand = vec![false; 2 * self.n_vars()];
+        for r in self.arena.refs() {
+            if self.arena.is_learnt(r) || self.arena.is_deleted(r) || self.arena.len(r) != 2 {
+                continue;
+            }
+            for k in 0..2 {
+                let p = !self.arena.lit(r, k);
+                if !is_cand[p.idx()] {
+                    is_cand[p.idx()] = true;
+                    cand.push(p);
+                }
+            }
+        }
+        for p in cand {
+            if self.value_lit(p) != Lbool::Undef {
+                continue;
+            }
+            self.stats.preprocess_probes += 1;
+            self.trail_lim.push(self.trail.len());
+            self.unchecked_enqueue(p, REASON_NONE);
+            let failed = self.propagate().is_some();
+            self.backtrack_to(0);
+            if failed {
+                // `p` refutes by unit propagation alone, so `!p` holds
+                // in every model.
+                self.unchecked_enqueue(!p, REASON_NONE);
+                if self.propagate().is_some() {
+                    self.ok = false;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Root simplification plus subsumption with the binary problem
+    /// clauses as subsumers:
+    /// * clauses satisfied at root are deleted, root-false literals are
+    ///   stripped;
+    /// * a binary `(x ∨ y)` deletes any other clause containing both `x`
+    ///   and `y` (subsumption) and strengthens any clause containing
+    ///   `¬x` alongside `y` by dropping `¬x` (self-subsuming
+    ///   resolution).
+    /// Bounded by a deterministic clause-visit budget, so huge miters
+    /// pay a fixed, reproducible amount of work.
+    fn subsume_with_binaries(&mut self) {
+        // Pass 1: root cleanup under the (possibly probe-extended) root
+        // assignment.
+        let live: Vec<CRef> = self
+            .arena
+            .refs()
+            .filter(|&r| !self.arena.is_learnt(r) && !self.arena.is_deleted(r))
+            .collect();
+        for r in live {
+            if !self.ok {
+                return;
+            }
+            let lits: Vec<Lit> = self.arena.lits(r).collect();
+            if lits.iter().any(|&l| self.value_lit(l) != Lbool::Undef) {
+                self.stats.preprocess_subsumed += 1;
+                self.replace_problem_clause(r, &lits);
+            }
+        }
+        // Pass 2: binary subsumption over occurrence lists, maintained
+        // as strengthening rewrites clauses (new refs are appended; old
+        // refs stay behind flagged deleted and are skipped).
+        let mut occ: Vec<Vec<CRef>> = vec![Vec::new(); 2 * self.n_vars()];
+        let mut binaries: Vec<CRef> = Vec::new();
+        for r in self.arena.refs() {
+            if self.arena.is_learnt(r) || self.arena.is_deleted(r) {
+                continue;
+            }
+            for l in self.arena.lits(r) {
+                occ[l.idx()].push(r);
+            }
+            if self.arena.len(r) == 2 {
+                binaries.push(r);
+            }
+        }
+        let mut fuel: u64 = 4_000_000; // clause visits, not wall-clock
+        let mut bi = 0usize;
+        while bi < binaries.len() {
+            let b = binaries[bi];
+            bi += 1;
+            if !self.ok || fuel == 0 {
+                return;
+            }
+            if self.arena.is_deleted(b) || self.arena.len(b) != 2 {
+                continue;
+            }
+            let (x, y) = (self.arena.lit(b, 0), self.arena.lit(b, 1));
+            // Clauses holding `x`: subsumed if they also hold `y`,
+            // strengthened (drop `¬y`) if they hold `¬y`. Clauses
+            // holding `¬x`: strengthened (drop `¬x`) if they hold `y`.
+            for (probe, partner, drop) in [(x, y, !y), (!x, y, !x)] {
+                let mut i = 0usize;
+                while i < occ[probe.idx()].len() {
+                    let c = occ[probe.idx()][i];
+                    i += 1;
+                    if c == b || self.arena.is_deleted(c) {
+                        continue;
+                    }
+                    fuel = fuel.saturating_sub(1);
+                    if fuel == 0 {
+                        return;
+                    }
+                    let mut has_partner = false;
+                    let mut has_drop = false;
+                    for l in self.arena.lits(c) {
+                        has_partner |= l == partner;
+                        has_drop |= l == drop;
+                    }
+                    if probe == x && has_partner {
+                        // {x, y} ⊆ c: subsumed by the binary.
+                        self.stats.preprocess_subsumed += 1;
+                        self.detach_clause(c);
+                        self.delete_problem_clause(c);
+                        continue;
+                    }
+                    if !has_drop || (probe != x && !has_partner) {
+                        continue;
+                    }
+                    // Resolving c with (x ∨ y) on the dropped literal
+                    // yields c \ {drop}: strengthen in place.
+                    let kept: Vec<Lit> = self.arena.lits(c).filter(|&l| l != drop).collect();
+                    self.stats.preprocess_subsumed += 1;
+                    if let Some(nr) = self.replace_problem_clause(c, &kept) {
+                        for k in 0..self.arena.len(nr) {
+                            let l = self.arena.lit(nr, k);
+                            occ[l.idx()].push(nr);
+                        }
+                        if self.arena.len(nr) == 2 {
+                            binaries.push(nr);
+                        }
+                    }
+                    if !self.ok {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Rewrite problem clause `r` as `lits`: detach and delete the old
+    /// body, then re-add the replacement filtered against the root
+    /// assignment exactly like `add_clause` filters (satisfied ⇒ gone,
+    /// false literals ⇒ stripped, unit ⇒ enqueued and propagated, empty
+    /// ⇒ UNSAT). Returns the new ref when the result is still a stored
+    /// (≥ 2 literal) clause.
+    fn replace_problem_clause(&mut self, r: CRef, lits: &[Lit]) -> Option<CRef> {
+        self.detach_clause(r);
+        self.delete_problem_clause(r);
+        if lits.iter().any(|&l| self.value_lit(l) == Lbool::True) {
+            return None; // satisfied at root: redundant, stays deleted
+        }
+        let kept: Vec<Lit> = lits
+            .iter()
+            .copied()
+            .filter(|&l| self.value_lit(l) == Lbool::Undef)
+            .collect();
+        match kept.len() {
+            0 => {
+                self.ok = false;
+                None
+            }
+            1 => {
+                self.unchecked_enqueue(kept[0], REASON_NONE);
+                if self.propagate().is_some() {
+                    self.ok = false;
+                }
+                None
+            }
+            _ => {
+                let nr = self.attach_clause(&kept, false);
+                self.num_problem_clauses += 1;
+                Some(nr)
+            }
+        }
+    }
+
+    fn delete_problem_clause(&mut self, r: CRef) {
+        debug_assert!(!self.arena.is_learnt(r));
+        self.arena.delete(r);
+        self.num_problem_clauses -= 1;
+    }
+
+    /// Remove the two watcher entries of a live clause.
+    fn detach_clause(&mut self, r: CRef) {
+        for k in 0..2 {
+            let w = !self.arena.lit(r, k);
+            self.watches[w.idx()].retain(|e| e.clause != r);
+        }
+    }
+
     /// Solve under assumptions. `Some(Sat)`/`Some(Unsat)`, or `None` when
     /// the conflict budget ran out.
     pub fn solve_limited(&mut self, assumptions: &[Lit]) -> Option<SatResult> {
@@ -616,13 +1073,16 @@ impl Solver {
 
         let budget_start = self.stats.conflicts;
         let mut max_learnts = (self.n_clauses() as f64 * 0.4).max(1000.0);
+        // Legacy restart schedule (`heuristics.ema_restarts == false`).
         let mut restart_idx = 0u64;
         let mut conflicts_until_restart = luby(restart_idx) * 100;
+        // Dynamic restart schedule: conflicts since the last restart (or
+        // blocked attempt) of this solve. The LBD/trail EMAs persist
+        // across incremental solves, like the activities.
+        let mut since_restart = 0u64;
 
         loop {
             if let Some(confl) = self.propagate() {
-                self.stats.conflicts += 1;
-                conflicts_until_restart = conflicts_until_restart.saturating_sub(1);
                 if self.decision_level() == 0 {
                     self.ok = false;
                     return Some(SatResult::Unsat);
@@ -632,7 +1092,25 @@ impl Solver {
                     self.analyze_final_conflict(confl, assumptions);
                     return Some(SatResult::Unsat);
                 }
-                let (learnt, bt) = self.analyze(confl);
+                // Budget check *before* analysis: a budget of `b`
+                // processes exactly `b` conflicts — the `b+1`'th is
+                // detected here and abandoned. (The old check sat after
+                // the increment and used `>`, letting `b+1` through.)
+                if let Some(b) = self.conflict_budget {
+                    if self.stats.conflicts - budget_start >= b {
+                        self.backtrack_to(0);
+                        return None;
+                    }
+                }
+                self.stats.conflicts += 1;
+                since_restart += 1;
+                conflicts_until_restart = conflicts_until_restart.saturating_sub(1);
+                let trail_at_conflict = self.trail.len() as f64;
+                let (learnt, bt, lbd) = self.analyze(confl);
+                self.stats.lbd_sum += lbd as u64;
+                self.ema_lbd_fast.update(lbd as f64);
+                self.ema_lbd_slow.update(lbd as f64);
+                self.ema_trail.update(trail_at_conflict);
                 // Backjump possibly below the assumption prefix: the
                 // decision loop re-asserts assumptions afterwards (and a
                 // falsified assumption then yields the UNSAT core).
@@ -642,6 +1120,7 @@ impl Solver {
                     self.unchecked_enqueue(learnt[0], REASON_NONE);
                 } else {
                     let r = self.attach_clause(&learnt, true);
+                    self.arena.set_lbd(r, lbd);
                     let first = self.arena.lit(r, 0);
                     debug_assert_eq!(self.value_lit(first), Lbool::Undef);
                     self.unchecked_enqueue(first, r);
@@ -652,18 +1131,28 @@ impl Solver {
                     self.reduce_db();
                     max_learnts *= 1.1;
                 }
-                if let Some(b) = self.conflict_budget {
-                    if self.stats.conflicts - budget_start > b {
-                        self.backtrack_to(0);
-                        return None;
-                    }
-                }
             } else {
-                if conflicts_until_restart == 0 {
-                    self.stats.restarts += 1;
-                    restart_idx += 1;
-                    conflicts_until_restart = luby(restart_idx) * 100;
-                    self.backtrack_to((assumptions.len() as u32).min(self.decision_level()));
+                let want_restart = if self.heuristics.ema_restarts {
+                    since_restart >= RESTART_MIN_CONFLICTS
+                        && self.ema_lbd_fast.get() > RESTART_FORCE_K * self.ema_lbd_slow.get()
+                } else {
+                    conflicts_until_restart == 0
+                };
+                if want_restart {
+                    if self.heuristics.ema_restarts
+                        && self.trail.len() as f64 > RESTART_BLOCK_R * self.ema_trail.get()
+                    {
+                        // Deep trail: the search looks close to a total
+                        // assignment — let it run instead of restarting.
+                        self.stats.restarts_blocked += 1;
+                        since_restart = 0;
+                    } else {
+                        self.stats.restarts += 1;
+                        since_restart = 0;
+                        restart_idx += 1;
+                        conflicts_until_restart = luby(restart_idx) * 100;
+                        self.backtrack_to((assumptions.len() as u32).min(self.decision_level()));
+                    }
                 }
                 // Assumption decisions first.
                 let dl = self.decision_level() as usize;
@@ -965,6 +1454,19 @@ mod tests {
         }
     }
 
+    #[test]
+    fn conflict_budget_runs_exactly_b_conflicts() {
+        // A budget of `b` must process exactly `b` conflicts — the old
+        // `> b` check after the increment let `b + 1` through, skewing
+        // budget-parity comparisons by one conflict.
+        for b in [0u64, 1, 10, 100] {
+            let mut s = php(8, 7); // far out of reach for these budgets
+            s.conflict_budget = Some(b);
+            assert_eq!(s.solve_limited(&[]), None, "budget {b}");
+            assert_eq!(s.stats.conflicts, b, "budget {b}: wrong conflict count");
+        }
+    }
+
     // ---- arena / clone / reduce_db behaviour ----
 
     /// Attach `count` synthetic learnt clauses with strictly increasing
@@ -982,6 +1484,9 @@ mod tests {
             ];
             let r = s.attach_clause(&cl, true);
             s.arena.set_activity(r, i as f32);
+            // Non-core glue, so the tiered policy treats them all as
+            // deletion candidates and the activity tiebreak decides.
+            s.arena.set_lbd(r, 7);
             refs.push(r);
         }
         (s, refs)
@@ -1047,6 +1552,194 @@ mod tests {
         assert_eq!(a.stats.conflicts, b.stats.conflicts);
         assert_eq!(a.stats.decisions, b.stats.decisions);
         assert_eq!(a.stats.propagations, b.stats.propagations);
+        assert_eq!(a.stats.restarts, b.stats.restarts);
+        assert_eq!(a.stats.restarts_blocked, b.stats.restarts_blocked);
+        assert_eq!(a.stats.lbd_sum, b.stats.lbd_sum);
+    }
+
+    #[test]
+    fn reduce_db_keeps_core_lbd_clauses() {
+        let (mut s, refs) = with_synthetic_learnts(40);
+        // Glue the four *coldest* clauses: core glue is exempt from
+        // deletion no matter how low its activity is.
+        for &r in &refs[..4] {
+            s.arena.set_lbd(r, CORE_LBD);
+        }
+        s.reduce_db();
+        // 36 candidates, half deleted; the four core clauses survive.
+        assert_eq!(s.stats.deleted_clauses, 18);
+        assert_eq!(s.learnts.len(), 22);
+        let core: Vec<CRef> = s
+            .learnts
+            .iter()
+            .copied()
+            .filter(|&r| s.arena.lbd(r) <= CORE_LBD)
+            .collect();
+        assert_eq!(core.len(), 4);
+        for &r in &core {
+            assert!(s.arena.activity(r) < 4.0, "cold core clauses must survive");
+        }
+        assert_eq!(s.solve(&[]), SatResult::Sat);
+    }
+
+    #[test]
+    fn legacy_heuristics_still_solve() {
+        let mut s = php(6, 5);
+        s.heuristics = Heuristics::legacy();
+        assert_eq!(s.solve(&[]), SatResult::Unsat);
+        let mut t = php(4, 4);
+        t.heuristics = Heuristics::legacy();
+        assert_eq!(t.solve(&[]), SatResult::Sat);
+    }
+
+    #[test]
+    fn restart_stats_are_deterministic_across_fresh_builds() {
+        let mut a = php(7, 6);
+        let mut b = php(7, 6);
+        assert_eq!(a.solve(&[]), SatResult::Unsat);
+        assert_eq!(b.solve(&[]), SatResult::Unsat);
+        assert_eq!(a.stats.restarts, b.stats.restarts);
+        assert_eq!(a.stats.restarts_blocked, b.stats.restarts_blocked);
+        assert_eq!(a.stats.lbd_sum, b.stats.lbd_sum);
+        assert!(a.stats.lbd_sum > 0, "every conflict contributes glue");
+    }
+
+    // ---- preprocessing ----
+
+    #[test]
+    fn probing_fixes_failed_literals_at_root() {
+        let mut s = Solver::new();
+        let a = s.new_var();
+        let b = s.new_var();
+        let c = s.new_var();
+        // (a|b) & (a|!b): probing !a propagates b and !b into a conflict,
+        // so `a` is implied and gets fixed at root.
+        s.add_clause(&[lit(a, true), lit(b, true)]);
+        s.add_clause(&[lit(a, true), lit(b, false)]);
+        s.add_clause(&[lit(c, true), lit(b, true), lit(a, false)]);
+        s.preprocess();
+        assert!(s.stats.preprocess_probes > 0);
+        assert_eq!(s.value_lit(lit(a, true)), Lbool::True, "a implied at root");
+        assert_eq!(s.solve(&[]), SatResult::Sat);
+        assert!(s.model_value(lit(a, true)));
+    }
+
+    #[test]
+    fn preprocess_subsumes_and_strengthens_with_binaries() {
+        let mut s = Solver::new();
+        let a = s.new_var();
+        let b = s.new_var();
+        let c = s.new_var();
+        let d = s.new_var();
+        s.add_clause(&[lit(a, true), lit(b, true)]); // the subsumer
+        s.add_clause(&[lit(a, true), lit(b, true), lit(c, true)]); // ⊇ {a,b}
+        s.add_clause(&[lit(a, false), lit(b, true), lit(d, true)]); // → (b|d)
+        assert_eq!(s.n_clauses(), 3);
+        s.preprocess();
+        assert_eq!(s.n_clauses(), 2, "one subsumed, one strengthened in place");
+        assert!(s.stats.preprocess_subsumed >= 2);
+        let exported = s.export_clauses();
+        // Watch swaps during probing may reorder literals — compare sorted.
+        let strengthened = exported.iter().any(|cl| {
+            let mut c = cl.clone();
+            c.sort_unstable();
+            c == vec![lit(b, true), lit(d, true)]
+        });
+        assert!(strengthened, "self-subsuming resolution must drop !a: {exported:?}");
+        assert_eq!(s.solve(&[]), SatResult::Sat);
+    }
+
+    #[test]
+    fn preprocess_is_flag_guarded_idempotent() {
+        let mut s = php(6, 5);
+        s.preprocess();
+        let probes = s.stats.preprocess_probes;
+        let subsumed = s.stats.preprocess_subsumed;
+        let clauses = s.n_clauses();
+        let words = s.arena_len_words();
+        s.preprocess(); // second call must be a no-op
+        assert_eq!(s.stats.preprocess_probes, probes);
+        assert_eq!(s.stats.preprocess_subsumed, subsumed);
+        assert_eq!(s.n_clauses(), clauses);
+        assert_eq!(s.arena_len_words(), words);
+        assert_eq!(s.solve(&[]), SatResult::Unsat);
+    }
+
+    #[test]
+    fn random_3sat_with_preprocess_agrees_with_brute_force() {
+        // Same differential harness as above, but every instance is
+        // preprocessed first: probing + subsumption must never flip an
+        // answer or produce a non-model.
+        let mut state = 0x9e3779b9u64;
+        let mut rand = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u32
+        };
+        for _round in 0..30 {
+            let n = 10usize;
+            let n_clauses = 38;
+            let mut clauses = Vec::new();
+            for _ in 0..n_clauses {
+                let mut cl = Vec::new();
+                for _ in 0..3 {
+                    let v = rand() as usize % n;
+                    cl.push(Lit::new(v as Var, rand() % 2 == 0));
+                }
+                clauses.push(cl);
+            }
+            let mut bf_sat = false;
+            'outer: for m in 0..1u32 << n {
+                for cl in &clauses {
+                    if !cl.iter().any(|l| ((m >> l.var()) & 1 == 1) != l.is_neg()) {
+                        continue 'outer;
+                    }
+                }
+                bf_sat = true;
+                break;
+            }
+            let mut s = Solver::new();
+            for _ in 0..n {
+                s.new_var();
+            }
+            let mut ok = true;
+            for cl in &clauses {
+                ok &= s.add_clause(cl);
+            }
+            s.preprocess();
+            let got = if !ok { SatResult::Unsat } else { s.solve(&[]) };
+            assert_eq!(got == SatResult::Sat, bf_sat, "instance {clauses:?}");
+            if got == SatResult::Sat {
+                for cl in &clauses {
+                    assert!(cl.iter().any(|&l| s.model_value(l)), "broken model");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn preprocessed_export_stays_equivalent() {
+        // Preprocessing rewrites the clause store; the export must still
+        // describe the same formula (derived units are promoted into the
+        // export so deleted-satisfied clauses stay covered).
+        let mut s = Solver::new();
+        let a = s.new_var();
+        let b = s.new_var();
+        let c = s.new_var();
+        s.add_clause(&[lit(a, true), lit(b, true)]);
+        s.add_clause(&[lit(a, true), lit(b, false)]);
+        s.add_clause(&[lit(a, false), lit(c, true)]);
+        s.preprocess(); // fixes a, strengthens/deletes the rest
+        let exported = s.export_clauses();
+        let mut t = Solver::new();
+        for _ in 0..3 {
+            t.new_var();
+        }
+        for cl in &exported {
+            t.add_clause(cl);
+        }
+        for probe in [vec![], vec![lit(b, true)], vec![lit(c, false)], vec![lit(b, false)]] {
+            assert_eq!(s.solve(&probe), t.solve(&probe), "probe {probe:?}");
+        }
     }
 
     #[test]

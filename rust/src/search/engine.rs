@@ -80,6 +80,14 @@ pub trait Template: Sized + Clone + Sync {
     /// Per-solve conflict budget (None = run to completion).
     fn set_conflict_budget(&mut self, budget: Option<u64>);
 
+    /// Once-per-prototype simplification, run by the engine after build
+    /// (or on a cache-provided prototype) and *before* any solve or
+    /// clone, so the cost is amortised across every cell of the lattice.
+    /// Must be idempotent and deterministic: preprocessing twice is a
+    /// no-op, and a clone of a preprocessed prototype is byte-identical
+    /// to a fresh build-then-preprocess. Default: nothing to simplify.
+    fn preprocess(&mut self) {}
+
     /// Solve under the `(a, b)` restriction.
     fn solve(&mut self, a: usize, b: usize) -> SolveOutcome;
 
@@ -119,6 +127,10 @@ impl Template for SharedMiter {
 
     fn set_conflict_budget(&mut self, budget: Option<u64>) {
         SharedMiter::set_conflict_budget(self, budget);
+    }
+
+    fn preprocess(&mut self) {
+        SharedMiter::preprocess(self);
     }
 
     fn solve(&mut self, a: usize, b: usize) -> SolveOutcome {
@@ -164,6 +176,10 @@ impl Template for NonsharedMiter {
 
     fn set_conflict_budget(&mut self, budget: Option<u64>) {
         NonsharedMiter::set_conflict_budget(self, budget);
+    }
+
+    fn preprocess(&mut self) {
+        NonsharedMiter::preprocess(self);
     }
 
     fn solve(&mut self, a: usize, b: usize) -> SolveOutcome {
@@ -400,6 +416,9 @@ pub fn run_search_exact<T: Template>(
     let canonical = cfg.cell_workers > 1;
     let mut proto =
         prototype.unwrap_or_else(|| T::build(n, m, cfg.pool, exact, et));
+    // Idempotent: cold builds get simplified here, cache-provided
+    // prototypes were already preprocessed at insert time and skip out.
+    proto.preprocess();
     proto.set_conflict_budget(cfg.conflict_budget);
     let mut probe_clone: Option<T> = if canonical { Some(proto.clone()) } else { None };
 

@@ -6,9 +6,10 @@
 //! [`MiterCache`] is the build-once/clone-cheap store for miter
 //! *prototypes*: a sweep running several jobs over the same geometry
 //! (benchmark × ET × pool) encodes the base CNF once and hands every job
-//! a clone. Prototypes are pristine (never solved), so a cache hit is
-//! byte-identical to a fresh build and results cannot depend on whether
-//! the cache was warm.
+//! a clone. Prototypes are pristine (never solved) and preprocessed once
+//! at insert time; preprocessing is deterministic and idempotent, so a
+//! cache hit is byte-identical to a fresh build-and-preprocess and
+//! results cannot depend on whether the cache was warm.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -178,10 +179,12 @@ type GeometryKey = (usize, usize, usize, u64, Vec<u64>);
 /// Cross-job store of pristine miter prototypes, keyed by geometry.
 ///
 /// `coordinator::sweep` keeps one cache per sweep: the first job of a
-/// geometry pays the encode, every later same-geometry job clones it.
-/// Because a prototype is never solved and never blocked, a clone from
-/// the cache is byte-identical to a fresh `build` — cache warmth cannot
-/// change any result, only the time to first solve.
+/// geometry pays the encode (and the one-time solver preprocessing),
+/// every later same-geometry job clones it. Because a prototype is never
+/// solved and never blocked, and preprocessing is deterministic and
+/// idempotent, a clone from the cache is byte-identical to a fresh
+/// build-and-preprocess — cache warmth cannot change any result, only
+/// the time to first solve.
 #[derive(Default)]
 pub struct MiterCache {
     shared: Mutex<HashMap<GeometryKey, Arc<SharedMiter>>>,
@@ -258,7 +261,14 @@ impl MiterCache {
         exact: &[u64],
     ) -> SearchOutcome {
         let key = Self::geometry_key(nl, et, cfg, exact);
-        let proto = Self::proto_from(&self.shared, key, SharedMiter::build);
+        // Preprocess at insert time: every later same-geometry job clones
+        // the already-simplified CNF (idempotent, so the engine's own
+        // `preprocess` call on the clone is a no-op).
+        let proto = Self::proto_from(&self.shared, key, |n, m, p, e, et| {
+            let mut t = SharedMiter::build(n, m, p, e, et);
+            t.preprocess();
+            t
+        });
         run_search_exact::<SharedMiter>(nl, et, cfg, Some(proto), exact)
     }
 
@@ -282,7 +292,11 @@ impl MiterCache {
         exact: &[u64],
     ) -> SearchOutcome {
         let key = Self::geometry_key(nl, et, cfg, exact);
-        let proto = Self::proto_from(&self.xpat, key, NonsharedMiter::build);
+        let proto = Self::proto_from(&self.xpat, key, |n, m, p, e, et| {
+            let mut t = NonsharedMiter::build(n, m, p, e, et);
+            t.preprocess();
+            t
+        });
         run_search_exact::<NonsharedMiter>(nl, et, cfg, Some(proto), exact)
     }
 }

@@ -406,6 +406,15 @@ impl SharedMiter {
     pub fn set_conflict_budget(&mut self, budget: Option<u64>) {
         self.b.solver.conflict_budget = budget;
     }
+
+    /// Run the solver's once-per-formula preprocessing (failed-literal
+    /// probing + binary subsumption). Call on the *prototype* before
+    /// cloning: every per-cell clone inherits the simplified CNF, so the
+    /// cost is amortised across the lattice. Idempotent and
+    /// deterministic — clones of a preprocessed prototype replay exactly.
+    pub fn preprocess(&mut self) {
+        self.b.solver.preprocess();
+    }
 }
 
 /// The nonshared (original XPAT) miter: `t` products *per output*, each
@@ -525,6 +534,11 @@ impl NonsharedMiter {
 
     pub fn set_conflict_budget(&mut self, budget: Option<u64>) {
         self.b.solver.conflict_budget = budget;
+    }
+
+    /// Prototype-time preprocessing — see [`SharedMiter::preprocess`].
+    pub fn preprocess(&mut self) {
+        self.b.solver.preprocess();
     }
 }
 

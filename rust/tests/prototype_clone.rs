@@ -8,6 +8,7 @@ use sxpat::circuit::generators::benchmark_by_name;
 use sxpat::circuit::sim::TruthTables;
 use sxpat::sat::dimacs::{solver_from_dimacs, to_dimacs};
 use sxpat::sat::SatResult;
+use sxpat::search::{MiterCache, SearchConfig};
 use sxpat::template::{NonsharedMiter, SharedMiter, SolveOutcome};
 
 fn exact_of(name: &str) -> (Vec<u64>, usize, usize, u64) {
@@ -98,6 +99,85 @@ fn clone_reproduces_budget_outcomes() {
         let (fa, ca) = (f.solve(2, 4), c.solve(2, 4));
         assert_eq!(fa, ca, "budget {budget}");
     }
+}
+
+#[test]
+fn preprocessed_clone_pair_is_byte_identical() {
+    // The amortisation contract of prototype-time preprocessing: a clone
+    // of a preprocessed prototype must replay *exactly* what a fresh
+    // build-then-preprocess does — same models and, stronger, the same
+    // search trace (conflicts / propagations / restarts) and the same
+    // preprocessing work.
+    for name in ["adder_i4", "mult_i4"] {
+        let (exact, n, m, et) = exact_of(name);
+        let mut fresh = SharedMiter::build(n, m, 6, &exact, et);
+        fresh.preprocess();
+        let mut proto = SharedMiter::build(n, m, 6, &exact, et);
+        proto.preprocess();
+        let mut cloned = proto.clone();
+        for round in 0..4 {
+            let a = fresh.solve(3, 6);
+            let b = cloned.solve(3, 6);
+            assert_eq!(a, b, "{name} round {round}");
+            match (a, b) {
+                (SolveOutcome::Sat(pa), SolveOutcome::Sat(pb)) => {
+                    assert_eq!(pa, pb, "{name} round {round}: model mismatch");
+                    fresh.block(&pa);
+                    cloned.block(&pb);
+                }
+                _ => break,
+            }
+        }
+        let (fs, cs) = (&fresh.b.solver.stats, &cloned.b.solver.stats);
+        assert_eq!(fs.conflicts, cs.conflicts, "{name}: conflict trace diverged");
+        assert_eq!(fs.propagations, cs.propagations, "{name}");
+        assert_eq!(fs.restarts, cs.restarts, "{name}");
+        assert_eq!(fs.restarts_blocked, cs.restarts_blocked, "{name}");
+        assert_eq!(fs.preprocess_probes, cs.preprocess_probes, "{name}");
+        assert_eq!(fs.preprocess_subsumed, cs.preprocess_subsumed, "{name}");
+        assert!(fs.preprocess_probes > 0, "{name}: preprocessing must do work");
+    }
+}
+
+#[test]
+fn preprocessed_search_is_worker_count_invariant() {
+    // End-to-end determinism with the new heuristics on by default: the
+    // cached (preprocessed) prototype path must give the same result on
+    // 1 and 4 cell workers — same best area across the two scan modes
+    // (the engine's 1-vs-N contract), and byte-identical full outcomes
+    // (cells, models, areas) across canonical worker counts.
+    let bench = benchmark_by_name("adder_i4").unwrap();
+    let nl = bench.netlist();
+    let et = bench.fig4_et();
+    let cfg_for = |workers: usize| SearchConfig {
+        pool: 5,
+        solutions_per_cell: 2,
+        max_sat_cells: 2,
+        conflict_budget: None,
+        time_budget_ms: 120_000,
+        cell_workers: workers,
+        ..Default::default()
+    };
+    let cache = MiterCache::new();
+    let single = cache.search_shared(&nl, et, &cfg_for(1));
+    let parallel = cache.search_shared(&nl, et, &cfg_for(4));
+    let a = single.best().expect("1-worker scan found no solution").area;
+    let b = parallel.best().expect("4-worker scan found no solution").area;
+    assert!((a - b).abs() < 1e-9, "1-worker best {a} vs 4-worker best {b}");
+    // Canonical counts (> 1) pin the *full* outcome, models included.
+    let again = cache.search_shared(&nl, et, &cfg_for(2));
+    let key = |o: &sxpat::search::SearchOutcome| {
+        (
+            o.cells_tried,
+            o.cells_sat,
+            o.cells_unsat,
+            o.solutions
+                .iter()
+                .map(|s| (s.cell, s.params.clone(), s.area))
+                .collect::<Vec<_>>(),
+        )
+    };
+    assert_eq!(key(&again), key(&parallel), "2 vs 4 workers diverged");
 }
 
 #[test]
