@@ -45,8 +45,16 @@ fn main() {
             .iter()
             .map(|&et| TierSpec { name: tier_name(et), et })
             .collect();
-        let reg = Registry::open("mult_i8", tiers, Some(std::path::Path::new(&dir)))
-            .unwrap_or_else(|e| panic!("cannot open operator registry on {dir}: {e:#}"));
+        // Same model the accuracy rows use, so the registry's compiled
+        // kernels are interchangeable with mlp.accuracy.
+        let reg = Registry::open(
+            "mult_i8",
+            tiers,
+            Some(std::path::Path::new(&dir)),
+            std::sync::Arc::new(mlp.clone()),
+            true,
+        )
+        .unwrap_or_else(|e| panic!("cannot open operator registry on {dir}: {e:#}"));
         let served = reg
             .snapshot()
             .values()
@@ -69,7 +77,12 @@ fn main() {
         let tier = registry.as_ref().and_then(|r| r.resolve(&tier_name(et)));
         if let Some(tier) = tier {
             if let TierSource::OpLib { method, fingerprint } = &tier.source {
-                let acc = mlp.accuracy(&test, &tier.lut);
+                // Compiled batch kernel when the operator fits i16
+                // product rows — byte-identical to the scalar path.
+                let acc = match &tier.kernel {
+                    Some(kernel) => kernel.accuracy(&test),
+                    None => mlp.accuracy(&test, &tier.lut),
+                };
                 println!(
                     "{:<8} {et:>4} {:>9.3} {:>8.1} {:>8} {acc:>9.3}  oplib {}",
                     method,

@@ -1,0 +1,71 @@
+//! Kernel-level inference throughput: compiled branchless batch
+//! kernels (`nn::kernel::CompiledMlp`) vs the scalar
+//! `QuantMlp::classify_batch` oracle, on the canonical serving model
+//! over exact and approximate LUTs, plus a batch-size sweep. Parity is
+//! asserted before anything is timed — a fast wrong kernel must fail
+//! the bench, not set a record. Written to `BENCH_kernel.json`.
+//!
+//!     cargo bench --bench nn_kernels
+
+use sxpat::bench_support::{bench, black_box, throughput, JsonReport};
+use sxpat::nn::{synthetic_digits, CompiledMlp, MultLut, LANES};
+use sxpat::serve::serving_mlp;
+
+/// Exact products with the low `bits` output bits cleared — the same
+/// sound approximation family the serve bench's store is built from.
+fn masked_lut(bits: u32) -> MultLut {
+    let mask = !((1u64 << bits) - 1);
+    let vals: Vec<u64> = (0..256u64).map(|x| ((x & 15) * (x >> 4)) & mask).collect();
+    MultLut::from_values(&vals)
+}
+
+fn main() {
+    let mut report = JsonReport::new();
+    let mlp = serving_mlp();
+    let data = synthetic_digits(2048, 99);
+    let images: Vec<&[u8]> = data.iter().map(|s| s.pixels.as_slice()).collect();
+
+    for (tag, lut) in [("exact", MultLut::exact()), ("masked2", masked_lut(2))] {
+        let kernel = CompiledMlp::compile(&mlp, &lut);
+        assert_eq!(
+            kernel.classify_batch(&images),
+            mlp.classify_batch(&images, &lut),
+            "{tag}: compiled kernel must be byte-identical before it is timed"
+        );
+
+        let scalar = bench(&format!("kernel/{tag}_scalar_batch2048"), 1, 10, || {
+            black_box(mlp.classify_batch(black_box(&images), &lut));
+        });
+        let compiled = bench(&format!("kernel/{tag}_compiled_batch2048"), 1, 10, || {
+            black_box(kernel.classify_batch(black_box(&images)));
+        });
+        let scalar_ips = throughput(&scalar, images.len());
+        let compiled_ips = throughput(&compiled, images.len());
+        let speedup = compiled_ips / scalar_ips;
+        println!(
+            "  {tag}: scalar {scalar_ips:>10.0} img/s, compiled {compiled_ips:>10.0} img/s \
+             ({speedup:.2}x)"
+        );
+        report.push_stats(&format!("{tag}_scalar"), &scalar);
+        report.push_stats(&format!("{tag}_compiled"), &compiled);
+        report.push(&format!("{tag}_scalar.images_per_sec"), scalar_ips);
+        report.push(&format!("{tag}_compiled.images_per_sec"), compiled_ips);
+        report.push(&format!("{tag}.compiled_over_scalar"), speedup);
+    }
+
+    // Batch-size sweep on the exact LUT: where does lane blocking start
+    // paying? (Serving micro-batches live at the small end.)
+    let kernel = CompiledMlp::compile(&mlp, &MultLut::exact());
+    for n in [1usize, LANES - 1, LANES, 4 * LANES, 512] {
+        let slice = &images[..n];
+        let stats = bench(&format!("kernel/exact_compiled_batch{n}"), 2, 20, || {
+            black_box(kernel.classify_batch(black_box(slice)));
+        });
+        report.push(
+            &format!("exact_compiled_batch{n}.images_per_sec"),
+            throughput(&stats, n),
+        );
+    }
+
+    report.write("kernel");
+}

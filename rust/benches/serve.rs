@@ -1,11 +1,14 @@
 //! Serving-layer throughput: closed-loop requests/sec vs worker count
 //! and batch size over real localhost TCP, plus server-side batch
-//! occupancy and per-tier latency percentiles. Written to
-//! `BENCH_serve.json`.
+//! occupancy and per-tier latency percentiles. The (4,16)
+//! configuration runs twice — compiled kernels vs `--scalar-path` —
+//! and the report carries their end-to-end ratio
+//! (`compiled_over_scalar_rps`). Written to `BENCH_serve.json`.
 //!
 //!     cargo bench --bench serve
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use sxpat::bench_support::JsonReport;
 use sxpat::circuit::generators::benchmark_by_name;
@@ -40,18 +43,37 @@ fn main() {
         let store = Store::open(&dir).unwrap();
         run_sweep_stored(&plan, Some(&store));
     }
-    let mlp = serving_mlp();
+    let mlp = Arc::new(serving_mlp());
     let tier_names: Vec<String> =
         parse_tiers(DEFAULT_TIERS).unwrap().into_iter().map(|t| t.name).collect();
 
-    // The grid: worker count x batch size, fixed closed-loop load.
+    // The grid: worker count x batch size, fixed closed-loop load; the
+    // final configuration also runs with kernels disabled so the
+    // report quantifies the compiled path end to end at equal shape.
     const CLIENTS: usize = 8;
     const REQUESTS: usize = 250;
-    for (workers, batch) in [(1usize, 1usize), (1, 8), (2, 8), (4, 16)] {
-        let key = format!("serve_w{workers}_b{batch}");
-        let registry =
-            Registry::open("mult_i8", parse_tiers(DEFAULT_TIERS).unwrap(), Some(dir.as_path()))
-                .unwrap();
+    let mut compiled_rps = 0.0f64;
+    let mut scalar_rps = 0.0f64;
+    for (workers, batch, kernels) in [
+        (1usize, 1usize, true),
+        (1, 8, true),
+        (2, 8, true),
+        (4, 16, true),
+        (4, 16, false),
+    ] {
+        let key = if kernels {
+            format!("serve_w{workers}_b{batch}")
+        } else {
+            format!("serve_w{workers}_b{batch}_scalar")
+        };
+        let registry = Registry::open(
+            "mult_i8",
+            parse_tiers(DEFAULT_TIERS).unwrap(),
+            Some(dir.as_path()),
+            mlp.clone(),
+            kernels,
+        )
+        .unwrap();
         let server = Server::start(
             &ServeConfig {
                 addr: "127.0.0.1:0".to_string(),
@@ -61,7 +83,6 @@ fn main() {
                 queue_cap: 4096,
             },
             registry,
-            mlp.clone(),
         )
         .unwrap();
 
@@ -81,6 +102,13 @@ fn main() {
         report.push(&format!("{key}.requests_per_sec"), stats.rps);
         report.push(&format!("{key}.p50_us"), stats.p50_us as f64);
         report.push(&format!("{key}.p99_us"), stats.p99_us as f64);
+        if workers == 4 && batch == 16 {
+            if kernels {
+                compiled_rps = stats.rps;
+            } else {
+                scalar_rps = stats.rps;
+            }
+        }
 
         server.shutdown();
         let server_metrics = server.join();
@@ -94,6 +122,12 @@ fn main() {
                 report.push(&format!("{key}.{k}"), *v);
             }
         }
+    }
+
+    if scalar_rps > 0.0 {
+        let ratio = compiled_rps / scalar_rps;
+        println!("bench serve/compiled_over_scalar_rps {ratio:>8.2}x");
+        report.push("compiled_over_scalar_rps", ratio);
     }
 
     std::fs::remove_dir_all(&dir).unwrap();

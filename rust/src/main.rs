@@ -52,7 +52,11 @@
 //! frontier within the tier's error budget (re-verified against the
 //! exhaustive oracle, falling back to the exact multiplier when the
 //! library has nothing within budget), and a `reload` request
-//! atomically re-resolves after new sweeps land in the store. Requests
+//! atomically re-resolves after new sweeps land in the store. Each
+//! resolved operator is folded into a compiled branchless batch kernel
+//! (`nn::kernel`, DESIGN.md §12) at resolve/reload time; `--scalar-path`
+//! keeps every tier on the scalar `classify_batch` oracle instead, and
+//! `stats` reports the per-tier path. Requests
 //! are micro-batched (`--batch`, `--batch-wait-ms`) across
 //! `--serve-workers` worker threads; `--dump-metrics` writes
 //! `BENCH_serve.json` on shutdown. `loadgen` drives a running server
@@ -69,6 +73,10 @@
 //! Glucose-class heuristics) and prints a DIMACS-style `s` answer line
 //! plus `c` statistics lines — the standalone surface for solver A/B
 //! debugging, also exercised by the CI smoke job.
+//!
+//! `synth --emit-kernel FILE` additionally renders the synthesised 4x4
+//! multiplier, folded into the canonical serving MLP, as standalone
+//! dependency-free Rust source (`nn::kernel::CompiledMlp::emit_rust_source`).
 
 use std::path::{Path, PathBuf};
 
@@ -198,6 +206,32 @@ fn synth(args: &Args) -> Result<()> {
     let exact_area = synthesize_area(&bench.netlist());
     println!("exact area {:.3} µm² -> saving {:.1}%", exact_area,
              100.0 * (1.0 - rec.area / exact_area));
+    if let Some(path) = args.get("emit-kernel") {
+        emit_kernel(&rec, Path::new(path))?;
+    }
+    Ok(())
+}
+
+/// `synth --emit-kernel FILE`: render the synthesised multiplier,
+/// folded into the canonical serving MLP, as standalone Rust source —
+/// the AOT mirror of what `serve` compiles at registry resolve time
+/// (see `nn::kernel`). 4x4 multipliers only (the serving datapath).
+fn emit_kernel(rec: &sxpat::coordinator::RunRecord, path: &Path) -> Result<()> {
+    use sxpat::nn::{CompiledMlp, MultLut};
+    let lut = MultLut::try_from_values(&rec.values)
+        .map_err(|m| anyhow!("--emit-kernel needs a 4x4 multiplier operator: {m}"))?;
+    let mlp = sxpat::serve::serving_mlp();
+    let kernel = CompiledMlp::try_compile(&mlp, &lut)
+        .map_err(|m| anyhow!("operator not compilable to i16 product rows: {m}"))?;
+    let name = format!("{}_{}_et{}", rec.bench, rec.method.name().to_lowercase(), rec.et);
+    std::fs::write(path, kernel.emit_rust_source(&name))?;
+    println!(
+        "wrote {} (hidden {}, {} inputs, {} product-table bytes)",
+        path.display(),
+        kernel.hidden(),
+        kernel.n_in(),
+        2 * 16 * (kernel.hidden() * kernel.n_in() + 10 * kernel.hidden())
+    );
     Ok(())
 }
 
@@ -512,15 +546,21 @@ fn serve(args: &Args) -> Result<()> {
             "note: no --store DIR given — every tier serves the exact multiplier"
         );
     }
-    let registry = Registry::open(bench.name, tiers, store_dir)?;
+    println!("training the serving MLP on the synthetic digits workload...");
+    let mlp = std::sync::Arc::new(sxpat::serve::serving_mlp());
+    // --scalar-path: skip kernel compilation, serve every tier through
+    // the scalar classify_batch oracle (differential testing).
+    let compile_kernels = !args.has_flag("scalar-path");
+    let registry = Registry::open(bench.name, tiers, store_dir, mlp, compile_kernels)?;
     println!("tier resolution for {}:", bench.name);
     for (name, t) in registry.snapshot().iter() {
         println!(
-            "  {:<12} et<={:<4} max_err {:<4} area {:>8.3} µm²  {}",
+            "  {:<12} et<={:<4} max_err {:<4} area {:>8.3} µm²  {:<9} {}",
             name,
             t.et,
             t.max_err,
             t.area,
+            t.path_str(),
             t.source_str()
         );
     }
@@ -531,9 +571,7 @@ fn serve(args: &Args) -> Result<()> {
         batch_wait_ms: args.get_u64("batch-wait-ms")?.unwrap_or(2),
         queue_cap: args.get_usize_or("queue-cap", 1024)?,
     };
-    println!("training the serving MLP on the synthetic digits workload...");
-    let mlp = sxpat::serve::serving_mlp();
-    let server = Server::start(&cfg, registry, mlp)?;
+    let server = Server::start(&cfg, registry)?;
     println!(
         "serving {} on {} ({} workers, batch {} / {} ms); \
          send {{\"type\":\"shutdown\"}} to stop",

@@ -1,0 +1,387 @@
+//! Compiled branchless batch kernels — the serving hot path.
+//!
+//! [`QuantMlp::classify_batch`] walks one `MultLut::mul` table lookup
+//! plus a weight decode and a sign branch per (unit, pixel, image)
+//! triple, so the batched path is byte-identical to the sequential one
+//! but barely faster. [`CompiledMlp::compile`] instead folds the
+//! network's weights *into* the operator, the way approximate
+//! multipliers are compiled into an accelerator datapath rather than
+//! called through (Armeniakos et al.; QoS-Nets — see PAPERS.md):
+//!
+//! - For every (unit, input) weight `(mag, neg)` it precomputes a
+//!   16-entry signed product row `row[x] = ±lut.mul(mag, x)` as `i16`
+//!   (sign baked in), laid out contiguously per unit. At inference
+//!   time the weight decode, the two-level LUT index arithmetic and
+//!   the sign branch are all gone — the inner loop is a pure
+//!   gather-accumulate.
+//! - Images are processed in fixed-width lanes of [`LANES`] (tail
+//!   blocks zero-padded, padding lanes discarded): each block is
+//!   transposed into structure-of-arrays pixel order so the innermost
+//!   loop runs the *same* product row over [`LANES`] images with a
+//!   compile-time trip count and no bounds checks — the shape LLVM
+//!   autovectorises (and, failing a gather ISA, at least unrolls into
+//!   branch-free scalar code).
+//!
+//! Byte-identity with the scalar paths is by construction, not by
+//! testing alone: row entries equal the scalar products exactly
+//! (`i16 -> i32` sign extension is value-preserving; `compile`
+//! *rejects* any LUT whose products overflow `i16` rather than wrap),
+//! layer-1 accumulation runs in the same `i = 0..n_in` order, and the
+//! per-image ReLU/re-quantise ([`relu_requantise`]) and argmax
+//! ([`argmax_i32`]) stages are the very same functions the scalar code
+//! calls. `tests/kernel_parity.rs` fuzzes the equivalence across
+//! random geometries, LUTs and batch shapes anyway.
+//!
+//! The serving layer compiles one kernel per QoS tier at registry
+//! resolve/reload time (DESIGN.md §12); [`CompiledMlp::emit_rust_source`]
+//! additionally renders a kernel as standalone Rust source — the
+//! software mirror of the `python/compile/` AOT sketch.
+
+use std::fmt::Write as _;
+
+use super::digits::{Sample, N_CLASSES};
+use super::mlp::{argmax_i32, check_batch_shape, relu_requantise, MultLut, QuantMlp};
+
+/// Fixed SIMD-friendly lane width: one structure-of-arrays block holds
+/// this many images. 16 × i32 accumulators fit two AVX2 registers (or
+/// four NEON ones) and the block transpose stays L1-resident.
+pub const LANES: usize = 16;
+
+/// A [`QuantMlp`] with one specific [`MultLut`] folded into signed
+/// product tables — immutable once compiled, cheap to share via `Arc`.
+/// The serving registry compiles one per QoS tier and recompiles on
+/// hot-reload; in-flight batches keep the kernel they resolved.
+#[derive(Debug, Clone)]
+pub struct CompiledMlp {
+    hidden: usize,
+    n_in: usize,
+    /// Layer-1 product rows: `(hidden * n_in)` rows of 16 `i16`s; row
+    /// `(u, i)` starts at `(u * n_in + i) * 16`, entry `x` holds
+    /// `±lut.mul(mag, x)` with the weight's sign baked in.
+    w1_rows: Vec<i16>,
+    /// Layer-2 product rows, same shape over `(N_CLASSES * hidden)`.
+    w2_rows: Vec<i16>,
+}
+
+impl CompiledMlp {
+    /// Fold `lut` into `mlp`'s weights. Thin panicking wrapper over
+    /// [`CompiledMlp::try_compile`] for tests, benches and trusted
+    /// local operators.
+    pub fn compile(mlp: &QuantMlp, lut: &MultLut) -> CompiledMlp {
+        Self::try_compile(mlp, lut).expect("operator not compilable to i16 rows")
+    }
+
+    /// Fallible [`CompiledMlp::compile`] for serving paths: a stored
+    /// table is only bounded by the 16-bit output bus, so a (legal but
+    /// extreme) product beyond `i16::MAX` must surface as an error —
+    /// the registry then keeps that tier on the scalar path instead of
+    /// serving wrapped-around sums.
+    pub fn try_compile(mlp: &QuantMlp, lut: &MultLut) -> Result<CompiledMlp, String> {
+        Ok(CompiledMlp {
+            hidden: mlp.hidden,
+            n_in: mlp.n_in(),
+            w1_rows: fold_rows(mlp.w1(), lut)?,
+            w2_rows: fold_rows(mlp.w2(), lut)?,
+        })
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    /// Classify one image (a one-lane batch; for hot loops prefer
+    /// [`CompiledMlp::classify_batch`]).
+    pub fn infer(&self, pixels: &[u8]) -> usize {
+        self.classify_batch(&[pixels])[0]
+    }
+
+    /// Batched classification through the compiled tables —
+    /// byte-identical to [`QuantMlp::infer`] per image with the
+    /// compiled-in LUT.
+    ///
+    /// Library path: panics on shape/range errors exactly where
+    /// [`QuantMlp::classify_batch`] does; the serving path uses
+    /// [`CompiledMlp::try_classify_batch`].
+    pub fn classify_batch(&self, images: &[&[u8]]) -> Vec<usize> {
+        match self.try_classify_batch(images) {
+            Ok(labels) => labels,
+            Err(e) => panic!("CompiledMlp::classify_batch: {e}"),
+        }
+    }
+
+    /// Fallible [`CompiledMlp::classify_batch`]: ragged batches,
+    /// wrong-width images and out-of-range pixels are checked errors
+    /// (the same [`check_batch_shape`] contract as the scalar path).
+    pub fn try_classify_batch(&self, images: &[&[u8]]) -> Result<Vec<usize>, String> {
+        check_batch_shape(images, self.n_in)?;
+        let mut out = Vec::with_capacity(images.len());
+        let mut block = vec![0u8; self.n_in * LANES];
+        let mut h = vec![0i32; self.hidden * LANES];
+        let mut hrow = vec![0i32; self.hidden];
+        for chunk in images.chunks(LANES) {
+            // Structure-of-arrays transpose: block[i * LANES + l] =
+            // image l's pixel i. Tail blocks zero-pad the unused
+            // lanes; their results are computed branchlessly and
+            // discarded (an approximate LUT may map pixel 0 to a
+            // non-zero product — that only ever lands in a lane we
+            // never copy out).
+            if chunk.len() < LANES {
+                block.fill(0);
+            }
+            for (l, img) in chunk.iter().enumerate() {
+                for (i, &px) in img.iter().enumerate() {
+                    block[i * LANES + l] = px;
+                }
+            }
+            self.layer1_block(&block, &mut h);
+            for l in 0..chunk.len() {
+                for (u, v) in hrow.iter_mut().enumerate() {
+                    *v = h[u * LANES + l];
+                }
+                let hq = relu_requantise(&mut hrow);
+                out.push(self.layer2_image(&hq));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Classification accuracy over a dataset — the compiled twin of
+    /// [`QuantMlp::accuracy`], provably equal for the compiled-in LUT.
+    pub fn accuracy(&self, data: &[Sample]) -> f64 {
+        let images: Vec<&[u8]> = data.iter().map(|s| s.pixels.as_slice()).collect();
+        let correct = self
+            .classify_batch(&images)
+            .iter()
+            .zip(data)
+            .filter(|&(&label, s)| label == s.label)
+            .count();
+        correct as f64 / data.len() as f64
+    }
+
+    /// Layer 1 over one SoA block: for every hidden unit, accumulate
+    /// the unit's product rows across all [`LANES`] images at once.
+    /// `chunks_exact` + the fixed-size accumulator array keep the
+    /// innermost loop bounds-check-free with a compile-time trip
+    /// count. Accumulation order over `i` matches the scalar paths.
+    fn layer1_block(&self, block: &[u8], h: &mut [i32]) {
+        debug_assert_eq!(block.len(), self.n_in * LANES);
+        for (u, rows) in self.w1_rows.chunks_exact(self.n_in * 16).enumerate() {
+            let mut acc = [0i32; LANES];
+            for (row, px) in rows.chunks_exact(16).zip(block.chunks_exact(LANES)) {
+                for l in 0..LANES {
+                    acc[l] += row[px[l] as usize] as i32;
+                }
+            }
+            h[u * LANES..(u + 1) * LANES].copy_from_slice(&acc);
+        }
+    }
+
+    /// Layer 2 for one image's re-quantised activations (`hq` entries
+    /// are 0..=15 by construction). Branchless like layer 1; the
+    /// output stage is per-image anyway, so it shares no block state.
+    fn layer2_image(&self, hq: &[u8]) -> usize {
+        let mut o = [0i32; N_CLASSES];
+        for (oc, rows) in o.iter_mut().zip(self.w2_rows.chunks_exact(self.hidden * 16)) {
+            let mut acc = 0i32;
+            for (row, &q) in rows.chunks_exact(16).zip(hq) {
+                acc += row[q as usize] as i32;
+            }
+            *oc = acc;
+        }
+        argmax_i32(&o)
+    }
+
+    /// Render this kernel as standalone Rust source — a dependency-free
+    /// `classify` function over baked-in product tables, the software
+    /// mirror of the `python/compile/` AOT sketch (`sxpat synth
+    /// --emit-kernel FILE`). The emitted scalar loop reproduces the
+    /// library numerics exactly, including the last-maximal-class
+    /// argmax tie-break.
+    pub fn emit_rust_source(&self, name: &str) -> String {
+        let mut src = String::new();
+        let _ = writeln!(
+            src,
+            "//! `{name}`: compiled approximate-MLP kernel, generated by\n\
+             //! `sxpat synth --emit-kernel` — do not edit.\n\
+             //!\n\
+             //! Product rows fold one 4x4 multiplier LUT and the trained\n\
+             //! weights (signs baked in); `classify` is byte-identical to\n\
+             //! the generating `QuantMlp::infer` with that LUT.\n"
+        );
+        let _ = writeln!(src, "pub const HIDDEN: usize = {};", self.hidden);
+        let _ = writeln!(src, "pub const N_IN: usize = {};", self.n_in);
+        let _ = writeln!(src, "pub const N_CLASSES: usize = {N_CLASSES};\n");
+        emit_table(&mut src, "W1_ROWS", &self.w1_rows);
+        emit_table(&mut src, "W2_ROWS", &self.w2_rows);
+        src.push_str(
+            "pub fn classify(pixels: &[u8; N_IN]) -> usize {\n\
+             \x20   let mut h = [0i32; HIDDEN];\n\
+             \x20   for u in 0..HIDDEN {\n\
+             \x20       let mut acc = 0i32;\n\
+             \x20       for i in 0..N_IN {\n\
+             \x20           acc += W1_ROWS[(u * N_IN + i) * 16 + pixels[i] as usize] as i32;\n\
+             \x20       }\n\
+             \x20       h[u] = acc.max(0);\n\
+             \x20   }\n\
+             \x20   let mut hmax = 1i32;\n\
+             \x20   for &v in &h {\n\
+             \x20       hmax = hmax.max(v);\n\
+             \x20   }\n\
+             \x20   let mut best = 0usize;\n\
+             \x20   let mut best_score = i32::MIN;\n\
+             \x20   for c in 0..N_CLASSES {\n\
+             \x20       let mut acc = 0i32;\n\
+             \x20       for u in 0..HIDDEN {\n\
+             \x20           let q = ((h[u] * 15) / hmax) as usize;\n\
+             \x20           acc += W2_ROWS[(c * HIDDEN + u) * 16 + q] as i32;\n\
+             \x20       }\n\
+             \x20       // >= : ties resolve to the last maximal class, like the\n\
+             \x20       // library's argmax.\n\
+             \x20       if acc >= best_score {\n\
+             \x20           best_score = acc;\n\
+             \x20           best = c;\n\
+             \x20       }\n\
+             \x20   }\n\
+             \x20   best\n\
+             }\n",
+        );
+        src
+    }
+}
+
+/// Fold one weight matrix into signed product rows: row `(w, x)` =
+/// `±lut.mul(mag_w, x)`. Rejects products beyond `i16::MAX` — baking
+/// the sign in must never change a value.
+fn fold_rows(weights: &[(u8, bool)], lut: &MultLut) -> Result<Vec<i16>, String> {
+    let mut rows = Vec::with_capacity(weights.len() * 16);
+    for &(mag, neg) in weights {
+        for x in 0..16u8 {
+            let p = lut.mul(mag, x);
+            if p > i16::MAX as u16 {
+                return Err(format!(
+                    "product {mag}*{x} = {p} exceeds the i16 product-row range; \
+                     this operator must stay on the scalar path"
+                ));
+            }
+            let p = p as i16;
+            rows.push(if neg { -p } else { p });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render one product table as a `static` array, 16 entries per line
+/// (one product row), deterministically.
+fn emit_table(src: &mut String, name: &str, rows: &[i16]) {
+    let _ = writeln!(src, "static {name}: [i16; {}] = [", rows.len());
+    for row in rows.chunks(16) {
+        src.push_str("    ");
+        for v in row {
+            let _ = write!(src, "{v}, ");
+        }
+        src.pop();
+        src.push('\n');
+    }
+    src.push_str("];\n\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::digits::synthetic_digits;
+
+    fn masked_lut(bits: u32) -> MultLut {
+        let mask = !((1u64 << bits) - 1);
+        let vals: Vec<u64> = (0..256u64).map(|x| ((x & 15) * (x >> 4)) & mask).collect();
+        MultLut::from_values(&vals)
+    }
+
+    #[test]
+    fn compiled_matches_scalar_on_the_trained_geometry() {
+        let train = synthetic_digits(120, 11);
+        let test = synthetic_digits(70, 77);
+        let mlp = QuantMlp::train(&train, 9, 6, 5);
+        for lut in [MultLut::exact(), masked_lut(2)] {
+            let kernel = CompiledMlp::compile(&mlp, &lut);
+            assert_eq!(kernel.hidden(), 9);
+            assert_eq!(kernel.n_in(), 64);
+            let images: Vec<&[u8]> = test.iter().map(|s| s.pixels.as_slice()).collect();
+            let want: Vec<usize> =
+                test.iter().map(|s| mlp.infer(&s.pixels, &lut)).collect();
+            // Full batch (tail block), one lane block, and singles.
+            assert_eq!(kernel.classify_batch(&images), want);
+            assert_eq!(kernel.classify_batch(&images[..LANES]), want[..LANES]);
+            assert_eq!(kernel.infer(&test[3].pixels), want[3]);
+            assert!(kernel.classify_batch(&[]).is_empty());
+            assert_eq!(kernel.accuracy(&test), mlp.accuracy(&test, &lut));
+        }
+    }
+
+    #[test]
+    fn compile_rejects_products_beyond_i16() {
+        let mut vals: Vec<u64> = (0..256u64).map(|x| (x & 15) * (x >> 4)).collect();
+        vals[255] = 40_000; // 15*15 slot: legal on the 16-bit bus, not in i16.
+        let lut = MultLut::from_values(&vals);
+        let mlp = QuantMlp::from_weights(
+            1,
+            vec![(15, false); 2],
+            vec![(1, false); N_CLASSES],
+        );
+        let err = CompiledMlp::try_compile(&mlp, &lut).unwrap_err();
+        assert!(err.contains("i16"), "{err}");
+        // A magnitude that never indexes the poisoned slot compiles.
+        let mlp = QuantMlp::from_weights(
+            1,
+            vec![(14, false); 2],
+            vec![(1, false); N_CLASSES],
+        );
+        assert!(CompiledMlp::try_compile(&mlp, &lut).is_ok());
+    }
+
+    #[test]
+    fn shape_errors_match_the_scalar_contract() {
+        let mlp = QuantMlp::from_weights(
+            2,
+            vec![(3, true); 2 * 5],
+            vec![(2, false); N_CLASSES * 2],
+        );
+        let lut = MultLut::exact();
+        let kernel = CompiledMlp::compile(&mlp, &lut);
+        let good: Vec<u8> = vec![1, 2, 3, 4, 5];
+        let short: Vec<u8> = vec![1, 2];
+        let batch = [good.as_slice(), short.as_slice()];
+        assert_eq!(
+            kernel.try_classify_batch(&batch).unwrap_err(),
+            mlp.try_classify_batch(&batch, &lut).unwrap_err()
+        );
+        let hot: Vec<u8> = vec![1, 2, 3, 4, 99];
+        assert_eq!(
+            kernel.try_classify_batch(&[hot.as_slice()]).unwrap_err(),
+            mlp.try_classify_batch(&[hot.as_slice()], &lut).unwrap_err()
+        );
+    }
+
+    #[test]
+    fn emitted_source_is_deterministic_and_complete() {
+        let mlp = QuantMlp::from_weights(
+            2,
+            vec![(1, false), (2, true), (3, false), (0, true)],
+            vec![(1, false); N_CLASSES * 2],
+        );
+        let kernel = CompiledMlp::compile(&mlp, &MultLut::exact());
+        let src = kernel.emit_rust_source("demo");
+        assert_eq!(src, kernel.emit_rust_source("demo"));
+        assert!(src.contains("pub const HIDDEN: usize = 2;"), "{src}");
+        assert!(src.contains("pub const N_IN: usize = 2;"), "{src}");
+        assert!(src.contains(&format!("static W1_ROWS: [i16; {}]", 4 * 16)));
+        assert!(src.contains(&format!("static W2_ROWS: [i16; {}]", N_CLASSES * 2 * 16)));
+        assert!(src.contains("pub fn classify(pixels: &[u8; N_IN]) -> usize"));
+        // Sign baking is visible in the table: (2, true) row of exact
+        // products starts 0, -2, -4, ...
+        assert!(src.contains("0, -2, -4"), "{src}");
+    }
+}

@@ -81,13 +81,18 @@ impl MultLut {
         self.table[(a as usize) | ((b as usize) << 4)]
     }
 
-    /// Worst-case absolute error against the exact product.
+    /// Worst-case absolute error against the exact product, computed
+    /// inline — this sits on the `best_verified` serving/verify path,
+    /// which calls it per resolution, so it must not allocate and
+    /// rebuild the exact table every time.
     pub fn max_error(&self) -> u16 {
-        let exact = MultLut::exact();
-        (0..256)
-            .map(|i| self.table[i].abs_diff(exact.table[i]))
-            .max()
-            .unwrap()
+        let mut worst = 0u16;
+        for a in 0..16u16 {
+            for b in 0..16u16 {
+                worst = worst.max(self.table[(a | (b << 4)) as usize].abs_diff(a * b));
+            }
+        }
+        worst
     }
 }
 
@@ -155,10 +160,49 @@ impl QuantMlp {
         }
     }
 
+    /// Build directly from quantised weights — the constructor the
+    /// differential-fuzz tests use to cover geometries `train` never
+    /// produces. Panics unless `w1` is `hidden` rows of one fixed
+    /// input width, `w2` is `N_CLASSES x hidden`, and every magnitude
+    /// fits the 4-bit LUT operand range.
+    pub fn from_weights(hidden: usize, w1: Vec<(u8, bool)>, w2: Vec<(u8, bool)>) -> QuantMlp {
+        assert!(hidden > 0, "at least one hidden unit required");
+        assert!(
+            !w1.is_empty() && w1.len() % hidden == 0,
+            "w1 must be hidden x n_in weights"
+        );
+        assert_eq!(w2.len(), N_CLASSES * hidden, "w2 must be N_CLASSES x hidden");
+        assert!(
+            w1.iter().chain(&w2).all(|&(mag, _)| mag < 16),
+            "weight magnitudes must fit the 4-bit LUT operand"
+        );
+        QuantMlp { hidden, w1, w2 }
+    }
+
+    /// The trained input width (pixels per image).
+    pub fn n_in(&self) -> usize {
+        self.w1.len() / self.hidden
+    }
+
+    /// Layer-1 weights, `[hidden][n_in]` — read by the kernel compiler.
+    pub(crate) fn w1(&self) -> &[(u8, bool)] {
+        &self.w1
+    }
+
+    /// Layer-2 weights, `[N_CLASSES][hidden]` — read by the kernel compiler.
+    pub(crate) fn w2(&self) -> &[(u8, bool)] {
+        &self.w2
+    }
+
     /// Integer forward pass; every product goes through `lut`.
+    ///
+    /// Library path: panics when `pixels` does not match the trained
+    /// input width (the serving path validates shapes up front via
+    /// [`QuantMlp::try_classify_batch`] instead).
     pub fn infer(&self, pixels: &[u8], lut: &MultLut) -> usize {
-        let n_in = pixels.len();
-        let h: Vec<i32> = (0..self.hidden)
+        let n_in = self.n_in();
+        assert_eq!(pixels.len(), n_in, "image width != trained input width");
+        let mut h: Vec<i32> = (0..self.hidden)
             .map(|u| {
                 let mut acc = 0i32;
                 for i in 0..n_in {
@@ -166,12 +210,19 @@ impl QuantMlp {
                     let p = lut.mul(mag, pixels[i]) as i32;
                     acc += if neg { -p } else { p };
                 }
-                acc.max(0)
+                acc
             })
             .collect();
-        // Re-quantise activations to 4 bits for the second LUT layer.
-        let hmax = h.iter().copied().max().unwrap_or(1).max(1);
-        let hq: Vec<u8> = h.iter().map(|&v| ((v * 15) / hmax) as u8).collect();
+        let hq = relu_requantise(&mut h);
+        self.layer2(&hq, lut)
+    }
+
+    /// Second LUT layer + argmax for one image's requantised
+    /// activations — shared by [`QuantMlp::infer`] and
+    /// [`QuantMlp::classify_batch`] (and mirrored product-for-product
+    /// by the compiled kernel's folded rows), so the paths cannot
+    /// drift numerically.
+    fn layer2(&self, hq: &[u8], lut: &MultLut) -> usize {
         let o: Vec<i32> = (0..N_CLASSES)
             .map(|c| {
                 let mut acc = 0i32;
@@ -187,18 +238,40 @@ impl QuantMlp {
     }
 
     /// Batched forward pass: one weight decode + LUT dispatch serves
-    /// the whole micro-batch (the serving layer's hot path). The
-    /// result is byte-identical to calling [`QuantMlp::infer`] per
-    /// image: for each (image, unit) pair the products are accumulated
-    /// in the same `i = 0..n_in` order, and the per-image re-quantise /
-    /// output stages reuse the exact scalar code, so the integer
-    /// numerics cannot drift between the batched and sequential paths.
+    /// the whole micro-batch. The result is byte-identical to calling
+    /// [`QuantMlp::infer`] per image: for each (image, unit) pair the
+    /// products are accumulated in the same `i = 0..n_in` order, and
+    /// the per-image re-quantise / output stages are the exact scalar
+    /// code, so the integer numerics cannot drift between the batched
+    /// and sequential paths.
+    ///
+    /// Library path: panics on a ragged batch, images that do not
+    /// match the trained input width, or pixels outside the 4-bit
+    /// operand range; the serving path uses
+    /// [`QuantMlp::try_classify_batch`] and degrades to a structured
+    /// error instead.
     pub fn classify_batch(&self, images: &[&[u8]], lut: &MultLut) -> Vec<usize> {
-        if images.is_empty() {
-            return Vec::new();
+        match self.try_classify_batch(images, lut) {
+            Ok(labels) => labels,
+            Err(e) => panic!("classify_batch: {e}"),
         }
-        let n_in = images[0].len();
-        debug_assert!(images.iter().all(|img| img.len() == n_in));
+    }
+
+    /// Fallible [`QuantMlp::classify_batch`] for serving paths: a
+    /// ragged batch (or one whose images do not match the trained
+    /// input width) is a checked error — the old `debug_assert` would
+    /// have silently mis-indexed weights or panicked mid-batch in a
+    /// release-build serving worker.
+    pub fn try_classify_batch(
+        &self,
+        images: &[&[u8]],
+        lut: &MultLut,
+    ) -> Result<Vec<usize>, String> {
+        check_batch_shape(images, self.n_in())?;
+        if images.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n_in = self.n_in();
         let nb = images.len();
         let mut h = vec![0i32; nb * self.hidden];
         for u in 0..self.hidden {
@@ -210,39 +283,59 @@ impl QuantMlp {
                 }
             }
         }
-        (0..nb)
+        Ok((0..nb)
             .map(|b| {
                 let hrow = &mut h[b * self.hidden..(b + 1) * self.hidden];
-                for v in hrow.iter_mut() {
-                    *v = (*v).max(0);
-                }
-                let hmax = hrow.iter().copied().max().unwrap_or(1).max(1);
-                let hq: Vec<u8> =
-                    hrow.iter().map(|&v| ((v * 15) / hmax) as u8).collect();
-                let o: Vec<i32> = (0..N_CLASSES)
-                    .map(|c| {
-                        let mut acc = 0i32;
-                        for u in 0..self.hidden {
-                            let (mag, neg) = self.w2[c * self.hidden + u];
-                            let p = lut.mul(mag, hq[u]) as i32;
-                            acc += if neg { -p } else { p };
-                        }
-                        acc
-                    })
-                    .collect();
-                argmax_i32(&o)
+                let hq = relu_requantise(hrow);
+                self.layer2(&hq, lut)
             })
-            .collect()
+            .collect())
     }
 
-    /// Classification accuracy over a dataset with the given multiplier.
+    /// Classification accuracy over a dataset with the given
+    /// multiplier. Routed through the batched path (provably
+    /// byte-identical to per-image [`QuantMlp::infer`]), so sweeps,
+    /// examples and tests exercise `classify_batch` constantly.
     pub fn accuracy(&self, data: &[Sample], lut: &MultLut) -> f64 {
-        let correct = data
+        let images: Vec<&[u8]> = data.iter().map(|s| s.pixels.as_slice()).collect();
+        let correct = self
+            .classify_batch(&images, lut)
             .iter()
-            .filter(|s| self.infer(&s.pixels, lut) == s.label)
+            .zip(data)
+            .filter(|&(&label, s)| label == s.label)
             .count();
         correct as f64 / data.len() as f64
     }
+}
+
+/// Shape/range validation shared by the scalar and compiled batch
+/// paths, so both report the same checked errors for the same inputs.
+pub(crate) fn check_batch_shape(images: &[&[u8]], n_in: usize) -> Result<(), String> {
+    for (b, img) in images.iter().enumerate() {
+        if img.len() != n_in {
+            return Err(format!(
+                "batch image {b} has {} pixels, expected {n_in}",
+                img.len()
+            ));
+        }
+        if let Some((i, &px)) = img.iter().enumerate().find(|&(_, &px)| px > 15) {
+            return Err(format!(
+                "batch image {b} pixel {i} = {px} outside the 4-bit operand range"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// ReLU + 4-bit re-quantisation of one image's hidden accumulators,
+/// in place. Shared by every forward path — scalar, batched, and the
+/// compiled kernel — so the integer numerics cannot drift.
+pub(crate) fn relu_requantise(h: &mut [i32]) -> Vec<u8> {
+    for v in h.iter_mut() {
+        *v = (*v).max(0);
+    }
+    let hmax = h.iter().copied().max().unwrap_or(1).max(1);
+    h.iter().map(|&v| ((v * 15) / hmax) as u8).collect()
 }
 
 fn quantise(w: &[f64]) -> Vec<(u8, bool)> {
@@ -262,7 +355,10 @@ fn argmax(xs: &[f64]) -> usize {
         .unwrap()
 }
 
-fn argmax_i32(xs: &[i32]) -> usize {
+/// Ties resolve to the *last* maximal class (`max_by_key` semantics);
+/// the compiled kernel and emitted standalone source replicate exactly
+/// this tie-break.
+pub(crate) fn argmax_i32(xs: &[i32]) -> usize {
     xs.iter().enumerate().max_by_key(|&(_, &v)| v).map(|(i, _)| i).unwrap()
 }
 
@@ -336,6 +432,35 @@ mod tests {
             }
         }
         assert!(mlp.classify_batch(&[], &MultLut::exact()).is_empty());
+    }
+
+    #[test]
+    fn ragged_batches_are_checked_errors_not_silent_misindexing() {
+        let mlp = QuantMlp::from_weights(
+            2,
+            vec![(1, false); 2 * 4],
+            vec![(1, true); N_CLASSES * 2],
+        );
+        assert_eq!(mlp.n_in(), 4);
+        let lut = MultLut::exact();
+        let good: Vec<u8> = vec![1, 2, 3, 4];
+        let short: Vec<u8> = vec![1, 2];
+        let err = mlp
+            .try_classify_batch(&[good.as_slice(), short.as_slice()], &lut)
+            .unwrap_err();
+        assert!(err.contains("image 1"), "{err}");
+        assert!(err.contains("expected 4"), "{err}");
+        // Out-of-range pixels are checked too, not just lengths.
+        let hot: Vec<u8> = vec![1, 2, 99, 4];
+        let err = mlp.try_classify_batch(&[hot.as_slice()], &lut).unwrap_err();
+        assert!(err.contains("4-bit"), "{err}");
+        // The library wrapper turns the same condition into a panic.
+        assert!(std::panic::catch_unwind(|| {
+            mlp.classify_batch(&[short.as_slice()], &lut)
+        })
+        .is_err());
+        // An empty batch is fine either way.
+        assert!(mlp.try_classify_batch(&[], &lut).unwrap().is_empty());
     }
 
     #[test]

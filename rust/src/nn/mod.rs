@@ -6,7 +6,9 @@
 //! accuracy vs. multiplier area can be traded off exactly as in [1].
 
 pub mod digits;
+pub mod kernel;
 pub mod mlp;
 
 pub use digits::synthetic_digits;
+pub use kernel::{CompiledMlp, LANES};
 pub use mlp::{MultLut, QuantMlp};

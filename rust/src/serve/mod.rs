@@ -14,7 +14,11 @@
 //!   only, no external dependencies).
 //! - [`registry`] — QoS tier → verified min-area `MultLut`, resolved
 //!   from the operator library at startup, atomically hot-swappable
-//!   via `reload` after new sweeps land in the store.
+//!   via `reload` after new sweeps land in the store; each tier's LUT
+//!   is additionally folded into a compiled branchless batch kernel
+//!   ([`CompiledMlp`](crate::nn::CompiledMlp)) at resolve/reload time,
+//!   with the scalar path kept as the differential-testing oracle
+//!   (`serve --scalar-path`). See DESIGN.md §12.
 //! - [`batcher`] — bounded sharded queue with micro-batching (flush at
 //!   `--batch` requests or a deadline).
 //! - [`server`] — accept loop, worker pool, per-tier metrics, graceful

@@ -10,6 +10,9 @@
 //! ```text
 //! {"type":"infer","id":7,"tier":"silver","pixels":[0,...,15]}   64 4-bit pixels
 //! {"type":"stats","id":8}                                       metrics snapshot
+//!                                                               (incl. per-tier
+//!                                                               "tier.NAME.path":
+//!                                                               "compiled"/"scalar")
 //! {"type":"reload","id":9}                                      re-resolve tiers from the store
 //! {"type":"shutdown","id":10}                                   graceful shutdown
 //! ```

@@ -19,6 +19,17 @@
 //! resolved, so a reload never drops or corrupts requests mid-batch; a
 //! failed reload (store unreadable, best entry fails re-verification)
 //! leaves the current map serving untouched.
+//!
+//! Kernel compile lifecycle (DESIGN.md §12): the registry owns the
+//! serving [`QuantMlp`], and resolution folds each tier's LUT into a
+//! [`CompiledMlp`] right after the operator verifies — so a tier's
+//! kernel is recompiled atomically with its operator on every reload,
+//! and an in-flight batch's pinned `Arc<ResolvedTier>` keeps both the
+//! LUT *and* the kernel it resolved. A LUT whose products don't fit
+//! the kernel's `i16` rows (legal on the 16-bit bus) degrades that
+//! tier to the scalar path (`kernel = None`) instead of failing
+//! resolution; `serve --scalar-path` forces `kernel = None` everywhere
+//! for differential testing.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -27,7 +38,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::circuit::generators::benchmark_by_name;
-use crate::nn::MultLut;
+use crate::nn::{CompiledMlp, MultLut, QuantMlp};
 use crate::store::{OpLib, Store};
 use crate::synth::synthesize_area;
 
@@ -88,6 +99,13 @@ pub struct ResolvedTier {
     pub area: f64,
     pub source: TierSource,
     pub lut: MultLut,
+    /// The tier's LUT folded into the serving model's weights —
+    /// compiled at resolve/reload time, pinned with the tier by
+    /// in-flight batches. `None` when kernels are disabled
+    /// (`serve --scalar-path`) or the LUT's products overflow the
+    /// kernel's `i16` rows; workers then fall back to the scalar
+    /// `classify_batch` oracle.
+    pub kernel: Option<Arc<CompiledMlp>>,
 }
 
 impl ResolvedTier {
@@ -100,6 +118,15 @@ impl ResolvedTier {
             TierSource::ExactFallback => "exact".to_string(),
         }
     }
+
+    /// Which inference path this tier runs (`stats` reporting).
+    pub fn path_str(&self) -> &'static str {
+        if self.kernel.is_some() {
+            "compiled"
+        } else {
+            "scalar"
+        }
+    }
 }
 
 type TierMap = BTreeMap<String, Arc<ResolvedTier>>;
@@ -108,6 +135,12 @@ pub struct Registry {
     bench: &'static str,
     tiers: Vec<TierSpec>,
     store_dir: Option<PathBuf>,
+    /// The model every tier serves; owned here so kernel compilation
+    /// and the scalar fallback can never disagree about the weights.
+    mlp: Arc<QuantMlp>,
+    /// `false` = `serve --scalar-path`: resolution skips kernel
+    /// compilation and every tier runs the scalar oracle.
+    compile_kernels: bool,
     current: RwLock<Arc<TierMap>>,
     /// Serializes whole reloads (resolve + publish): without it, two
     /// concurrent reloads could publish their maps in the opposite
@@ -122,6 +155,8 @@ impl Registry {
         bench: &'static str,
         tiers: Vec<TierSpec>,
         store_dir: Option<&Path>,
+        mlp: Arc<QuantMlp>,
+        compile_kernels: bool,
     ) -> Result<Registry> {
         let b = benchmark_by_name(bench)
             .ok_or_else(|| anyhow!("unknown benchmark {bench:?}"))?;
@@ -134,11 +169,13 @@ impl Registry {
         if tiers.is_empty() {
             bail!("at least one QoS tier required");
         }
-        let map = resolve_all(bench, &tiers, store_dir)?;
+        let map = resolve_all(bench, &tiers, store_dir, &mlp, compile_kernels)?;
         Ok(Registry {
             bench,
             tiers,
             store_dir: store_dir.map(Path::to_path_buf),
+            mlp,
+            compile_kernels,
             current: RwLock::new(Arc::new(map)),
             reload_lock: Mutex::new(()),
         })
@@ -146,6 +183,11 @@ impl Registry {
 
     pub fn bench(&self) -> &'static str {
         self.bench
+    }
+
+    /// The model every tier serves (scalar-oracle dispatch and stats).
+    pub fn mlp(&self) -> &Arc<QuantMlp> {
+        &self.mlp
     }
 
     /// The current resolution of one tier. `None` = unknown tier name
@@ -173,7 +215,13 @@ impl Registry {
         // interleave with another reload's, or a stale snapshot could
         // be published last.
         let _serialized = self.reload_lock.lock().unwrap();
-        let map = resolve_all(self.bench, &self.tiers, self.store_dir.as_deref())?;
+        let map = resolve_all(
+            self.bench,
+            &self.tiers,
+            self.store_dir.as_deref(),
+            &self.mlp,
+            self.compile_kernels,
+        )?;
         let from_lib = map
             .values()
             .filter(|t| matches!(t.source, TierSource::OpLib { .. }))
@@ -193,6 +241,8 @@ fn resolve_all(
     bench: &'static str,
     tiers: &[TierSpec],
     store_dir: Option<&Path>,
+    mlp: &Arc<QuantMlp>,
+    compile_kernels: bool,
 ) -> Result<TierMap> {
     let lib = match store_dir {
         Some(d) => {
@@ -214,7 +264,7 @@ fn resolve_all(
                 .with_context(|| format!("resolving tier {:?} (et<={})", t.name, t.et))?,
             None => None,
         };
-        let resolved = match entry {
+        let mut resolved = match entry {
             Some(e) => ResolvedTier {
                 name: t.name.clone(),
                 et: t.et,
@@ -227,6 +277,7 @@ fn resolve_all(
                 lut: MultLut::try_from_values(&e.values).map_err(|m| {
                     anyhow!("tier {:?}: stored operator {}: {m}", t.name, e.fingerprint)
                 })?,
+                kernel: None,
             },
             None => ResolvedTier {
                 name: t.name.clone(),
@@ -235,8 +286,16 @@ fn resolve_all(
                 area: exact_area,
                 source: TierSource::ExactFallback,
                 lut: MultLut::exact(),
+                kernel: None,
             },
         };
+        if compile_kernels {
+            // A non-compilable operator (i16 product overflow) is a
+            // *degradation* to the scalar path, not a resolution
+            // failure: the tier still serves, stats show path=scalar.
+            resolved.kernel =
+                CompiledMlp::try_compile(mlp, &resolved.lut).ok().map(Arc::new);
+        }
         map.insert(t.name.clone(), Arc::new(resolved));
     }
     Ok(map)
@@ -246,7 +305,13 @@ fn resolve_all(
 mod tests {
     use super::*;
     use crate::coordinator::{Method, RunRecord};
+    use crate::nn::synthetic_digits;
     use crate::store::Fingerprint;
+
+    /// A small but real model — kernel compilation is geometry-generic.
+    fn tiny_mlp() -> Arc<QuantMlp> {
+        Arc::new(QuantMlp::train(&synthetic_digits(40, 3), 4, 2, 1))
+    }
 
     fn tmp_store(tag: &str) -> PathBuf {
         let d = std::env::temp_dir()
@@ -296,22 +361,80 @@ mod tests {
 
     #[test]
     fn no_store_registry_serves_exact_everywhere() {
-        let reg = Registry::open("mult_i8", parse_tiers(DEFAULT_TIERS).unwrap(), None)
-            .unwrap();
+        let mlp = tiny_mlp();
+        let reg = Registry::open(
+            "mult_i8",
+            parse_tiers(DEFAULT_TIERS).unwrap(),
+            None,
+            mlp.clone(),
+            true,
+        )
+        .unwrap();
         for name in reg.tier_names() {
             let t = reg.resolve(&name).unwrap();
             assert_eq!(t.source, TierSource::ExactFallback);
             assert_eq!(t.max_err, 0);
             assert_eq!(t.lut.max_error(), 0);
+            // Exact products always fit i16 rows: every tier compiles.
+            let kernel = t.kernel.as_ref().expect("exact LUT must compile");
+            assert_eq!(t.path_str(), "compiled");
+            assert_eq!(kernel.n_in(), mlp.n_in());
         }
         assert!(reg.resolve("platinum").is_none());
         // Non-multiplier geometry is rejected up front.
         assert!(Registry::open(
             "adder_i4",
             parse_tiers(DEFAULT_TIERS).unwrap(),
-            None
+            None,
+            tiny_mlp(),
+            true
         )
         .is_err());
+    }
+
+    #[test]
+    fn scalar_mode_skips_kernel_compilation() {
+        let reg = Registry::open(
+            "mult_i8",
+            parse_tiers(DEFAULT_TIERS).unwrap(),
+            None,
+            tiny_mlp(),
+            false,
+        )
+        .unwrap();
+        for name in reg.tier_names() {
+            let t = reg.resolve(&name).unwrap();
+            assert!(t.kernel.is_none());
+            assert_eq!(t.path_str(), "scalar");
+        }
+    }
+
+    #[test]
+    fn compiled_kernel_matches_the_tier_lut() {
+        let dir = tmp_store("kernelparity");
+        {
+            let st = Store::open(&dir).unwrap();
+            st.append(Fingerprint(1), &masked_mult_record(2, 40.0)).unwrap();
+        }
+        let mlp = tiny_mlp();
+        let reg = Registry::open(
+            "mult_i8",
+            parse_tiers("silver=4").unwrap(),
+            Some(dir.as_path()),
+            mlp.clone(),
+            true,
+        )
+        .unwrap();
+        let silver = reg.resolve("silver").unwrap();
+        assert!(matches!(silver.source, TierSource::OpLib { .. }));
+        let kernel = silver.kernel.as_ref().expect("masked LUT fits i16 rows");
+        let data = synthetic_digits(30, 9);
+        let images: Vec<&[u8]> = data.iter().map(|s| s.pixels.as_slice()).collect();
+        assert_eq!(
+            kernel.classify_batch(&images),
+            mlp.classify_batch(&images, &silver.lut)
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
@@ -325,11 +448,14 @@ mod tests {
             "mult_i8",
             parse_tiers("silver=4,gold=0").unwrap(),
             Some(dir.as_path()),
+            tiny_mlp(),
+            true,
         )
         .unwrap();
         let silver = reg.resolve("silver").unwrap();
         assert_eq!(silver.area, 40.0);
         assert!(matches!(silver.source, TierSource::OpLib { .. }));
+        assert_eq!(silver.path_str(), "compiled");
         // gold (et=0) has no stored operator -> exact fallback.
         assert_eq!(reg.resolve("gold").unwrap().source, TierSource::ExactFallback);
 
@@ -356,9 +482,14 @@ mod tests {
             let st = Store::open(&dir).unwrap();
             st.append(Fingerprint(1), &masked_mult_record(2, 40.0)).unwrap();
         }
-        let reg =
-            Registry::open("mult_i8", parse_tiers("silver=4").unwrap(), Some(dir.as_path()))
-                .unwrap();
+        let reg = Registry::open(
+            "mult_i8",
+            parse_tiers("silver=4").unwrap(),
+            Some(dir.as_path()),
+            tiny_mlp(),
+            true,
+        )
+        .unwrap();
         // A tampered "better" record: smaller area but an unsound table
         // (claims max_err 0 with wrong values) — re-verification on the
         // resolve path must reject it.

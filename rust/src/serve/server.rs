@@ -8,17 +8,21 @@
 //! worker owns one shard: it pops a micro-batch, groups it by tier,
 //! resolves each tier once through the [`Registry`] (one `Arc` held
 //! across the whole group, so a concurrent `reload` cannot swap an
-//! operator mid-batch) and answers the group with a single
-//! [`QuantMlp::classify_batch`] dispatch. Responses flow back through
-//! a per-connection mpsc channel drained by a writer thread, so worker
-//! threads never interleave bytes on a shared socket.
+//! operator *or its compiled kernel* mid-batch) and answers the group
+//! with a single batched dispatch: the tier's [`CompiledMlp`] kernel
+//! when one was compiled, the scalar
+//! [`QuantMlp::classify_batch`] oracle otherwise (`serve
+//! --scalar-path`, or an operator whose products overflow the kernel's
+//! `i16` rows). Responses flow back through a per-connection mpsc
+//! channel drained by a writer thread, so worker threads never
+//! interleave bytes on a shared socket.
 //!
 //! Determinism: a response line is a pure function of (request line,
-//! store contents) — inference is integer-exact, `classify_batch` is
-//! byte-identical to the sequential path, and the response renderer is
-//! deterministic — so worker count, batch size and arrival order
-//! change only the *order* lines appear on the wire, never their
-//! bytes. Clients match by `id`.
+//! store contents) — inference is integer-exact, the compiled kernel
+//! and `classify_batch` are byte-identical to the sequential path, and
+//! the response renderer is deterministic — so worker count, batch
+//! size, arrival order *and path choice* change only the *order* lines
+//! appear on the wire, never their bytes. Clients match by `id`.
 //!
 //! Robustness: malformed lines, unknown tiers/benches, oversized
 //! requests and queue-full backpressure all produce structured error
@@ -38,7 +42,8 @@ use anyhow::{Context, Result};
 
 use crate::bench_support::JsonReport;
 use crate::nn::digits::IMG;
-use crate::nn::{synthetic_digits, QuantMlp};
+#[allow(unused_imports)] // CompiledMlp: doc link target
+use crate::nn::{synthetic_digits, CompiledMlp, QuantMlp};
 use crate::util::jsonl::{self, LineRead};
 use crate::util::Json;
 
@@ -159,6 +164,10 @@ impl Metrics {
             if let Some(t) = registry.resolve(&name) {
                 report.push(&format!("tier.{name}.area"), t.area);
                 report.push(&format!("tier.{name}.max_err"), t.max_err as f64);
+                report.push(
+                    &format!("tier.{name}.compiled"),
+                    if t.kernel.is_some() { 1.0 } else { 0.0 },
+                );
             }
         }
         let batches = self.batches.load(Ordering::Relaxed);
@@ -178,7 +187,6 @@ impl Metrics {
 
 struct Shared {
     registry: Registry,
-    mlp: QuantMlp,
     batcher: Batcher<WorkItem>,
     metrics: Metrics,
     shutting_down: AtomicBool,
@@ -206,15 +214,16 @@ pub struct Server {
 impl Server {
     /// Bind, spawn the worker pool and the accept loop, return
     /// immediately. The server runs until a `shutdown` request arrives
-    /// or [`Server::shutdown`] is called.
-    pub fn start(cfg: &ServeConfig, registry: Registry, mlp: QuantMlp) -> Result<Server> {
+    /// or [`Server::shutdown`] is called. The served model (and its
+    /// per-tier compiled kernels) comes from the registry, which owns
+    /// it — see [`Registry::mlp`].
+    pub fn start(cfg: &ServeConfig, registry: Registry) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr().context("resolving bound address")?;
         let workers_n = cfg.workers.max(1);
         let shared = Arc::new(Shared {
             registry,
-            mlp,
             batcher: Batcher::new(BatcherConfig {
                 shards: workers_n,
                 batch: cfg.batch,
@@ -476,7 +485,31 @@ fn process_batch(shared: &Shared, batch: &[WorkItem]) {
             continue;
         };
         let images: Vec<&[u8]> = idxs.iter().map(|&i| batch[i].pixels.as_slice()).collect();
-        let labels = shared.mlp.classify_batch(&images, &resolved.lut);
+        // Compiled kernel when the tier has one, scalar oracle
+        // otherwise — byte-identical either way. Shape/range errors
+        // are checked on this path (a bad image must never panic a
+        // worker or poison its batch-mates).
+        let labels = match &resolved.kernel {
+            Some(kernel) => kernel.try_classify_batch(&images),
+            None => shared.registry.mlp().try_classify_batch(&images, &resolved.lut),
+        };
+        let labels = match labels {
+            Ok(labels) => labels,
+            Err(e) => {
+                shared.metrics.note_errors(idxs.len());
+                for &i in &idxs {
+                    let item = &batch[i];
+                    let _ = item.resp.send(
+                        Response::Error {
+                            id: item.id,
+                            error: format!("inference failed: {e}"),
+                        }
+                        .render(),
+                    );
+                }
+                continue;
+            }
+        };
         let source = resolved.source_str();
         for (&i, label) in idxs.iter().zip(labels) {
             let item = &batch[i];
@@ -518,6 +551,7 @@ fn stats_snapshot(shared: &Shared) -> Json {
     for (name, tier) in shared.registry.snapshot().iter() {
         m.insert(format!("tier.{name}.et"), Json::Num(tier.et as f64));
         m.insert(format!("tier.{name}.source"), Json::Str(tier.source_str()));
+        m.insert(format!("tier.{name}.path"), Json::Str(tier.path_str().to_string()));
     }
     Json::Obj(m)
 }

@@ -1,0 +1,341 @@
+//! Differential fuzz for the compiled batch kernels (`nn::kernel`):
+//! across random model geometries, random exact/approximate LUTs and
+//! adversarial batch shapes, `CompiledMlp` must agree byte-for-byte
+//! with per-image `QuantMlp::infer` and the scalar `classify_batch`
+//! oracle — plus serving-layer integration: a hot-reload recompiles
+//! the kernel atomically without dropping in-flight requests, and a
+//! `--scalar-path` server answers with identical bytes. Its own named
+//! CI step, like the serve/dist roundtrips.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use sxpat::coordinator::{Method, RunRecord};
+use sxpat::nn::digits::N_CLASSES;
+use sxpat::nn::{synthetic_digits, CompiledMlp, MultLut, QuantMlp, LANES};
+use sxpat::serve::protocol::{
+    parse_response, render_control_request, render_infer_request,
+};
+use sxpat::serve::{parse_tiers, serving_mlp, Registry, ServeConfig, Server};
+use sxpat::store::{Fingerprint, Store};
+use sxpat::util::Json;
+use sxpat::util::Rng;
+
+/// A random valid model: weights over the full magnitude/sign range,
+/// geometry drawn per round (not just the 64-input serving shape).
+fn random_mlp(rng: &mut Rng) -> QuantMlp {
+    let hidden = 1 + rng.usize_below(20);
+    let n_in = 1 + rng.usize_below(96);
+    let mut w = |n: usize| -> Vec<(u8, bool)> {
+        (0..n).map(|_| (rng.below(16) as u8, rng.chance(0.5))).collect()
+    };
+    let w1 = w(hidden * n_in);
+    let w2 = w(N_CLASSES * hidden);
+    QuantMlp::from_weights(hidden, w1, w2)
+}
+
+/// A random LUT: exact, exact-with-masked-low-bits (sound, the store's
+/// family), or per-entry jittered (unsound as an operator, but the
+/// kernel must still mirror whatever the LUT says).
+fn random_lut(rng: &mut Rng) -> MultLut {
+    match rng.below(3) {
+        0 => MultLut::exact(),
+        1 => {
+            let mask = !((1u64 << (1 + rng.below(3))) - 1);
+            let vals: Vec<u64> =
+                (0..256u64).map(|x| ((x & 15) * (x >> 4)) & mask).collect();
+            MultLut::from_values(&vals)
+        }
+        _ => {
+            let vals: Vec<u64> = (0..256u64)
+                .map(|x| {
+                    let exact = (x & 15) * (x >> 4);
+                    if rng.chance(0.25) {
+                        (exact + rng.below(40)).min(i16::MAX as u64)
+                    } else {
+                        exact
+                    }
+                })
+                .collect();
+            MultLut::from_values(&vals)
+        }
+    }
+}
+
+fn random_images(rng: &mut Rng, count: usize, n_in: usize) -> Vec<Vec<u8>> {
+    (0..count)
+        .map(|_| (0..n_in).map(|_| rng.below(16) as u8).collect())
+        .collect()
+}
+
+#[test]
+fn fuzz_compiled_kernel_is_byte_identical_to_scalar_inference() {
+    let mut rng = Rng::seed_from(0xC0FFEE);
+    for round in 0..25 {
+        let mlp = random_mlp(&mut rng);
+        let lut = random_lut(&mut rng);
+        let kernel = CompiledMlp::try_compile(&mlp, &lut)
+            .expect("products are capped at i16::MAX by construction");
+        // Empty, single, around the lane width, and a ragged tail.
+        for batch in [0, 1, LANES - 1, LANES, LANES + 1, 2 * LANES + 3] {
+            let images = random_images(&mut rng, batch, mlp.n_in());
+            let refs: Vec<&[u8]> = images.iter().map(Vec::as_slice).collect();
+            let per_image: Vec<usize> =
+                refs.iter().map(|px| mlp.infer(px, &lut)).collect();
+            let scalar = mlp.classify_batch(&refs, &lut);
+            let compiled = kernel.classify_batch(&refs);
+            assert_eq!(
+                compiled, per_image,
+                "round {round} batch {batch}: kernel vs per-image infer \
+                 (hidden {}, n_in {})",
+                mlp.hidden,
+                mlp.n_in()
+            );
+            assert_eq!(compiled, scalar, "round {round} batch {batch}: kernel vs oracle");
+        }
+    }
+}
+
+#[test]
+fn fuzz_trained_models_agree_too() {
+    // from_weights covers the weight space; train covers the weights a
+    // real serving model actually lands on.
+    let mut rng = Rng::seed_from(7);
+    let data = synthetic_digits(80, 5);
+    for hidden in [3, 12] {
+        let mlp = QuantMlp::train(&data, hidden, 4, 2);
+        for _ in 0..4 {
+            let lut = random_lut(&mut rng);
+            let kernel = CompiledMlp::compile(&mlp, &lut);
+            let images = random_images(&mut rng, 2 * LANES + 5, mlp.n_in());
+            let refs: Vec<&[u8]> = images.iter().map(Vec::as_slice).collect();
+            assert_eq!(kernel.classify_batch(&refs), mlp.classify_batch(&refs, &lut));
+        }
+    }
+}
+
+#[test]
+fn overflowing_lut_fails_compilation_not_inference() {
+    let mut vals: Vec<u64> = (0..256u64).map(|x| (x & 15) * (x >> 4)).collect();
+    vals[255] = 40_000; // legal on the 16-bit bus, outside i16.
+    let lut = MultLut::from_values(&vals);
+    let mlp = QuantMlp::from_weights(
+        2,
+        vec![(15, false); 2 * 3],
+        vec![(1, true); N_CLASSES * 2],
+    );
+    let err = CompiledMlp::try_compile(&mlp, &lut).unwrap_err();
+    assert!(err.contains("scalar path"), "{err}");
+    // The scalar path still serves that LUT (this is the registry's
+    // degradation story: kernel=None, classify_batch oracle).
+    let images = random_images(&mut Rng::seed_from(1), 5, 3);
+    let refs: Vec<&[u8]> = images.iter().map(Vec::as_slice).collect();
+    let labels = mlp.classify_batch(&refs, &lut);
+    assert_eq!(labels.len(), 5);
+}
+
+// ---------------------------------------------------------------- serving
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("sxpat_kernel_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A sound mult_i8 record: exact products with the low `mask_bits`
+/// output bits cleared, max_err recorded honestly.
+fn masked_mult_record(mask_bits: u32, area: f64) -> RunRecord {
+    let mask = !((1u64 << mask_bits) - 1);
+    let values: Vec<u64> = (0..256u64).map(|x| ((x & 15) * (x >> 4)) & mask).collect();
+    let max_err = (0..256u64)
+        .map(|x| ((x & 15) * (x >> 4)).abs_diff(((x & 15) * (x >> 4)) & mask))
+        .max()
+        .unwrap();
+    RunRecord {
+        bench: "mult_i8",
+        method: Method::Shared,
+        et: max_err,
+        area,
+        max_err,
+        mean_err: 0.25,
+        proxy: (0, 0),
+        elapsed_ms: 1,
+        cached: false,
+        values,
+        all_points: Vec::new(),
+        error: None,
+    }
+}
+
+fn start_server(dir: Option<&Path>, tiers: &str, compile_kernels: bool) -> Server {
+    let registry = Registry::open(
+        "mult_i8",
+        parse_tiers(tiers).unwrap(),
+        dir,
+        Arc::new(serving_mlp()),
+        compile_kernels,
+    )
+    .unwrap();
+    Server::start(
+        &ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            batch: 4,
+            batch_wait_ms: 2,
+            queue_cap: 1024,
+        },
+        registry,
+    )
+    .unwrap()
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+    }
+
+    fn recv_line(&mut self) -> String {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "server closed the connection");
+        line.trim().to_string()
+    }
+
+    fn roundtrip(&mut self, line: &str) -> sxpat::serve::protocol::ParsedResponse {
+        self.send(line);
+        parse_response(&self.recv_line()).unwrap()
+    }
+}
+
+#[test]
+fn hot_reload_recompiles_the_kernel_without_dropping_in_flight_requests() {
+    let dir = tmp_dir("reload");
+    {
+        let store = Store::open(&dir).unwrap();
+        store.append(Fingerprint(1), &masked_mult_record(3, 40.0)).unwrap();
+    }
+    let server = start_server(Some(dir.as_path()), "silver=8", true);
+    let images = synthetic_digits(10, 55);
+    let mut c = Client::connect(server.addr());
+
+    // Baseline: the tier serves the stored operator on the compiled path.
+    let stats = c.roundtrip(&render_control_request("stats", 500));
+    let snap = stats.raw.get("stats").expect("stats payload");
+    assert_eq!(
+        snap.get("tier.silver.path").and_then(Json::as_str),
+        Some("compiled"),
+        "{snap:?}"
+    );
+    let before = c.roundtrip(&render_infer_request(1000, "silver", &images[0].pixels));
+    assert!(before.ok);
+    let before_src = before.raw.get("source").and_then(Json::as_str).unwrap().to_string();
+
+    // A better operator lands in the WAL.
+    {
+        let store = Store::open(&dir).unwrap();
+        store.append(Fingerprint(2), &masked_mult_record(2, 9.5)).unwrap();
+    }
+
+    // Pipeline across the reload: 5 infers, reload, 5 infers — every
+    // request answered, none dropped while the kernel is recompiled
+    // and the tier map swapped.
+    for (i, s) in images[..5].iter().enumerate() {
+        c.send(&render_infer_request(i as u64, "silver", &s.pixels));
+    }
+    c.send(&render_control_request("reload", 77));
+    for (i, s) in images[5..].iter().enumerate() {
+        c.send(&render_infer_request(5 + i as u64, "silver", &s.pixels));
+    }
+    let mut answered = BTreeMap::new();
+    for _ in 0..11 {
+        let resp = parse_response(&c.recv_line()).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        answered.insert(resp.id, resp);
+    }
+    assert_eq!(answered.len(), 11, "10 infers + 1 reload, nothing dropped");
+    assert!(answered.contains_key(&77));
+
+    // Post-reload: new operator, still on the compiled path, and the
+    // served labels match direct inference through the new LUT.
+    let after = c.roundtrip(&render_infer_request(2000, "silver", &images[0].pixels));
+    assert!(after.ok);
+    let after_src = after.raw.get("source").and_then(Json::as_str).unwrap();
+    assert_ne!(after_src, before_src, "reload must swap the operator");
+    let stats = c.roundtrip(&render_control_request("stats", 501));
+    let snap = stats.raw.get("stats").expect("stats payload");
+    assert_eq!(snap.get("tier.silver.path").and_then(Json::as_str), Some("compiled"));
+
+    let mask = !((1u64 << 2) - 1);
+    let vals: Vec<u64> = (0..256u64).map(|x| ((x & 15) * (x >> 4)) & mask).collect();
+    let want = serving_mlp().infer(&images[0].pixels, &MultLut::from_values(&vals));
+    assert_eq!(after.label, Some(want as u64));
+
+    server.shutdown();
+    server.join();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn scalar_path_server_answers_byte_identically() {
+    let dir = tmp_dir("scalar");
+    {
+        let store = Store::open(&dir).unwrap();
+        store.append(Fingerprint(1), &masked_mult_record(3, 40.0)).unwrap();
+    }
+    let tiers = "gold=0,silver=8";
+    let images = synthetic_digits(20, 77);
+
+    let mut lines_by_mode = Vec::new();
+    for compile_kernels in [true, false] {
+        let server = start_server(Some(dir.as_path()), tiers, compile_kernels);
+        let mut c = Client::connect(server.addr());
+
+        let stats = c.roundtrip(&render_control_request("stats", 900));
+        let snap = stats.raw.get("stats").expect("stats payload");
+        let want_path = if compile_kernels { "compiled" } else { "scalar" };
+        for tier in ["gold", "silver"] {
+            assert_eq!(
+                snap.get(&format!("tier.{tier}.path")).and_then(Json::as_str),
+                Some(want_path)
+            );
+        }
+
+        let mut lines = BTreeMap::new();
+        for (i, s) in images.iter().enumerate() {
+            let tier = if i % 2 == 0 { "gold" } else { "silver" };
+            c.send(&render_infer_request(i as u64, tier, &s.pixels));
+        }
+        for _ in 0..images.len() {
+            let line = c.recv_line();
+            let resp = parse_response(&line).unwrap();
+            assert!(resp.ok, "{:?}", resp.error);
+            lines.insert(resp.id, line);
+        }
+        lines_by_mode.push(lines);
+        server.shutdown();
+        server.join();
+    }
+    assert_eq!(
+        lines_by_mode[0], lines_by_mode[1],
+        "compiled and --scalar-path servers must answer byte-identically"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}

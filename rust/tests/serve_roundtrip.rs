@@ -45,8 +45,16 @@ fn build_store(dir: &Path, ets: &[u64]) {
 }
 
 fn start_server(dir: Option<&Path>, tiers: &str, workers: usize, batch: usize) -> Server {
-    let registry =
-        Registry::open("mult_i8", parse_tiers(tiers).unwrap(), dir).unwrap();
+    // Kernels on: these tests exercise the compiled serving path; its
+    // byte-identity to direct scalar inference is what they assert.
+    let registry = Registry::open(
+        "mult_i8",
+        parse_tiers(tiers).unwrap(),
+        dir,
+        std::sync::Arc::new(serving_mlp()),
+        true,
+    )
+    .unwrap();
     Server::start(
         &ServeConfig {
             addr: "127.0.0.1:0".to_string(),
@@ -56,7 +64,6 @@ fn start_server(dir: Option<&Path>, tiers: &str, workers: usize, batch: usize) -
             queue_cap: 1024,
         },
         registry,
-        serving_mlp(),
     )
     .unwrap()
 }
@@ -131,10 +138,18 @@ fn mixed_tier_responses_match_direct_inference() {
     let tiers = "gold=0,silver=4,bronze=16";
     let server = start_server(Some(dir.as_path()), tiers, 2, 4);
 
-    // An identical, independent resolution for the direct path.
-    let reference =
-        Registry::open("mult_i8", parse_tiers(tiers).unwrap(), Some(dir.as_path())).unwrap();
+    // An identical, independent resolution for the direct path — on
+    // the scalar oracle, so server responses (compiled kernels) are
+    // checked against independent scalar inference.
     let mlp = serving_mlp();
+    let reference = Registry::open(
+        "mult_i8",
+        parse_tiers(tiers).unwrap(),
+        Some(dir.as_path()),
+        std::sync::Arc::new(mlp.clone()),
+        false,
+    )
+    .unwrap();
 
     let names = ["gold", "silver", "bronze"];
     let images = synthetic_digits(30, 123);
