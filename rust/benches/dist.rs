@@ -38,7 +38,12 @@ fn bench_plan() -> SweepPlan {
 /// One distributed run (no store: measuring the fabric, not the cache);
 /// returns wall seconds.
 fn run_distributed(plan: &SweepPlan, workers: usize) -> f64 {
-    let cfg = DistConfig { addr: "127.0.0.1:0".to_string(), lease_ms: 120_000, wait_ms: 10 };
+    let cfg = DistConfig {
+        addr: "127.0.0.1:0".to_string(),
+        lease_ms: 120_000,
+        wait_ms: 10,
+        ..Default::default()
+    };
     let t = Instant::now();
     let records = std::thread::scope(|s| {
         let coord = Coordinator::bind(plan, None, &cfg).unwrap();
@@ -51,6 +56,7 @@ fn run_distributed(plan: &SweepPlan, workers: usize) -> f64 {
                     name: format!("bench-w{i}"),
                     cell_workers: None,
                     max_jobs: None,
+                    ..Default::default()
                 })
                 .unwrap()
             });

@@ -296,6 +296,19 @@ pub fn run_job_cached(job: &Job, protos: &MiterCache) -> RunRecord {
 /// a single simulation instead of three. `exact` MUST be the exhaustive
 /// output table of `job.bench.netlist()`.
 pub fn run_job_with(job: &Job, protos: &MiterCache, exact: &[u64]) -> RunRecord {
+    run_job_obs(job, protos, exact, &crate::obs::Obs::off())
+}
+
+/// As [`run_job_with`], threading an observability handle into the
+/// template search so the lattice engine can emit per-cell solve spans
+/// (with folded solver-stats deltas). Baseline methods ignore the
+/// handle. Observe-only: the handle never influences the search.
+pub fn run_job_obs(
+    job: &Job,
+    protos: &MiterCache,
+    exact: &[u64],
+    obs: &crate::obs::Obs,
+) -> RunRecord {
     let nl = job.bench.netlist();
     debug_assert_eq!(exact.len(), 1usize << nl.n_inputs());
     let start = Instant::now();
@@ -316,9 +329,9 @@ pub fn run_job_with(job: &Job, protos: &MiterCache, exact: &[u64]) -> RunRecord 
         },
         Method::Shared | Method::Xpat => {
             let out = if job.method == Method::Shared {
-                protos.search_shared_with(&nl, job.et, &job.search, exact)
+                protos.search_shared_obs(&nl, job.et, &job.search, exact, obs)
             } else {
-                protos.search_xpat_with(&nl, job.et, &job.search, exact)
+                protos.search_xpat_obs(&nl, job.et, &job.search, exact, obs)
             };
             let all_points: Vec<(usize, usize, f64)> = out
                 .solutions

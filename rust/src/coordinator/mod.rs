@@ -8,8 +8,8 @@
 pub mod jobs;
 pub mod sweep;
 
-pub use jobs::{run_job, run_job_cached, run_job_with, Job, Method, RunRecord};
+pub use jobs::{run_job, run_job_cached, run_job_obs, run_job_with, Job, Method, RunRecord};
 pub use sweep::{
-    failed_record, panic_message, probe_store, run_sweep, run_sweep_stored, run_sweep_with,
-    wal_persistable, StoreProbe, SweepPlan,
+    failed_record, panic_message, probe_store, probe_store_obs, run_sweep, run_sweep_obs,
+    run_sweep_stored, run_sweep_with, wal_persistable, StoreProbe, SweepPlan,
 };

@@ -24,10 +24,12 @@ use std::sync::{Arc, Mutex};
 
 use crate::circuit::generators::{Benchmark, PAPER_BENCHMARKS};
 use crate::circuit::sim::TruthTables;
+use crate::obs::{metrics, Obs};
 use crate::search::{MiterCache, SearchConfig};
 use crate::store::{job_fingerprint, Fingerprint, Store};
+use crate::util::Json;
 
-use super::jobs::{run_job_with, Job, Method, RunRecord};
+use super::jobs::{run_job_obs, Job, Method, RunRecord};
 
 /// A declarative sweep: which benchmarks, methods and ET values to run.
 #[derive(Debug, Clone)]
@@ -156,26 +158,63 @@ pub fn run_sweep(plan: &SweepPlan) -> Vec<RunRecord> {
 /// threads through fingerprinting, the miter-prototype cache and the
 /// engine ([`run_job_with`]).
 pub fn run_sweep_stored(plan: &SweepPlan, store: Option<&Store>) -> Vec<RunRecord> {
+    run_sweep_obs(plan, store, &Obs::off())
+}
+
+/// As [`run_sweep_stored`], with an observability handle: each solved
+/// job gets a `sweep.job` span (the lattice engine nests per-cell
+/// spans under it), store heals and append failures go through the
+/// leveled log, and heals are counted in the metrics registry.
+/// Observe-only by construction — no clock read or event feeds a
+/// search or commit decision — so records/CSV/WAL bytes are identical
+/// with tracing on or off (`tests/obs_determinism.rs`).
+pub fn run_sweep_obs(plan: &SweepPlan, store: Option<&Store>, obs: &Obs) -> Vec<RunRecord> {
     let protos = MiterCache::new();
+    let heals = metrics::counter("pallas_store_heals_total");
     run_sweep_with(plan, |job| {
         // One store consultation path for every sweep flavour (the
         // distributed coordinator uses the same helper): oracle
         // simulated once, hit re-verified, unsound record flagged for
         // a last-writer-wins heal.
-        let probe = probe_store(job, store);
+        let probe = probe_store_obs(job, store, obs);
         if let Some(cached) = probe.cached {
             return cached;
         }
-        let rec = run_job_with(job, &protos, &probe.exact);
+        let mut span = obs.span(
+            "sweep.job",
+            &[
+                ("bench", Json::Str(job.bench.name.to_string())),
+                ("method", Json::Str(job.method.name().to_string())),
+                ("et", Json::Num(job.et as f64)),
+            ],
+        );
+        let rec = run_job_obs(job, &protos, &probe.exact, obs);
+        span.field("elapsed_ms", Json::Num(rec.elapsed_ms as f64));
+        span.field("solved", Json::Bool(rec.area.is_finite()));
+        span.finish();
         if let (Some(st), Some(fp)) = (store, probe.fp) {
             if wal_persistable(&rec, job.search.time_budget_ms) {
-                if let Err(e) = st.append(fp, &rec) {
-                    eprintln!(
-                        "warning: store append failed for {} {} et={}: {e:#}",
-                        rec.bench,
-                        rec.method.name(),
-                        rec.et
-                    );
+                match st.append(fp, &rec) {
+                    Ok(()) => {
+                        if probe.heal {
+                            heals.inc();
+                            obs.warn(
+                                "store",
+                                "healed unsound store record (last-writer-wins overwrite)",
+                                &[("fp", Json::Str(fp.to_string()))],
+                            );
+                        }
+                    }
+                    Err(e) => obs.warn(
+                        "sweep",
+                        &format!(
+                            "store append failed for {} {} et={}: {e:#}",
+                            rec.bench,
+                            rec.method.name(),
+                            rec.et
+                        ),
+                        &[],
+                    ),
                 }
             }
         }
@@ -208,6 +247,13 @@ pub struct StoreProbe {
 /// against the oracle (the disk is not part of the soundness
 /// argument); an unsound record is reported and flagged for healing.
 pub fn probe_store(job: &Job, store: Option<&Store>) -> StoreProbe {
+    probe_store_obs(job, store, &Obs::off())
+}
+
+/// As [`probe_store`], reporting re-verification failures through the
+/// observability handle (structured warning carrying the unsound
+/// fingerprint) instead of a bare stderr line.
+pub fn probe_store_obs(job: &Job, store: Option<&Store>, obs: &Obs) -> StoreProbe {
     let nl = job.bench.netlist();
     let exact = TruthTables::simulate(&nl).output_values(&nl);
     let fp = store.map(|_| {
@@ -230,12 +276,15 @@ pub fn probe_store(job: &Job, store: Option<&Store>) -> StoreProbe {
                 };
                 return StoreProbe { exact, fp: Some(fp), cached: Some(cached), heal: false };
             }
-            eprintln!(
-                "warning: store record {fp} for {} {} et={} failed oracle \
-                 re-verification; re-solving",
-                job.bench.name,
-                job.method.name(),
-                job.et
+            obs.warn(
+                "store",
+                "store record failed oracle re-verification; re-solving",
+                &[
+                    ("fp", Json::Str(fp.to_string())),
+                    ("bench", Json::Str(job.bench.name.to_string())),
+                    ("method", Json::Str(job.method.name().to_string())),
+                    ("et", Json::Num(job.et as f64)),
+                ],
             );
             heal = true;
         }

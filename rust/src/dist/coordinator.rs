@@ -37,8 +37,10 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::coordinator::{probe_store, Job, RunRecord, SweepPlan};
+use crate::obs::{metrics, Obs};
 use crate::store::Store;
 use crate::util::jsonl::{self, LineRead};
+use crate::util::Json;
 
 use super::lease::{CommitEvent, PreparedJob, Rejection, Scheduler, Submission};
 use super::protocol::{CoordMsg, WorkerMsg, PROTO_VERSION};
@@ -53,11 +55,49 @@ pub struct DistConfig {
     pub lease_ms: u64,
     /// Backoff hint handed to workers when nothing is leasable yet.
     pub wait_ms: u64,
+    /// Trace handle (observe-only; `Obs::off()` records nothing).
+    pub obs: Obs,
 }
 
 impl Default for DistConfig {
     fn default() -> Self {
-        DistConfig { addr: "127.0.0.1:7979".to_string(), lease_ms: 0, wait_ms: 500 }
+        DistConfig {
+            addr: "127.0.0.1:7979".to_string(),
+            lease_ms: 0,
+            wait_ms: 500,
+            obs: Obs::off(),
+        }
+    }
+}
+
+/// Cached handles into the process-wide metrics registry: registration
+/// takes the registry lock, so it happens once here and the hot paths
+/// touch only atomics.
+struct CoordMetrics {
+    leases_granted: metrics::Counter,
+    leases_expired: metrics::Counter,
+    jobs_requeued: metrics::Counter,
+    results_committed: metrics::Counter,
+    results_stale: metrics::Counter,
+    results_unsound: metrics::Counter,
+    rx_bytes: metrics::Counter,
+    tx_bytes: metrics::Counter,
+    frontier_lag: metrics::Gauge,
+}
+
+impl CoordMetrics {
+    fn new() -> CoordMetrics {
+        CoordMetrics {
+            leases_granted: metrics::counter("pallas_dist_leases_granted_total"),
+            leases_expired: metrics::counter("pallas_dist_leases_expired_total"),
+            jobs_requeued: metrics::counter("pallas_dist_jobs_requeued_total"),
+            results_committed: metrics::counter("pallas_dist_results_committed_total"),
+            results_stale: metrics::counter("pallas_dist_results_stale_total"),
+            results_unsound: metrics::counter("pallas_dist_results_unsound_total"),
+            rx_bytes: metrics::counter("pallas_dist_coord_rx_bytes_total"),
+            tx_bytes: metrics::counter("pallas_dist_coord_tx_bytes_total"),
+            frontier_lag: metrics::gauge("pallas_dist_commit_frontier_lag"),
+        }
     }
 }
 
@@ -71,6 +111,7 @@ pub struct Coordinator<'a> {
     addr: SocketAddr,
     lease_ms: u64,
     wait_ms: u64,
+    obs: Obs,
 }
 
 /// Scheduler plus the lazy job feed, guarded by one mutex: every
@@ -95,6 +136,8 @@ struct Shared<'a> {
     n_jobs: usize,
     lease_ms: u64,
     wait_ms: u64,
+    obs: Obs,
+    mx: CoordMetrics,
 }
 
 impl<'a> Coordinator<'a> {
@@ -111,7 +154,15 @@ impl<'a> Coordinator<'a> {
         } else {
             cfg.lease_ms
         };
-        Ok(Coordinator { plan, store, listener, addr, lease_ms, wait_ms: cfg.wait_ms })
+        Ok(Coordinator {
+            plan,
+            store,
+            listener,
+            addr,
+            lease_ms,
+            wait_ms: cfg.wait_ms,
+            obs: cfg.obs.clone(),
+        })
     }
 
     /// The actually-bound address (ephemeral ports resolved).
@@ -124,7 +175,7 @@ impl<'a> Coordinator<'a> {
     /// connected, cache hits still resolve locally, and the call waits
     /// for workers to show up for the rest.
     pub fn run(self) -> Result<Vec<RunRecord>> {
-        let Coordinator { plan, store, listener, addr, lease_ms, wait_ms } = self;
+        let Coordinator { plan, store, listener, addr, lease_ms, wait_ms, obs } = self;
         let n_jobs = plan.n_jobs();
         let shared = Shared {
             sched: Mutex::new(SchedState {
@@ -140,7 +191,18 @@ impl<'a> Coordinator<'a> {
             n_jobs,
             lease_ms,
             wait_ms,
+            obs,
+            mx: CoordMetrics::new(),
         };
+        shared.obs.info(
+            "dist.coordinator",
+            "serving sweep",
+            &[
+                ("addr", Json::Str(addr.to_string())),
+                ("jobs", Json::Num(n_jobs as f64)),
+                ("lease_ms", Json::Num(lease_ms as f64)),
+            ],
+        );
 
         // Pre-drain: commit every leading cache hit and park the first
         // miss before any worker connects, so an all-cached plan
@@ -188,6 +250,13 @@ impl<'a> Coordinator<'a> {
             let _ = TcpStream::connect(addr);
         });
 
+        if let Err(e) = shared.obs.flush() {
+            shared.obs.warn(
+                "dist.coordinator",
+                &format!("trace flush failed: {e:#}"),
+                &[],
+            );
+        }
         let state = shared.sched.into_inner().unwrap();
         Ok(state.sched.into_records())
     }
@@ -240,7 +309,8 @@ fn refill(shared: &Shared<'_>, g: &mut MutexGuard<'_, SchedState<'_>>) {
             Some((idx, job)) => match probe(idx, job, shared.store) {
                 Probe::Cached(rec) => {
                     let events = g.sched.commit_local(idx, rec, None);
-                    persist(shared.store, &events);
+                    persist(shared, &events);
+                    shared.mx.frontier_lag.set(g.sched.frontier_lag() as u64);
                     if g.sched.done() {
                         shared.all_done.notify_all();
                     }
@@ -257,8 +327,25 @@ fn refill(shared: &Shared<'_>, g: &mut MutexGuard<'_, SchedState<'_>>) {
 /// completed twice must not grow the WAL). Append failures are
 /// reported and skipped: losing one cache line is not worth losing the
 /// sweep (same policy as the local path).
-fn persist(store: Option<&Store>, events: &[CommitEvent]) {
-    let Some(st) = store else { return };
+///
+/// Every released event also lands in the trace as a `dist.commit`
+/// counter with its job index — the accounting `trace --check` and the
+/// merged multi-node view rest on (each committed job exactly once).
+fn persist(shared: &Shared<'_>, events: &[CommitEvent]) {
+    for ev in events {
+        shared.obs.counter(
+            "dist.commit",
+            1,
+            &[
+                ("job", Json::Num(ev.idx as f64)),
+                ("bench", Json::Str(ev.record.bench.to_string())),
+                ("method", Json::Str(ev.record.method.name().to_string())),
+                ("et", Json::Num(ev.record.et as f64)),
+                ("heal", Json::Bool(ev.heal)),
+            ],
+        );
+    }
+    let Some(st) = shared.store else { return };
     for ev in events {
         let res = if ev.heal {
             st.append(ev.fp, &ev.record).map(|_| true)
@@ -266,11 +353,15 @@ fn persist(store: Option<&Store>, events: &[CommitEvent]) {
             st.append_if_absent(ev.fp, &ev.record)
         };
         if let Err(e) = res {
-            eprintln!(
-                "warning: store append failed for {} {} et={}: {e:#}",
-                ev.record.bench,
-                ev.record.method.name(),
-                ev.record.et
+            shared.obs.warn(
+                "dist.coordinator",
+                &format!(
+                    "store append failed for {} {} et={}: {e:#}",
+                    ev.record.bench,
+                    ev.record.method.name(),
+                    ev.record.et
+                ),
+                &[("job", Json::Num(ev.idx as f64))],
             );
         }
     }
@@ -285,9 +376,12 @@ fn reaper(shared: &Shared<'_>) {
         let mut g = shared.sched.lock().unwrap();
         let expired = g.sched.expire(Instant::now());
         if !expired.is_empty() {
-            eprintln!(
-                "coordinator: requeued {} expired lease(s): {expired:?}",
-                expired.len()
+            shared.mx.leases_expired.add(expired.len() as u64);
+            shared.mx.jobs_requeued.add(expired.len() as u64);
+            shared.obs.warn(
+                "dist.coordinator",
+                &format!("requeued {} expired lease(s): {expired:?}", expired.len()),
+                &[("expired", Json::Num(expired.len() as f64))],
             );
         }
     }
@@ -316,11 +410,14 @@ fn handle_conn(shared: &Shared<'_>, stream: TcpStream, conn_id: u64) {
                 if line.is_empty() {
                     continue;
                 }
+                shared.mx.rx_bytes.add(line.len() as u64 + 1);
                 let resp = match WorkerMsg::parse(&line) {
                     Err(error) => CoordMsg::Error { error },
                     Ok(msg) => handle_msg(shared, conn_id, msg, &mut hello_done),
                 };
-                if jsonl::send_line(&mut writer, &resp.render()).is_err() {
+                let rendered = resp.render();
+                shared.mx.tx_bytes.add(rendered.len() as u64 + 1);
+                if jsonl::send_line(&mut writer, &rendered).is_err() {
                     break;
                 }
             }
@@ -331,8 +428,11 @@ fn handle_conn(shared: &Shared<'_>, stream: TcpStream, conn_id: u64) {
     shared.conns.lock().unwrap().remove(&conn_id);
     let lost = shared.sched.lock().unwrap().sched.fail_conn(conn_id);
     if !lost.is_empty() {
-        eprintln!(
-            "coordinator: worker connection {conn_id} died; requeued job(s) {lost:?}"
+        shared.mx.jobs_requeued.add(lost.len() as u64);
+        shared.obs.warn(
+            "dist.coordinator",
+            &format!("worker connection {conn_id} died; requeued job(s) {lost:?}"),
+            &[("conn", Json::Num(conn_id as f64))],
         );
     }
 }
@@ -366,6 +466,7 @@ fn handle_msg(
                     return CoordMsg::Done;
                 }
                 if let Some(grant) = g.sched.grant(conn_id, Instant::now()) {
+                    shared.mx.leases_granted.inc();
                     return CoordMsg::Lease {
                         job: grant.idx,
                         bench: grant.job.bench.name.to_string(),
@@ -387,17 +488,27 @@ fn handle_msg(
             let mut g = shared.sched.lock().unwrap();
             match g.sched.submit(job, record, conn_id) {
                 Submission::Fresh(events) => {
-                    persist(shared.store, &events);
+                    persist(shared, &events);
+                    shared.mx.results_committed.inc();
+                    shared.mx.frontier_lag.set(g.sched.frontier_lag() as u64);
                     if g.sched.done() {
                         shared.all_done.notify_all();
                     }
                     CoordMsg::Committed { job, fresh: true }
                 }
-                Submission::Stale => CoordMsg::Committed { job, fresh: false },
+                Submission::Stale => {
+                    shared.mx.results_stale.inc();
+                    CoordMsg::Committed { job, fresh: false }
+                }
                 Submission::Unsound(why) => {
-                    eprintln!(
-                        "coordinator: discarding result for job {job} from \
-                         connection {conn_id}: {why}"
+                    shared.mx.results_unsound.inc();
+                    shared.obs.warn(
+                        "dist.coordinator",
+                        &format!(
+                            "discarding result for job {job} from connection \
+                             {conn_id}: {why}"
+                        ),
+                        &[("job", Json::Num(job as f64))],
                     );
                     CoordMsg::Error { error: why }
                 }
@@ -406,12 +517,21 @@ fn handle_msg(
         WorkerMsg::Reject { job, reason } => {
             let mut g = shared.sched.lock().unwrap();
             match g.sched.reject(job, conn_id, &reason) {
-                Rejection::Requeued | Rejection::Stale => CoordMsg::Requeued { job },
+                Rejection::Requeued => {
+                    shared.mx.jobs_requeued.inc();
+                    CoordMsg::Requeued { job }
+                }
+                Rejection::Stale => CoordMsg::Requeued { job },
                 Rejection::FailedOut(events) => {
-                    persist(shared.store, &events);
-                    eprintln!(
-                        "coordinator: job {job} failed out after repeated rejections \
-                         (last: {reason})"
+                    persist(shared, &events);
+                    shared.mx.frontier_lag.set(g.sched.frontier_lag() as u64);
+                    shared.obs.warn(
+                        "dist.coordinator",
+                        &format!(
+                            "job {job} failed out after repeated rejections \
+                             (last: {reason})"
+                        ),
+                        &[("job", Json::Num(job as f64))],
                     );
                     if g.sched.done() {
                         shared.all_done.notify_all();

@@ -152,6 +152,14 @@ impl Scheduler {
         self.resolved
     }
 
+    /// Resolved slots the in-order commit frontier has not yet released
+    /// — how far completed work is backed up behind an earlier job that
+    /// is still out on lease. Observe-only: the coordinator gauges it
+    /// after every scheduling step; nothing reads it back.
+    pub fn frontier_lag(&self) -> usize {
+        self.resolved.saturating_sub(self.frontier)
+    }
+
     pub fn in_flight(&self) -> usize {
         self.active.len()
     }

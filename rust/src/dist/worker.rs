@@ -25,9 +25,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::circuit::generators::benchmark_by_name;
 use crate::circuit::sim::TruthTables;
-use crate::coordinator::{failed_record, panic_message, run_job_with, Job};
+use crate::coordinator::{failed_record, panic_message, run_job_obs, Job};
+use crate::obs::{metrics, Obs};
 use crate::search::MiterCache;
 use crate::util::jsonl::{self, LineRead};
+use crate::util::Json;
 
 use super::protocol::{CoordMsg, WorkerMsg, PROTO_VERSION};
 
@@ -44,6 +46,8 @@ pub struct WorkerConfig {
     pub cell_workers: Option<usize>,
     /// Disconnect after this many completed jobs (tests, canaries).
     pub max_jobs: Option<usize>,
+    /// Trace handle (observe-only; `Obs::off()` records nothing).
+    pub obs: Obs,
 }
 
 impl Default for WorkerConfig {
@@ -53,8 +57,15 @@ impl Default for WorkerConfig {
             name: format!("worker-{}", std::process::id()),
             cell_workers: None,
             max_jobs: None,
+            obs: Obs::off(),
         }
     }
+}
+
+/// Wire-volume counters, registered once per `run_worker` call.
+struct WireCounters {
+    tx: metrics::Counter,
+    rx: metrics::Counter,
 }
 
 #[derive(Debug, Default, Clone)]
@@ -77,8 +88,11 @@ fn exchange(
     writer: &mut TcpStream,
     reader: &mut BufReader<TcpStream>,
     msg: &WorkerMsg,
+    wire: &WireCounters,
 ) -> Result<Option<CoordMsg>> {
-    if jsonl::send_line(writer, &msg.render()).is_err() {
+    let line = msg.render();
+    wire.tx.add(line.len() as u64 + 1);
+    if jsonl::send_line(writer, &line).is_err() {
         return Ok(None);
     }
     loop {
@@ -86,10 +100,13 @@ fn exchange(
             LineRead::Eof => Ok(None),
             LineRead::Oversized => bail!("oversized coordinator response line"),
             LineRead::Line(l) if l.is_empty() => continue,
-            LineRead::Line(l) => match CoordMsg::parse(&l) {
-                Ok(m) => Ok(Some(m)),
-                Err(e) => bail!("bad coordinator response: {e}"),
-            },
+            LineRead::Line(l) => {
+                wire.rx.add(l.len() as u64 + 1);
+                match CoordMsg::parse(&l) {
+                    Ok(m) => Ok(Some(m)),
+                    Err(e) => bail!("bad coordinator response: {e}"),
+                }
+            }
         };
     }
 }
@@ -103,10 +120,15 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerStats> {
     let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
     let mut writer = stream;
     let mut stats = WorkerStats::default();
+    let wire = WireCounters {
+        tx: metrics::counter("pallas_dist_worker_tx_bytes_total"),
+        rx: metrics::counter("pallas_dist_worker_rx_bytes_total"),
+    };
+    let jobs_completed = metrics::counter("pallas_dist_worker_jobs_completed_total");
 
     let hello =
         WorkerMsg::Hello { name: cfg.name.clone(), proto: PROTO_VERSION };
-    match exchange(&mut writer, &mut reader, &hello)? {
+    match exchange(&mut writer, &mut reader, &hello, &wire)? {
         Some(CoordMsg::Welcome { .. }) => {}
         Some(CoordMsg::Error { error }) => bail!("coordinator refused hello: {error}"),
         Some(other) => bail!("unexpected hello response: {other:?}"),
@@ -120,7 +142,8 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerStats> {
         if cfg.max_jobs.is_some_and(|cap| stats.completed >= cap) {
             break;
         }
-        let Some(resp) = exchange(&mut writer, &mut reader, &WorkerMsg::LeaseRequest)?
+        let Some(resp) =
+            exchange(&mut writer, &mut reader, &WorkerMsg::LeaseRequest, &wire)?
         else {
             break; // coordinator gone: sweep is over for us
         };
@@ -142,12 +165,24 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerStats> {
                         let job = Job { bench: b, method, et, search };
                         let nl = job.bench.netlist();
                         let exact = TruthTables::simulate(&nl).output_values(&nl);
+                        let mut span = cfg.obs.span(
+                            "dist.job",
+                            &[
+                                ("job", Json::Num(idx as f64)),
+                                ("bench", Json::Str(job.bench.name.to_string())),
+                                ("method", Json::Str(job.method.name().to_string())),
+                                ("et", Json::Num(job.et as f64)),
+                            ],
+                        );
                         let record =
                             catch_unwind(AssertUnwindSafe(|| {
-                                run_job_with(&job, &protos, &exact)
+                                run_job_obs(&job, &protos, &exact, &cfg.obs)
                             }))
                             .unwrap_or_else(|p| failed_record(&job, panic_message(p)));
+                        span.field("ok", Json::Bool(record.error.is_none()));
+                        span.finish();
                         stats.completed += 1;
+                        jobs_completed.inc();
                         let mut msg = WorkerMsg::Result { job: idx, record };
                         // A record too large for the wire discipline
                         // would livelock the sweep (oversized line →
@@ -162,7 +197,11 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerStats> {
                                  cap (huge all_points/values?); run this job locally",
                                 jsonl::MAX_LINE_BYTES
                             );
-                            eprintln!("worker {}: job {idx}: {why}", cfg.name);
+                            cfg.obs.warn(
+                                "dist.worker",
+                                &format!("job {idx}: {why}"),
+                                &[("job", Json::Num(idx as f64))],
+                            );
                             msg = WorkerMsg::Result {
                                 job: idx,
                                 record: failed_record(&job, why),
@@ -171,7 +210,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerStats> {
                         msg
                     }
                 };
-                match exchange(&mut writer, &mut reader, &msg)? {
+                match exchange(&mut writer, &mut reader, &msg, &wire)? {
                     None => break,
                     Some(CoordMsg::Committed { fresh, .. }) => {
                         if !fresh {
@@ -183,7 +222,11 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerStats> {
                         // E.g. our record failed the coordinator's
                         // oracle re-check; the job was requeued. Keep
                         // serving — the coordinator decides our fate.
-                        eprintln!("worker {}: coordinator: {error}", cfg.name);
+                        cfg.obs.warn(
+                            "dist.worker",
+                            &format!("coordinator: {error}"),
+                            &[],
+                        );
                     }
                     Some(other) => bail!("unexpected result response: {other:?}"),
                 }
@@ -196,6 +239,9 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerStats> {
             CoordMsg::Error { error } => bail!("coordinator error: {error}"),
             other => bail!("unexpected lease response: {other:?}"),
         }
+    }
+    if let Err(e) = cfg.obs.flush() {
+        cfg.obs.warn("dist.worker", &format!("trace flush failed: {e:#}"), &[]);
     }
     Ok(stats)
 }

@@ -21,6 +21,7 @@ pub mod coordinator;
 pub mod dist;
 pub mod evaluator;
 pub mod nn;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod sat;

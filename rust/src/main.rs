@@ -12,6 +12,7 @@
 //!   serve      [--store DIR]       QoS-tiered batched inference server (TCP)
 //!   loadgen    [--addr A]          closed-loop load generator for `serve`
 //!   worker     --connect ADDR      distributed-sweep worker node
+//!   trace      FILE... [--top N] [--check]   inspect --trace JSONL dumps
 //!
 //! `sweep --store DIR` opens the persistent result store in DIR: jobs
 //! already fingerprinted there are served from disk (no SAT search,
@@ -77,6 +78,18 @@
 //! `synth --emit-kernel FILE` additionally renders the synthesised 4x4
 //! multiplier, folded into the canonical serving MLP, as standalone
 //! dependency-free Rust source (`nn::kernel::CompiledMlp::emit_rust_source`).
+//!
+//! Observability: `sweep --trace FILE` and `worker --trace FILE` dump
+//! structured JSONL events (spans around every cell/probe solve with
+//! folded SAT-effort deltas, dist lease/commit events) to FILE without
+//! perturbing results — the record set stays byte-identical (see
+//! `obs` and DESIGN.md §13). `trace FILE...` renders per-phase
+//! timelines, the top-N slowest spans, and — over merged coordinator +
+//! worker dumps — per-node counts and commit accounting; `trace
+//! --check FILE...` validates schema and span balance, exiting
+//! non-zero on a malformed trace (the CI contract). `PALLAS_LOG`
+//! filters the leveled stderr logging (e.g. `PALLAS_LOG=debug`,
+//! default `warn`).
 
 use std::path::{Path, PathBuf};
 
@@ -86,8 +99,9 @@ use sxpat::baselines::random_sound_baseline;
 use sxpat::circuit::generators::{benchmark_by_name, PAPER_BENCHMARKS};
 use sxpat::circuit::sim::TruthTables;
 use sxpat::circuit::verilog::write_verilog;
-use sxpat::coordinator::{run_job, run_sweep_stored, Job, Method, SweepPlan};
+use sxpat::coordinator::{run_job, run_sweep_obs, Job, Method, SweepPlan};
 use sxpat::dist::{run_worker, Coordinator, DistConfig, WorkerConfig};
+use sxpat::obs::Obs;
 use sxpat::evaluator::rust_eval::evaluate_batch;
 use sxpat::report::{fig4_csv, fig5_csv, fig5_markdown, records_csv};
 use sxpat::runtime::{find_artifacts_dir, Runtime};
@@ -120,6 +134,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => serve(args),
         Some("loadgen") => loadgen(args),
         Some("worker") => worker(args),
+        Some("trace") => trace_cmd(args),
         _ => {
             eprintln!("{}", HELP);
             Ok(())
@@ -127,7 +142,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const HELP: &str = "usage: sxpat <bench-gen|synth|sweep|proxy-study|random-baseline|verify|nn-eval|oplib|serve|loadgen|worker> [--flags]
+const HELP: &str = "usage: sxpat <bench-gen|synth|sweep|proxy-study|random-baseline|verify|nn-eval|oplib|serve|loadgen|worker|trace> [--flags]
 see rust/src/main.rs header or README.md for details";
 
 fn search_config(args: &Args) -> Result<SearchConfig> {
@@ -373,12 +388,28 @@ fn sweep(args: &Args) -> Result<()> {
     if args.has_flag("distributed") || args.has_flag("listen") {
         bail!("--distributed/--listen require a bind address (e.g. 127.0.0.1:7979)");
     }
-    let records = match args.get("distributed").or_else(|| args.get("listen")) {
+    let distributed = args.get("distributed").or_else(|| args.get("listen"));
+    // --trace FILE: observe-only JSONL event dump (spans around every
+    // cell/probe solve; lease/commit events when distributed). Guard
+    // the bare-flag shape like --store: silently tracing nowhere would
+    // defeat the point.
+    let obs = match args.get("trace") {
+        Some(p) => {
+            let node = if distributed.is_some() { "coord" } else { "sweep" };
+            Obs::to_file(Path::new(p), node)
+        }
+        None if args.has_flag("trace") => {
+            bail!("--trace requires a file argument");
+        }
+        None => Obs::off(),
+    };
+    let records = match distributed {
         Some(addr) => {
             let cfg = DistConfig {
                 addr: addr.to_string(),
                 lease_ms: args.get_u64("lease-ms")?.unwrap_or(0),
                 wait_ms: args.get_u64("wait-ms")?.unwrap_or(500),
+                obs: obs.clone(),
             };
             let coord = Coordinator::bind(&plan, store.as_ref(), &cfg)?;
             println!(
@@ -397,7 +428,9 @@ fn sweep(args: &Args) -> Result<()> {
                 plan.workers,
                 plan.search.cell_workers
             );
-            run_sweep_stored(&plan, store.as_ref())
+            let records = run_sweep_obs(&plan, store.as_ref(), &obs);
+            obs.flush()?;
+            records
         }
     };
     if store.is_some() {
@@ -516,11 +549,20 @@ fn oplib(args: &Args) -> Result<()> {
 
 /// The `worker` subcommand: one distributed-sweep worker node.
 fn worker(args: &Args) -> Result<()> {
+    let name = args.get_or("name", &format!("worker-{}", std::process::id()));
+    let obs = match args.get("trace") {
+        Some(p) => Obs::to_file(Path::new(p), &name),
+        None if args.has_flag("trace") => {
+            bail!("--trace requires a file argument");
+        }
+        None => Obs::off(),
+    };
     let cfg = WorkerConfig {
         addr: args.get_or("connect", "127.0.0.1:7979"),
-        name: args.get_or("name", &format!("worker-{}", std::process::id())),
+        name,
         cell_workers: args.get_u64("cell-workers")?.map(|x| x as usize),
         max_jobs: args.get_u64("max-jobs")?.map(|x| x as usize),
+        obs,
     };
     println!("worker {} connecting to {}...", cfg.name, cfg.addr);
     let stats = run_worker(&cfg)?;
@@ -529,6 +571,43 @@ fn worker(args: &Args) -> Result<()> {
          rejected, {} idle waits)",
         cfg.name, stats.completed, stats.stale, stats.rejected, stats.waits
     );
+    Ok(())
+}
+
+/// The `trace` subcommand: load one or more `--trace` JSONL dumps
+/// (several files merge into one multi-node view — e.g. a coordinator
+/// dump plus each worker's), then either validate (`--check`: schema +
+/// span balance, non-zero exit on failure) or render the report
+/// (per-phase timelines, `--top N` slowest spans, per-node counts and
+/// commit accounting).
+fn trace_cmd(args: &Args) -> Result<()> {
+    use sxpat::obs::trace;
+    let files = &args.positional[1..];
+    if files.is_empty() {
+        bail!("trace FILE... [--top N] [--check]");
+    }
+    let mut events = Vec::new();
+    for f in files {
+        events.extend(trace::load(Path::new(f))?);
+    }
+    if args.has_flag("check") {
+        let r = trace::check(&events)?;
+        println!(
+            "ok: {} event(s), {} span(s), {} node(s) [{}]{}",
+            r.events,
+            r.spans,
+            r.nodes.len(),
+            r.nodes.join(", "),
+            if r.dropped > 0 {
+                format!(", {} event(s) dropped to ring overflow", r.dropped)
+            } else {
+                String::new()
+            }
+        );
+        return Ok(());
+    }
+    let top = args.get_usize_or("top", 10)?;
+    print!("{}", trace::render_report(&events, top));
     Ok(())
 }
 

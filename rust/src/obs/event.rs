@@ -1,0 +1,473 @@
+//! Structured events, the [`EventSink`] trait, and the lock-striped
+//! ring-buffer [`Recorder`] behind the [`Obs`] handle.
+//!
+//! An event is a flat record — `seq` (process-global total order),
+//! `ts_us` (microseconds on the recorder's monotonic clock), `kind`
+//! (one of [`KINDS`]), `name`, `node` (which process produced it) and
+//! a sorted `fields` map — rendered as one deterministic JSON line.
+//! Spans are begin/end event pairs linked by a `span` id field; the
+//! end event carries `dur_us` measured by the guard, so durations are
+//! exact even if ring overflow drops the begin event.
+//!
+//! The recorder never touches the disk while recording: events land in
+//! one of [`STRIPES`] mutex-protected rings selected by thread (so
+//! scan workers don't contend on one lock), and [`Recorder::flush`]
+//! drains, sorts by `seq` and appends to the trace file in one write.
+//! Overflowing a stripe drops its oldest event and counts the drop; the
+//! flush footer reports the total so `trace --check` can surface it.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::OpenOptions;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+use super::log::{self, Level};
+
+/// Event stripes; scan workers hash their thread onto one.
+const STRIPES: usize = 8;
+/// Events retained per stripe before the ring drops its oldest.
+const STRIPE_CAP: usize = 8192;
+
+/// The closed event vocabulary. `trace --check` rejects anything else.
+pub const KINDS: [&str; 6] =
+    ["span_begin", "span_end", "counter", "gauge", "log", "meta"];
+
+/// One structured event, the unit of the trace file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub seq: u64,
+    pub ts_us: u64,
+    pub kind: String,
+    pub name: String,
+    pub node: String,
+    pub fields: BTreeMap<String, Json>,
+}
+
+impl Event {
+    /// Render as the canonical JSON object (sorted keys, ASCII — see
+    /// `util::json`), ready for one JSONL line.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("seq".to_string(), Json::Num(self.seq as f64));
+        m.insert("ts_us".to_string(), Json::Num(self.ts_us as f64));
+        m.insert("kind".to_string(), Json::Str(self.kind.clone()));
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("node".to_string(), Json::Str(self.node.clone()));
+        m.insert("fields".to_string(), Json::Obj(self.fields.clone()));
+        Json::Obj(m)
+    }
+
+    /// Parse one trace line, validating the schema (`trace --check`'s
+    /// per-line half; span balance is `trace::check`).
+    pub fn from_json_line(line: &str) -> Result<Event> {
+        let j = Json::parse(line).context("event line is not valid JSON")?;
+        let s = |key: &str| -> Result<String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("event missing string field {key:?}"))
+        };
+        let n = |key: &str| -> Result<u64> {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("event missing integer field {key:?}"))
+        };
+        let kind = s("kind")?;
+        if !KINDS.contains(&kind.as_str()) {
+            bail!("unknown event kind {kind:?}");
+        }
+        let fields = j
+            .get("fields")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("event missing object field \"fields\""))?
+            .clone();
+        Ok(Event {
+            seq: n("seq")?,
+            ts_us: n("ts_us")?,
+            kind,
+            name: s("name")?,
+            node: s("node")?,
+            fields,
+        })
+    }
+}
+
+/// Where events go. [`Recorder`] is the shipped implementation; tests
+/// can substitute an in-memory sink.
+pub trait EventSink: Send + Sync {
+    /// Record one event. Must be cheap: called from scan workers.
+    fn record(&self, kind: &'static str, name: &str, fields: BTreeMap<String, Json>);
+    /// Allocate a fresh span id (unique within this sink).
+    fn next_span(&self) -> u64;
+    /// Persist buffered events (append; callable more than once).
+    fn flush(&self) -> Result<()>;
+}
+
+/// Build a fields map from a literal slice — the call-site idiom is
+/// `obs.counter("dist.commit", 1, &[("job", Json::Num(3.0))])`.
+pub fn fields(kvs: &[(&str, Json)]) -> BTreeMap<String, Json> {
+    kvs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+}
+
+fn stripe_index() -> usize {
+    use std::hash::{Hash, Hasher};
+    thread_local! {
+        static IDX: usize = {
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            std::thread::current().id().hash(&mut h);
+            h.finish() as usize % STRIPES
+        };
+    }
+    IDX.with(|i| *i)
+}
+
+/// The lock-striped ring-buffer recorder: buffers events in memory,
+/// appends them as JSONL on [`Recorder::flush`].
+pub struct Recorder {
+    node: String,
+    path: PathBuf,
+    epoch: Instant,
+    seq: AtomicU64,
+    span_ids: AtomicU64,
+    dropped: AtomicU64,
+    stripes: Vec<Mutex<VecDeque<Event>>>,
+}
+
+impl Recorder {
+    pub fn new(path: &Path, node: &str) -> Recorder {
+        Recorder {
+            node: node.to_string(),
+            path: path.to_path_buf(),
+            epoch: Instant::now(),
+            seq: AtomicU64::new(0),
+            span_ids: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            stripes: (0..STRIPES)
+                .map(|_| Mutex::new(VecDeque::new()))
+                .collect(),
+        }
+    }
+
+    fn push(&self, ev: Event) {
+        let mut ring = self.stripes[stripe_index()].lock().unwrap();
+        if ring.len() >= STRIPE_CAP {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(ev);
+    }
+
+    /// Events dropped to ring overflow since the last flush footer.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+impl EventSink for Recorder {
+    fn record(&self, kind: &'static str, name: &str, fields: BTreeMap<String, Json>) {
+        let ev = Event {
+            seq: self.seq.fetch_add(1, Ordering::Relaxed),
+            ts_us: self.epoch.elapsed().as_micros() as u64,
+            kind: kind.to_string(),
+            name: name.to_string(),
+            node: self.node.clone(),
+            fields,
+        };
+        self.push(ev);
+    }
+
+    fn next_span(&self) -> u64 {
+        self.span_ids.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn flush(&self) -> Result<()> {
+        // The footer is an ordinary event so it drains with the rest.
+        self.record(
+            "meta",
+            "obs.flush",
+            fields(&[("dropped", Json::Num(self.dropped() as f64))]),
+        );
+        let mut evs: Vec<Event> = Vec::new();
+        for stripe in &self.stripes {
+            evs.extend(stripe.lock().unwrap().drain(..));
+        }
+        evs.sort_by_key(|e| e.seq);
+        let mut out = String::new();
+        for ev in &evs {
+            out.push_str(&ev.to_json().render());
+            out.push('\n');
+        }
+        let mut f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("open trace file {}", self.path.display()))?;
+        f.write_all(out.as_bytes())
+            .with_context(|| format!("write trace file {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+/// The handle instrumentation points hold: either off (every call is a
+/// no-op beyond an `Option` check) or backed by a shared [`EventSink`].
+/// `Clone` is an `Arc` bump, so it threads freely through configs and
+/// worker closures.
+#[derive(Clone, Default)]
+pub struct Obs {
+    sink: Option<Arc<dyn EventSink>>,
+}
+
+impl std::fmt::Debug for Obs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Obs").field("enabled", &self.enabled()).finish()
+    }
+}
+
+impl Obs {
+    /// Tracing disabled: logs still reach stderr (env-filtered), but
+    /// no events are recorded and `span` guards are inert.
+    pub fn off() -> Obs {
+        Obs { sink: None }
+    }
+
+    /// Trace into `path` (JSONL, appended on [`Obs::flush`]); `node`
+    /// names this process in merged multi-node views.
+    pub fn to_file(path: &Path, node: &str) -> Obs {
+        Obs { sink: Some(Arc::new(Recorder::new(path, node))) }
+    }
+
+    /// Back the handle with a custom sink (tests).
+    pub fn with_sink(sink: Arc<dyn EventSink>) -> Obs {
+        Obs { sink: Some(sink) }
+    }
+
+    /// Whether events are being recorded. Hot paths gate their field
+    /// construction on this so the disabled path does no work.
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Record a raw event (`kind` must be one of [`KINDS`]).
+    pub fn event(&self, kind: &'static str, name: &str, kvs: &[(&str, Json)]) {
+        if let Some(sink) = &self.sink {
+            sink.record(kind, name, fields(kvs));
+        }
+    }
+
+    /// Record a counter event (a named delta, not the registry: use
+    /// [`metrics`](super::metrics) for process totals).
+    pub fn counter(&self, name: &str, value: u64, kvs: &[(&str, Json)]) {
+        if let Some(sink) = &self.sink {
+            let mut f = fields(kvs);
+            f.insert("value".to_string(), Json::Num(value as f64));
+            sink.record("counter", name, f);
+        }
+    }
+
+    /// Open a span: records `span_begin` now, `span_end` (with
+    /// `dur_us` and any fields added via [`Span::field`]) when the
+    /// guard drops. Inert when tracing is off.
+    pub fn span(&self, name: &'static str, kvs: &[(&str, Json)]) -> Span {
+        match &self.sink {
+            Some(sink) => {
+                let id = sink.next_span();
+                let mut f = fields(kvs);
+                f.insert("span".to_string(), Json::Num(id as f64));
+                sink.record("span_begin", name, f.clone());
+                Span {
+                    sink: Some(Arc::clone(sink)),
+                    name,
+                    start: Instant::now(),
+                    fields: f,
+                }
+            }
+            None => Span {
+                sink: None,
+                name,
+                start: Instant::now(),
+                fields: BTreeMap::new(),
+            },
+        }
+    }
+
+    /// Leveled log: env-filtered stderr line (see [`log`]) plus, when
+    /// tracing, a mirrored `log` event in the trace file.
+    pub fn log(&self, level: Level, target: &str, msg: &str, kvs: &[(&str, Json)]) {
+        log::emit(level, target, msg, kvs);
+        if let Some(sink) = &self.sink {
+            let mut f = fields(kvs);
+            f.insert("level".to_string(), Json::Str(level.name().to_string()));
+            f.insert("msg".to_string(), Json::Str(msg.to_string()));
+            sink.record("log", target, f);
+        }
+    }
+
+    pub fn warn(&self, target: &str, msg: &str, kvs: &[(&str, Json)]) {
+        self.log(Level::Warn, target, msg, kvs);
+    }
+
+    pub fn info(&self, target: &str, msg: &str, kvs: &[(&str, Json)]) {
+        self.log(Level::Info, target, msg, kvs);
+    }
+
+    pub fn debug(&self, target: &str, msg: &str, kvs: &[(&str, Json)]) {
+        self.log(Level::Debug, target, msg, kvs);
+    }
+
+    /// Persist buffered events. No-op when tracing is off.
+    pub fn flush(&self) -> Result<()> {
+        match &self.sink {
+            Some(sink) => sink.flush(),
+            None => Ok(()),
+        }
+    }
+}
+
+/// RAII span guard returned by [`Obs::span`].
+pub struct Span {
+    sink: Option<Arc<dyn EventSink>>,
+    name: &'static str,
+    start: Instant,
+    fields: BTreeMap<String, Json>,
+}
+
+impl Span {
+    /// Attach a field to the eventual `span_end` (e.g. a solver-stats
+    /// delta folded in after the solve).
+    pub fn field(&mut self, key: &str, value: Json) {
+        if self.sink.is_some() {
+            self.fields.insert(key.to_string(), value);
+        }
+    }
+
+    /// End the span now (dropping does the same).
+    pub fn finish(self) {}
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(sink) = self.sink.take() {
+            let mut f = std::mem::take(&mut self.fields);
+            f.insert(
+                "dur_us".to_string(),
+                Json::Num(self.start.elapsed().as_micros() as f64),
+            );
+            sink.record("span_end", self.name, f);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// In-memory sink capturing everything, for assertions.
+    #[derive(Default)]
+    struct MemSink {
+        events: Mutex<Vec<(String, String, BTreeMap<String, Json>)>>,
+        spans: AtomicU64,
+    }
+
+    impl EventSink for MemSink {
+        fn record(&self, kind: &'static str, name: &str, fields: BTreeMap<String, Json>) {
+            self.events.lock().unwrap().push((
+                kind.to_string(),
+                name.to_string(),
+                fields,
+            ));
+        }
+        fn next_span(&self) -> u64 {
+            self.spans.fetch_add(1, Ordering::Relaxed) + 1
+        }
+        fn flush(&self) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn event_line_round_trip() {
+        let ev = Event {
+            seq: 7,
+            ts_us: 1234,
+            kind: "counter".to_string(),
+            name: "dist.commit".to_string(),
+            node: "coord".to_string(),
+            fields: fields(&[("job", Json::Num(3.0))]),
+        };
+        let line = ev.to_json().render();
+        assert_eq!(line, ev.to_json().render(), "deterministic rendering");
+        assert_eq!(Event::from_json_line(&line).unwrap(), ev);
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected() {
+        assert!(Event::from_json_line("not json").is_err());
+        assert!(Event::from_json_line("{\"seq\":1}").is_err());
+        let bad_kind = "{\"fields\":{},\"kind\":\"dance\",\"name\":\"x\",\
+                        \"node\":\"n\",\"seq\":1,\"ts_us\":2}";
+        assert!(Event::from_json_line(bad_kind).is_err());
+    }
+
+    #[test]
+    fn span_guard_emits_balanced_pair_with_duration() {
+        let sink = Arc::new(MemSink::default());
+        let obs = Obs::with_sink(sink.clone());
+        {
+            let mut span = obs.span("sweep.cell", &[("a", Json::Num(1.0))]);
+            span.field("conflicts", Json::Num(42.0));
+        }
+        let evs = sink.events.lock().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].0, "span_begin");
+        assert_eq!(evs[1].0, "span_end");
+        assert_eq!(evs[0].2.get("span"), evs[1].2.get("span"));
+        assert_eq!(evs[1].2.get("conflicts"), Some(&Json::Num(42.0)));
+        assert!(evs[1].2.contains_key("dur_us"));
+        assert!(!evs[0].2.contains_key("dur_us"));
+    }
+
+    #[test]
+    fn disabled_handle_records_nothing() {
+        let obs = Obs::off();
+        assert!(!obs.enabled());
+        let mut span = obs.span("x", &[]);
+        span.field("k", Json::Num(1.0));
+        drop(span);
+        obs.counter("c", 1, &[]);
+        assert!(obs.flush().is_ok());
+    }
+
+    #[test]
+    fn recorder_flushes_sorted_jsonl_with_footer() {
+        let dir = std::env::temp_dir().join(format!(
+            "obs_event_test_{}_{}",
+            std::process::id(),
+            std::thread::current().name().unwrap_or("t").len()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let obs = Obs::to_file(&path, "n1");
+        obs.counter("a", 1, &[]);
+        obs.counter("b", 2, &[("k", Json::Str("v".to_string()))]);
+        obs.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let evs: Vec<Event> = text
+            .lines()
+            .map(|l| Event::from_json_line(l).unwrap())
+            .collect();
+        assert_eq!(evs.len(), 3, "two counters + flush footer");
+        assert!(evs.windows(2).all(|w| w[0].seq < w[1].seq));
+        assert_eq!(evs[2].kind, "meta");
+        assert_eq!(evs[2].fields.get("dropped"), Some(&Json::Num(0.0)));
+        assert!(evs.iter().all(|e| e.node == "n1"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

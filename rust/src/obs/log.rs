@@ -1,0 +1,191 @@
+//! Leveled structured logging with a `PALLAS_LOG` env filter.
+//!
+//! Replaces the ad-hoc `eprintln!` calls: every record is one JSON
+//! line on stderr (`{"level":"warn","msg":...,"target":...}` plus
+//! call-site fields), so operator logs are grep/jq-able and carry the
+//! same structure the trace file does. The filter is read once per
+//! process from `PALLAS_LOG`:
+//!
+//! ```text
+//! PALLAS_LOG=debug                    everything at debug and above
+//! PALLAS_LOG=off                      silence
+//! PALLAS_LOG=warn,dist=debug          per-target override (longest
+//! PALLAS_LOG=info,store.wal=off       prefix of the target wins)
+//! ```
+//!
+//! Default (unset/unparsable): `warn` — exactly the situations the old
+//! `eprintln!`s covered. Module-level [`warn`]/[`info`]/[`debug`] work
+//! without an [`Obs`](super::Obs) handle; `Obs::warn` etc. route here
+//! and additionally mirror the record into the trace file.
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+use crate::util::Json;
+
+/// Log severity, ordered: `Error < Warn < Info < Debug < Trace`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+
+    /// `None` means "off" (a valid filter directive, not a level).
+    fn parse(s: &str) -> Option<Option<Level>> {
+        match s.trim() {
+            "error" => Some(Some(Level::Error)),
+            "warn" => Some(Some(Level::Warn)),
+            "info" => Some(Some(Level::Info)),
+            "debug" => Some(Some(Level::Debug)),
+            "trace" => Some(Some(Level::Trace)),
+            "off" => Some(None),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed `PALLAS_LOG` spec: a default max level plus per-target
+/// overrides matched by longest prefix.
+pub struct Filter {
+    default: Option<Level>,
+    targets: Vec<(String, Option<Level>)>,
+}
+
+impl Filter {
+    /// Parse a spec; unknown directives are ignored (a typo'd filter
+    /// must never crash the instrumented process).
+    pub fn parse(spec: &str) -> Filter {
+        let mut default = Some(Level::Warn);
+        let mut targets = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part.split_once('=') {
+                None => {
+                    if let Some(lv) = Level::parse(part) {
+                        default = lv;
+                    }
+                }
+                Some((target, level)) => {
+                    if let Some(lv) = Level::parse(level) {
+                        targets.push((target.trim().to_string(), lv));
+                    }
+                }
+            }
+        }
+        // Longest prefix first, so the first match below is the winner.
+        targets.sort_by(|a, b| b.0.len().cmp(&a.0.len()));
+        Filter { default, targets }
+    }
+
+    /// Would a record at `level` for `target` be emitted?
+    pub fn enabled(&self, level: Level, target: &str) -> bool {
+        let max = self
+            .targets
+            .iter()
+            .find(|(prefix, _)| target.starts_with(prefix.as_str()))
+            .map(|(_, lv)| *lv)
+            .unwrap_or(self.default);
+        match max {
+            Some(max) => level <= max,
+            None => false,
+        }
+    }
+}
+
+fn global() -> &'static Filter {
+    static FILTER: OnceLock<Filter> = OnceLock::new();
+    FILTER.get_or_init(|| {
+        Filter::parse(&std::env::var("PALLAS_LOG").unwrap_or_default())
+    })
+}
+
+/// Whether a record at `level` for `target` would be emitted — lets
+/// call sites skip building expensive fields.
+pub fn enabled(level: Level, target: &str) -> bool {
+    global().enabled(level, target)
+}
+
+/// Emit one structured log line to stderr (if the filter allows it).
+pub fn emit(level: Level, target: &str, msg: &str, kvs: &[(&str, Json)]) {
+    if !enabled(level, target) {
+        return;
+    }
+    let mut m: BTreeMap<String, Json> =
+        kvs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+    m.insert("level".to_string(), Json::Str(level.name().to_string()));
+    m.insert("target".to_string(), Json::Str(target.to_string()));
+    m.insert("msg".to_string(), Json::Str(msg.to_string()));
+    eprintln!("{}", Json::Obj(m).render());
+}
+
+pub fn error(target: &str, msg: &str, kvs: &[(&str, Json)]) {
+    emit(Level::Error, target, msg, kvs);
+}
+
+pub fn warn(target: &str, msg: &str, kvs: &[(&str, Json)]) {
+    emit(Level::Warn, target, msg, kvs);
+}
+
+pub fn info(target: &str, msg: &str, kvs: &[(&str, Json)]) {
+    emit(Level::Info, target, msg, kvs);
+}
+
+pub fn debug(target: &str, msg: &str, kvs: &[(&str, Json)]) {
+    emit(Level::Debug, target, msg, kvs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_filter_is_warn() {
+        let f = Filter::parse("");
+        assert!(f.enabled(Level::Error, "dist"));
+        assert!(f.enabled(Level::Warn, "dist"));
+        assert!(!f.enabled(Level::Info, "dist"));
+        assert!(!f.enabled(Level::Debug, "dist"));
+    }
+
+    #[test]
+    fn global_level_directive() {
+        let f = Filter::parse("debug");
+        assert!(f.enabled(Level::Debug, "anything"));
+        assert!(!f.enabled(Level::Trace, "anything"));
+        let off = Filter::parse("off");
+        assert!(!off.enabled(Level::Error, "anything"));
+    }
+
+    #[test]
+    fn per_target_overrides_longest_prefix_wins() {
+        let f = Filter::parse("warn,dist=debug,dist.worker=off");
+        assert!(f.enabled(Level::Debug, "dist.coordinator"));
+        assert!(!f.enabled(Level::Error, "dist.worker"));
+        assert!(!f.enabled(Level::Info, "store.wal"));
+        assert!(f.enabled(Level::Warn, "store.wal"));
+    }
+
+    #[test]
+    fn garbage_directives_are_ignored() {
+        let f = Filter::parse("loud,=,x=verbose,info");
+        assert!(f.enabled(Level::Info, "t"));
+        assert!(!f.enabled(Level::Debug, "t"));
+    }
+}

@@ -1,0 +1,37 @@
+//! Unified observability fabric: structured events, a process-wide
+//! metrics registry, and trace-file tooling — zero dependencies, built
+//! on [`util::Json`](crate::util::Json) so every emitted line is
+//! deterministic, ASCII, and self-describing.
+//!
+//! Three pillars, deliberately decoupled:
+//!
+//! * [`event`] — the [`EventSink`] trait and the lock-striped
+//!   ring-buffer [`Recorder`] behind the cheap cloneable [`Obs`]
+//!   handle. Spans (begin/end pairs with monotonic-clock durations),
+//!   counters and log records accumulate in memory and are written as
+//!   line-delimited JSON on `flush` — no syscalls on the hot path.
+//! * [`log`] — leveled, `PALLAS_LOG`-filtered structured logging to
+//!   stderr, replacing the ad-hoc `eprintln!` calls. Works without an
+//!   [`Obs`] handle (module-level functions) so deep code like the WAL
+//!   can warn; an enabled handle additionally mirrors log records into
+//!   the trace file.
+//! * [`metrics`] — a process-wide registry of named counters and
+//!   gauges. The hot path is one relaxed atomic op on a cached handle;
+//!   snapshots render to both JSON (`serve`'s `metrics` verb) and
+//!   Prometheus-style text exposition.
+//!
+//! **Determinism contract.** Instrumentation is observe-only: clock
+//! reads happen strictly outside solver/commit decision paths, events
+//! buffer in memory until an explicit flush, and every integration
+//! point is gated on `Obs::enabled()` so the disabled path does no
+//! work. `tests/obs_determinism.rs` pins that sweep records, fig5 CSV
+//! and WAL bytes are identical with tracing on vs off and across
+//! `--cell-workers` counts. See DESIGN.md §13.
+
+pub mod event;
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use event::{Event, EventSink, Obs, Recorder, Span};
+pub use log::Level;

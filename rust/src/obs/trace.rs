@@ -1,0 +1,365 @@
+//! Trace-file tooling behind the `trace` CLI subcommand: load JSONL
+//! dumps, validate them (`trace --check`: per-line schema plus span
+//! balance), and render human reports — per-phase timelines, top-N
+//! slowest spans, and a merged multi-node view over coordinator +
+//! worker traces.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+use super::event::Event;
+
+/// Load one trace file, failing on the first malformed line (the
+/// `--check` contract: a single bad event fails the build).
+pub fn load(path: &Path) -> Result<Vec<Event>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read trace file {}", path.display()))?;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        events.push(
+            Event::from_json_line(line)
+                .with_context(|| format!("{}:{}", path.display(), i + 1))?,
+        );
+    }
+    Ok(events)
+}
+
+/// What `check` verified, for the CLI's one-line summary.
+pub struct CheckReport {
+    pub events: usize,
+    pub spans: usize,
+    pub nodes: Vec<String>,
+    pub dropped: u64,
+}
+
+fn span_id(ev: &Event) -> Result<u64> {
+    ev.fields
+        .get("span")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| {
+            anyhow::anyhow!("{} event {:?} (seq {}) missing span id", ev.kind, ev.name, ev.seq)
+        })
+}
+
+/// Validate span balance over already-parsed events: every
+/// `span_begin` has exactly one matching `span_end` (per node — span
+/// ids are only unique within a recorder) and vice versa. Also totals
+/// the ring-overflow drop counts from flush footers.
+pub fn check(events: &[Event]) -> Result<CheckReport> {
+    let mut open: BTreeMap<(String, u64), String> = BTreeMap::new();
+    let mut spans = 0usize;
+    let mut nodes: Vec<String> = Vec::new();
+    let mut dropped = 0u64;
+    for ev in events {
+        if !nodes.contains(&ev.node) {
+            nodes.push(ev.node.clone());
+        }
+        match ev.kind.as_str() {
+            "span_begin" => {
+                let key = (ev.node.clone(), span_id(ev)?);
+                if let Some(prev) = open.insert(key, ev.name.clone()) {
+                    bail!("duplicate span_begin for span already open as {prev:?}");
+                }
+            }
+            "span_end" => {
+                spans += 1;
+                let key = (ev.node.clone(), span_id(ev)?);
+                if open.remove(&key).is_none() {
+                    bail!(
+                        "span_end {:?} (node {:?}, span {}) without begin",
+                        ev.name,
+                        ev.node,
+                        key.1
+                    );
+                }
+            }
+            "meta" if ev.name == "obs.flush" => {
+                dropped += ev
+                    .fields
+                    .get("dropped")
+                    .and_then(Json::as_u64)
+                    .unwrap_or(0);
+            }
+            _ => {}
+        }
+    }
+    // Ring overflow drops oldest events first, so a dropped begin with
+    // a surviving end is legitimate loss, not malformed tracing —
+    // unbalanced spans only fail a drop-free trace.
+    if !open.is_empty() && dropped == 0 {
+        let ((node, id), name) = open.iter().next().unwrap();
+        bail!(
+            "{} unbalanced span(s), e.g. {name:?} (node {node:?}, span {id}) never ended",
+            open.len()
+        );
+    }
+    nodes.sort();
+    Ok(CheckReport { events: events.len(), spans, nodes, dropped })
+}
+
+/// Per-job commit counts from `dist.commit` counter events — the
+/// merged-trace accounting view (`tests/obs_determinism.rs` pins that
+/// a distributed run commits every job exactly once).
+pub fn commit_counts(events: &[Event]) -> BTreeMap<u64, u64> {
+    let mut counts = BTreeMap::new();
+    for ev in events {
+        if ev.kind == "counter" && ev.name == "dist.commit" {
+            if let Some(job) = ev.fields.get("job").and_then(Json::as_u64) {
+                *counts.entry(job).or_insert(0) += 1;
+            }
+        }
+    }
+    counts
+}
+
+fn fmt_us(us: u64) -> String {
+    if us >= 1_000_000 {
+        format!("{:.2}s", us as f64 / 1e6)
+    } else if us >= 1_000 {
+        format!("{:.2}ms", us as f64 / 1e3)
+    } else {
+        format!("{us}us")
+    }
+}
+
+/// A compact label for a span's identity fields (bench/method/et/cell
+/// when present), for the slowest-spans table.
+fn span_label(ev: &Event) -> String {
+    let mut parts = Vec::new();
+    for key in ["bench", "method", "et", "cell_a", "cell_b", "job", "status"] {
+        if let Some(v) = ev.fields.get(key) {
+            let txt = match v {
+                Json::Str(s) => s.clone(),
+                other => other.render(),
+            };
+            parts.push(format!("{key}={txt}"));
+        }
+    }
+    parts.join(" ")
+}
+
+/// Render the human report over (possibly multi-node) events:
+/// per-phase aggregates, the `top` slowest spans, and — when the trace
+/// came from a distributed run — per-node event counts and commit
+/// accounting.
+pub fn render_report(events: &[Event], top: usize) -> String {
+    let mut out = String::new();
+    let report = match check(events) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = writeln!(out, "warning: trace failed validation: {e:#}");
+            CheckReport { events: events.len(), spans: 0, nodes: Vec::new(), dropped: 0 }
+        }
+    };
+    let _ = writeln!(
+        out,
+        "{} event(s), {} span(s), {} node(s){}",
+        report.events,
+        report.spans,
+        report.nodes.len().max(1),
+        if report.dropped > 0 {
+            format!(" — {} event(s) dropped to ring overflow", report.dropped)
+        } else {
+            String::new()
+        }
+    );
+
+    // Per-phase timeline: aggregate span_end durations by span name.
+    let mut phases: BTreeMap<&str, (u64, u64, u64)> = BTreeMap::new();
+    let mut ends: Vec<&Event> = Vec::new();
+    for ev in events {
+        if ev.kind == "span_end" {
+            let dur = ev.fields.get("dur_us").and_then(Json::as_u64).unwrap_or(0);
+            let e = phases.entry(ev.name.as_str()).or_insert((0, 0, 0));
+            e.0 += 1;
+            e.1 += dur;
+            e.2 = e.2.max(dur);
+            ends.push(ev);
+        }
+    }
+    if !phases.is_empty() {
+        let _ = writeln!(out, "\nphases:");
+        let _ = writeln!(
+            out,
+            "  {:<24} {:>7} {:>12} {:>12} {:>12}",
+            "span", "count", "total", "mean", "max"
+        );
+        for (name, (count, total, max)) in &phases {
+            let _ = writeln!(
+                out,
+                "  {:<24} {:>7} {:>12} {:>12} {:>12}",
+                name,
+                count,
+                fmt_us(*total),
+                fmt_us(total / count.max(&1)),
+                fmt_us(*max)
+            );
+        }
+    }
+
+    // Top-N slowest spans. Ties break on (node, seq) for determinism.
+    ends.sort_by(|a, b| {
+        let da = a.fields.get("dur_us").and_then(Json::as_u64).unwrap_or(0);
+        let db = b.fields.get("dur_us").and_then(Json::as_u64).unwrap_or(0);
+        db.cmp(&da).then_with(|| (&a.node, a.seq).cmp(&(&b.node, b.seq)))
+    });
+    if !ends.is_empty() {
+        let _ = writeln!(out, "\nslowest {} span(s):", top.min(ends.len()));
+        for ev in ends.iter().take(top) {
+            let dur = ev.fields.get("dur_us").and_then(Json::as_u64).unwrap_or(0);
+            let label = span_label(ev);
+            let _ = writeln!(
+                out,
+                "  {:>12}  {:<24} [{}]{}{}",
+                fmt_us(dur),
+                ev.name,
+                ev.node,
+                if label.is_empty() { "" } else { " " },
+                label
+            );
+        }
+    }
+
+    // Merged multi-node view: per-node event counts, plus commit
+    // accounting when coordinator events are present.
+    if report.nodes.len() > 1 {
+        let _ = writeln!(out, "\nnodes:");
+        for node in &report.nodes {
+            let n = events.iter().filter(|e| &e.node == node).count();
+            let _ = writeln!(out, "  {node:<24} {n:>7} event(s)");
+        }
+    }
+    let commits = commit_counts(events);
+    if !commits.is_empty() {
+        let dups: Vec<u64> = commits
+            .iter()
+            .filter(|(_, &c)| c > 1)
+            .map(|(&j, _)| j)
+            .collect();
+        let _ = writeln!(
+            out,
+            "\ncommits: {} job(s) committed{}",
+            commits.len(),
+            if dups.is_empty() {
+                ", each exactly once".to_string()
+            } else {
+                format!("; DUPLICATES: {dups:?}")
+            }
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::fields;
+
+    fn ev(seq: u64, kind: &str, name: &str, node: &str, kvs: &[(&str, Json)]) -> Event {
+        Event {
+            seq,
+            ts_us: seq * 10,
+            kind: kind.to_string(),
+            name: name.to_string(),
+            node: node.to_string(),
+            fields: fields(kvs),
+        }
+    }
+
+    #[test]
+    fn balanced_spans_pass_check() {
+        let events = vec![
+            ev(0, "span_begin", "sweep.job", "local", &[("span", Json::Num(1.0))]),
+            ev(
+                1,
+                "span_end",
+                "sweep.job",
+                "local",
+                &[("span", Json::Num(1.0)), ("dur_us", Json::Num(500.0))],
+            ),
+            ev(2, "counter", "dist.commit", "local", &[("job", Json::Num(0.0))]),
+        ];
+        let r = check(&events).unwrap();
+        assert_eq!(r.events, 3);
+        assert_eq!(r.spans, 1);
+        assert_eq!(r.nodes, vec!["local".to_string()]);
+    }
+
+    #[test]
+    fn unbalanced_spans_fail_check() {
+        let open = vec![ev(
+            0,
+            "span_begin",
+            "sweep.job",
+            "local",
+            &[("span", Json::Num(1.0))],
+        )];
+        assert!(check(&open).is_err());
+        let stray = vec![ev(
+            0,
+            "span_end",
+            "sweep.job",
+            "local",
+            &[("span", Json::Num(1.0))],
+        )];
+        assert!(check(&stray).is_err());
+    }
+
+    #[test]
+    fn same_span_id_on_different_nodes_is_balanced() {
+        let events = vec![
+            ev(0, "span_begin", "a", "w1", &[("span", Json::Num(1.0))]),
+            ev(0, "span_begin", "b", "w2", &[("span", Json::Num(1.0))]),
+            ev(1, "span_end", "a", "w1", &[("span", Json::Num(1.0))]),
+            ev(1, "span_end", "b", "w2", &[("span", Json::Num(1.0))]),
+        ];
+        let r = check(&events).unwrap();
+        assert_eq!(r.spans, 2);
+        assert_eq!(r.nodes.len(), 2);
+    }
+
+    #[test]
+    fn commit_accounting_counts_per_job() {
+        let events = vec![
+            ev(0, "counter", "dist.commit", "coord", &[("job", Json::Num(0.0))]),
+            ev(1, "counter", "dist.commit", "coord", &[("job", Json::Num(1.0))]),
+            ev(2, "counter", "dist.commit", "coord", &[("job", Json::Num(1.0))]),
+        ];
+        let counts = commit_counts(&events);
+        assert_eq!(counts.get(&0), Some(&1));
+        assert_eq!(counts.get(&1), Some(&2));
+        let report = render_report(&events, 5);
+        assert!(report.contains("DUPLICATES"));
+    }
+
+    #[test]
+    fn report_renders_phases_and_slowest() {
+        let events = vec![
+            ev(0, "span_begin", "sweep.cell", "local", &[("span", Json::Num(1.0))]),
+            ev(
+                1,
+                "span_end",
+                "sweep.cell",
+                "local",
+                &[
+                    ("span", Json::Num(1.0)),
+                    ("dur_us", Json::Num(1500.0)),
+                    ("cell_a", Json::Num(2.0)),
+                    ("cell_b", Json::Num(3.0)),
+                ],
+            ),
+        ];
+        let report = render_report(&events, 3);
+        assert!(report.contains("sweep.cell"));
+        assert!(report.contains("1.50ms"));
+        assert!(report.contains("cell_a=2"));
+    }
+}

@@ -201,6 +201,32 @@ pub struct Stats {
     pub preprocess_subsumed: u64,
 }
 
+impl Stats {
+    /// Field-wise `self - base`, saturating at zero. The observe-only
+    /// seam `obs` uses to fold per-cell solver effort into trace spans:
+    /// snapshot before the solve, delta after, never mutate the solver.
+    pub fn delta_since(&self, base: &Stats) -> Stats {
+        Stats {
+            conflicts: self.conflicts.saturating_sub(base.conflicts),
+            decisions: self.decisions.saturating_sub(base.decisions),
+            propagations: self.propagations.saturating_sub(base.propagations),
+            restarts: self.restarts.saturating_sub(base.restarts),
+            learnt_literals: self.learnt_literals.saturating_sub(base.learnt_literals),
+            deleted_clauses: self.deleted_clauses.saturating_sub(base.deleted_clauses),
+            gc_runs: self.gc_runs.saturating_sub(base.gc_runs),
+            arena_reclaimed_words: self
+                .arena_reclaimed_words
+                .saturating_sub(base.arena_reclaimed_words),
+            lbd_sum: self.lbd_sum.saturating_sub(base.lbd_sum),
+            restarts_blocked: self.restarts_blocked.saturating_sub(base.restarts_blocked),
+            preprocess_probes: self.preprocess_probes.saturating_sub(base.preprocess_probes),
+            preprocess_subsumed: self
+                .preprocess_subsumed
+                .saturating_sub(base.preprocess_subsumed),
+        }
+    }
+}
+
 #[derive(Clone)]
 pub struct Solver {
     arena: ClauseArena,

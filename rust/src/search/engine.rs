@@ -48,8 +48,10 @@ use std::time::{Duration, Instant};
 
 use crate::circuit::sim::{error_stats, is_sound, TruthTables};
 use crate::circuit::Netlist;
+use crate::obs::Obs;
 use crate::synth::synthesize_area;
 use crate::template::{NonsharedMiter, SharedMiter, SolveOutcome, SopParams};
+use crate::util::Json;
 
 use super::lattice::{shared_cells, xpat_cells, Cell};
 use super::runner::{SearchConfig, SearchOutcome, Solution};
@@ -116,6 +118,14 @@ pub trait Template: Sized + Clone + Sync {
     /// Area estimate of achieved proxies — the same formula the lattice
     /// ordering uses, so the probe's result prunes dominated cells.
     fn achieved_estimate(proxy: (usize, usize), m: usize) -> f64;
+
+    /// Cumulative statistics of the underlying solver, snapshotted
+    /// before and after a cell so trace spans can fold in the effort
+    /// delta. Observe-only: MUST NOT mutate or perturb the solve.
+    /// Families without a CDCL core report empty stats.
+    fn stats(&self) -> crate::sat::Stats {
+        crate::sat::Stats::default()
+    }
 }
 
 impl Template for SharedMiter {
@@ -164,6 +174,10 @@ impl Template for SharedMiter {
 
     fn achieved_estimate(proxy: (usize, usize), _m: usize) -> f64 {
         2.0 * proxy.0 as f64 + 0.8 * proxy.1 as f64
+    }
+
+    fn stats(&self) -> crate::sat::Stats {
+        SharedMiter::stats(self)
     }
 }
 
@@ -214,6 +228,10 @@ impl Template for NonsharedMiter {
     fn achieved_estimate(proxy: (usize, usize), m: usize) -> f64 {
         m as f64 * proxy.1 as f64 * (1.0 + 0.9 * proxy.0 as f64)
     }
+
+    fn stats(&self) -> crate::sat::Stats {
+        NonsharedMiter::stats(self)
+    }
 }
 
 /// Result of scanning one cell, as produced by a worker.
@@ -251,6 +269,10 @@ struct ScanCtx<'a, T: Template> {
     proto: Option<&'a T>,
     /// Cross-worker model exchange (only with `share_blocked_models`).
     journal: Option<&'a Mutex<Vec<SopParams>>>,
+    /// Trace handle. Observe-only: spans record around the solves, and
+    /// clock reads live in the span guard, never in a solver or commit
+    /// decision — tracing on/off cannot change any outcome.
+    obs: &'a Obs,
 }
 
 /// Post-process one model into a [`Solution`].
@@ -267,10 +289,55 @@ fn finish<T: Template>(
     Solution { params, proxy, cell: (cell.a, cell.b), area, max_err, mean_err }
 }
 
-/// Enumerate up to `solutions_per_cell` models of one cell. The first
-/// model is proxy-minimised (drives to the cell's low-area corner);
-/// further models are plain enumeration for the Fig. 4 scatter.
+fn status_name(status: &CellStatus) -> &'static str {
+    match status {
+        CellStatus::Sat(_) => "sat",
+        CellStatus::Unsat => "unsat",
+        CellStatus::Budget => "budget",
+        CellStatus::NotReached => "not_reached",
+    }
+}
+
+/// Enumerate up to `solutions_per_cell` models of one cell, wrapped in a
+/// `sweep.cell` span that folds in the solver-effort delta. The span is
+/// pure observation — the solve itself is [`scan_cell_inner`], which
+/// never sees the trace handle.
 fn scan_cell<T: Template>(miter: &mut T, cell: &Cell, ctx: &ScanCtx<'_, T>) -> CellStatus {
+    if !ctx.obs.enabled() {
+        return scan_cell_inner(miter, cell, ctx);
+    }
+    let before = miter.stats();
+    let mut span = ctx.obs.span(
+        "sweep.cell",
+        &[
+            ("bench", Json::Str(ctx.name.to_string())),
+            ("method", Json::Str(T::NAME.to_string())),
+            ("et", Json::Num(ctx.et as f64)),
+            ("cell_a", Json::Num(cell.a as f64)),
+            ("cell_b", Json::Num(cell.b as f64)),
+        ],
+    );
+    let status = scan_cell_inner(miter, cell, ctx);
+    let d = miter.stats().delta_since(&before);
+    span.field("conflicts", Json::Num(d.conflicts as f64));
+    span.field("decisions", Json::Num(d.decisions as f64));
+    span.field("propagations", Json::Num(d.propagations as f64));
+    span.field("restarts", Json::Num(d.restarts as f64));
+    span.field("lbd_sum", Json::Num(d.lbd_sum as f64));
+    span.field("preprocess_probes", Json::Num(d.preprocess_probes as f64));
+    span.field("preprocess_subsumed", Json::Num(d.preprocess_subsumed as f64));
+    span.field("status", Json::Str(status_name(&status).to_string()));
+    span.finish();
+    status
+}
+
+/// The first model is proxy-minimised (drives to the cell's low-area
+/// corner); further models are plain enumeration for the Fig. 4 scatter.
+fn scan_cell_inner<T: Template>(
+    miter: &mut T,
+    cell: &Cell,
+    ctx: &ScanCtx<'_, T>,
+) -> CellStatus {
     let mut sols: Vec<Solution> = Vec::new();
     for sol_idx in 0..ctx.cfg.solutions_per_cell {
         let solved = if sol_idx == 0 {
@@ -394,6 +461,20 @@ pub fn run_search_exact<T: Template>(
     prototype: Option<T>,
     exact: &[u64],
 ) -> SearchOutcome {
+    run_search_exact_obs(nl, et, cfg, prototype, exact, &Obs::off())
+}
+
+/// As [`run_search_exact`], tracing the probe and every cell into `obs`.
+/// Instrumentation is observe-only: spans wrap the solves without
+/// entering them, so a traced search commits byte-identical results.
+pub fn run_search_exact_obs<T: Template>(
+    nl: &Netlist,
+    et: u64,
+    cfg: &SearchConfig,
+    prototype: Option<T>,
+    exact: &[u64],
+    obs: &Obs,
+) -> SearchOutcome {
     let (n, m) = (nl.n_inputs(), nl.n_outputs());
     debug_assert_eq!(exact.len(), 1usize << n, "exact table must be exhaustive");
     let start = Instant::now();
@@ -435,11 +516,36 @@ pub fn run_search_exact<T: Template>(
             Some(pm) => pm,
             None => &mut proto,
         };
+        let before = probe_target.stats();
+        let mut span = obs.span(
+            "sweep.probe",
+            &[
+                ("bench", Json::Str(nl.name.clone())),
+                ("method", Json::Str(T::NAME.to_string())),
+                ("et", Json::Num(et as f64)),
+            ],
+        );
         let outcome =
             probe_target.solve_minimized_deadline(weakest.a, weakest.b, Some(deadline));
         if let SolveOutcome::Sat(params) = &outcome {
             probe_target.block(params);
         }
+        let d = probe_target.stats().delta_since(&before);
+        span.field("conflicts", Json::Num(d.conflicts as f64));
+        span.field("restarts", Json::Num(d.restarts as f64));
+        span.field("lbd_sum", Json::Num(d.lbd_sum as f64));
+        span.field(
+            "status",
+            Json::Str(
+                match &outcome {
+                    SolveOutcome::Sat(_) => "sat",
+                    SolveOutcome::Unsat => "unsat",
+                    SolveOutcome::Budget => "budget",
+                }
+                .to_string(),
+            ),
+        );
+        span.finish();
         outcome
     };
     match probe_outcome {
@@ -494,6 +600,7 @@ pub fn run_search_exact<T: Template>(
         state: &state,
         proto: shared_proto.as_ref(),
         journal: journal.as_ref(),
+        obs,
     };
 
     let (tx, rx) = mpsc::channel::<(usize, CellStatus)>();

@@ -13,7 +13,9 @@ pub mod engine;
 pub mod lattice;
 pub mod runner;
 
-pub use engine::{run_search, run_search_exact, run_search_from, Template};
+pub use engine::{
+    run_search, run_search_exact, run_search_exact_obs, run_search_from, Template,
+};
 pub use lattice::{shared_cells, xpat_cells, Cell};
 pub use runner::{
     search_shared, search_xpat, MiterCache, SearchConfig, SearchOutcome, Solution,

@@ -16,9 +16,10 @@ use std::sync::{Arc, Mutex};
 
 use crate::circuit::sim::TruthTables;
 use crate::circuit::Netlist;
+use crate::obs::Obs;
 use crate::template::{NonsharedMiter, SharedMiter, SopParams};
 
-use super::engine::{run_search, run_search_exact};
+use super::engine::{run_search, run_search_exact_obs};
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SearchConfig {
@@ -260,6 +261,19 @@ impl MiterCache {
         cfg: &SearchConfig,
         exact: &[u64],
     ) -> SearchOutcome {
+        self.search_shared_obs(nl, et, cfg, exact, &Obs::off())
+    }
+
+    /// As [`MiterCache::search_shared_with`], tracing the probe and
+    /// per-cell spans into `obs` (observe-only — see `run_search_exact_obs`).
+    pub fn search_shared_obs(
+        &self,
+        nl: &Netlist,
+        et: u64,
+        cfg: &SearchConfig,
+        exact: &[u64],
+        obs: &Obs,
+    ) -> SearchOutcome {
         let key = Self::geometry_key(nl, et, cfg, exact);
         // Preprocess at insert time: every later same-geometry job clones
         // the already-simplified CNF (idempotent, so the engine's own
@@ -269,7 +283,7 @@ impl MiterCache {
             t.preprocess();
             t
         });
-        run_search_exact::<SharedMiter>(nl, et, cfg, Some(proto), exact)
+        run_search_exact_obs::<SharedMiter>(nl, et, cfg, Some(proto), exact, obs)
     }
 
     /// As [`search_xpat`], sourcing the prototype from this cache.
@@ -291,13 +305,25 @@ impl MiterCache {
         cfg: &SearchConfig,
         exact: &[u64],
     ) -> SearchOutcome {
+        self.search_xpat_obs(nl, et, cfg, exact, &Obs::off())
+    }
+
+    /// As [`MiterCache::search_shared_obs`], for the nonshared template.
+    pub fn search_xpat_obs(
+        &self,
+        nl: &Netlist,
+        et: u64,
+        cfg: &SearchConfig,
+        exact: &[u64],
+        obs: &Obs,
+    ) -> SearchOutcome {
         let key = Self::geometry_key(nl, et, cfg, exact);
         let proto = Self::proto_from(&self.xpat, key, |n, m, p, e, et| {
             let mut t = NonsharedMiter::build(n, m, p, e, et);
             t.preprocess();
             t
         });
-        run_search_exact::<NonsharedMiter>(nl, et, cfg, Some(proto), exact)
+        run_search_exact_obs::<NonsharedMiter>(nl, et, cfg, Some(proto), exact, obs)
     }
 }
 

@@ -6,6 +6,7 @@
 //! and requests/sec at a fixed concurrency, the serve bench's headline
 //! number.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
@@ -44,6 +45,17 @@ impl Default for LoadgenConfig {
     }
 }
 
+/// Aggregates for one QoS tier: a closed-loop client answers for the
+/// tier it asked, so per-tier rollups need no server cooperation.
+#[derive(Debug, Clone, Default)]
+pub struct TierLoadStats {
+    pub ok: usize,
+    pub errors: usize,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
 #[derive(Debug, Clone)]
 pub struct LoadgenStats {
     pub sent: usize,
@@ -55,6 +67,8 @@ pub struct LoadgenStats {
     pub p50_us: u64,
     pub p99_us: u64,
     pub max_us: u64,
+    /// Per-tier rollups, sorted by tier name.
+    pub tiers: BTreeMap<String, TierLoadStats>,
 }
 
 impl LoadgenStats {
@@ -65,6 +79,13 @@ impl LoadgenStats {
             self.sent, self.ok, self.errors, self.elapsed_ms, self.rps, self.p50_us,
             self.p99_us, self.max_us
         );
+        for (tier, t) in &self.tiers {
+            println!(
+                "loadgen: tier {tier}: {} ok, {} errors, p50 {} µs, p99 {} µs, \
+                 max {} µs",
+                t.ok, t.errors, t.p50_us, t.p99_us, t.max_us
+            );
+        }
     }
 }
 
@@ -72,6 +93,8 @@ struct ClientStats {
     ok: usize,
     errors: usize,
     lat_us: Vec<u64>,
+    /// (ok, errors, latencies) per tier this client exercised.
+    tiers: BTreeMap<String, (usize, usize, Vec<u64>)>,
 }
 
 fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientStats> {
@@ -86,7 +109,12 @@ fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientStats> {
     // Per-client image pool; different seeds keep clients from sending
     // identical byte streams.
     let pool = synthetic_digits(64, cfg.seed.wrapping_add(client as u64));
-    let mut stats = ClientStats { ok: 0, errors: 0, lat_us: Vec::new() };
+    let mut stats = ClientStats {
+        ok: 0,
+        errors: 0,
+        lat_us: Vec::new(),
+        tiers: BTreeMap::new(),
+    };
     let mut line = String::new();
     for k in 0..cfg.requests_per_client {
         let tier = &cfg.tiers[(client + k) % cfg.tiers.len()];
@@ -106,11 +134,16 @@ fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientStats> {
         if resp.id != id {
             bail!("client {client}: response id {} for request {id}", resp.id);
         }
-        stats.lat_us.push(start.elapsed().as_micros() as u64);
+        let us = start.elapsed().as_micros() as u64;
+        stats.lat_us.push(us);
+        let per_tier = stats.tiers.entry(tier.clone()).or_default();
+        per_tier.2.push(us);
         if resp.ok {
             stats.ok += 1;
+            per_tier.0 += 1;
         } else {
             stats.errors += 1;
+            per_tier.1 += 1;
         }
     }
     Ok(stats)
@@ -131,14 +164,37 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenStats> {
     let mut ok = 0usize;
     let mut errors = 0usize;
     let mut lat_us: Vec<u64> = Vec::new();
+    let mut tier_raw: BTreeMap<String, (usize, usize, Vec<u64>)> = BTreeMap::new();
     for h in handles {
         let cs = h.join().map_err(|_| anyhow::anyhow!("loadgen client panicked"))??;
         ok += cs.ok;
         errors += cs.errors;
         lat_us.extend(cs.lat_us);
+        for (tier, (t_ok, t_err, t_lat)) in cs.tiers {
+            let agg = tier_raw.entry(tier).or_default();
+            agg.0 += t_ok;
+            agg.1 += t_err;
+            agg.2.extend(t_lat);
+        }
     }
     let elapsed = start.elapsed().as_secs_f64();
     lat_us.sort_unstable();
+    let tiers = tier_raw
+        .into_iter()
+        .map(|(tier, (t_ok, t_err, mut t_lat))| {
+            t_lat.sort_unstable();
+            (
+                tier,
+                TierLoadStats {
+                    ok: t_ok,
+                    errors: t_err,
+                    p50_us: percentile(&t_lat, 0.50),
+                    p99_us: percentile(&t_lat, 0.99),
+                    max_us: t_lat.last().copied().unwrap_or(0),
+                },
+            )
+        })
+        .collect();
     Ok(LoadgenStats {
         sent: ok + errors,
         ok,
@@ -148,5 +204,6 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenStats> {
         p50_us: percentile(&lat_us, 0.50),
         p99_us: percentile(&lat_us, 0.99),
         max_us: lat_us.last().copied().unwrap_or(0),
+        tiers,
     })
 }

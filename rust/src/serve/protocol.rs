@@ -51,6 +51,9 @@ pub enum Request {
         pixels: Vec<u8>,
     },
     Stats { id: u64 },
+    /// Process-wide metrics-registry snapshot (`obs::metrics`), as
+    /// opposed to `stats`, which reports this server's own counters.
+    Metrics { id: u64 },
     Reload { id: u64 },
     Shutdown { id: u64 },
 }
@@ -73,6 +76,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         .ok_or_else(|| "missing \"type\" field".to_string())?;
     match ty {
         "stats" => Ok(Request::Stats { id }),
+        "metrics" => Ok(Request::Metrics { id }),
         "reload" => Ok(Request::Reload { id }),
         "shutdown" => Ok(Request::Shutdown { id }),
         "infer" => {
@@ -123,6 +127,8 @@ pub enum Response {
         source: String,
     },
     Stats { id: u64, stats: Json },
+    /// The process-wide metrics-registry snapshot.
+    Metrics { id: u64, metrics: Json },
     /// Acknowledgement for `reload` / `shutdown`.
     Ack { id: u64, info: String },
     Error { id: u64, error: String },
@@ -147,6 +153,11 @@ impl Response {
                 m.insert("id".to_string(), Json::Num(*id as f64));
                 m.insert("ok".to_string(), Json::Bool(true));
                 m.insert("stats".to_string(), stats.clone());
+            }
+            Response::Metrics { id, metrics } => {
+                m.insert("id".to_string(), Json::Num(*id as f64));
+                m.insert("ok".to_string(), Json::Bool(true));
+                m.insert("metrics".to_string(), metrics.clone());
             }
             Response::Ack { id, info } => {
                 m.insert("id".to_string(), Json::Num(*id as f64));
@@ -237,11 +248,12 @@ mod tests {
 
     #[test]
     fn control_requests_round_trip() {
-        for ty in ["stats", "reload", "shutdown"] {
+        for ty in ["stats", "metrics", "reload", "shutdown"] {
             let line = render_control_request(ty, 9);
             let req = parse_request(&line).unwrap();
             let id = match (ty, &req) {
                 ("stats", Request::Stats { id }) => *id,
+                ("metrics", Request::Metrics { id }) => *id,
                 ("reload", Request::Reload { id }) => *id,
                 ("shutdown", Request::Shutdown { id }) => *id,
                 _ => panic!("{ty}: wrong request {req:?}"),

@@ -233,6 +233,8 @@ impl Registry {
             map.len() - from_lib
         );
         *self.current.write().unwrap() = Arc::new(map);
+        crate::obs::metrics::counter("pallas_serve_reloads_total").inc();
+        crate::obs::log::info("serve.registry", &summary, &[]);
         Ok(summary)
     }
 }

@@ -44,6 +44,7 @@ use crate::bench_support::JsonReport;
 use crate::nn::digits::IMG;
 #[allow(unused_imports)] // CompiledMlp: doc link target
 use crate::nn::{synthetic_digits, CompiledMlp, QuantMlp};
+use crate::obs::metrics;
 use crate::util::jsonl::{self, LineRead};
 use crate::util::Json;
 
@@ -98,13 +99,26 @@ struct WorkItem {
 /// percentiles track recent traffic on long-running servers).
 const LAT_CAP: usize = 4096;
 
-#[derive(Default)]
 struct TierStats {
     requests: u64,
     lat_us: Vec<u64>,
+    /// Mirror in the process-wide registry (`obs::metrics`), labelled
+    /// by tier; the handle is cached here so the hot path stays one
+    /// relaxed atomic op.
+    global: metrics::Counter,
 }
 
 impl TierStats {
+    fn new(tier: &str) -> TierStats {
+        TierStats {
+            requests: 0,
+            lat_us: Vec::new(),
+            global: metrics::counter(&format!(
+                "pallas_serve_requests_total{{tier=\"{tier}\"}}"
+            )),
+        }
+    }
+
     fn record(&mut self, us: u64) {
         if self.lat_us.len() < LAT_CAP {
             self.lat_us.push(us);
@@ -112,6 +126,7 @@ impl TierStats {
             self.lat_us[self.requests as usize % LAT_CAP] = us;
         }
         self.requests += 1;
+        self.global.inc();
     }
 }
 
@@ -129,17 +144,23 @@ struct Metrics {
 impl Metrics {
     fn record_infer(&self, tier: &str, lat_us: u64) {
         let mut tiers = self.tiers.lock().unwrap();
-        tiers.entry(tier.to_string()).or_default().record(lat_us);
+        tiers
+            .entry(tier.to_string())
+            .or_insert_with(|| TierStats::new(tier))
+            .record(lat_us);
     }
 
     fn note_batch(&self, occupancy: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(occupancy as u64, Ordering::Relaxed);
         self.max_batch.fetch_max(occupancy as u64, Ordering::Relaxed);
+        metrics::counter("pallas_serve_batches_total").inc();
+        metrics::counter("pallas_serve_batched_requests_total").add(occupancy as u64);
     }
 
     fn note_errors(&self, n: usize) {
         self.request_errors.fetch_add(n as u64, Ordering::Relaxed);
+        metrics::counter("pallas_serve_request_errors_total").add(n as u64);
     }
 
     /// (requests, p50_us, p99_us) per tier, sorted by tier name.
@@ -281,6 +302,7 @@ fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
         }
         if let Ok(stream) = stream {
             shared.metrics.connections.fetch_add(1, Ordering::Relaxed);
+            metrics::counter("pallas_serve_connections_total").inc();
             let sh = shared.clone();
             std::thread::spawn(move || handle_conn(sh, stream));
         }
@@ -346,6 +368,9 @@ fn handle_request(shared: &Arc<Shared>, line: &str, tx: &Sender<String>) {
     match req {
         Request::Stats { id } => {
             send(tx, Response::Stats { id, stats: stats_snapshot(shared) });
+        }
+        Request::Metrics { id } => {
+            send(tx, Response::Metrics { id, metrics: metrics::snapshot() });
         }
         Request::Reload { id } => {
             let resp = match shared.registry.reload() {
@@ -573,7 +598,7 @@ mod tests {
 
     #[test]
     fn tier_stats_ring_overwrites_past_cap() {
-        let mut t = TierStats::default();
+        let mut t = TierStats::new("ring_test");
         for i in 0..(LAT_CAP as u64 + 10) {
             t.record(i);
         }

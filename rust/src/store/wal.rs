@@ -51,12 +51,30 @@ use std::sync::Mutex;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::RunRecord;
+use crate::obs::{log as obs_log, metrics};
 use crate::util::Json;
 
 use super::fingerprint::Fingerprint;
 
 const WAL_FILE: &str = "wal.jsonl";
 const LOCK_FILE: &str = "LOCK";
+
+/// Registry handles cached once per process (registration takes a
+/// lock; the per-append path is then a single relaxed atomic add).
+struct WalMetrics {
+    appends: metrics::Counter,
+    repairs: metrics::Counter,
+    truncated_bytes: metrics::Counter,
+}
+
+fn wal_metrics() -> &'static WalMetrics {
+    static M: std::sync::OnceLock<WalMetrics> = std::sync::OnceLock::new();
+    M.get_or_init(|| WalMetrics {
+        appends: metrics::counter("pallas_wal_appends_total"),
+        repairs: metrics::counter("pallas_wal_repairs_total"),
+        truncated_bytes: metrics::counter("pallas_wal_truncated_bytes_total"),
+    })
+}
 
 /// RAII half of the advisory single-writer guard: the lock file is
 /// removed when the owning [`Store`] drops (or when `open` fails after
@@ -262,11 +280,25 @@ impl Store {
                 }
             }
             if writable && keep_bytes < text.len() as u64 {
+                let torn = text.len() as u64 - keep_bytes;
                 let f = OpenOptions::new()
                     .write(true)
                     .open(&wal_path)
                     .with_context(|| format!("repairing {}", wal_path.display()))?;
                 f.set_len(keep_bytes).context("truncating torn WAL tail")?;
+                // Recovery used to be silent; operators watching
+                // corruption trends need the byte count (satellite of
+                // the observability fabric — see DESIGN.md §13).
+                wal_metrics().repairs.inc();
+                wal_metrics().truncated_bytes.add(torn);
+                obs_log::warn(
+                    "store.wal",
+                    "repaired torn WAL tail",
+                    &[
+                        ("path", Json::Str(wal_path.display().to_string())),
+                        ("truncated_bytes", Json::Num(torn as f64)),
+                    ],
+                );
             }
         }
         let file = if writable {
@@ -365,6 +397,7 @@ impl Store {
         inner.end += line.len() as u64;
         inner.map.insert(fp, rec.clone());
         inner.lines += 1;
+        wal_metrics().appends.inc();
         Ok(true)
     }
 

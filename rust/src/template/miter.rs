@@ -415,6 +415,12 @@ impl SharedMiter {
     pub fn preprocess(&mut self) {
         self.b.solver.preprocess();
     }
+
+    /// Snapshot of the underlying solver's cumulative statistics, for
+    /// observe-only per-cell effort deltas (`sat::Stats::delta_since`).
+    pub fn stats(&self) -> crate::sat::Stats {
+        self.b.solver.stats.clone()
+    }
 }
 
 /// The nonshared (original XPAT) miter: `t` products *per output*, each
@@ -539,6 +545,11 @@ impl NonsharedMiter {
     /// Prototype-time preprocessing — see [`SharedMiter::preprocess`].
     pub fn preprocess(&mut self) {
         self.b.solver.preprocess();
+    }
+
+    /// Solver-statistics snapshot — see [`SharedMiter::stats`].
+    pub fn stats(&self) -> crate::sat::Stats {
+        self.b.solver.stats.clone()
     }
 }
 

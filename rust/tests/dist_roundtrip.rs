@@ -51,6 +51,7 @@ fn dist_cfg() -> DistConfig {
         addr: "127.0.0.1:0".to_string(),
         lease_ms: 60_000,
         wait_ms: 25,
+        ..Default::default()
     }
 }
 
@@ -168,6 +169,7 @@ fn spawn_workers<'s, 'e>(
                     name: format!("w{i}"),
                     cell_workers: None,
                     max_jobs: None,
+                    ..Default::default()
                 })
                 .unwrap()
             })

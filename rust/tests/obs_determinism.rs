@@ -1,0 +1,314 @@
+//! The observability fabric's core contract: instrumentation is
+//! observe-only. A traced sweep must produce records, fig5 CSV and WAL
+//! bytes identical to an untraced one (modulo the `elapsed_ms`/`cached`
+//! provenance pair, which reports wall clocks) — at 1 and 4 cell
+//! workers — and a traced distributed run's merged multi-node trace
+//! must validate and account for every committed job exactly once.
+//! Also pins the serve `metrics` verb: the snapshot parses as
+//! `util::Json` and its counters increase monotonically. Part of the
+//! tier-1 test path (plain `cargo test`).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use sxpat::circuit::generators::benchmark_by_name;
+use sxpat::coordinator::{run_sweep_obs, run_sweep_stored, Method, RunRecord, SweepPlan};
+use sxpat::dist::{run_worker, Coordinator, DistConfig, WorkerConfig};
+use sxpat::obs::{trace, Obs};
+use sxpat::report::fig5_csv;
+use sxpat::search::SearchConfig;
+use sxpat::serve::protocol::{parse_response, render_control_request, render_infer_request};
+use sxpat::serve::{parse_tiers, serving_mlp, Registry, ServeConfig, Server};
+use sxpat::store::Store;
+use sxpat::util::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("sxpat_obs_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn tiny_plan(cell_workers: usize) -> SweepPlan {
+    SweepPlan {
+        benches: vec![benchmark_by_name("adder_i4").unwrap()],
+        methods: vec![Method::Shared, Method::Muscat],
+        ets: Some(vec![1, 2]),
+        search: SearchConfig {
+            pool: 5,
+            solutions_per_cell: 1,
+            max_sat_cells: 1,
+            conflict_budget: Some(20_000),
+            time_budget_ms: 20_000,
+            cell_workers,
+            ..Default::default()
+        },
+        workers: 1,
+    }
+}
+
+/// Everything that must agree between a traced and an untraced run
+/// (all fields except the wall-clock `elapsed_ms`).
+fn result_key(r: &RunRecord) -> impl PartialEq + std::fmt::Debug {
+    (
+        r.bench,
+        r.method,
+        r.et,
+        r.area.to_bits(),
+        r.max_err,
+        r.mean_err.to_bits(),
+        r.proxy,
+        r.values.clone(),
+        r.all_points.len(),
+        r.cached,
+        r.error.clone(),
+    )
+}
+
+/// The WAL with every record's `elapsed_ms` zeroed — the only field
+/// two runs of the same jobs may legitimately differ in.
+fn normalized_wal(dir: &Path) -> Vec<String> {
+    let text = std::fs::read_to_string(dir.join("wal.jsonl")).unwrap();
+    text.lines()
+        .map(|l| {
+            let j = Json::parse(l).unwrap();
+            let fp = j.get("fp").and_then(Json::as_str).unwrap().to_string();
+            let mut rec = RunRecord::from_json(j.get("record").unwrap()).unwrap();
+            rec.elapsed_ms = 0;
+            let mut m = BTreeMap::new();
+            m.insert("fp".to_string(), Json::Str(fp));
+            m.insert("record".to_string(), rec.to_json());
+            Json::Obj(m).render()
+        })
+        .collect()
+}
+
+/// The tentpole invariant: with tracing ON, the sweep's outputs are
+/// byte-identical to tracing OFF — records, fig5 CSV, and the WAL —
+/// at both 1 and 4 cell workers. The trace itself must be non-trivial
+/// and pass `trace --check`'s validation.
+#[test]
+fn traced_sweep_outputs_match_untraced_baseline() {
+    for cell_workers in [1usize, 4] {
+        let plan = tiny_plan(cell_workers);
+
+        let base_dir = tmp_dir(&format!("base_cw{cell_workers}"));
+        let base = {
+            let store = Store::open(&base_dir).unwrap();
+            run_sweep_stored(&plan, Some(&store))
+        };
+        assert!(base.iter().all(|r| r.error.is_none() && !r.cached));
+
+        let traced_dir = tmp_dir(&format!("traced_cw{cell_workers}"));
+        let trace_path = traced_dir.join("sweep.trace.jsonl");
+        let traced = {
+            let store = Store::open(&traced_dir).unwrap();
+            let obs = Obs::to_file(&trace_path, "sweep");
+            let records = run_sweep_obs(&plan, Some(&store), &obs);
+            obs.flush().unwrap();
+            records
+        };
+
+        // Record-set equality, modulo the wall clock.
+        assert_eq!(base.len(), traced.len());
+        for (a, b) in base.iter().zip(&traced) {
+            assert_eq!(result_key(a), result_key(b), "cell_workers={cell_workers}");
+        }
+        // fig5 CSV byte-identical (both runs are fresh: cached=false).
+        assert_eq!(fig5_csv(&base), fig5_csv(&traced));
+        // WAL byte-identical modulo elapsed_ms, including line order.
+        assert_eq!(normalized_wal(&base_dir), normalized_wal(&traced_dir));
+
+        // The trace is real: it loads, validates, and contains the
+        // per-job and per-cell solve spans.
+        let events = trace::load(&trace_path).unwrap();
+        let report = trace::check(&events).unwrap();
+        assert!(report.events > 0);
+        assert!(report.spans > 0);
+        assert_eq!(report.nodes, vec!["sweep".to_string()]);
+        assert!(events.iter().any(|e| e.kind == "span_end" && e.name == "sweep.job"));
+        assert!(events.iter().any(|e| e.kind == "span_end" && e.name == "sweep.cell"));
+        // Cell spans fold solver-effort deltas (the SHARED jobs hit SAT).
+        assert!(events
+            .iter()
+            .filter(|e| e.kind == "span_end" && e.name == "sweep.cell")
+            .any(|e| e.fields.contains_key("conflicts") && e.fields.contains_key("status")));
+
+        std::fs::remove_dir_all(&base_dir).unwrap();
+        std::fs::remove_dir_all(&traced_dir).unwrap();
+    }
+}
+
+/// A traced 2-worker distributed run: results still match the
+/// untraced local baseline, and the merged coordinator + worker trace
+/// validates with every committed job accounted for exactly once.
+#[test]
+fn traced_distributed_run_merges_and_accounts_every_commit_once() {
+    let plan = tiny_plan(1);
+
+    let base_dir = tmp_dir("dbase");
+    let base = {
+        let store = Store::open(&base_dir).unwrap();
+        run_sweep_stored(&plan, Some(&store))
+    };
+
+    let dist_dir = tmp_dir("dtraced");
+    let coord_trace = dist_dir.join("coord.trace.jsonl");
+    let worker_traces: Vec<PathBuf> =
+        (0..2).map(|i| dist_dir.join(format!("w{i}.trace.jsonl"))).collect();
+
+    let store = Store::open(&dist_dir).unwrap();
+    let cfg = DistConfig {
+        addr: "127.0.0.1:0".to_string(),
+        lease_ms: 60_000,
+        wait_ms: 25,
+        obs: Obs::to_file(&coord_trace, "coord"),
+    };
+    let records = std::thread::scope(|s| {
+        let coord = Coordinator::bind(&plan, Some(&store), &cfg).unwrap();
+        let addr = coord.addr();
+        let run = s.spawn(move || coord.run().unwrap());
+        let workers: Vec<_> = worker_traces
+            .iter()
+            .enumerate()
+            .map(|(i, path)| {
+                let cfg = WorkerConfig {
+                    addr: addr.to_string(),
+                    name: format!("w{i}"),
+                    cell_workers: None,
+                    max_jobs: None,
+                    obs: Obs::to_file(path, &format!("w{i}")),
+                };
+                s.spawn(move || run_worker(&cfg).unwrap())
+            })
+            .collect();
+        let records = run.join().unwrap();
+        for w in workers {
+            let _ = w.join().unwrap();
+        }
+        records
+    });
+
+    // Observe-only under distribution too: the traced distributed run
+    // matches the untraced local baseline byte for byte (modulo clock).
+    assert_eq!(records.len(), plan.n_jobs());
+    for (a, b) in base.iter().zip(&records) {
+        assert_eq!(a.bench, b.bench);
+        assert_eq!(a.area.to_bits(), b.area.to_bits());
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.error, b.error);
+    }
+    assert_eq!(normalized_wal(&base_dir), normalized_wal(&dist_dir));
+
+    // Merge all three node dumps: the multi-node view must validate,
+    // span worker solve spans, and commit every job exactly once.
+    let mut events = trace::load(&coord_trace).unwrap();
+    for path in &worker_traces {
+        events.extend(trace::load(path).unwrap());
+    }
+    let report = trace::check(&events).unwrap();
+    assert_eq!(report.nodes.len(), 3, "coord + 2 workers");
+    assert!(events.iter().any(|e| e.kind == "span_end" && e.name == "dist.job"));
+
+    let commits = trace::commit_counts(&events);
+    assert_eq!(commits.len(), plan.n_jobs(), "every job committed");
+    assert!(
+        commits.values().all(|&c| c == 1),
+        "each job exactly once: {commits:?}"
+    );
+    // Job indices are dense 0..n_jobs.
+    let jobs: Vec<u64> = commits.keys().copied().collect();
+    assert_eq!(jobs, (0..plan.n_jobs() as u64).collect::<Vec<_>>());
+
+    drop(store);
+    std::fs::remove_dir_all(&base_dir).unwrap();
+    std::fs::remove_dir_all(&dist_dir).unwrap();
+}
+
+fn counter_value(metrics: &Json, name: &str) -> u64 {
+    metrics
+        .get("counters")
+        .and_then(|c| c.get(name))
+        .and_then(Json::as_u64)
+        .unwrap_or(0)
+}
+
+/// The serve `metrics` verb: the response line is valid `util::Json`,
+/// the registry snapshot has the counters/gauges shape, and counters
+/// increase monotonically across requests.
+#[test]
+fn serve_metrics_snapshot_is_valid_json_and_monotonic() {
+    // No store: every tier serves the exact multiplier — cheap, and
+    // the metrics plumbing is identical.
+    let registry = Registry::open(
+        "mult_i8",
+        parse_tiers("gold=0,silver=4").unwrap(),
+        None,
+        std::sync::Arc::new(serving_mlp()),
+        true,
+    )
+    .unwrap();
+    let server = Server::start(
+        &ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            batch: 4,
+            batch_wait_ms: 2,
+            queue_cap: 64,
+        },
+        registry,
+    )
+    .unwrap();
+
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut roundtrip = |req: &str| -> String {
+        writer.write_all(req.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "server closed the connection");
+        line.trim().to_string()
+    };
+
+    let snap = |line: &str| -> Json {
+        // The whole response line must parse as our own Json.
+        let j = Json::parse(line).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        let m = j.get("metrics").unwrap().clone();
+        assert!(m.get("counters").is_some(), "snapshot has counters: {line}");
+        assert!(m.get("gauges").is_some(), "snapshot has gauges: {line}");
+        m
+    };
+
+    let first = snap(&roundtrip(&render_control_request("metrics", 1)));
+    let gold_before = counter_value(&first, "pallas_serve_requests_total{tier=\"gold\"}");
+    assert!(
+        counter_value(&first, "pallas_serve_connections_total") >= 1,
+        "this very connection is counted"
+    );
+
+    let pixels: Vec<u8> = (0..64).map(|i| (i % 16) as u8).collect();
+    for k in 0..3u64 {
+        let resp =
+            parse_response(&roundtrip(&render_infer_request(100 + k, "gold", &pixels)))
+                .unwrap();
+        assert!(resp.ok, "infer failed: {:?}", resp.error);
+    }
+
+    let second = snap(&roundtrip(&render_control_request("metrics", 2)));
+    let gold_after = counter_value(&second, "pallas_serve_requests_total{tier=\"gold\"}");
+    assert!(
+        gold_after >= gold_before + 3,
+        "gold tier counter is monotonic: {gold_before} -> {gold_after}"
+    );
+
+    let _ = roundtrip(&render_control_request("shutdown", 3));
+    server.join();
+}
