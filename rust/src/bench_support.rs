@@ -1,9 +1,14 @@
 //! Minimal bench harness (criterion is not vendored in this offline
-//! environment): warmup + timed iterations with mean / stddev / min
-//! reporting, and a black_box to defeat const-folding.
+//! environment): warmup + timed iterations with mean / stddev / min /
+//! quantile reporting, and a black_box to defeat const-folding.
+//! Per-iteration samples go into a fixed-size log2-bucketed histogram
+//! ([`obs::hist`](crate::obs::hist)) plus exact running sums, so the
+//! harness holds no per-iteration `Vec` however many iterations run.
 
 use std::hint::black_box as std_black_box;
 use std::time::Instant;
+
+use crate::obs::Histogram;
 
 pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
@@ -18,13 +23,25 @@ pub struct BenchStats {
     pub stddev_ms: f64,
     pub min_ms: f64,
     pub max_ms: f64,
+    /// Median per-iteration time (histogram quantile, µs resolution).
+    pub p50_ms: f64,
+    /// Tail per-iteration time (histogram quantile, µs resolution).
+    pub p99_ms: f64,
 }
 
 impl BenchStats {
     pub fn report(&self) {
         println!(
-            "bench {:<44} {:>8.3} ms/iter (±{:.3}, min {:.3}, max {:.3}, n={})",
-            self.name, self.mean_ms, self.stddev_ms, self.min_ms, self.max_ms, self.iters
+            "bench {:<44} {:>8.3} ms/iter (±{:.3}, min {:.3}, p50 {:.3}, \
+             p99 {:.3}, max {:.3}, n={})",
+            self.name,
+            self.mean_ms,
+            self.stddev_ms,
+            self.min_ms,
+            self.p50_ms,
+            self.p99_ms,
+            self.max_ms,
+            self.iters
         );
     }
 }
@@ -34,22 +51,34 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     for _ in 0..warmup {
         f();
     }
-    let mut times = Vec::with_capacity(iters);
+    // Exact running sums for mean/stddev/min/max; the histogram serves
+    // the quantiles. Both are O(1) in the iteration count.
+    let hist = Histogram::new();
+    let (mut sum, mut sum_sq) = (0.0f64, 0.0f64);
+    let (mut min_ms, mut max_ms) = (f64::INFINITY, 0.0f64);
     for _ in 0..iters {
         let t = Instant::now();
         f();
-        times.push(t.elapsed().as_secs_f64() * 1e3);
+        let us = t.elapsed().as_micros() as u64;
+        let ms = us as f64 / 1e3;
+        hist.record(us);
+        sum += ms;
+        sum_sq += ms * ms;
+        min_ms = min_ms.min(ms);
+        max_ms = max_ms.max(ms);
     }
-    let mean = times.iter().sum::<f64>() / times.len() as f64;
-    let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>()
-        / times.len().max(1) as f64;
+    let n = iters.max(1) as f64;
+    let mean = sum / n;
+    let var = (sum_sq / n - mean * mean).max(0.0);
     let stats = BenchStats {
         name: name.to_string(),
         iters,
         mean_ms: mean,
         stddev_ms: var.sqrt(),
-        min_ms: times.iter().cloned().fold(f64::INFINITY, f64::min),
-        max_ms: times.iter().cloned().fold(0.0, f64::max),
+        min_ms: if min_ms.is_finite() { min_ms } else { 0.0 },
+        max_ms,
+        p50_ms: hist.quantile(0.50) as f64 / 1e3,
+        p99_ms: hist.quantile(0.99) as f64 / 1e3,
     };
     stats.report();
     stats
@@ -90,6 +119,8 @@ impl JsonReport {
     pub fn push_stats(&mut self, prefix: &str, stats: &BenchStats) {
         self.push(&format!("{prefix}.mean_ms"), stats.mean_ms);
         self.push(&format!("{prefix}.min_ms"), stats.min_ms);
+        self.push(&format!("{prefix}.p50_ms"), stats.p50_ms);
+        self.push(&format!("{prefix}.p99_ms"), stats.p99_ms);
         self.push(&format!("{prefix}.iters"), stats.iters as f64);
     }
 

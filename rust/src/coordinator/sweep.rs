@@ -188,7 +188,7 @@ pub fn run_sweep_obs(plan: &SweepPlan, store: Option<&Store>, obs: &Obs) -> Vec<
                 ("et", Json::Num(job.et as f64)),
             ],
         );
-        let rec = run_job_obs(job, &protos, &probe.exact, obs);
+        let rec = run_job_obs(job, &protos, &probe.exact, &obs.child_of(&span));
         span.field("elapsed_ms", Json::Num(rec.elapsed_ms as f64));
         span.field("solved", Json::Bool(rec.area.is_finite()));
         span.finish();

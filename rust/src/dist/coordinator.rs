@@ -37,7 +37,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::coordinator::{probe_store, Job, RunRecord, SweepPlan};
-use crate::obs::{metrics, Obs};
+use crate::obs::{metrics, Obs, Span, TraceCtx};
 use crate::store::Store;
 use crate::util::jsonl::{self, LineRead};
 use crate::util::Json;
@@ -137,7 +137,35 @@ struct Shared<'a> {
     lease_ms: u64,
     wait_ms: u64,
     obs: Obs,
+    /// Open `dist.lease` span per leased job (tracing only; empty when
+    /// untraced). A span opens at grant and ends — with a `status`
+    /// field saying how — on commit, rejection, expiry, connection
+    /// death, supersession by a re-grant, or teardown. Its [`TraceCtx`]
+    /// rides the `lease` verb so the worker's `dist.job` span nests
+    /// under it across machines.
+    lease_spans: Mutex<std::collections::HashMap<usize, Span>>,
     mx: CoordMetrics,
+}
+
+/// End the open lease span for `job` (if traced) with a terminal
+/// `status`, optionally recording the worker job-span identity the
+/// `result` verb carried back.
+fn end_lease_span(
+    shared: &Shared<'_>,
+    job: usize,
+    status: &str,
+    worker: Option<&TraceCtx>,
+) {
+    if !shared.obs.enabled() {
+        return;
+    }
+    if let Some(mut span) = shared.lease_spans.lock().unwrap().remove(&job) {
+        span.field("status", Json::Str(status.to_string()));
+        if let Some(ctx) = worker {
+            span.field("worker_node", Json::Str(ctx.node.clone()));
+            span.field("worker_span", Json::Num(ctx.span as f64));
+        }
+    }
 }
 
 impl<'a> Coordinator<'a> {
@@ -192,6 +220,7 @@ impl<'a> Coordinator<'a> {
             lease_ms,
             wait_ms,
             obs,
+            lease_spans: Mutex::new(std::collections::HashMap::new()),
             mx: CoordMetrics::new(),
         };
         shared.obs.info(
@@ -250,6 +279,12 @@ impl<'a> Coordinator<'a> {
             let _ = TcpStream::connect(addr);
         });
 
+        // Teardown: any lease span still open (e.g. a job resolved by
+        // a different worker while this lease was in flight) ends now
+        // so the trace stays balanced.
+        for (_, mut span) in shared.lease_spans.lock().unwrap().drain() {
+            span.field("status", Json::Str("shutdown".to_string()));
+        }
         if let Err(e) = shared.obs.flush() {
             shared.obs.warn(
                 "dist.coordinator",
@@ -376,6 +411,9 @@ fn reaper(shared: &Shared<'_>) {
         let mut g = shared.sched.lock().unwrap();
         let expired = g.sched.expire(Instant::now());
         if !expired.is_empty() {
+            for &j in &expired {
+                end_lease_span(shared, j, "expired", None);
+            }
             shared.mx.leases_expired.add(expired.len() as u64);
             shared.mx.jobs_requeued.add(expired.len() as u64);
             shared.obs.warn(
@@ -428,6 +466,9 @@ fn handle_conn(shared: &Shared<'_>, stream: TcpStream, conn_id: u64) {
     shared.conns.lock().unwrap().remove(&conn_id);
     let lost = shared.sched.lock().unwrap().sched.fail_conn(conn_id);
     if !lost.is_empty() {
+        for &j in &lost {
+            end_lease_span(shared, j, "conn_died", None);
+        }
         shared.mx.jobs_requeued.add(lost.len() as u64);
         shared.obs.warn(
             "dist.coordinator",
@@ -467,12 +508,33 @@ fn handle_msg(
                 }
                 if let Some(grant) = g.sched.grant(conn_id, Instant::now()) {
                     shared.mx.leases_granted.inc();
+                    let trace_ctx = if shared.obs.enabled() {
+                        // Re-granting (after expiry/rejection) ends the
+                        // stale span first: one open lease span per job.
+                        end_lease_span(shared, grant.idx, "superseded", None);
+                        let span = shared.obs.span(
+                            "dist.lease",
+                            &[
+                                ("job", Json::Num(grant.idx as f64)),
+                                ("bench", Json::Str(grant.job.bench.name.to_string())),
+                                ("method", Json::Str(grant.job.method.name().to_string())),
+                                ("et", Json::Num(grant.job.et as f64)),
+                                ("conn", Json::Num(conn_id as f64)),
+                            ],
+                        );
+                        let ctx = span.ctx();
+                        shared.lease_spans.lock().unwrap().insert(grant.idx, span);
+                        ctx
+                    } else {
+                        None
+                    };
                     return CoordMsg::Lease {
                         job: grant.idx,
                         bench: grant.job.bench.name.to_string(),
                         method: grant.job.method,
                         et: grant.job.et,
                         search: grant.job.search,
+                        trace_ctx,
                     };
                 }
                 if !g.exhausted && g.sched.needs_fresh() {
@@ -484,10 +546,11 @@ fn handle_msg(
                 return CoordMsg::Wait { ms: shared.wait_ms };
             }
         }
-        WorkerMsg::Result { job, record } => {
+        WorkerMsg::Result { job, record, trace_ctx } => {
             let mut g = shared.sched.lock().unwrap();
             match g.sched.submit(job, record, conn_id) {
                 Submission::Fresh(events) => {
+                    end_lease_span(shared, job, "committed", trace_ctx.as_ref());
                     persist(shared, &events);
                     shared.mx.results_committed.inc();
                     shared.mx.frontier_lag.set(g.sched.frontier_lag() as u64);
@@ -497,6 +560,8 @@ fn handle_msg(
                     CoordMsg::Committed { job, fresh: true }
                 }
                 Submission::Stale => {
+                    // A stale duplicate: the live lease span (if any)
+                    // belongs to whoever holds the job now — untouched.
                     shared.mx.results_stale.inc();
                     CoordMsg::Committed { job, fresh: false }
                 }
@@ -518,11 +583,13 @@ fn handle_msg(
             let mut g = shared.sched.lock().unwrap();
             match g.sched.reject(job, conn_id, &reason) {
                 Rejection::Requeued => {
+                    end_lease_span(shared, job, "rejected", None);
                     shared.mx.jobs_requeued.inc();
                     CoordMsg::Requeued { job }
                 }
                 Rejection::Stale => CoordMsg::Requeued { job },
                 Rejection::FailedOut(events) => {
+                    end_lease_span(shared, job, "failed_out", None);
                     persist(shared, &events);
                     shared.mx.frontier_lag.set(g.sched.frontier_lag() as u64);
                     shared.obs.warn(

@@ -32,10 +32,19 @@
 //!
 //! Requests and responses are rendered with `Json::render` (sorted
 //! keys, ASCII), so every message is byte-deterministic.
+//!
+//! **Trace context.** When both sides trace, `lease` carries the
+//! coordinator's lease-span identity as `trace_ctx` (`{node, span}`)
+//! and `result` carries the worker's `dist.job` span identity back —
+//! so a merged trace links each worker solve under the lease that
+//! caused it, one causal tree per job across machines. The field is
+//! optional and additive (an untraced peer omits it; an old peer
+//! ignores it), so `PROTO_VERSION` stays unchanged.
 
 use std::collections::BTreeMap;
 
 use crate::coordinator::{Method, RunRecord};
+use crate::obs::TraceCtx;
 use crate::search::SearchConfig;
 use crate::util::jsonl;
 use crate::util::Json;
@@ -50,7 +59,7 @@ pub const PROTO_VERSION: u64 = 1;
 pub enum WorkerMsg {
     Hello { name: String, proto: u64 },
     LeaseRequest,
-    Result { job: usize, record: RunRecord },
+    Result { job: usize, record: RunRecord, trace_ctx: Option<TraceCtx> },
     Reject { job: usize, reason: String },
 }
 
@@ -58,12 +67,30 @@ pub enum WorkerMsg {
 #[derive(Debug, Clone, PartialEq)]
 pub enum CoordMsg {
     Welcome { jobs: usize, lease_ms: u64 },
-    Lease { job: usize, bench: String, method: Method, et: u64, search: SearchConfig },
+    Lease {
+        job: usize,
+        bench: String,
+        method: Method,
+        et: u64,
+        search: SearchConfig,
+        trace_ctx: Option<TraceCtx>,
+    },
     Wait { ms: u64 },
     Done,
     Committed { job: usize, fresh: bool },
     Requeued { job: usize },
     Error { error: String },
+}
+
+/// Parse an optional `trace_ctx` field: absent is `None`; present but
+/// malformed is an error (a peer that sends one must send it right).
+fn parse_trace_ctx(j: &Json, ty: &str) -> Result<Option<TraceCtx>, String> {
+    match j.get("trace_ctx") {
+        None => Ok(None),
+        Some(ctx) => TraceCtx::from_json(ctx)
+            .map(Some)
+            .map_err(|e| format!("{ty}: bad trace_ctx: {e:#}")),
+    }
 }
 
 impl WorkerMsg {
@@ -78,10 +105,13 @@ impl WorkerMsg {
             WorkerMsg::LeaseRequest => {
                 m.insert("type".to_string(), Json::Str("lease_request".to_string()));
             }
-            WorkerMsg::Result { job, record } => {
+            WorkerMsg::Result { job, record, trace_ctx } => {
                 m.insert("type".to_string(), Json::Str("result".to_string()));
                 m.insert("job".to_string(), Json::Num(*job as f64));
                 m.insert("record".to_string(), record.to_json());
+                if let Some(ctx) = trace_ctx {
+                    m.insert("trace_ctx".to_string(), ctx.to_json());
+                }
             }
             WorkerMsg::Reject { job, reason } => {
                 m.insert("type".to_string(), Json::Str("reject".to_string()));
@@ -122,6 +152,7 @@ impl WorkerMsg {
                     j.get("record").ok_or_else(|| "result: missing \"record\"".to_string())?,
                 )
                 .map_err(|e| format!("result: bad record: {e:#}"))?,
+                trace_ctx: parse_trace_ctx(&j, ty)?,
             }),
             "reject" => Ok(WorkerMsg::Reject {
                 job: job()?,
@@ -146,13 +177,16 @@ impl CoordMsg {
                 m.insert("jobs".to_string(), Json::Num(*jobs as f64));
                 m.insert("lease_ms".to_string(), Json::Num(*lease_ms as f64));
             }
-            CoordMsg::Lease { job, bench, method, et, search } => {
+            CoordMsg::Lease { job, bench, method, et, search, trace_ctx } => {
                 m.insert("type".to_string(), Json::Str("lease".to_string()));
                 m.insert("job".to_string(), Json::Num(*job as f64));
                 m.insert("bench".to_string(), Json::Str(bench.clone()));
                 m.insert("method".to_string(), Json::Str(method.name().to_string()));
                 m.insert("et".to_string(), Json::Num(*et as f64));
                 m.insert("search".to_string(), search.to_json());
+                if let Some(ctx) = trace_ctx {
+                    m.insert("trace_ctx".to_string(), ctx.to_json());
+                }
             }
             CoordMsg::Wait { ms } => {
                 m.insert("type".to_string(), Json::Str("wait".to_string()));
@@ -226,6 +260,7 @@ impl CoordMsg {
                     j.get("search").ok_or_else(|| "lease: missing \"search\"".to_string())?,
                 )
                 .map_err(|e| format!("lease: {e:#}"))?,
+                trace_ctx: parse_trace_ctx(&j, ty)?,
             }),
             "wait" => Ok(CoordMsg::Wait { ms: num("ms")? }),
             "done" => Ok(CoordMsg::Done),
@@ -265,7 +300,12 @@ mod tests {
         let msgs = [
             WorkerMsg::Hello { name: "w1".to_string(), proto: PROTO_VERSION },
             WorkerMsg::LeaseRequest,
-            WorkerMsg::Result { job: 3, record: record() },
+            WorkerMsg::Result { job: 3, record: record(), trace_ctx: None },
+            WorkerMsg::Result {
+                job: 4,
+                record: record(),
+                trace_ctx: Some(TraceCtx { node: "w1".to_string(), span: 17 }),
+            },
             WorkerMsg::Reject { job: 9, reason: "unknown benchmark".to_string() },
         ];
         for m in msgs {
@@ -285,6 +325,15 @@ mod tests {
                 method: Method::Xpat,
                 et: 2,
                 search: SearchConfig::default(),
+                trace_ctx: None,
+            },
+            CoordMsg::Lease {
+                job: 5,
+                bench: "adder_i4".to_string(),
+                method: Method::Shared,
+                et: 4,
+                search: SearchConfig::default(),
+                trace_ctx: Some(TraceCtx { node: "coord".to_string(), span: 42 }),
             },
             CoordMsg::Wait { ms: 500 },
             CoordMsg::Done,
@@ -306,6 +355,26 @@ mod tests {
             CoordMsg::Error { error } => assert!(error.contains("no such job")),
             other => panic!("wrong message: {other:?}"),
         }
+    }
+
+    #[test]
+    fn malformed_trace_ctx_is_an_error_but_absent_is_fine() {
+        // Untraced peers omit the field entirely: parses to None.
+        let lease = CoordMsg::Lease {
+            job: 1,
+            bench: "adder_i4".to_string(),
+            method: Method::Shared,
+            et: 1,
+            search: SearchConfig::default(),
+            trace_ctx: None,
+        };
+        assert!(!lease.render().contains("trace_ctx"));
+        // A present-but-malformed trace_ctx is a hard parse error.
+        let bad = lease.render().replace(
+            "\"type\":\"lease\"",
+            "\"trace_ctx\":{\"node\":\"c\"},\"type\":\"lease\"",
+        );
+        assert!(CoordMsg::parse(&bad).unwrap_err().contains("trace_ctx"));
     }
 
     #[test]

@@ -148,7 +148,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerStats> {
             break; // coordinator gone: sweep is over for us
         };
         match resp {
-            CoordMsg::Lease { job: idx, bench, method, et, search } => {
+            CoordMsg::Lease { job: idx, bench, method, et, search, trace_ctx } => {
                 let msg = match benchmark_by_name(&bench) {
                     None => {
                         stats.rejected += 1;
@@ -165,7 +165,15 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerStats> {
                         let job = Job { bench: b, method, et, search };
                         let nl = job.bench.netlist();
                         let exact = TruthTables::simulate(&nl).output_values(&nl);
-                        let mut span = cfg.obs.span(
+                        // Parent this job's span under the
+                        // coordinator's lease span when the lease
+                        // carried a trace context, so the merged trace
+                        // shows one causal tree per job across nodes.
+                        let job_obs = match trace_ctx.as_ref() {
+                            Some(ctx) => cfg.obs.child_of_ctx(ctx),
+                            None => cfg.obs.clone(),
+                        };
+                        let mut span = job_obs.span(
                             "dist.job",
                             &[
                                 ("job", Json::Num(idx as f64)),
@@ -174,16 +182,22 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerStats> {
                                 ("et", Json::Num(job.et as f64)),
                             ],
                         );
+                        let span_ctx = span.ctx();
+                        let inner_obs = job_obs.child_of(&span);
                         let record =
                             catch_unwind(AssertUnwindSafe(|| {
-                                run_job_obs(&job, &protos, &exact, &cfg.obs)
+                                run_job_obs(&job, &protos, &exact, &inner_obs)
                             }))
                             .unwrap_or_else(|p| failed_record(&job, panic_message(p)));
                         span.field("ok", Json::Bool(record.error.is_none()));
                         span.finish();
                         stats.completed += 1;
                         jobs_completed.inc();
-                        let mut msg = WorkerMsg::Result { job: idx, record };
+                        let mut msg = WorkerMsg::Result {
+                            job: idx,
+                            record,
+                            trace_ctx: span_ctx.clone(),
+                        };
                         // A record too large for the wire discipline
                         // would livelock the sweep (oversized line →
                         // dropped connection → requeue → the identical
@@ -205,6 +219,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerStats> {
                             msg = WorkerMsg::Result {
                                 job: idx,
                                 record: failed_record(&job, why),
+                                trace_ctx: span_ctx,
                             };
                         }
                         msg

@@ -12,7 +12,8 @@
 //!   serve      [--store DIR]       QoS-tiered batched inference server (TCP)
 //!   loadgen    [--addr A]          closed-loop load generator for `serve`
 //!   worker     --connect ADDR      distributed-sweep worker node
-//!   trace      FILE... [--top N] [--check]   inspect --trace JSONL dumps
+//!   trace      FILE... [--top N] [--check|--tree|--critical-path|--flame]
+//!                                  inspect --trace JSONL dumps
 //!
 //! `sweep --store DIR` opens the persistent result store in DIR: jobs
 //! already fingerprinted there are served from disk (no SAT search,
@@ -79,14 +80,20 @@
 //! multiplier, folded into the canonical serving MLP, as standalone
 //! dependency-free Rust source (`nn::kernel::CompiledMlp::emit_rust_source`).
 //!
-//! Observability: `sweep --trace FILE` and `worker --trace FILE` dump
-//! structured JSONL events (spans around every cell/probe solve with
-//! folded SAT-effort deltas, dist lease/commit events) to FILE without
-//! perturbing results — the record set stays byte-identical (see
-//! `obs` and DESIGN.md §13). `trace FILE...` renders per-phase
-//! timelines, the top-N slowest spans, and — over merged coordinator +
-//! worker dumps — per-node counts and commit accounting; `trace
-//! --check FILE...` validates schema and span balance, exiting
+//! Observability: `sweep --trace FILE`, `worker --trace FILE`,
+//! `serve --trace FILE` and `loadgen --trace FILE` dump structured
+//! JSONL events (spans around every cell/probe solve with folded
+//! SAT-effort deltas, request/batch/compute spans in the server, dist
+//! lease/commit events) to FILE without perturbing results — the
+//! record set stays byte-identical (see `obs` and DESIGN.md §13).
+//! Spans carry optional `parent` references (within and across
+//! nodes), so merged coordinator + worker dumps form one causal tree
+//! per job. `trace FILE...` renders per-phase timelines, the top-N
+//! slowest spans, and per-node counts and commit accounting; `trace
+//! --tree` renders the causal waterfall with self time,
+//! `--critical-path` the slowest causal chain, `--flame` folded
+//! stacks for inferno/`flamegraph.pl`; `trace --check FILE...`
+//! validates schema, span balance and parent resolution, exiting
 //! non-zero on a malformed trace (the CI contract). `PALLAS_LOG`
 //! filters the leveled stderr logging (e.g. `PALLAS_LOG=debug`,
 //! default `warn`).
@@ -576,15 +583,19 @@ fn worker(args: &Args) -> Result<()> {
 
 /// The `trace` subcommand: load one or more `--trace` JSONL dumps
 /// (several files merge into one multi-node view — e.g. a coordinator
-/// dump plus each worker's), then either validate (`--check`: schema +
-/// span balance, non-zero exit on failure) or render the report
-/// (per-phase timelines, `--top N` slowest spans, per-node counts and
-/// commit accounting).
+/// dump plus each worker's), then either validate (`--check`: schema,
+/// span balance and parent-reference resolution, non-zero exit on
+/// failure) or render one of the views: the default report (per-phase
+/// timelines, `--top N` slowest spans, per-node counts and commit
+/// accounting), `--tree` (causal waterfall with per-span self time),
+/// `--critical-path` (the slowest root-to-leaf causal chain), or
+/// `--flame` (folded stacks of self time for
+/// inferno/`flamegraph.pl`).
 fn trace_cmd(args: &Args) -> Result<()> {
     use sxpat::obs::trace;
     let files = &args.positional[1..];
     if files.is_empty() {
-        bail!("trace FILE... [--top N] [--check]");
+        bail!("trace FILE... [--top N] [--check|--tree|--critical-path|--flame]");
     }
     let mut events = Vec::new();
     for f in files {
@@ -592,10 +603,14 @@ fn trace_cmd(args: &Args) -> Result<()> {
     }
     if args.has_flag("check") {
         let r = trace::check(&events)?;
+        for w in &r.warnings {
+            eprintln!("warning: {w}");
+        }
         println!(
-            "ok: {} event(s), {} span(s), {} node(s) [{}]{}",
+            "ok: {} event(s), {} span(s), {} parented, {} node(s) [{}]{}",
             r.events,
             r.spans,
+            r.parented,
             r.nodes.len(),
             r.nodes.join(", "),
             if r.dropped > 0 {
@@ -607,7 +622,15 @@ fn trace_cmd(args: &Args) -> Result<()> {
         return Ok(());
     }
     let top = args.get_usize_or("top", 10)?;
-    print!("{}", trace::render_report(&events, top));
+    if args.has_flag("tree") {
+        print!("{}", trace::render_tree(&events, top));
+    } else if args.has_flag("critical-path") {
+        print!("{}", trace::render_critical_path(&events, top));
+    } else if args.has_flag("flame") {
+        print!("{}", trace::render_flame(&events));
+    } else {
+        print!("{}", trace::render_report(&events, top));
+    }
     Ok(())
 }
 
@@ -643,12 +666,20 @@ fn serve(args: &Args) -> Result<()> {
             t.source_str()
         );
     }
+    let obs = match args.get("trace") {
+        Some(p) => Obs::to_file(Path::new(p), "serve"),
+        None if args.has_flag("trace") => {
+            bail!("--trace requires a file argument");
+        }
+        None => Obs::off(),
+    };
     let cfg = ServeConfig {
         addr: args.get_or("addr", "127.0.0.1:7878"),
         workers: args.get_usize_or("serve-workers", 4)?,
         batch: args.get_usize_or("batch", 8)?,
         batch_wait_ms: args.get_u64("batch-wait-ms")?.unwrap_or(2),
         queue_cap: args.get_usize_or("queue-cap", 1024)?,
+        obs,
     };
     let server = Server::start(&cfg, registry)?;
     println!(
@@ -678,12 +709,20 @@ fn loadgen(args: &Args) -> Result<()> {
         Some(list) => list.split(',').map(str::trim).map(str::to_string).collect(),
         None => parse_tiers(DEFAULT_TIERS)?.into_iter().map(|t| t.name).collect(),
     };
+    let obs = match args.get("trace") {
+        Some(p) => Obs::to_file(Path::new(p), "loadgen"),
+        None if args.has_flag("trace") => {
+            bail!("--trace requires a file argument");
+        }
+        None => Obs::off(),
+    };
     let cfg = LoadgenConfig {
         addr: args.get_or("addr", "127.0.0.1:7878"),
         clients: args.get_usize_or("clients", 4)?,
         requests_per_client: args.get_usize_or("requests", 200)?,
         tiers,
         seed: args.get_u64("seed")?.unwrap_or(7),
+        obs,
     };
     println!(
         "loadgen: {} clients x {} requests against {} (tiers {})",

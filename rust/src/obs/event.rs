@@ -9,6 +9,20 @@
 //! end event carries `dur_us` measured by the guard, so durations are
 //! exact even if ring overflow drops the begin event.
 //!
+//! **Causality (schema 2).** A span may carry a `parent` field — the
+//! span id of its causal parent — plus, when the parent lives on
+//! another node, a `parent_node` field. Both are ordinary entries in
+//! the `fields` map, so schema-1 traces (no parents) still parse and
+//! old tooling ignores them. A parent is installed on the [`Obs`]
+//! handle ([`Obs::child_of`] / [`Obs::child_of_ctx`]): every span the
+//! derived handle opens nests under it, which is how a whole subtree
+//! (e.g. all `sweep.cell` spans of one job) inherits its parent
+//! without threading ids through call signatures. [`TraceCtx`] is the
+//! wire form of a span's identity — `(node, span)` — carried by the
+//! dist protocol so a worker's `dist.job` span can nest under the
+//! coordinator's lease span across machines. The flush footer reports
+//! `schema: 2` so tooling can tell which vocabulary a trace speaks.
+//!
 //! The recorder never touches the disk while recording: events land in
 //! one of [`STRIPES`] mutex-protected rings selected by thread (so
 //! scan workers don't contend on one lock), and [`Recorder::flush`]
@@ -99,6 +113,41 @@ impl Event {
     }
 }
 
+/// A span's cross-process identity: the recording node's name plus the
+/// span id (unique within that node's sink). This is what crosses the
+/// wire — the dist protocol's `lease`/`result` verbs carry one — so a
+/// span on one machine can parent a span on another.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub node: String,
+    pub span: u64,
+}
+
+impl TraceCtx {
+    /// Render as `{"node":...,"span":...}` (sorted keys, like every
+    /// other wire object).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("node".to_string(), Json::Str(self.node.clone()));
+        m.insert("span".to_string(), Json::Num(self.span as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TraceCtx> {
+        Ok(TraceCtx {
+            node: j
+                .get("node")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("trace_ctx missing \"node\""))?
+                .to_string(),
+            span: j
+                .get("span")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("trace_ctx missing \"span\""))?,
+        })
+    }
+}
+
 /// Where events go. [`Recorder`] is the shipped implementation; tests
 /// can substitute an in-memory sink.
 pub trait EventSink: Send + Sync {
@@ -108,6 +157,12 @@ pub trait EventSink: Send + Sync {
     fn next_span(&self) -> u64;
     /// Persist buffered events (append; callable more than once).
     fn flush(&self) -> Result<()>;
+    /// The node name stamped onto this sink's events — a span's
+    /// [`TraceCtx`] is `(node_name, span id)`. Sinks that don't care
+    /// about cross-node identity keep the default.
+    fn node_name(&self) -> &str {
+        ""
+    }
 }
 
 /// Build a fields map from a literal slice — the call-site idiom is
@@ -137,6 +192,9 @@ pub struct Recorder {
     seq: AtomicU64,
     span_ids: AtomicU64,
     dropped: AtomicU64,
+    /// Registry mirror of [`Recorder::dropped`] so silent ring
+    /// overflow is visible to metrics scrapes, not just flush footers.
+    dropped_gauge: super::metrics::Gauge,
     stripes: Vec<Mutex<VecDeque<Event>>>,
 }
 
@@ -149,6 +207,7 @@ impl Recorder {
             seq: AtomicU64::new(0),
             span_ids: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
+            dropped_gauge: super::metrics::gauge("pallas_obs_ring_dropped"),
             stripes: (0..STRIPES)
                 .map(|_| Mutex::new(VecDeque::new()))
                 .collect(),
@@ -159,7 +218,8 @@ impl Recorder {
         let mut ring = self.stripes[stripe_index()].lock().unwrap();
         if ring.len() >= STRIPE_CAP {
             ring.pop_front();
-            self.dropped.fetch_add(1, Ordering::Relaxed);
+            let d = self.dropped.fetch_add(1, Ordering::Relaxed) + 1;
+            self.dropped_gauge.set(d);
         }
         ring.push_back(ev);
     }
@@ -169,6 +229,11 @@ impl Recorder {
         self.dropped.load(Ordering::Relaxed)
     }
 }
+
+/// Trace schema version reported in the flush footer: 2 added optional
+/// `parent`/`parent_node` span fields. Old (schema-1) traces still
+/// parse — the fields are additive.
+pub const TRACE_SCHEMA: u64 = 2;
 
 impl EventSink for Recorder {
     fn record(&self, kind: &'static str, name: &str, fields: BTreeMap<String, Json>) {
@@ -187,12 +252,19 @@ impl EventSink for Recorder {
         self.span_ids.fetch_add(1, Ordering::Relaxed) + 1
     }
 
+    fn node_name(&self) -> &str {
+        &self.node
+    }
+
     fn flush(&self) -> Result<()> {
         // The footer is an ordinary event so it drains with the rest.
         self.record(
             "meta",
             "obs.flush",
-            fields(&[("dropped", Json::Num(self.dropped() as f64))]),
+            fields(&[
+                ("dropped", Json::Num(self.dropped() as f64)),
+                ("schema", Json::Num(TRACE_SCHEMA as f64)),
+            ]),
         );
         let mut evs: Vec<Event> = Vec::new();
         for stripe in &self.stripes {
@@ -222,6 +294,9 @@ impl EventSink for Recorder {
 #[derive(Clone, Default)]
 pub struct Obs {
     sink: Option<Arc<dyn EventSink>>,
+    /// Default parent for every span this handle opens (see
+    /// [`Obs::child_of`]); `None` opens root spans.
+    parent: Option<TraceCtx>,
 }
 
 impl std::fmt::Debug for Obs {
@@ -234,18 +309,33 @@ impl Obs {
     /// Tracing disabled: logs still reach stderr (env-filtered), but
     /// no events are recorded and `span` guards are inert.
     pub fn off() -> Obs {
-        Obs { sink: None }
+        Obs { sink: None, parent: None }
     }
 
     /// Trace into `path` (JSONL, appended on [`Obs::flush`]); `node`
     /// names this process in merged multi-node views.
     pub fn to_file(path: &Path, node: &str) -> Obs {
-        Obs { sink: Some(Arc::new(Recorder::new(path, node))) }
+        Obs { sink: Some(Arc::new(Recorder::new(path, node))), parent: None }
     }
 
     /// Back the handle with a custom sink (tests).
     pub fn with_sink(sink: Arc<dyn EventSink>) -> Obs {
-        Obs { sink: Some(sink) }
+        Obs { sink: Some(sink), parent: None }
+    }
+
+    /// Derive a handle whose spans nest under `span`: the causal
+    /// threading primitive. A job opens its span, then passes
+    /// `obs.child_of(&span)` down, and every span the callee opens —
+    /// however deep — carries the job span as `parent`. No-op (returns
+    /// a clone) when tracing is off or `span` is inert.
+    pub fn child_of(&self, span: &Span) -> Obs {
+        Obs { sink: self.sink.clone(), parent: span.ctx().or_else(|| self.parent.clone()) }
+    }
+
+    /// As [`Obs::child_of`] for a parent on (possibly) another node —
+    /// the receiving half of a wire-carried [`TraceCtx`].
+    pub fn child_of_ctx(&self, ctx: &TraceCtx) -> Obs {
+        Obs { sink: self.sink.clone(), parent: Some(ctx.clone()) }
     }
 
     /// Whether events are being recorded. Hot paths gate their field
@@ -280,9 +370,16 @@ impl Obs {
                 let id = sink.next_span();
                 let mut f = fields(kvs);
                 f.insert("span".to_string(), Json::Num(id as f64));
+                if let Some(p) = &self.parent {
+                    f.insert("parent".to_string(), Json::Num(p.span as f64));
+                    if p.node != sink.node_name() {
+                        f.insert("parent_node".to_string(), Json::Str(p.node.clone()));
+                    }
+                }
                 sink.record("span_begin", name, f.clone());
                 Span {
                     sink: Some(Arc::clone(sink)),
+                    id,
                     name,
                     start: Instant::now(),
                     fields: f,
@@ -290,6 +387,7 @@ impl Obs {
             }
             None => Span {
                 sink: None,
+                id: 0,
                 name,
                 start: Instant::now(),
                 fields: BTreeMap::new(),
@@ -333,6 +431,7 @@ impl Obs {
 /// RAII span guard returned by [`Obs::span`].
 pub struct Span {
     sink: Option<Arc<dyn EventSink>>,
+    id: u64,
     name: &'static str,
     start: Instant,
     fields: BTreeMap<String, Json>,
@@ -345,6 +444,20 @@ impl Span {
         if self.sink.is_some() {
             self.fields.insert(key.to_string(), value);
         }
+    }
+
+    /// This span's id within its sink; `None` when tracing is off.
+    pub fn id(&self) -> Option<u64> {
+        self.sink.as_ref().map(|_| self.id)
+    }
+
+    /// This span's cross-node identity, ready to carry over a wire or
+    /// install as a default parent ([`Obs::child_of_ctx`]). `None`
+    /// when tracing is off.
+    pub fn ctx(&self) -> Option<TraceCtx> {
+        self.sink
+            .as_ref()
+            .map(|s| TraceCtx { node: s.node_name().to_string(), span: self.id })
     }
 
     /// End the span now (dropping does the same).
@@ -467,7 +580,98 @@ mod tests {
         assert!(evs.windows(2).all(|w| w[0].seq < w[1].seq));
         assert_eq!(evs[2].kind, "meta");
         assert_eq!(evs[2].fields.get("dropped"), Some(&Json::Num(0.0)));
+        assert_eq!(
+            evs[2].fields.get("schema"),
+            Some(&Json::Num(TRACE_SCHEMA as f64)),
+            "footer reports the trace schema version"
+        );
         assert!(evs.iter().all(|e| e.node == "n1"));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn trace_ctx_round_trips() {
+        let ctx = TraceCtx { node: "w1".to_string(), span: 42 };
+        let j = ctx.to_json();
+        assert_eq!(j.render(), "{\"node\":\"w1\",\"span\":42}");
+        assert_eq!(TraceCtx::from_json(&j).unwrap(), ctx);
+        assert!(TraceCtx::from_json(&Json::Obj(BTreeMap::new())).is_err());
+    }
+
+    /// An in-memory sink with a node name, for cross-node assertions.
+    struct NamedSink {
+        inner: MemSink,
+        node: String,
+    }
+
+    impl EventSink for NamedSink {
+        fn record(&self, kind: &'static str, name: &str, fields: BTreeMap<String, Json>) {
+            self.inner.record(kind, name, fields);
+        }
+        fn next_span(&self) -> u64 {
+            self.inner.next_span()
+        }
+        fn flush(&self) -> Result<()> {
+            Ok(())
+        }
+        fn node_name(&self) -> &str {
+            &self.node
+        }
+    }
+
+    #[test]
+    fn child_handles_parent_their_spans() {
+        let sink = Arc::new(NamedSink { inner: MemSink::default(), node: "n".to_string() });
+        let obs = Obs::with_sink(sink.clone());
+        let root = obs.span("job", &[]);
+        let root_id = root.id().unwrap();
+        assert_eq!(
+            root.ctx(),
+            Some(TraceCtx { node: "n".to_string(), span: root_id })
+        );
+        let child_obs = obs.child_of(&root);
+        {
+            let _cell = child_obs.span("cell", &[]);
+        }
+        root.finish();
+        let evs = sink.inner.events.lock().unwrap();
+        // [job begin, cell begin, cell end, job end]
+        assert_eq!(evs.len(), 4);
+        let cell_begin = &evs[1];
+        assert_eq!(cell_begin.1, "cell");
+        assert_eq!(cell_begin.2.get("parent"), Some(&Json::Num(root_id as f64)));
+        // Same-node parent: no parent_node field.
+        assert!(!cell_begin.2.contains_key("parent_node"));
+        // Root span itself has no parent.
+        assert!(!evs[0].2.contains_key("parent"));
+        // The end event repeats the linkage (drop-tolerant traces).
+        assert_eq!(evs[2].2.get("parent"), Some(&Json::Num(root_id as f64)));
+    }
+
+    #[test]
+    fn cross_node_parent_records_parent_node() {
+        let sink = Arc::new(NamedSink { inner: MemSink::default(), node: "w1".to_string() });
+        let obs = Obs::with_sink(sink.clone());
+        let remote = TraceCtx { node: "coord".to_string(), span: 7 };
+        {
+            let _job = obs.child_of_ctx(&remote).span("dist.job", &[]);
+        }
+        let evs = sink.inner.events.lock().unwrap();
+        assert_eq!(evs[0].2.get("parent"), Some(&Json::Num(7.0)));
+        assert_eq!(
+            evs[0].2.get("parent_node"),
+            Some(&Json::Str("coord".to_string()))
+        );
+    }
+
+    #[test]
+    fn disabled_handle_has_no_span_identity() {
+        let obs = Obs::off();
+        let span = obs.span("x", &[]);
+        assert_eq!(span.id(), None);
+        assert_eq!(span.ctx(), None);
+        // child_of on an inert span keeps the handle inert.
+        let child = obs.child_of(&span);
+        assert!(!child.enabled());
     }
 }

@@ -1,0 +1,484 @@
+//! Fixed-size log2-bucketed latency histograms over `AtomicU64`
+//! arrays: lock-free recording, bounded-error quantile estimation,
+//! exact merging — the bounded replacement for the unbounded
+//! stored-sample `Vec<u64>` percentile paths that used to live in
+//! `serve::server`, `serve::loadgen` and `bench_support`.
+//!
+//! **Bucket layout** (HdrHistogram-style log-linear, [`SUB_BITS`] = 5):
+//! values below `2 * 2^SUB_BITS = 64` get one bucket each (exact);
+//! above that, every power-of-two octave is split into `2^SUB_BITS =
+//! 32` linear sub-buckets, so a bucket spanning `[lo, lo + w)` always
+//! has `w / lo <= 1/32`. With [`N_BUCKETS`] = 1024 the top bucket
+//! starts at `2^35 + 31 * 2^30`; anything at or above `2^36` (~19
+//! hours in microseconds) saturates into it. A histogram is a flat 8
+//! KiB of counters plus `count`/`sum`/`min`/`max` cells — fixed size
+//! no matter how many samples land in it.
+//!
+//! **Error bound.** [`Histogram::quantile`] walks the counters to the
+//! nearest-rank bucket (the same rank convention the old sort-based
+//! `percentile` used) and answers the bucket's midpoint, clamped into
+//! the recorded `[min, max]`. The midpoint is within half a bucket
+//! width of every sample in the bucket, so the estimate's relative
+//! error is at most `1/64` — exact below 64, unbounded only in the
+//! saturated top bucket (tested in this module and pinned by property
+//! tests against exact sorted-sample percentiles).
+//!
+//! **Merging** is exact: bucket counts, `count` and `sum` add;
+//! `min`/`max` take the extreme — merging per-client histograms
+//! yields byte-identical quantiles to recording every sample into one
+//! histogram, in any merge order (associative and commutative).
+//!
+//! Recording is one `fetch_add` on the bucket plus four more relaxed
+//! atomic ops, so handles can be shared across serving workers and
+//! loadgen clients without locks; snapshots ([`Histogram::to_json`],
+//! [`render_prometheus_summary`]) are point-in-time like the metrics
+//! registry's.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::Json;
+
+/// Sub-bucket resolution: each octave splits into `2^SUB_BITS` linear
+/// buckets, bounding quantile relative error by `2^-(SUB_BITS + 1)`.
+pub const SUB_BITS: u32 = 5;
+const SUBS: u64 = 1 << SUB_BITS; // 32 sub-buckets per octave
+
+/// Total buckets: indices 0..2*SUBS are exact unit buckets, then 32
+/// per octave up to the saturation bound.
+pub const N_BUCKETS: usize = 1024;
+
+/// Values at or above this saturate into the top bucket. Derivation:
+/// the last index maps back to exponent `N_BUCKETS/SUBS + SUB_BITS - 2
+/// = 35`, so the first unrepresentable value is `2^36`.
+pub const SATURATION: u64 = 1 << 36;
+
+/// Bucket index for a value. Exact (`idx == v`) below `2 * SUBS`;
+/// log-linear above; clamped to the top bucket at [`SATURATION`].
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < 2 * SUBS {
+        return v as usize;
+    }
+    let exp = 63 - v.leading_zeros() as u64; // 2^exp <= v < 2^(exp+1)
+    let sub = (v >> (exp - SUB_BITS as u64)) & (SUBS - 1);
+    let idx = ((exp - SUB_BITS as u64 + 1) * SUBS + sub) as usize;
+    idx.min(N_BUCKETS - 1)
+}
+
+/// Inclusive `[lo, hi]` value range of bucket `idx` (the top bucket's
+/// `hi` is reported as its nominal upper edge, though saturation means
+/// it really extends to `u64::MAX`).
+fn bucket_range(idx: usize) -> (u64, u64) {
+    let i = idx as u64;
+    if i < 2 * SUBS {
+        return (i, i);
+    }
+    let exp = i / SUBS + SUB_BITS as u64 - 1;
+    let sub = i % SUBS;
+    let width = 1u64 << (exp - SUB_BITS as u64);
+    let lo = (1u64 << exp) + sub * width;
+    (lo, lo + width - 1)
+}
+
+/// The representative value reported for a bucket: its midpoint,
+/// within half a bucket width of every member.
+fn bucket_mid(idx: usize) -> u64 {
+    let (lo, hi) = bucket_range(idx);
+    lo + (hi - lo) / 2
+}
+
+/// A lock-free fixed-size log2-bucketed histogram. Share one across
+/// threads via `Arc` (or through [`metrics::histogram`]); all methods
+/// take `&self`.
+///
+/// [`metrics::histogram`]: super::metrics::histogram
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Lock-free: five relaxed atomic ops.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of all recorded samples (wrapping only past u64).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Exact minimum recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Ordering::Relaxed);
+        if m == u64::MAX {
+            0
+        } else {
+            m
+        }
+    }
+
+    /// Exact maximum recorded sample.
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Mean of recorded samples (exact `sum / count`, 0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Nearest-rank quantile estimate: the same rank convention as the
+    /// old sorted-`Vec` `percentile` (`rank = round((count-1) * q)`),
+    /// answered as the rank's bucket midpoint clamped into the exact
+    /// recorded `[min, max]`. The first and last ranks ARE the tracked
+    /// min/max, so the edges are exact; elsewhere relative error is
+    /// <= 1/64 outside the saturated top bucket; 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((n - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        if rank == 0 {
+            return self.min();
+        }
+        if rank >= n - 1 {
+            return self.max();
+        }
+        let mut seen = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen > rank {
+                return bucket_mid(idx).clamp(self.min(), self.max());
+            }
+        }
+        // Counts raced upward mid-walk; the max is the right answer
+        // for "the highest rank we know about".
+        self.max()
+    }
+
+    /// Fold `other` into `self`, exactly: per-bucket counts, `count`
+    /// and `sum` add, `min`/`max` take the extreme. Associative and
+    /// commutative, so per-thread histograms can merge in any order.
+    pub fn merge(&self, other: &Histogram) {
+        for (a, b) in self.buckets.iter().zip(&other.buckets) {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                a.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+        self.min.fetch_min(other.min.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max(), Ordering::Relaxed);
+    }
+
+    /// Non-empty buckets as `(index, count)` pairs — the exact
+    /// mergeable state, used by tests and the JSON export.
+    pub fn nonzero_buckets(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                if n > 0 {
+                    Some((i, n))
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    /// Point-in-time JSON summary:
+    /// `{"count":..,"max":..,"mean":..,"min":..,"p50":..,"p90":..,
+    /// "p99":..,"sum":..}` — what the metrics snapshot embeds per
+    /// histogram.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.count() as f64));
+        m.insert("sum".to_string(), Json::Num(self.sum() as f64));
+        m.insert("min".to_string(), Json::Num(self.min() as f64));
+        m.insert("max".to_string(), Json::Num(self.max() as f64));
+        m.insert("mean".to_string(), Json::Num(self.mean()));
+        m.insert("p50".to_string(), Json::Num(self.quantile(0.50) as f64));
+        m.insert("p90".to_string(), Json::Num(self.quantile(0.90) as f64));
+        m.insert("p99".to_string(), Json::Num(self.quantile(0.99) as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Prometheus summary exposition for one named histogram: quantile
+/// samples plus `_sum`/`_count`, honouring a `{label}` suffix in the
+/// registered name (quantile labels are appended to existing labels).
+/// Pass `emit_type: false` to suppress the `# TYPE` header when the
+/// previous histogram shared the same base name.
+pub fn render_prometheus_summary(out: &mut String, name: &str, h: &Histogram, emit_type: bool) {
+    let (base, labels) = match name.find('{') {
+        Some(i) => (&name[..i], name[i..].trim_start_matches('{').trim_end_matches('}')),
+        None => (name, ""),
+    };
+    let q_labels = |q: &str| {
+        if labels.is_empty() {
+            format!("{{quantile=\"{q}\"}}")
+        } else {
+            format!("{{{labels},quantile=\"{q}\"}}")
+        }
+    };
+    if emit_type {
+        out.push_str(&format!("# TYPE {base} summary\n"));
+    }
+    for (q, v) in [
+        ("0.5", h.quantile(0.50)),
+        ("0.9", h.quantile(0.90)),
+        ("0.99", h.quantile(0.99)),
+    ] {
+        out.push_str(&format!("{base}{} {v}\n", q_labels(q)));
+    }
+    let plain = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+    out.push_str(&format!("{base}_sum{plain} {}\n", h.sum()));
+    out.push_str(&format!("{base}_count{plain} {}\n", h.count()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift64* — the property-test workload source
+    /// (no rand crate in this offline environment).
+    struct XorShift(u64);
+
+    impl XorShift {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        }
+    }
+
+    /// The old sort-based nearest-rank percentile, kept here as the
+    /// test oracle for the histogram's quantile estimates.
+    fn exact_percentile(sorted: &[u64], q: f64) -> u64 {
+        if sorted.is_empty() {
+            return 0;
+        }
+        sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_exact_below_64() {
+        for v in 0..64u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            let (lo, hi) = bucket_range(v as usize);
+            assert_eq!((lo, hi), (v, v), "unit buckets below 2*SUBS");
+        }
+        let mut last = 0usize;
+        for exp in 0..40u32 {
+            for v in [1u64 << exp, (1u64 << exp) + 1, (1u64 << (exp + 1)) - 1] {
+                let idx = bucket_index(v);
+                assert!(idx >= last || idx == N_BUCKETS - 1, "monotone at v={v}");
+                last = last.max(idx);
+                if v < SATURATION {
+                    let (lo, hi) = bucket_range(idx);
+                    assert!(lo <= v && v <= hi, "v={v} in its bucket [{lo},{hi}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_relative_width_is_bounded() {
+        for idx in 2 * SUBS as usize..N_BUCKETS {
+            let (lo, hi) = bucket_range(idx);
+            let width = hi - lo + 1;
+            assert!(
+                width * SUBS <= lo,
+                "bucket {idx} [{lo},{hi}]: width/lo must be <= 1/{SUBS}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    /// The headline property: on random workloads spanning several
+    /// orders of magnitude, every quantile estimate is within the
+    /// documented 1/64 relative error of the exact sorted-sample
+    /// percentile (plus the clamp's exactness at the edges).
+    #[test]
+    fn quantiles_match_exact_percentiles_within_error_bound() {
+        let mut rng = XorShift(0x9E37_79B9_7F4A_7C15);
+        for trial in 0..8 {
+            let n = 200 + (trial * 137) % 1800;
+            let h = Histogram::new();
+            let mut samples = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Mix scales: sub-64 exact range, µs, ms, and seconds.
+                let v = match rng.next() % 4 {
+                    0 => rng.next() % 64,
+                    1 => rng.next() % 10_000,
+                    2 => rng.next() % 1_000_000,
+                    _ => rng.next() % 60_000_000,
+                };
+                h.record(v);
+                samples.push(v);
+            }
+            samples.sort_unstable();
+            for q in [0.0, 0.10, 0.25, 0.50, 0.75, 0.90, 0.99, 1.0] {
+                let exact = exact_percentile(&samples, q);
+                let est = h.quantile(q);
+                let tol = exact / (2 * SUBS) + 1; // 1/64 relative + unit slack
+                assert!(
+                    est.abs_diff(exact) <= tol,
+                    "trial {trial} q={q}: est {est} vs exact {exact} (tol {tol})"
+                );
+            }
+            // The edges are exact thanks to the min/max clamp.
+            assert_eq!(h.quantile(0.0), samples[0]);
+            assert_eq!(h.quantile(1.0), *samples.last().unwrap());
+            assert_eq!(h.count(), n as u64);
+            assert_eq!(h.sum(), samples.iter().sum::<u64>());
+        }
+    }
+
+    fn state(h: &Histogram) -> (Vec<(usize, u64)>, u64, u64, u64, u64) {
+        (h.nonzero_buckets(), h.count(), h.sum(), h.min(), h.max())
+    }
+
+    #[test]
+    fn merge_is_commutative_and_associative() {
+        let mut rng = XorShift(42);
+        let parts: Vec<Histogram> = (0..3)
+            .map(|_| {
+                let h = Histogram::new();
+                for _ in 0..500 {
+                    h.record(rng.next() % 2_000_000);
+                }
+                h
+            })
+            .collect();
+        let [a, b, c] = &parts[..] else { unreachable!() };
+
+        // Commutativity: a+b == b+a.
+        let ab = Histogram::new();
+        ab.merge(a);
+        ab.merge(b);
+        let ba = Histogram::new();
+        ba.merge(b);
+        ba.merge(a);
+        assert_eq!(state(&ab), state(&ba));
+
+        // Associativity: (a+b)+c == a+(b+c).
+        let ab_c = Histogram::new();
+        ab_c.merge(&ab);
+        ab_c.merge(c);
+        let bc = Histogram::new();
+        bc.merge(b);
+        bc.merge(c);
+        let a_bc = Histogram::new();
+        a_bc.merge(a);
+        a_bc.merge(&bc);
+        assert_eq!(state(&ab_c), state(&a_bc));
+
+        // Merging equals recording everything into one histogram.
+        let mut rng2 = XorShift(42);
+        let direct = Histogram::new();
+        for _ in 0..1500 {
+            direct.record(rng2.next() % 2_000_000);
+        }
+        assert_eq!(state(&direct), state(&ab_c));
+        for q in [0.5, 0.99] {
+            assert_eq!(direct.quantile(q), ab_c.quantile(q));
+        }
+    }
+
+    #[test]
+    fn top_bucket_saturates_instead_of_overflowing() {
+        let h = Histogram::new();
+        for v in [SATURATION, SATURATION * 2, u64::MAX] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 3);
+        let buckets = h.nonzero_buckets();
+        assert_eq!(buckets, vec![(N_BUCKETS - 1, 3)], "all in the top bucket");
+        // Quantiles of saturated samples clamp to the exact max.
+        assert_eq!(h.quantile(1.0), u64::MAX);
+        // The estimate can't dip below the top bucket's lower edge.
+        assert!(h.quantile(0.5) >= bucket_range(N_BUCKETS - 1).0);
+        // Mixing a normal sample keeps low quantiles sane.
+        h.record(100);
+        assert_eq!(h.quantile(0.0), 100);
+    }
+
+    #[test]
+    fn json_and_prometheus_exports_are_well_formed() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30, 40, 1000] {
+            h.record(v);
+        }
+        let j = h.to_json();
+        assert_eq!(Json::parse(&j.render()).unwrap(), j, "snapshot is valid Json");
+        assert_eq!(j.get("count").and_then(Json::as_u64), Some(5));
+        assert_eq!(j.get("min").and_then(Json::as_u64), Some(10));
+        assert_eq!(j.get("max").and_then(Json::as_u64), Some(1000));
+        assert_eq!(j.get("p50").and_then(Json::as_u64), Some(30));
+
+        let mut out = String::new();
+        render_prometheus_summary(
+            &mut out,
+            "pallas_serve_latency_us{tier=\"gold\"}",
+            &h,
+            true,
+        );
+        assert!(out.contains("# TYPE pallas_serve_latency_us summary\n"));
+        assert!(out
+            .contains("pallas_serve_latency_us{tier=\"gold\",quantile=\"0.5\"} 30\n"));
+        assert!(out.contains("pallas_serve_latency_us_sum{tier=\"gold\"} 1100\n"));
+        assert!(out.contains("pallas_serve_latency_us_count{tier=\"gold\"} 5\n"));
+    }
+}

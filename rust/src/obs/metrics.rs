@@ -1,4 +1,5 @@
-//! Process-wide metrics registry: named monotone counters and gauges.
+//! Process-wide metrics registry: named monotone counters, gauges,
+//! and latency histograms.
 //!
 //! The hot path is one relaxed atomic op on a handle cached at setup
 //! (`metrics::counter("pallas_wal_appends_total")` once, `.inc()` per
@@ -13,13 +14,20 @@
 //! Names follow Prometheus conventions (`pallas_<subsystem>_<what>`,
 //! `_total` suffix on counters); a `{label="value"}` suffix in the
 //! registered name becomes the sample's label set. The registry is
-//! process-global on purpose: counters are monotone, so concurrent
-//! subsystems (or tests) sharing it only ever add.
+//! process-global on purpose: counters are monotone and histograms
+//! only accumulate, so concurrent subsystems (or tests) sharing it
+//! only ever add.
+//!
+//! [`histogram`] interns a shared [`Histogram`] the same way —
+//! callers cache the `Arc` handle and `record()` lock-free; snapshots
+//! embed each histogram's quantile summary and the Prometheus render
+//! emits `summary` expositions (quantile samples + `_sum`/`_count`).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+use super::hist::{render_prometheus_summary, Histogram};
 use crate::util::Json;
 
 /// A monotone counter handle; `Clone` shares the underlying cell.
@@ -57,6 +65,7 @@ impl Gauge {
 struct Registry {
     counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
     gauges: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
 }
 
 fn registry() -> &'static Registry {
@@ -64,6 +73,7 @@ fn registry() -> &'static Registry {
     REG.get_or_init(|| Registry {
         counters: Mutex::new(BTreeMap::new()),
         gauges: Mutex::new(BTreeMap::new()),
+        histograms: Mutex::new(BTreeMap::new()),
     })
 }
 
@@ -89,8 +99,23 @@ pub fn gauge(name: &str) -> Gauge {
     Gauge(intern(&registry().gauges, name))
 }
 
+/// Register (or re-attach to) the named histogram. Cache the returned
+/// `Arc` at setup; `record()` on it is lock-free.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    let mut m = registry().histograms.lock().unwrap();
+    match m.get(name) {
+        Some(h) => Arc::clone(h),
+        None => {
+            let h = Arc::new(Histogram::new());
+            m.insert(name.to_string(), Arc::clone(&h));
+            h
+        }
+    }
+}
+
 /// Point-in-time JSON snapshot:
-/// `{"counters":{name:value,...},"gauges":{...}}`.
+/// `{"counters":{name:value,...},"gauges":{...},"histograms":
+/// {name:{count,max,mean,min,p50,p90,p99,sum},...}}`.
 pub fn snapshot() -> Json {
     let dump = |map: &Mutex<BTreeMap<String, Arc<AtomicU64>>>| {
         Json::Obj(
@@ -106,6 +131,18 @@ pub fn snapshot() -> Json {
     let mut m = BTreeMap::new();
     m.insert("counters".to_string(), dump(&registry().counters));
     m.insert("gauges".to_string(), dump(&registry().gauges));
+    m.insert(
+        "histograms".to_string(),
+        Json::Obj(
+            registry()
+                .histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, h)| (k.clone(), h.to_json()))
+                .collect(),
+        ),
+    );
     Json::Obj(m)
 }
 
@@ -146,6 +183,12 @@ pub fn render_prometheus() -> String {
     };
     render(&mut out, &registry().counters, "counter");
     render(&mut out, &registry().gauges, "gauge");
+    let mut last_base = String::new();
+    for (name, h) in registry().histograms.lock().unwrap().iter() {
+        let (base, labels) = prom_parts(name);
+        render_prometheus_summary(&mut out, &format!("{base}{labels}"), h, base != last_base);
+        last_base = base;
+    }
     out
 }
 
@@ -186,6 +229,27 @@ mod tests {
             .and_then(Json::as_u64)
             .unwrap()
             >= 1);
+    }
+
+    #[test]
+    fn histograms_are_shared_by_name_and_snapshot() {
+        let a = histogram("pallas_test_metrics_hist_us");
+        let b = histogram("pallas_test_metrics_hist_us");
+        let before = a.count();
+        a.record(100);
+        b.record(200);
+        assert_eq!(a.count(), before + 2, "same name shares one histogram");
+        let snap = snapshot();
+        let h = snap
+            .get("histograms")
+            .and_then(|h| h.get("pallas_test_metrics_hist_us"))
+            .expect("histogram in snapshot");
+        assert!(h.get("count").and_then(Json::as_u64).unwrap() >= 2);
+        assert!(h.get("p50").is_some() && h.get("p99").is_some());
+        let text = render_prometheus();
+        assert!(text.contains("# TYPE pallas_test_metrics_hist_us summary"));
+        assert!(text.contains("pallas_test_metrics_hist_us{quantile=\"0.5\"} "));
+        assert!(text.contains("pallas_test_metrics_hist_us_count "));
     }
 
     #[test]

@@ -3,22 +3,30 @@
 //! on [`util::Json`](crate::util::Json) so every emitted line is
 //! deterministic, ASCII, and self-describing.
 //!
-//! Three pillars, deliberately decoupled:
+//! Four pillars, deliberately decoupled:
 //!
 //! * [`event`] — the [`EventSink`] trait and the lock-striped
 //!   ring-buffer [`Recorder`] behind the cheap cloneable [`Obs`]
-//!   handle. Spans (begin/end pairs with monotonic-clock durations),
-//!   counters and log records accumulate in memory and are written as
-//!   line-delimited JSON on `flush` — no syscalls on the hot path.
+//!   handle. Spans (begin/end pairs with monotonic-clock durations)
+//!   form *causal trees*: a handle derived via [`Obs::child_of`] (or
+//!   [`Obs::child_of_ctx`] from a wire-carried [`TraceCtx`]) stamps a
+//!   `parent` span id — across threads and, for distributed sweeps,
+//!   across nodes — while counters and log records accumulate in
+//!   memory and are written as line-delimited JSON on `flush`; no
+//!   syscalls on the hot path.
 //! * [`log`] — leveled, `PALLAS_LOG`-filtered structured logging to
 //!   stderr, replacing the ad-hoc `eprintln!` calls. Works without an
 //!   [`Obs`] handle (module-level functions) so deep code like the WAL
 //!   can warn; an enabled handle additionally mirrors log records into
 //!   the trace file.
-//! * [`metrics`] — a process-wide registry of named counters and
-//!   gauges. The hot path is one relaxed atomic op on a cached handle;
-//!   snapshots render to both JSON (`serve`'s `metrics` verb) and
-//!   Prometheus-style text exposition.
+//! * [`metrics`] — a process-wide registry of named counters, gauges
+//!   and histograms. The hot path is one relaxed atomic op on a
+//!   cached handle; snapshots render to both JSON (`serve`'s
+//!   `metrics` verb) and Prometheus-style text exposition.
+//! * [`hist`] — fixed-size log2-bucketed [`Histogram`]s over
+//!   `AtomicU64` arrays: lock-free recording, quantile estimates with
+//!   bounded relative error, exact merging — the bounded replacement
+//!   for every stored-sample percentile vector.
 //!
 //! **Determinism contract.** Instrumentation is observe-only: clock
 //! reads happen strictly outside solver/commit decision paths, events
@@ -29,9 +37,11 @@
 //! `--cell-workers` counts. See DESIGN.md §13.
 
 pub mod event;
+pub mod hist;
 pub mod log;
 pub mod metrics;
 pub mod trace;
 
-pub use event::{Event, EventSink, Obs, Recorder, Span};
+pub use event::{Event, EventSink, Obs, Recorder, Span, TraceCtx};
+pub use hist::Histogram;
 pub use log::Level;

@@ -1,10 +1,22 @@
 //! Trace-file tooling behind the `trace` CLI subcommand: load JSONL
-//! dumps, validate them (`trace --check`: per-line schema plus span
-//! balance), and render human reports — per-phase timelines, top-N
-//! slowest spans, and a merged multi-node view over coordinator +
-//! worker traces.
+//! dumps, validate them (`trace --check`: per-line schema, span
+//! balance, and causal-parent resolution), and render human reports —
+//! per-phase timelines, top-N slowest spans, per-request/per-job
+//! waterfalls (`--tree`), slowest causal chains (`--critical-path`),
+//! folded flamegraph stacks (`--flame`), and a merged multi-node view
+//! over coordinator + worker traces.
+//!
+//! Causality (schema 2): a `span_begin` may carry a `parent` span id
+//! (plus `parent_node` when the parent lives on another node). The
+//! checker resolves every parent reference whose node is present in
+//! the merged trace — and when both coordinator `dist.lease` and
+//! worker `dist.job` spans are present, enforces that every `dist.job`
+//! parents under a lease span, which is exactly the cross-machine
+//! causal contract the distributed sweep promises. Ring-overflow drops
+//! relax these failures to warnings (the parent may have been the
+//! dropped event).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt::Write as _;
 use std::path::Path;
 
@@ -38,6 +50,10 @@ pub struct CheckReport {
     pub spans: usize,
     pub nodes: Vec<String>,
     pub dropped: u64,
+    /// Spans carrying a resolved causal parent reference.
+    pub parented: usize,
+    /// Non-fatal findings (failures relaxed because events dropped).
+    pub warnings: Vec<String>,
 }
 
 fn span_id(ev: &Event) -> Result<u64> {
@@ -49,37 +65,44 @@ fn span_id(ev: &Event) -> Result<u64> {
         })
 }
 
+/// The causal parent reference on a `span_begin`, if any:
+/// `(parent_node, parent_span_id)` — `parent_node` defaults to the
+/// event's own node when absent (same-recorder nesting).
+fn parent_ref(ev: &Event) -> Option<(String, u64)> {
+    let id = ev.fields.get("parent").and_then(Json::as_u64)?;
+    let node = match ev.fields.get("parent_node") {
+        Some(Json::Str(s)) => s.clone(),
+        _ => ev.node.clone(),
+    };
+    Some((node, id))
+}
+
 /// Validate span balance over already-parsed events: every
 /// `span_begin` has exactly one matching `span_end` (per node — span
-/// ids are only unique within a recorder) and vice versa. Also totals
-/// the ring-overflow drop counts from flush footers.
+/// ids are only unique within a recorder) and vice versa. Also
+/// resolves every causal `parent` reference whose target node is
+/// present in the merged trace, enforces that `dist.job` worker spans
+/// parent under coordinator `dist.lease` spans whenever both sides
+/// were traced, and totals the ring-overflow drop counts from flush
+/// footers. Drops relax balance and parent failures to
+/// [`CheckReport::warnings`] — the missing half may have been the
+/// dropped event.
 pub fn check(events: &[Event]) -> Result<CheckReport> {
-    let mut open: BTreeMap<(String, u64), String> = BTreeMap::new();
-    let mut spans = 0usize;
-    let mut nodes: Vec<String> = Vec::new();
+    // Pass 1: every span id seen per node (begins *and* ends, so a
+    // dropped begin still lets children resolve their parent), plus
+    // span names for the dist.job -> dist.lease enforcement, plus the
+    // drop total (known before pass 2 decides fail-vs-warn).
+    let mut ids: BTreeMap<&str, BTreeSet<u64>> = BTreeMap::new();
+    let mut names: BTreeMap<(&str, u64), &str> = BTreeMap::new();
     let mut dropped = 0u64;
+    let mut has_lease = false;
     for ev in events {
-        if !nodes.contains(&ev.node) {
-            nodes.push(ev.node.clone());
-        }
         match ev.kind.as_str() {
-            "span_begin" => {
-                let key = (ev.node.clone(), span_id(ev)?);
-                if let Some(prev) = open.insert(key, ev.name.clone()) {
-                    bail!("duplicate span_begin for span already open as {prev:?}");
-                }
-            }
-            "span_end" => {
-                spans += 1;
-                let key = (ev.node.clone(), span_id(ev)?);
-                if open.remove(&key).is_none() {
-                    bail!(
-                        "span_end {:?} (node {:?}, span {}) without begin",
-                        ev.name,
-                        ev.node,
-                        key.1
-                    );
-                }
+            "span_begin" | "span_end" => {
+                let id = span_id(ev)?;
+                ids.entry(&ev.node).or_default().insert(id);
+                names.insert((&ev.node, id), &ev.name);
+                has_lease |= ev.name == "dist.lease";
             }
             "meta" if ev.name == "obs.flush" => {
                 dropped += ev
@@ -91,18 +114,115 @@ pub fn check(events: &[Event]) -> Result<CheckReport> {
             _ => {}
         }
     }
+
+    let mut open: BTreeMap<(String, u64), String> = BTreeMap::new();
+    let mut spans = 0usize;
+    let mut nodes: Vec<String> = Vec::new();
+    let mut parented = 0usize;
+    let mut warnings: Vec<String> = Vec::new();
+    // With drops, a hard failure may be ring loss — downgrade to a
+    // warning; a drop-free trace still fails loudly.
+    let fail = |warnings: &mut Vec<String>, msg: String| -> Result<()> {
+        if dropped == 0 {
+            bail!(msg);
+        }
+        warnings.push(msg);
+        Ok(())
+    };
+    for ev in events {
+        if !nodes.contains(&ev.node) {
+            nodes.push(ev.node.clone());
+        }
+        match ev.kind.as_str() {
+            "span_begin" => {
+                let key = (ev.node.clone(), span_id(ev)?);
+                if let Some(prev) = open.insert(key, ev.name.clone()) {
+                    bail!("duplicate span_begin for span already open as {prev:?}");
+                }
+                if let Some((pnode, pid)) = parent_ref(ev) {
+                    // Parents on nodes absent from the merge are
+                    // uncheckable (e.g. a worker trace inspected
+                    // without the coordinator's) — skip, don't fail.
+                    let Some(node_ids) = ids.get(pnode.as_str()) else {
+                        continue;
+                    };
+                    if !node_ids.contains(&pid) {
+                        fail(
+                            &mut warnings,
+                            format!(
+                                "span {:?} (node {:?}, span {}) has unresolved parent \
+                                 span {pid} on node {pnode:?}",
+                                ev.name,
+                                ev.node,
+                                span_id(ev)?
+                            ),
+                        )?;
+                        continue;
+                    }
+                    parented += 1;
+                    if ev.name == "dist.job" {
+                        let pname = names.get(&(pnode.as_str(), pid)).copied().unwrap_or("");
+                        if pname != "dist.lease" {
+                            fail(
+                                &mut warnings,
+                                format!(
+                                    "dist.job span {} (node {:?}) parents under \
+                                     {pname:?}, expected dist.lease",
+                                    span_id(ev)?,
+                                    ev.node
+                                ),
+                            )?;
+                        }
+                    }
+                } else if ev.name == "dist.job" && has_lease {
+                    // Both sides traced: a worker job span with no
+                    // causal parent breaks the cross-machine contract.
+                    fail(
+                        &mut warnings,
+                        format!(
+                            "dist.job span {} (node {:?}) has no parent despite \
+                             dist.lease spans in the trace",
+                            span_id(ev)?,
+                            ev.node
+                        ),
+                    )?;
+                }
+            }
+            "span_end" => {
+                spans += 1;
+                let key = (ev.node.clone(), span_id(ev)?);
+                if open.remove(&key).is_none() && dropped == 0 {
+                    bail!(
+                        "span_end {:?} (node {:?}, span {}) without begin",
+                        ev.name,
+                        ev.node,
+                        key.1
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
     // Ring overflow drops oldest events first, so a dropped begin with
     // a surviving end is legitimate loss, not malformed tracing —
     // unbalanced spans only fail a drop-free trace.
-    if !open.is_empty() && dropped == 0 {
+    if !open.is_empty() {
         let ((node, id), name) = open.iter().next().unwrap();
-        bail!(
-            "{} unbalanced span(s), e.g. {name:?} (node {node:?}, span {id}) never ended",
-            open.len()
-        );
+        fail(
+            &mut warnings,
+            format!(
+                "{} unbalanced span(s), e.g. {name:?} (node {node:?}, span {id}) never ended",
+                open.len()
+            ),
+        )?;
+    }
+    if dropped > 0 {
+        warnings.push(format!(
+            "{dropped} event(s) dropped to ring overflow — trace is incomplete"
+        ));
     }
     nodes.sort();
-    Ok(CheckReport { events: events.len(), spans, nodes, dropped })
+    Ok(CheckReport { events: events.len(), spans, nodes, dropped, parented, warnings })
 }
 
 /// Per-job commit counts from `dist.commit` counter events — the
@@ -156,7 +276,14 @@ pub fn render_report(events: &[Event], top: usize) -> String {
         Ok(r) => r,
         Err(e) => {
             let _ = writeln!(out, "warning: trace failed validation: {e:#}");
-            CheckReport { events: events.len(), spans: 0, nodes: Vec::new(), dropped: 0 }
+            CheckReport {
+                events: events.len(),
+                spans: 0,
+                nodes: Vec::new(),
+                dropped: 0,
+                parented: 0,
+                warnings: Vec::new(),
+            }
         }
     };
     let _ = writeln!(
@@ -171,6 +298,9 @@ pub fn render_report(events: &[Event], top: usize) -> String {
             String::new()
         }
     );
+    for w in &report.warnings {
+        let _ = writeln!(out, "warning: {w}");
+    }
 
     // Per-phase timeline: aggregate span_end durations by span name.
     let mut phases: BTreeMap<&str, (u64, u64, u64)> = BTreeMap::new();
@@ -258,6 +388,220 @@ pub fn render_report(events: &[Event], top: usize) -> String {
     out
 }
 
+/// A span reconstructed from its begin/end pair, ready for causal
+/// assembly: identity, timing, and the resolved parent key.
+struct SpanRec<'a> {
+    node: &'a str,
+    id: u64,
+    name: &'a str,
+    start: u64,
+    seq: u64,
+    dur: u64,
+    parent: Option<(String, u64)>,
+    end: &'a Event,
+}
+
+/// Pair every `span_end` with its `span_begin` (dropping orphans —
+/// ring overflow may have eaten either half) and carry the begin's
+/// parent reference over.
+fn build_spans(events: &[Event]) -> Vec<SpanRec<'_>> {
+    let mut begins: BTreeMap<(&str, u64), &Event> = BTreeMap::new();
+    for ev in events {
+        if ev.kind == "span_begin" {
+            if let Some(id) = ev.fields.get("span").and_then(Json::as_u64) {
+                begins.insert((&ev.node, id), ev);
+            }
+        }
+    }
+    let mut spans = Vec::new();
+    for ev in events {
+        if ev.kind != "span_end" {
+            continue;
+        }
+        let Some(id) = ev.fields.get("span").and_then(Json::as_u64) else {
+            continue;
+        };
+        let Some(begin) = begins.get(&(ev.node.as_str(), id)) else {
+            continue;
+        };
+        spans.push(SpanRec {
+            node: &ev.node,
+            id,
+            name: &ev.name,
+            start: begin.ts_us,
+            seq: begin.seq,
+            dur: ev.fields.get("dur_us").and_then(Json::as_u64).unwrap_or(0),
+            parent: parent_ref(begin),
+            end: ev,
+        });
+    }
+    spans
+}
+
+/// The causal forest over reconstructed spans: an index by
+/// `(node, id)`, per-span child lists (sorted by start time for
+/// waterfall order), and the roots (no parent, or a parent outside
+/// the merged trace) sorted slowest-first.
+struct Forest<'a> {
+    spans: Vec<SpanRec<'a>>,
+    children: Vec<Vec<usize>>,
+    roots: Vec<usize>,
+}
+
+fn build_forest(events: &[Event]) -> Forest<'_> {
+    let spans = build_spans(events);
+    let index: BTreeMap<(&str, u64), usize> = spans
+        .iter()
+        .enumerate()
+        .map(|(i, s)| ((s.node, s.id), i))
+        .collect();
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); spans.len()];
+    let mut roots: Vec<usize> = Vec::new();
+    for (i, s) in spans.iter().enumerate() {
+        match s
+            .parent
+            .as_ref()
+            .and_then(|(n, id)| index.get(&(n.as_str(), *id)))
+        {
+            Some(&p) if p != i => children[p].push(i),
+            _ => roots.push(i),
+        }
+    }
+    for kids in &mut children {
+        kids.sort_by_key(|&i| (spans[i].start, spans[i].seq, spans[i].node));
+    }
+    roots.sort_by(|&a, &b| {
+        spans[b]
+            .dur
+            .cmp(&spans[a].dur)
+            .then_with(|| (spans[a].node, spans[a].seq).cmp(&(spans[b].node, spans[b].seq)))
+    });
+    Forest { spans, children, roots }
+}
+
+/// A span's *self time*: its duration minus the time attributed to
+/// its direct children (saturating — children can overlap the parent
+/// boundary when clocks come from different nodes).
+fn self_us(f: &Forest<'_>, i: usize) -> u64 {
+    let child_total: u64 = f.children[i].iter().map(|&c| f.spans[c].dur).sum();
+    f.spans[i].dur.saturating_sub(child_total)
+}
+
+/// `trace --tree`: per-request/per-job waterfalls. The `top` slowest
+/// roots each render as an indented causal tree, children in start
+/// order, every line showing total and self time.
+pub fn render_tree(events: &[Event], top: usize) -> String {
+    let f = build_forest(events);
+    let mut out = String::new();
+    if f.roots.is_empty() {
+        let _ = writeln!(out, "no completed spans");
+        return out;
+    }
+    let _ = writeln!(
+        out,
+        "causal tree: {} span(s), {} root(s), showing slowest {}",
+        f.spans.len(),
+        f.roots.len(),
+        top.min(f.roots.len())
+    );
+    fn render_node(out: &mut String, f: &Forest<'_>, i: usize, depth: usize) {
+        let s = &f.spans[i];
+        let label = span_label(s.end);
+        let _ = writeln!(
+            out,
+            "{:indent$}{} [{}] {} (self {}){}{}",
+            "",
+            s.name,
+            s.node,
+            fmt_us(s.dur),
+            fmt_us(self_us(f, i)),
+            if label.is_empty() { "" } else { " " },
+            label,
+            indent = depth * 2
+        );
+        for &c in &f.children[i] {
+            render_node(out, f, c, depth + 1);
+        }
+    }
+    for &root in f.roots.iter().take(top) {
+        let _ = writeln!(out);
+        render_node(&mut out, &f, root, 0);
+    }
+    out
+}
+
+/// `trace --critical-path`: for each of the `top` slowest roots, the
+/// chain built by greedily descending into the slowest child — where
+/// the time actually went, one line per hop with the hop's self time.
+pub fn render_critical_path(events: &[Event], top: usize) -> String {
+    let f = build_forest(events);
+    let mut out = String::new();
+    if f.roots.is_empty() {
+        let _ = writeln!(out, "no completed spans");
+        return out;
+    }
+    for &root in f.roots.iter().take(top) {
+        let s = &f.spans[root];
+        let label = span_label(s.end);
+        let _ = writeln!(
+            out,
+            "critical path of {} [{}] {}{}{}:",
+            s.name,
+            s.node,
+            fmt_us(s.dur),
+            if label.is_empty() { "" } else { " " },
+            label
+        );
+        let mut i = root;
+        loop {
+            let s = &f.spans[i];
+            let _ = writeln!(
+                out,
+                "  {:>12} total {:>12} self  {} [{}]",
+                fmt_us(s.dur),
+                fmt_us(self_us(&f, i)),
+                s.name,
+                s.node
+            );
+            match f.children[i].iter().copied().max_by_key(|&c| {
+                // Slowest child wins; ties break earliest-started for
+                // determinism.
+                (f.spans[c].dur, std::cmp::Reverse((f.spans[c].start, f.spans[c].seq)))
+            }) {
+                Some(next) => i = next,
+                None => break,
+            }
+        }
+    }
+    out
+}
+
+/// `trace --flame`: folded-stack output, one line per distinct causal
+/// stack — `node;root;child;... self_us` — directly consumable by
+/// inferno / flamegraph.pl. Self time (not total) is attributed to
+/// each frame so the flamegraph's widths add up exactly once.
+pub fn render_flame(events: &[Event]) -> String {
+    let f = build_forest(events);
+    let mut folded: BTreeMap<String, u64> = BTreeMap::new();
+    fn walk(f: &Forest<'_>, i: usize, prefix: &str, folded: &mut BTreeMap<String, u64>) {
+        let s = &f.spans[i];
+        let stack = format!("{prefix};{}", s.name);
+        *folded.entry(stack.clone()).or_insert(0) += self_us(f, i);
+        for &c in &f.children[i] {
+            walk(f, c, &stack, folded);
+        }
+    }
+    for &root in &f.roots {
+        let node = f.spans[root].node.to_string();
+        walk(&f, root, &node, &mut folded);
+    }
+    let mut out = String::new();
+    for (stack, us) in &folded {
+        let _ = writeln!(out, "{stack} {us}");
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -338,6 +682,188 @@ mod tests {
         assert_eq!(counts.get(&1), Some(&2));
         let report = render_report(&events, 5);
         assert!(report.contains("DUPLICATES"));
+    }
+
+    /// A two-node causal fixture: coord lease span 1 -> worker
+    /// dist.job span 1 -> worker sweep.cell span 2.
+    fn causal_fixture() -> Vec<Event> {
+        vec![
+            ev(0, "span_begin", "dist.lease", "coord", &[("span", Json::Num(1.0))]),
+            ev(
+                0,
+                "span_begin",
+                "dist.job",
+                "w0",
+                &[
+                    ("span", Json::Num(1.0)),
+                    ("parent", Json::Num(1.0)),
+                    ("parent_node", Json::Str("coord".into())),
+                ],
+            ),
+            ev(
+                1,
+                "span_begin",
+                "sweep.cell",
+                "w0",
+                &[("span", Json::Num(2.0)), ("parent", Json::Num(1.0))],
+            ),
+            ev(
+                2,
+                "span_end",
+                "sweep.cell",
+                "w0",
+                &[("span", Json::Num(2.0)), ("dur_us", Json::Num(300.0))],
+            ),
+            ev(
+                3,
+                "span_end",
+                "dist.job",
+                "w0",
+                &[("span", Json::Num(1.0)), ("dur_us", Json::Num(1000.0))],
+            ),
+            ev(
+                4,
+                "span_end",
+                "dist.lease",
+                "coord",
+                &[("span", Json::Num(1.0)), ("dur_us", Json::Num(1200.0))],
+            ),
+        ]
+    }
+
+    #[test]
+    fn parent_references_resolve_across_nodes() {
+        let r = check(&causal_fixture()).unwrap();
+        assert_eq!(r.spans, 3);
+        assert_eq!(r.parented, 2, "dist.job and sweep.cell both parented");
+        assert!(r.warnings.is_empty());
+    }
+
+    #[test]
+    fn unresolved_parent_fails_drop_free_check() {
+        let events = vec![
+            ev(
+                0,
+                "span_begin",
+                "serve.batch",
+                "serve",
+                &[("span", Json::Num(5.0)), ("parent", Json::Num(99.0))],
+            ),
+            ev(
+                1,
+                "span_end",
+                "serve.batch",
+                "serve",
+                &[("span", Json::Num(5.0)), ("dur_us", Json::Num(10.0))],
+            ),
+        ];
+        let err = check(&events).unwrap_err().to_string();
+        assert!(err.contains("unresolved parent"), "{err}");
+    }
+
+    #[test]
+    fn parent_on_absent_node_is_skipped() {
+        // Worker trace inspected without the coordinator's: the
+        // cross-node parent is uncheckable, not an error. And with no
+        // dist.lease span in the merge, no orphan enforcement either.
+        let events = vec![
+            ev(
+                0,
+                "span_begin",
+                "dist.job",
+                "w0",
+                &[
+                    ("span", Json::Num(1.0)),
+                    ("parent", Json::Num(7.0)),
+                    ("parent_node", Json::Str("coord".into())),
+                ],
+            ),
+            ev(
+                1,
+                "span_end",
+                "dist.job",
+                "w0",
+                &[("span", Json::Num(1.0)), ("dur_us", Json::Num(10.0))],
+            ),
+        ];
+        let r = check(&events).unwrap();
+        assert_eq!(r.parented, 0);
+        assert!(r.warnings.is_empty());
+    }
+
+    #[test]
+    fn unparented_dist_job_fails_when_leases_present() {
+        let mut events = causal_fixture();
+        // Second worker job with no parent at all.
+        events.push(ev(5, "span_begin", "dist.job", "w1", &[("span", Json::Num(1.0))]));
+        events.push(ev(
+            6,
+            "span_end",
+            "dist.job",
+            "w1",
+            &[("span", Json::Num(1.0)), ("dur_us", Json::Num(10.0))],
+        ));
+        let err = check(&events).unwrap_err().to_string();
+        assert!(err.contains("no parent despite dist.lease"), "{err}");
+    }
+
+    #[test]
+    fn drops_relax_parent_failures_to_warnings() {
+        let mut events = causal_fixture();
+        events.push(ev(5, "span_begin", "dist.job", "w1", &[("span", Json::Num(1.0))]));
+        events.push(ev(
+            6,
+            "span_end",
+            "dist.job",
+            "w1",
+            &[("span", Json::Num(1.0)), ("dur_us", Json::Num(10.0))],
+        ));
+        events.push(ev(7, "meta", "obs.flush", "w1", &[("dropped", Json::Num(3.0))]));
+        let r = check(&events).unwrap();
+        assert_eq!(r.dropped, 3);
+        assert!(r.warnings.iter().any(|w| w.contains("no parent")), "{:?}", r.warnings);
+        assert!(r.warnings.iter().any(|w| w.contains("dropped")), "{:?}", r.warnings);
+    }
+
+    #[test]
+    fn tree_renders_causal_waterfall_with_self_time() {
+        let tree = render_tree(&causal_fixture(), 3);
+        let lines: Vec<&str> = tree.lines().collect();
+        let lease = lines.iter().position(|l| l.contains("dist.lease")).unwrap();
+        let job = lines.iter().position(|l| l.contains("dist.job")).unwrap();
+        let cell = lines.iter().position(|l| l.contains("sweep.cell")).unwrap();
+        assert!(lease < job && job < cell, "waterfall order:\n{tree}");
+        // Indentation deepens along the causal chain.
+        assert!(lines[job].starts_with("  dist.job"), "{tree}");
+        assert!(lines[cell].starts_with("    sweep.cell"), "{tree}");
+        // Self time subtracts the child: 1000 - 300 = 700us.
+        assert!(lines[job].contains("(self 700us)"), "{tree}");
+        assert!(lines[cell].contains("(self 300us)"), "{tree}");
+    }
+
+    #[test]
+    fn critical_path_descends_slowest_chain() {
+        let out = render_critical_path(&causal_fixture(), 1);
+        let lines: Vec<&str> = out.lines().collect();
+        assert!(lines[0].contains("dist.lease"), "{out}");
+        assert!(lines[1].contains("dist.lease"), "{out}");
+        assert!(lines[2].contains("dist.job"), "{out}");
+        assert!(lines[3].contains("sweep.cell"), "{out}");
+        assert_eq!(lines.len(), 4, "{out}");
+    }
+
+    #[test]
+    fn flame_emits_folded_stacks_of_self_time() {
+        let out = render_flame(&causal_fixture());
+        assert!(out.contains("coord;dist.lease 200\n"), "{out}");
+        assert!(out.contains("coord;dist.lease;dist.job 700\n"), "{out}");
+        assert!(out.contains("coord;dist.lease;dist.job;sweep.cell 300\n"), "{out}");
+        // Every line matches the folded-stack schema.
+        for line in out.lines() {
+            let (stack, n) = line.rsplit_once(' ').unwrap();
+            assert!(!stack.is_empty() && stack.contains(';'), "{line}");
+            assert!(n.parse::<u64>().is_ok(), "{line}");
+        }
     }
 
     #[test]

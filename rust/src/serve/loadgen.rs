@@ -5,6 +5,13 @@
 //! latency a real caller would see — including micro-batching delay —
 //! and requests/sec at a fixed concurrency, the serve bench's headline
 //! number.
+//!
+//! Latency aggregation uses fixed-size log2-bucketed histograms
+//! ([`obs::hist`](crate::obs::hist)) — per-client histograms merge
+//! exactly into global and per-tier rollups, so memory stays bounded
+//! no matter how many requests a run issues. With `loadgen --trace`
+//! each client runs under a `loadgen.client` span whose
+//! `loadgen.request` children time individual round trips.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -14,8 +21,9 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::nn::synthetic_digits;
+use crate::obs::{Histogram, Obs};
+use crate::util::Json;
 
-use super::percentile;
 use super::protocol::{self, ParsedResponse};
 
 #[derive(Debug, Clone)]
@@ -31,6 +39,8 @@ pub struct LoadgenConfig {
     pub tiers: Vec<String>,
     /// Seed for the image workload.
     pub seed: u64,
+    /// Tracing handle (`loadgen --trace`); [`Obs::off`] runs untraced.
+    pub obs: Obs,
 }
 
 impl Default for LoadgenConfig {
@@ -41,6 +51,7 @@ impl Default for LoadgenConfig {
             requests_per_client: 200,
             tiers: vec!["gold".to_string(), "silver".to_string(), "bronze".to_string()],
             seed: 7,
+            obs: Obs::off(),
         }
     }
 }
@@ -92,12 +103,14 @@ impl LoadgenStats {
 struct ClientStats {
     ok: usize,
     errors: usize,
-    lat_us: Vec<u64>,
-    /// (ok, errors, latencies) per tier this client exercised.
-    tiers: BTreeMap<String, (usize, usize, Vec<u64>)>,
+    lat: Histogram,
+    /// (ok, errors, latency histogram) per tier this client exercised.
+    tiers: BTreeMap<String, (usize, usize, Histogram)>,
 }
 
 fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientStats> {
+    let span = cfg.obs.span("loadgen.client", &[("client", Json::Num(client as f64))]);
+    let obs = cfg.obs.child_of(&span);
     let stream = TcpStream::connect(&cfg.addr)
         .with_context(|| format!("client {client}: connecting {}", cfg.addr))?;
     let _ = stream.set_nodelay(true);
@@ -112,7 +125,7 @@ fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientStats> {
     let mut stats = ClientStats {
         ok: 0,
         errors: 0,
-        lat_us: Vec::new(),
+        lat: Histogram::new(),
         tiers: BTreeMap::new(),
     };
     let mut line = String::new();
@@ -121,6 +134,14 @@ fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientStats> {
         let img = &pool[k % pool.len()];
         let id = ((client as u64) << 32) | k as u64;
         let req = protocol::render_infer_request(id, tier, &img.pixels);
+        let mut req_span = if obs.enabled() {
+            Some(obs.span(
+                "loadgen.request",
+                &[("req", Json::Num(id as f64)), ("tier", Json::Str(tier.clone()))],
+            ))
+        } else {
+            None
+        };
         let start = Instant::now();
         writer.write_all(req.as_bytes()).context("sending request")?;
         writer.write_all(b"\n").context("sending request")?;
@@ -135,9 +156,13 @@ fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientStats> {
             bail!("client {client}: response id {} for request {id}", resp.id);
         }
         let us = start.elapsed().as_micros() as u64;
-        stats.lat_us.push(us);
+        if let Some(s) = req_span.as_mut() {
+            s.field("status", Json::Str(if resp.ok { "ok" } else { "error" }.to_string()));
+        }
+        drop(req_span);
+        stats.lat.record(us);
         let per_tier = stats.tiers.entry(tier.clone()).or_default();
-        per_tier.2.push(us);
+        per_tier.2.record(us);
         if resp.ok {
             stats.ok += 1;
             per_tier.0 += 1;
@@ -146,7 +171,15 @@ fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientStats> {
             per_tier.1 += 1;
         }
     }
+    span.finish();
     Ok(stats)
+}
+
+/// Quantile rollup of a latency histogram into the stats shape
+/// (`p50_us`/`p99_us`/`max_us` — `BENCH_serve.json` field names are
+/// load-bearing).
+fn rollup(h: &Histogram) -> (u64, u64, u64) {
+    (h.quantile(0.50), h.quantile(0.99), h.max())
 }
 
 /// Run the closed-loop workload; blocks until every client finishes.
@@ -163,47 +196,43 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenStats> {
         .collect();
     let mut ok = 0usize;
     let mut errors = 0usize;
-    let mut lat_us: Vec<u64> = Vec::new();
-    let mut tier_raw: BTreeMap<String, (usize, usize, Vec<u64>)> = BTreeMap::new();
+    // Exact merges: per-client histograms fold into one global and one
+    // per-tier distribution, order-independent.
+    let lat = Histogram::new();
+    let mut tier_raw: BTreeMap<String, (usize, usize, Histogram)> = BTreeMap::new();
     for h in handles {
         let cs = h.join().map_err(|_| anyhow::anyhow!("loadgen client panicked"))??;
         ok += cs.ok;
         errors += cs.errors;
-        lat_us.extend(cs.lat_us);
+        lat.merge(&cs.lat);
         for (tier, (t_ok, t_err, t_lat)) in cs.tiers {
             let agg = tier_raw.entry(tier).or_default();
             agg.0 += t_ok;
             agg.1 += t_err;
-            agg.2.extend(t_lat);
+            agg.2.merge(&t_lat);
         }
     }
     let elapsed = start.elapsed().as_secs_f64();
-    lat_us.sort_unstable();
+    if let Err(e) = cfg.obs.flush() {
+        cfg.obs.warn("loadgen", &format!("trace flush failed: {e:#}"), &[]);
+    }
     let tiers = tier_raw
         .into_iter()
-        .map(|(tier, (t_ok, t_err, mut t_lat))| {
-            t_lat.sort_unstable();
-            (
-                tier,
-                TierLoadStats {
-                    ok: t_ok,
-                    errors: t_err,
-                    p50_us: percentile(&t_lat, 0.50),
-                    p99_us: percentile(&t_lat, 0.99),
-                    max_us: t_lat.last().copied().unwrap_or(0),
-                },
-            )
+        .map(|(tier, (t_ok, t_err, t_lat))| {
+            let (p50_us, p99_us, max_us) = rollup(&t_lat);
+            (tier, TierLoadStats { ok: t_ok, errors: t_err, p50_us, p99_us, max_us })
         })
         .collect();
+    let (p50_us, p99_us, max_us) = rollup(&lat);
     Ok(LoadgenStats {
         sent: ok + errors,
         ok,
         errors,
         elapsed_ms: elapsed * 1e3,
         rps: (ok + errors) as f64 / elapsed.max(1e-9),
-        p50_us: percentile(&lat_us, 0.50),
-        p99_us: percentile(&lat_us, 0.99),
-        max_us: lat_us.last().copied().unwrap_or(0),
+        p50_us,
+        p99_us,
+        max_us,
         tiers,
     })
 }

@@ -35,16 +35,12 @@ pub mod protocol;
 pub mod registry;
 pub mod server;
 
-/// Nearest-rank percentile over already-sorted samples — the one
-/// convention shared by the server's per-tier metrics and the load
-/// generator's client-side latencies, so the two halves of
-/// `BENCH_serve.json` cannot drift apart.
-pub fn percentile(sorted: &[u64], q: f64) -> u64 {
-    if sorted.is_empty() {
-        return 0;
-    }
-    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
-}
+// Latency percentiles (server per-tier metrics and the load
+// generator's client side alike) come from fixed-size log2-bucketed
+// histograms — `obs::Histogram::quantile`, the same nearest-rank
+// convention the old sort-based `percentile` helper used, but bounded
+// in memory and mergeable across clients. The two halves of
+// `BENCH_serve.json` share one implementation so they cannot drift.
 
 pub use loadgen::{run_loadgen, LoadgenConfig, LoadgenStats};
 pub use registry::{parse_tiers, Registry, ResolvedTier, TierSource, TierSpec, DEFAULT_TIERS};

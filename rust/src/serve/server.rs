@@ -28,6 +28,20 @@
 //! requests and queue-full backpressure all produce structured error
 //! responses; a panic while processing a batch is caught and turned
 //! into error responses for that batch — serving workers never die.
+//!
+//! Tracing (`serve --trace`): every `infer` request opens a
+//! `serve.request` root span with a `serve.queue` child measuring
+//! queue wait; both ride inside the [`WorkItem`] through the batcher.
+//! Each popped micro-batch runs under a `serve.batch` span with one
+//! `serve.compute` child per tier group (kernel vs scalar recorded as
+//! a field); a batch serves many requests, so request spans link to it
+//! via a `batch` field rather than a parent edge (spans have one
+//! parent). Span guards are RAII — a panicking batch still ends every
+//! span — and all of it is observe-only: response bytes are pinned
+//! identical with tracing on vs off (`tests/obs_determinism.rs`).
+//! Per-tier latency lives in fixed-size log2-bucketed histograms
+//! ([`obs::hist`](crate::obs::hist)) — bounded memory on arbitrarily
+//! long runs, with a registry mirror for metrics scrapes.
 
 use std::collections::BTreeMap;
 use std::io::BufReader;
@@ -44,12 +58,11 @@ use crate::bench_support::JsonReport;
 use crate::nn::digits::IMG;
 #[allow(unused_imports)] // CompiledMlp: doc link target
 use crate::nn::{synthetic_digits, CompiledMlp, QuantMlp};
-use crate::obs::metrics;
+use crate::obs::{metrics, Histogram, Obs, Span};
 use crate::util::jsonl::{self, LineRead};
 use crate::util::Json;
 
 use super::batcher::{Batcher, BatcherConfig, PushError};
-use super::percentile;
 use super::protocol::{self, Request, Response};
 use super::registry::Registry;
 
@@ -73,6 +86,8 @@ pub struct ServeConfig {
     pub batch_wait_ms: u64,
     /// Queued-request bound per worker shard (backpressure).
     pub queue_cap: usize,
+    /// Tracing handle (`serve --trace`); [`Obs::off`] serves untraced.
+    pub obs: Obs,
 }
 
 impl Default for ServeConfig {
@@ -83,6 +98,7 @@ impl Default for ServeConfig {
             batch: 8,
             batch_wait_ms: 2,
             queue_cap: 1024,
+            obs: Obs::off(),
         }
     }
 }
@@ -93,38 +109,45 @@ struct WorkItem {
     pixels: Vec<u8>,
     resp: Sender<String>,
     enqueued: Instant,
+    /// `serve.request` root span — ends when the response is handed to
+    /// the connection writer (or the item is rejected). Inert-free:
+    /// absent entirely when tracing is off.
+    span: Option<Span>,
+    /// `serve.queue` child span — ends when a worker pops the batch.
+    queue: Option<Span>,
 }
-
-/// Latency samples kept per tier (ring overwrite past the cap, so the
-/// percentiles track recent traffic on long-running servers).
-const LAT_CAP: usize = 4096;
 
 struct TierStats {
     requests: u64,
-    lat_us: Vec<u64>,
-    /// Mirror in the process-wide registry (`obs::metrics`), labelled
-    /// by tier; the handle is cached here so the hot path stays one
-    /// relaxed atomic op.
+    /// Per-server latency distribution: fixed 8 KiB however long the
+    /// server runs, quantiles with bounded relative error.
+    hist: Histogram,
+    /// Mirrors in the process-wide registry (`obs::metrics`), labelled
+    /// by tier; handles are cached here so the hot path stays a few
+    /// relaxed atomic ops. (The histogram is mirrored rather than
+    /// shared because benches run many servers per process — each
+    /// server's `stats` must cover its own traffic only.)
     global: metrics::Counter,
+    global_lat: Arc<Histogram>,
 }
 
 impl TierStats {
     fn new(tier: &str) -> TierStats {
         TierStats {
             requests: 0,
-            lat_us: Vec::new(),
+            hist: Histogram::new(),
             global: metrics::counter(&format!(
                 "pallas_serve_requests_total{{tier=\"{tier}\"}}"
+            )),
+            global_lat: metrics::histogram(&format!(
+                "pallas_serve_latency_us{{tier=\"{tier}\"}}"
             )),
         }
     }
 
     fn record(&mut self, us: u64) {
-        if self.lat_us.len() < LAT_CAP {
-            self.lat_us.push(us);
-        } else {
-            self.lat_us[self.requests as usize % LAT_CAP] = us;
-        }
+        self.hist.record(us);
+        self.global_lat.record(us);
         self.requests += 1;
         self.global.inc();
     }
@@ -169,9 +192,7 @@ impl Metrics {
         tiers
             .iter()
             .map(|(name, t)| {
-                let mut lat = t.lat_us.clone();
-                lat.sort_unstable();
-                (name.clone(), t.requests, percentile(&lat, 0.50), percentile(&lat, 0.99))
+                (name.clone(), t.requests, t.hist.quantile(0.50), t.hist.quantile(0.99))
             })
             .collect()
     }
@@ -212,6 +233,7 @@ struct Shared {
     metrics: Metrics,
     shutting_down: AtomicBool,
     addr: SocketAddr,
+    obs: Obs,
 }
 
 impl Shared {
@@ -254,6 +276,7 @@ impl Server {
             metrics: Metrics::default(),
             shutting_down: AtomicBool::new(false),
             addr,
+            obs: cfg.obs.clone(),
         });
         let workers = (0..workers_n)
             .map(|w| {
@@ -288,6 +311,9 @@ impl Server {
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        if let Err(e) = self.shared.obs.flush() {
+            self.shared.obs.warn("serve", &format!("trace flush failed: {e:#}"), &[]);
         }
         let mut report = JsonReport::new();
         self.shared.metrics.fill_report(&self.shared.registry, &mut report);
@@ -429,12 +455,38 @@ fn handle_request(shared: &Arc<Shared>, line: &str, tx: &Sender<String>) {
                 );
                 return;
             }
-            let item =
-                WorkItem { id, tier, pixels, resp: tx.clone(), enqueued: Instant::now() };
+            // Request-scoped span tree (only when tracing): the root
+            // `serve.request` lives until the response is enqueued to
+            // the writer; its `serve.queue` child measures queue wait.
+            let (span, queue) = if shared.obs.enabled() {
+                let span = shared.obs.span(
+                    "serve.request",
+                    &[
+                        ("req", Json::Num(id as f64)),
+                        ("tier", Json::Str(tier.clone())),
+                    ],
+                );
+                let queue = shared.obs.child_of(&span).span("serve.queue", &[]);
+                (Some(span), Some(queue))
+            } else {
+                (None, None)
+            };
+            let item = WorkItem {
+                id,
+                tier,
+                pixels,
+                resp: tx.clone(),
+                enqueued: Instant::now(),
+                span,
+                queue,
+            };
             match shared.batcher.push(item) {
                 Ok(()) => {}
-                Err(PushError::Full(item)) => {
+                Err(PushError::Full(mut item)) => {
                     shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    if let Some(s) = item.span.as_mut() {
+                        s.field("status", Json::Str("rejected".to_string()));
+                    }
                     send(
                         tx,
                         Response::Error {
@@ -443,7 +495,10 @@ fn handle_request(shared: &Arc<Shared>, line: &str, tx: &Sender<String>) {
                         },
                     );
                 }
-                Err(PushError::Closed(item)) => {
+                Err(PushError::Closed(mut item)) => {
+                    if let Some(s) = item.span.as_mut() {
+                        s.field("status", Json::Str("shutdown".to_string()));
+                    }
                     send(
                         tx,
                         Response::Error {
@@ -458,20 +513,25 @@ fn handle_request(shared: &Arc<Shared>, line: &str, tx: &Sender<String>) {
 }
 
 fn worker_loop(shared: Arc<Shared>, shard: usize) {
-    while let Some(batch) = shared.batcher.pop_batch(shard) {
+    while let Some(mut batch) = shared.batcher.pop_batch(shard) {
         if batch.is_empty() {
             continue;
         }
         shared.metrics.note_batch(batch.len());
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            process_batch(&shared, &batch)
+            process_batch(&shared, &mut batch)
         }));
         if outcome.is_err() {
             // A worker must never die. Every item gets an error
             // response; items already answered before the panic may see
-            // a duplicate id, which beats a silent drop.
+            // a duplicate id, which beats a silent drop. Any spans the
+            // panicking half left in place end when `batch` drops — the
+            // trace stays balanced.
             shared.metrics.note_errors(batch.len());
-            for item in &batch {
+            for item in &mut batch {
+                if let Some(s) = item.span.as_mut() {
+                    s.field("status", Json::Str("panic".to_string()));
+                }
                 let _ = item.resp.send(
                     Response::Error {
                         id: item.id,
@@ -484,28 +544,55 @@ fn worker_loop(shared: Arc<Shared>, shard: usize) {
     }
 }
 
-fn process_batch(shared: &Shared, batch: &[WorkItem]) {
+/// Answer one request and end its span: the response is rendered and
+/// handed to the connection writer, which is where the server's
+/// accounting of the request stops (the write itself is asynchronous).
+fn respond(item: &mut WorkItem, status: &str, resp: Response) {
+    if let Some(mut s) = item.span.take() {
+        s.field("status", Json::Str(status.to_string()));
+    }
+    let _ = item.resp.send(resp.render());
+}
+
+fn process_batch(shared: &Shared, batch: &mut [WorkItem]) {
+    // The whole micro-batch runs under one `serve.batch` span. A batch
+    // serves many requests, so request spans can't parent it (spans
+    // have exactly one parent) — instead each request span records the
+    // batch span's id as a `batch` field, and queue-wait children end
+    // here, where the batch was popped.
+    let batch_span = if shared.obs.enabled() {
+        let span = shared
+            .obs
+            .span("serve.batch", &[("occupancy", Json::Num(batch.len() as f64))]);
+        let link = span.id().map(|id| Json::Num(id as f64));
+        for item in batch.iter_mut() {
+            item.queue.take();
+            if let (Some(s), Some(link)) = (item.span.as_mut(), &link) {
+                s.field("batch", link.clone());
+            }
+        }
+        Some(span)
+    } else {
+        None
+    };
     // Group by tier so each tier costs one registry resolution and one
     // batched LUT dispatch; the Arc pins the operator across the group
     // even if a reload swaps the registry mid-batch.
-    let mut groups: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
     for (i, item) in batch.iter().enumerate() {
-        groups.entry(item.tier.as_str()).or_default().push(i);
+        groups.entry(item.tier.clone()).or_default().push(i);
     }
     for (tier, idxs) in groups {
+        let tier = tier.as_str();
         let Some(resolved) = shared.registry.resolve(tier) else {
             // Tier sets are fixed per registry, so this is unreachable
             // in practice — but a missing tier must degrade, not panic.
             shared.metrics.note_errors(idxs.len());
             for &i in &idxs {
-                let item = &batch[i];
-                let _ = item.resp.send(
-                    Response::Error {
-                        id: item.id,
-                        error: format!("unknown tier {tier:?}"),
-                    }
-                    .render(),
-                );
+                let item = &mut batch[i];
+                let resp =
+                    Response::Error { id: item.id, error: format!("unknown tier {tier:?}") };
+                respond(item, "error", resp);
             }
             continue;
         };
@@ -514,44 +601,57 @@ fn process_batch(shared: &Shared, batch: &[WorkItem]) {
         // otherwise — byte-identical either way. Shape/range errors
         // are checked on this path (a bad image must never panic a
         // worker or poison its batch-mates).
+        let mut compute = batch_span.as_ref().map(|bs| {
+            shared.obs.child_of(bs).span(
+                "serve.compute",
+                &[
+                    ("tier", Json::Str(tier.to_string())),
+                    ("n", Json::Num(idxs.len() as f64)),
+                    (
+                        "path",
+                        Json::Str(
+                            if resolved.kernel.is_some() { "kernel" } else { "scalar" }
+                                .to_string(),
+                        ),
+                    ),
+                ],
+            )
+        });
         let labels = match &resolved.kernel {
             Some(kernel) => kernel.try_classify_batch(&images),
             None => shared.registry.mlp().try_classify_batch(&images, &resolved.lut),
         };
+        compute.take();
         let labels = match labels {
             Ok(labels) => labels,
             Err(e) => {
                 shared.metrics.note_errors(idxs.len());
                 for &i in &idxs {
-                    let item = &batch[i];
-                    let _ = item.resp.send(
-                        Response::Error {
-                            id: item.id,
-                            error: format!("inference failed: {e}"),
-                        }
-                        .render(),
-                    );
+                    let item = &mut batch[i];
+                    let resp = Response::Error {
+                        id: item.id,
+                        error: format!("inference failed: {e}"),
+                    };
+                    respond(item, "error", resp);
                 }
                 continue;
             }
         };
         let source = resolved.source_str();
         for (&i, label) in idxs.iter().zip(labels) {
-            let item = &batch[i];
+            let item = &mut batch[i];
             shared
                 .metrics
                 .record_infer(tier, item.enqueued.elapsed().as_micros() as u64);
-            let _ = item.resp.send(
-                Response::Infer {
-                    id: item.id,
-                    label,
-                    tier: tier.to_string(),
-                    max_err: resolved.max_err,
-                    area: resolved.area,
-                    source: source.clone(),
-                }
-                .render(),
-            );
+            let resp = Response::Infer {
+                id: item.id,
+                label,
+                tier: tier.to_string(),
+                max_err: resolved.max_err,
+                area: resolved.area,
+                source: source.clone(),
+            };
+            respond(item, "ok", resp);
         }
     }
 }
@@ -585,28 +685,42 @@ fn stats_snapshot(shared: &Shared) -> Json {
 mod tests {
     use super::*;
 
+    /// The old sort-based `percentile` helper's rank-selection cases,
+    /// kept as accuracy tests for its histogram replacement: exact in
+    /// the sub-64 unit-bucket range and at the min/max edges, within
+    /// the documented 1/64 relative bound elsewhere.
     #[test]
-    fn percentile_picks_expected_ranks() {
-        assert_eq!(percentile(&[], 0.5), 0);
-        assert_eq!(percentile(&[7], 0.99), 7);
-        let v: Vec<u64> = (1..=100).collect();
-        assert_eq!(percentile(&v, 0.0), 1);
-        assert_eq!(percentile(&v, 0.5), 51); // round((99)*0.5)=50 -> v[50]
-        assert_eq!(percentile(&v, 0.99), 99);
-        assert_eq!(percentile(&v, 1.0), 100);
+    fn histogram_quantiles_pick_expected_ranks() {
+        assert_eq!(Histogram::new().quantile(0.5), 0, "empty -> 0");
+        let single = Histogram::new();
+        single.record(7);
+        assert_eq!(single.quantile(0.99), 7);
+        let h = Histogram::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 1);
+        assert_eq!(h.quantile(0.5), 51); // round((99)*0.5)=50 -> 51st value
+        assert_eq!(h.quantile(1.0), 100);
+        let p99 = h.quantile(0.99); // exact rank value is 99
+        assert!(p99.abs_diff(99) <= 99 / 64 + 1, "p99 estimate {p99}");
     }
 
     #[test]
-    fn tier_stats_ring_overwrites_past_cap() {
-        let mut t = TierStats::new("ring_test");
-        for i in 0..(LAT_CAP as u64 + 10) {
+    fn tier_stats_stay_bounded_past_any_cap() {
+        let mut t = TierStats::new("hist_test");
+        let n = 10_000u64;
+        for i in 0..n {
             t.record(i);
         }
-        assert_eq!(t.requests, LAT_CAP as u64 + 10);
-        assert_eq!(t.lat_us.len(), LAT_CAP);
-        // The first 10 slots were overwritten by the newest samples.
-        assert_eq!(t.lat_us[0], LAT_CAP as u64);
-        assert_eq!(t.lat_us[9], LAT_CAP as u64 + 9);
-        assert_eq!(t.lat_us[10], 10);
+        assert_eq!(t.requests, n);
+        assert_eq!(t.hist.count(), n, "every sample recorded, none evicted");
+        // Memory is fixed by construction (no Vec to grow); quantiles
+        // still track the full distribution within the error bound.
+        let p50 = t.hist.quantile(0.50);
+        let exact = n / 2;
+        assert!(p50.abs_diff(exact) <= exact / 32 + 1, "p50 {p50} vs {exact}");
+        assert_eq!(t.hist.min(), 0);
+        assert_eq!(t.hist.max(), n - 1);
     }
 }

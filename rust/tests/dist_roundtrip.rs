@@ -147,7 +147,7 @@ impl RawClient {
 
     fn take_lease(&mut self) -> (usize, Job) {
         match self.exchange(&WorkerMsg::LeaseRequest) {
-            Some(CoordMsg::Lease { job, bench, method, et, search }) => (
+            Some(CoordMsg::Lease { job, bench, method, et, search, .. }) => (
                 job,
                 Job { bench: benchmark_by_name(&bench).unwrap(), method, et, search },
             ),
@@ -285,7 +285,11 @@ fn killed_and_wedged_workers_requeue_with_one_wal_line_per_job() {
         // B's job has been requeued by now, but B finishes anyway and
         // submits first: first-committed wins, the work is accepted.
         let record = run_job(&job_b);
-        match b.exchange(&WorkerMsg::Result { job: idx_b, record: record.clone() }) {
+        match b.exchange(&WorkerMsg::Result {
+            job: idx_b,
+            record: record.clone(),
+            trace_ctx: None,
+        }) {
             Some(CoordMsg::Committed { job, fresh }) => {
                 assert_eq!(job, idx_b);
                 assert!(fresh, "first sound submission must win");
@@ -293,7 +297,7 @@ fn killed_and_wedged_workers_requeue_with_one_wal_line_per_job() {
             other => panic!("expected committed, got {other:?}"),
         }
         // A second submission of the same job is a stale duplicate.
-        match b.exchange(&WorkerMsg::Result { job: idx_b, record }) {
+        match b.exchange(&WorkerMsg::Result { job: idx_b, record, trace_ctx: None }) {
             Some(CoordMsg::Committed { fresh, .. }) => {
                 assert!(!fresh, "duplicate must be discarded")
             }

@@ -188,6 +188,7 @@ fn start_server(dir: Option<&Path>, tiers: &str, compile_kernels: bool) -> Serve
             batch: 4,
             batch_wait_ms: 2,
             queue_cap: 1024,
+            ..Default::default()
         },
         registry,
     )

@@ -137,6 +137,26 @@ fn traced_sweep_outputs_match_untraced_baseline() {
             .iter()
             .filter(|e| e.kind == "span_end" && e.name == "sweep.cell")
             .any(|e| e.fields.contains_key("conflicts") && e.fields.contains_key("status")));
+        // Causality: cell spans nest under their job span.
+        let job_ids: std::collections::BTreeSet<u64> = events
+            .iter()
+            .filter(|e| e.kind == "span_begin" && e.name == "sweep.job")
+            .filter_map(|e| e.fields.get("span").and_then(Json::as_u64))
+            .collect();
+        assert!(!job_ids.is_empty());
+        assert!(
+            events
+                .iter()
+                .filter(|e| e.kind == "span_begin" && e.name == "sweep.cell")
+                .all(|e| {
+                    e.fields
+                        .get("parent")
+                        .and_then(Json::as_u64)
+                        .is_some_and(|p| job_ids.contains(&p))
+                }),
+            "every sweep.cell parents under a sweep.job"
+        );
+        assert!(report.parented > 0);
 
         std::fs::remove_dir_all(&base_dir).unwrap();
         std::fs::remove_dir_all(&traced_dir).unwrap();
@@ -214,6 +234,33 @@ fn traced_distributed_run_merges_and_accounts_every_commit_once() {
     assert_eq!(report.nodes.len(), 3, "coord + 2 workers");
     assert!(events.iter().any(|e| e.kind == "span_end" && e.name == "dist.job"));
 
+    // The acceptance bar for causal propagation: every worker-side
+    // dist.job span is parented under a coordinator dist.lease span,
+    // across the process boundary.
+    let lease_ids: std::collections::BTreeSet<u64> = events
+        .iter()
+        .filter(|e| e.node == "coord" && e.kind == "span_begin" && e.name == "dist.lease")
+        .filter_map(|e| e.fields.get("span").and_then(Json::as_u64))
+        .collect();
+    assert!(!lease_ids.is_empty(), "coordinator opened lease spans");
+    let jobs_spans: Vec<_> = events
+        .iter()
+        .filter(|e| e.kind == "span_begin" && e.name == "dist.job")
+        .collect();
+    assert!(!jobs_spans.is_empty());
+    for e in &jobs_spans {
+        assert_eq!(
+            e.fields.get("parent_node").and_then(Json::as_str),
+            Some("coord"),
+            "dist.job on {} parents across nodes: {:?}",
+            e.node,
+            e.fields
+        );
+        let p = e.fields.get("parent").and_then(Json::as_u64).unwrap();
+        assert!(lease_ids.contains(&p), "parent {p} is a dist.lease span");
+    }
+    assert!(report.parented >= jobs_spans.len());
+
     let commits = trace::commit_counts(&events);
     assert_eq!(commits.len(), plan.n_jobs(), "every job committed");
     assert!(
@@ -259,6 +306,7 @@ fn serve_metrics_snapshot_is_valid_json_and_monotonic() {
             batch: 4,
             batch_wait_ms: 2,
             queue_cap: 64,
+            ..Default::default()
         },
         registry,
     )
@@ -311,4 +359,100 @@ fn serve_metrics_snapshot_is_valid_json_and_monotonic() {
 
     let _ = roundtrip(&render_control_request("shutdown", 3));
     server.join();
+}
+
+/// The serve-side observe-only contract: a `--trace`d server answers
+/// the exact same byte stream an untraced one does, and its trace
+/// validates with `serve.queue` spans nested under their
+/// `serve.request` and `serve.compute` under `serve.batch`.
+#[test]
+fn traced_serve_responses_match_untraced_baseline() {
+    let start = |obs: Obs| -> Server {
+        let registry = Registry::open(
+            "mult_i8",
+            parse_tiers("gold=0,silver=4").unwrap(),
+            None,
+            std::sync::Arc::new(serving_mlp()),
+            true,
+        )
+        .unwrap();
+        Server::start(
+            &ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                workers: 2,
+                batch: 4,
+                batch_wait_ms: 2,
+                queue_cap: 64,
+                obs,
+            },
+            registry,
+        )
+        .unwrap()
+    };
+    // One connection, strictly sequential round trips, so the response
+    // order (and therefore the byte stream) is deterministic.
+    let drive = |server: Server| -> Vec<String> {
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let pixels: Vec<u8> = (0..64).map(|i| (i * 5 % 16) as u8).collect();
+        let mut lines = Vec::new();
+        for k in 0..8u64 {
+            let tier = if k % 2 == 0 { "gold" } else { "silver" };
+            writer
+                .write_all(render_infer_request(k, tier, &pixels).as_bytes())
+                .unwrap();
+            writer.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0);
+            lines.push(line.trim().to_string());
+        }
+        writer
+            .write_all(render_control_request("shutdown", 99).as_bytes())
+            .unwrap();
+        writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        let _ = reader.read_line(&mut line);
+        server.join();
+        lines
+    };
+
+    let base = drive(start(Obs::off()));
+
+    let dir = tmp_dir("serve_traced");
+    let trace_path = dir.join("serve.trace.jsonl");
+    let traced = drive(start(Obs::to_file(&trace_path, "serve")));
+    assert_eq!(base, traced, "tracing must not change a single response byte");
+
+    let events = trace::load(&trace_path).unwrap();
+    let report = trace::check(&events).unwrap();
+    assert_eq!(report.nodes, vec!["serve".to_string()]);
+    assert!(report.parented > 0);
+    for name in ["serve.request", "serve.queue", "serve.batch", "serve.compute"] {
+        assert!(
+            events.iter().any(|e| e.kind == "span_end" && e.name == name),
+            "trace contains {name} spans"
+        );
+    }
+    let ids = |name: &str| -> std::collections::BTreeSet<u64> {
+        events
+            .iter()
+            .filter(|e| e.kind == "span_begin" && e.name == name)
+            .filter_map(|e| e.fields.get("span").and_then(Json::as_u64))
+            .collect()
+    };
+    let parents = |name: &str| -> Vec<u64> {
+        events
+            .iter()
+            .filter(|e| e.kind == "span_begin" && e.name == name)
+            .map(|e| e.fields.get("parent").and_then(Json::as_u64).unwrap())
+            .collect()
+    };
+    let req_ids = ids("serve.request");
+    assert!(parents("serve.queue").iter().all(|p| req_ids.contains(p)));
+    let batch_ids = ids("serve.batch");
+    assert!(parents("serve.compute").iter().all(|p| batch_ids.contains(p)));
+
+    std::fs::remove_dir_all(&dir).unwrap();
 }

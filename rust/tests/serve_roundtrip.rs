@@ -62,6 +62,7 @@ fn start_server(dir: Option<&Path>, tiers: &str, workers: usize, batch: usize) -
             batch,
             batch_wait_ms: 2,
             queue_cap: 1024,
+            ..Default::default()
         },
         registry,
     )
