@@ -13,7 +13,6 @@ use std::sync::Arc;
 use sxpat::bench_support::JsonReport;
 use sxpat::circuit::generators::benchmark_by_name;
 use sxpat::coordinator::{run_sweep_stored, Method, SweepPlan};
-use sxpat::obs::Obs;
 use sxpat::search::SearchConfig;
 use sxpat::serve::{
     parse_tiers, run_loadgen, serving_mlp, LoadgenConfig, Registry, ServeConfig, Server,
@@ -82,7 +81,7 @@ fn main() {
                 batch,
                 batch_wait_ms: 1,
                 queue_cap: 4096,
-                obs: Obs::off(),
+                ..ServeConfig::default()
             },
             registry,
         )
@@ -94,7 +93,7 @@ fn main() {
             requests_per_client: REQUESTS,
             tiers: tier_names.clone(),
             seed: 42,
-            obs: Obs::off(),
+            ..LoadgenConfig::default()
         })
         .unwrap();
         assert_eq!(stats.errors, 0, "{key}: load must serve clean");

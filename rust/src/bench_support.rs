@@ -178,6 +178,37 @@ impl JsonReport {
             Err(e) => eprintln!("could not write {path}: {e}"),
         }
     }
+
+    /// Parse a rendered report back (the `perfgate` input path): a
+    /// flat JSON object of numbers, entries sorted by key. `null`
+    /// entries (non-finite at write time) load as NaN so comparisons
+    /// can skip them explicitly.
+    pub fn parse(text: &str) -> anyhow::Result<JsonReport> {
+        let j = crate::util::Json::parse(text)?;
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("bench report is not a JSON object"))?;
+        let mut report = JsonReport::new();
+        for (k, v) in obj {
+            match v {
+                crate::util::Json::Null => report.push(k, f64::NAN),
+                other => report.push(
+                    k,
+                    other.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("bench report key {k:?} is not a number")
+                    })?,
+                ),
+            }
+        }
+        Ok(report)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<JsonReport> {
+        use anyhow::Context;
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read bench report {}", path.display()))?;
+        JsonReport::parse(&text).with_context(|| format!("parse {}", path.display()))
+    }
 }
 
 /// Shared fresh-build vs prototype-clone harness: times `build()` (3

@@ -37,13 +37,14 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::coordinator::{probe_store, Job, RunRecord, SweepPlan};
+use crate::obs::timeseries::{self, Clock, MonotonicClock};
 use crate::obs::{metrics, Obs, Span, TraceCtx};
 use crate::store::Store;
 use crate::util::jsonl::{self, LineRead};
 use crate::util::Json;
 
 use super::lease::{CommitEvent, PreparedJob, Rejection, Scheduler, Submission};
-use super::protocol::{CoordMsg, WorkerMsg, PROTO_VERSION};
+use super::protocol::{CoordMsg, WorkerMsg, WorkerTelemetry, PROTO_VERSION};
 
 #[derive(Debug, Clone)]
 pub struct DistConfig {
@@ -144,7 +145,23 @@ struct Shared<'a> {
     /// rides the `lease` verb so the worker's `dist.job` span nests
     /// under it across machines.
     lease_spans: Mutex<std::collections::HashMap<usize, Span>>,
+    /// Live per-worker telemetry (name → last frame), served back out
+    /// through the `status` verb.
+    workers: Mutex<std::collections::BTreeMap<String, WorkerView>>,
+    /// Monotonic clock for telemetry timestamps (`status` samples,
+    /// worker `last_seen` ages).
+    clock: MonotonicClock,
     mx: CoordMetrics,
+}
+
+/// The coordinator's live view of one worker, refreshed by the
+/// telemetry frame each `lease_request` piggybacks. Keyed by the
+/// worker's self-reported name; counters are cumulative, so staleness
+/// is judged by `last_seen_us`, not by missing frames.
+struct WorkerView {
+    telemetry: WorkerTelemetry,
+    /// Coordinator-clock timestamp of the last frame.
+    last_seen_us: u64,
 }
 
 /// End the open lease span for `job` (if traced) with a terminal
@@ -221,6 +238,8 @@ impl<'a> Coordinator<'a> {
             wait_ms,
             obs,
             lease_spans: Mutex::new(std::collections::HashMap::new()),
+            workers: Mutex::new(std::collections::BTreeMap::new()),
+            clock: MonotonicClock::new(),
             mx: CoordMetrics::new(),
         };
         shared.obs.info(
@@ -478,6 +497,40 @@ fn handle_conn(shared: &Shared<'_>, stream: TcpStream, conn_id: u64) {
     }
 }
 
+/// One cumulative telemetry sample for the `status` verb: the
+/// process-wide `pallas_dist*` registry metrics plus sweep progress
+/// and the per-worker view, all folded into the standard
+/// [`Sample`](crate::obs::Sample) shape (worker facts become labelled
+/// gauges) so the monitor side needs no special-case parsing.
+fn status_sample(shared: &Shared<'_>) -> Json {
+    let now_us = shared.clock.now_us();
+    let mut s = timeseries::cumulative_sample("coord", now_us, Some("pallas_dist"));
+    {
+        let g = shared.sched.lock().unwrap();
+        s.gauges.insert("pallas_dist_jobs_total".to_string(), shared.n_jobs as u64);
+        s.gauges
+            .insert("pallas_dist_jobs_resolved".to_string(), g.sched.resolved() as u64);
+        s.gauges
+            .insert("pallas_dist_jobs_in_flight".to_string(), g.sched.in_flight() as u64);
+        s.gauges.insert(
+            "pallas_dist_commit_frontier_lag".to_string(),
+            g.sched.frontier_lag() as u64,
+        );
+    }
+    let workers = shared.workers.lock().unwrap();
+    s.gauges.insert("pallas_dist_workers_seen".to_string(), workers.len() as u64);
+    for (name, v) in workers.iter() {
+        let key = |what: &str| format!("pallas_dist_worker_{what}{{worker=\"{name}\"}}");
+        s.gauges.insert(key("jobs"), v.telemetry.jobs);
+        s.gauges.insert(key("tx_bytes"), v.telemetry.tx_bytes);
+        s.gauges.insert(key("rx_bytes"), v.telemetry.rx_bytes);
+        s.gauges.insert(key("uptime_us"), v.telemetry.uptime_us);
+        // Liveness: how long since this worker's last heartbeat.
+        s.gauges.insert(key("age_us"), now_us.saturating_sub(v.last_seen_us));
+    }
+    s.to_json()
+}
+
 fn handle_msg(
     shared: &Shared<'_>,
     conn_id: u64,
@@ -497,10 +550,20 @@ fn handle_msg(
             *hello_done = true;
             CoordMsg::Welcome { jobs: shared.n_jobs, lease_ms: shared.lease_ms }
         }
+        // Telemetry poll: read-only, so it needs no worker identity —
+        // deliberately ahead of the hello gate, letting `monitor`
+        // clients poll without joining the sweep.
+        WorkerMsg::Status => CoordMsg::Status { sample: status_sample(shared) },
         _ if !*hello_done => {
             CoordMsg::Error { error: "hello required before anything else".to_string() }
         }
-        WorkerMsg::LeaseRequest => {
+        WorkerMsg::LeaseRequest { telemetry } => {
+            if let Some(t) = telemetry {
+                shared.workers.lock().unwrap().insert(
+                    t.name.clone(),
+                    WorkerView { telemetry: t, last_seen_us: shared.clock.now_us() },
+                );
+            }
             let mut g = shared.sched.lock().unwrap();
             loop {
                 if g.sched.done() {

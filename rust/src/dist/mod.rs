@@ -33,4 +33,5 @@ pub mod worker;
 
 pub use coordinator::{run_distributed_sweep, Coordinator, DistConfig};
 pub use lease::{Scheduler, REJECT_CAP};
+pub use protocol::WorkerTelemetry;
 pub use worker::{run_worker, WorkerConfig, WorkerStats};

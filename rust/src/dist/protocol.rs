@@ -40,6 +40,16 @@
 //! caused it, one causal tree per job across machines. The field is
 //! optional and additive (an untraced peer omits it; an old peer
 //! ignores it), so `PROTO_VERSION` stays unchanged.
+//!
+//! **Telemetry piggyback.** A `lease_request` may carry a compact
+//! `telemetry` frame ([`WorkerTelemetry`]: jobs completed, wire bytes
+//! each way, uptime) — the coordinator folds it into its live
+//! per-worker view at zero extra round trips, since the lease loop is
+//! already the worker's natural heartbeat. Like `trace_ctx` the field
+//! is optional and additive. Separately, a `status` request (allowed
+//! *before* `hello`, so monitoring clients need no worker identity)
+//! answers one cumulative registry sample plus the per-worker view —
+//! the poll half of the `monitor` subcommand (DESIGN.md §14).
 
 use std::collections::BTreeMap;
 
@@ -54,13 +64,66 @@ use crate::util::Json;
 /// different build could silently disagree about job identity).
 pub const PROTO_VERSION: u64 = 1;
 
+/// The compact per-worker telemetry frame piggybacked on
+/// `lease_request` lines. All counters are cumulative since worker
+/// start, so a frame lost with its connection costs nothing — the next
+/// one carries the full totals.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerTelemetry {
+    /// The worker's self-reported name (matches its `hello`).
+    pub name: String,
+    /// Jobs completed (results sent, whether or not they were fresh).
+    pub jobs: u64,
+    /// Bytes this worker has written to the coordinator.
+    pub tx_bytes: u64,
+    /// Bytes this worker has read from the coordinator.
+    pub rx_bytes: u64,
+    /// Microseconds since the worker process started its run loop.
+    pub uptime_us: u64,
+}
+
+impl WorkerTelemetry {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("jobs".to_string(), Json::Num(self.jobs as f64));
+        m.insert("tx_bytes".to_string(), Json::Num(self.tx_bytes as f64));
+        m.insert("rx_bytes".to_string(), Json::Num(self.rx_bytes as f64));
+        m.insert("uptime_us".to_string(), Json::Num(self.uptime_us as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<WorkerTelemetry, String> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "telemetry: missing \"name\"".to_string())?
+            .to_string();
+        let num = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("telemetry: missing \"{key}\""))
+        };
+        Ok(WorkerTelemetry {
+            name,
+            jobs: num("jobs")?,
+            tx_bytes: num("tx_bytes")?,
+            rx_bytes: num("rx_bytes")?,
+            uptime_us: num("uptime_us")?,
+        })
+    }
+}
+
 /// A message from a worker to the coordinator.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WorkerMsg {
     Hello { name: String, proto: u64 },
-    LeaseRequest,
+    LeaseRequest { telemetry: Option<WorkerTelemetry> },
     Result { job: usize, record: RunRecord, trace_ctx: Option<TraceCtx> },
     Reject { job: usize, reason: String },
+    /// Telemetry poll (allowed before `hello`): answer one
+    /// [`CoordMsg::Status`] sample and keep the connection open.
+    Status,
 }
 
 /// A coordinator response. Exactly one per worker message.
@@ -79,6 +142,11 @@ pub enum CoordMsg {
     Done,
     Committed { job: usize, fresh: bool },
     Requeued { job: usize },
+    /// One cumulative telemetry sample (registry metrics plus the
+    /// per-worker view), shaped for
+    /// [`Sample::from_json`](crate::obs::Sample) consumption on the
+    /// monitor side.
+    Status { sample: Json },
     Error { error: String },
 }
 
@@ -102,8 +170,14 @@ impl WorkerMsg {
                 m.insert("name".to_string(), Json::Str(name.clone()));
                 m.insert("proto".to_string(), Json::Num(*proto as f64));
             }
-            WorkerMsg::LeaseRequest => {
+            WorkerMsg::LeaseRequest { telemetry } => {
                 m.insert("type".to_string(), Json::Str("lease_request".to_string()));
+                if let Some(t) = telemetry {
+                    m.insert("telemetry".to_string(), t.to_json());
+                }
+            }
+            WorkerMsg::Status => {
+                m.insert("type".to_string(), Json::Str("status".to_string()));
             }
             WorkerMsg::Result { job, record, trace_ctx } => {
                 m.insert("type".to_string(), Json::Str("result".to_string()));
@@ -145,7 +219,15 @@ impl WorkerMsg {
                     .to_string(),
                 proto: j.get("proto").and_then(Json::as_u64).unwrap_or(0),
             }),
-            "lease_request" => Ok(WorkerMsg::LeaseRequest),
+            "lease_request" => Ok(WorkerMsg::LeaseRequest {
+                // Same contract as trace_ctx: absent is fine, a peer
+                // that sends telemetry must send it well-formed.
+                telemetry: match j.get("telemetry") {
+                    None => None,
+                    Some(t) => Some(WorkerTelemetry::from_json(t)?),
+                },
+            }),
+            "status" => Ok(WorkerMsg::Status),
             "result" => Ok(WorkerMsg::Result {
                 job: job()?,
                 record: RunRecord::from_json(
@@ -203,6 +285,10 @@ impl CoordMsg {
             CoordMsg::Requeued { job } => {
                 m.insert("type".to_string(), Json::Str("requeued".to_string()));
                 m.insert("job".to_string(), Json::Num(*job as f64));
+            }
+            CoordMsg::Status { sample } => {
+                m.insert("type".to_string(), Json::Str("status".to_string()));
+                m.insert("sample".to_string(), sample.clone());
             }
             CoordMsg::Error { error } => {
                 // The shared structured-error shape (no request ids in
@@ -269,6 +355,12 @@ impl CoordMsg {
                 fresh: j.get("fresh").and_then(Json::as_bool).unwrap_or(false),
             }),
             "requeued" => Ok(CoordMsg::Requeued { job: num("job")? as usize }),
+            "status" => Ok(CoordMsg::Status {
+                sample: j
+                    .get("sample")
+                    .cloned()
+                    .ok_or_else(|| "status: missing \"sample\"".to_string())?,
+            }),
             other => Err(format!("unknown coordinator message type {other:?}")),
         }
     }
@@ -299,7 +391,17 @@ mod tests {
     fn worker_messages_round_trip() {
         let msgs = [
             WorkerMsg::Hello { name: "w1".to_string(), proto: PROTO_VERSION },
-            WorkerMsg::LeaseRequest,
+            WorkerMsg::LeaseRequest { telemetry: None },
+            WorkerMsg::LeaseRequest {
+                telemetry: Some(WorkerTelemetry {
+                    name: "w1".to_string(),
+                    jobs: 12,
+                    tx_bytes: 4096,
+                    rx_bytes: 8192,
+                    uptime_us: 1_500_000,
+                }),
+            },
+            WorkerMsg::Status,
             WorkerMsg::Result { job: 3, record: record(), trace_ctx: None },
             WorkerMsg::Result {
                 job: 4,
@@ -339,6 +441,13 @@ mod tests {
             CoordMsg::Done,
             CoordMsg::Committed { job: 3, fresh: true },
             CoordMsg::Requeued { job: 9 },
+            CoordMsg::Status {
+                sample: Json::parse(
+                    "{\"counters\":{\"dist_jobs_total\":3},\"gauges\":{},\
+                     \"hists\":{},\"node\":\"coord\",\"seq\":0,\"ts_us\":12}",
+                )
+                .unwrap(),
+            },
         ];
         for m in msgs {
             let line = m.render();
@@ -375,6 +484,21 @@ mod tests {
             "\"trace_ctx\":{\"node\":\"c\"},\"type\":\"lease\"",
         );
         assert!(CoordMsg::parse(&bad).unwrap_err().contains("trace_ctx"));
+    }
+
+    #[test]
+    fn malformed_telemetry_is_an_error_but_absent_is_fine() {
+        let bare = WorkerMsg::LeaseRequest { telemetry: None }.render();
+        assert!(!bare.contains("telemetry"));
+        assert_eq!(
+            WorkerMsg::parse(&bare).unwrap(),
+            WorkerMsg::LeaseRequest { telemetry: None }
+        );
+        let bad = bare.replace(
+            "\"type\":\"lease_request\"",
+            "\"telemetry\":{\"jobs\":1},\"type\":\"lease_request\"",
+        );
+        assert!(WorkerMsg::parse(&bad).unwrap_err().contains("telemetry"));
     }
 
     #[test]

@@ -19,7 +19,8 @@
 use std::io::BufReader;
 use std::net::TcpStream;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -31,7 +32,7 @@ use crate::search::MiterCache;
 use crate::util::jsonl::{self, LineRead};
 use crate::util::Json;
 
-use super::protocol::{CoordMsg, WorkerMsg, PROTO_VERSION};
+use super::protocol::{CoordMsg, WorkerMsg, WorkerTelemetry, PROTO_VERSION};
 
 #[derive(Debug, Clone)]
 pub struct WorkerConfig {
@@ -62,10 +63,15 @@ impl Default for WorkerConfig {
     }
 }
 
-/// Wire-volume counters, registered once per `run_worker` call.
+/// Wire-volume counters, registered once per `run_worker` call. The
+/// registry counters are process-wide (in-process test workers share
+/// them), so the telemetry frames this run piggybacks on its lease
+/// requests report the run-local cells instead.
 struct WireCounters {
     tx: metrics::Counter,
     rx: metrics::Counter,
+    tx_local: AtomicU64,
+    rx_local: AtomicU64,
 }
 
 #[derive(Debug, Default, Clone)]
@@ -92,6 +98,7 @@ fn exchange(
 ) -> Result<Option<CoordMsg>> {
     let line = msg.render();
     wire.tx.add(line.len() as u64 + 1);
+    wire.tx_local.fetch_add(line.len() as u64 + 1, Ordering::Relaxed);
     if jsonl::send_line(writer, &line).is_err() {
         return Ok(None);
     }
@@ -102,6 +109,7 @@ fn exchange(
             LineRead::Line(l) if l.is_empty() => continue,
             LineRead::Line(l) => {
                 wire.rx.add(l.len() as u64 + 1);
+                wire.rx_local.fetch_add(l.len() as u64 + 1, Ordering::Relaxed);
                 match CoordMsg::parse(&l) {
                     Ok(m) => Ok(Some(m)),
                     Err(e) => bail!("bad coordinator response: {e}"),
@@ -120,9 +128,12 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerStats> {
     let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
     let mut writer = stream;
     let mut stats = WorkerStats::default();
+    let started = Instant::now();
     let wire = WireCounters {
         tx: metrics::counter("pallas_dist_worker_tx_bytes_total"),
         rx: metrics::counter("pallas_dist_worker_rx_bytes_total"),
+        tx_local: AtomicU64::new(0),
+        rx_local: AtomicU64::new(0),
     };
     let jobs_completed = metrics::counter("pallas_dist_worker_jobs_completed_total");
 
@@ -142,9 +153,18 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerStats> {
         if cfg.max_jobs.is_some_and(|cap| stats.completed >= cap) {
             break;
         }
-        let Some(resp) =
-            exchange(&mut writer, &mut reader, &WorkerMsg::LeaseRequest, &wire)?
-        else {
+        // Piggyback the live telemetry frame on the natural heartbeat:
+        // every lease request carries cumulative run-local totals.
+        let lease_req = WorkerMsg::LeaseRequest {
+            telemetry: Some(WorkerTelemetry {
+                name: cfg.name.clone(),
+                jobs: stats.completed as u64,
+                tx_bytes: wire.tx_local.load(Ordering::Relaxed),
+                rx_bytes: wire.rx_local.load(Ordering::Relaxed),
+                uptime_us: started.elapsed().as_micros() as u64,
+            }),
+        };
+        let Some(resp) = exchange(&mut writer, &mut reader, &lease_req, &wire)? else {
             break; // coordinator gone: sweep is over for us
         };
         match resp {

@@ -20,6 +20,7 @@ pub mod circuit;
 pub mod coordinator;
 pub mod dist;
 pub mod evaluator;
+pub mod monitor;
 pub mod nn;
 pub mod obs;
 pub mod report;

@@ -14,6 +14,8 @@
 //!   worker     --connect ADDR      distributed-sweep worker node
 //!   trace      FILE... [--top N] [--check|--tree|--critical-path|--flame]
 //!                                  inspect --trace JSONL dumps
+//!   monitor    --serve A,B --coord C   live cluster telemetry view
+//!   perfgate   OLD NEW | --reduce FILE perf regression gate
 //!
 //! `sweep --store DIR` opens the persistent result store in DIR: jobs
 //! already fingerprinted there are served from disk (no SAT search,
@@ -97,6 +99,25 @@
 //! non-zero on a malformed trace (the CI contract). `PALLAS_LOG`
 //! filters the leveled stderr logging (e.g. `PALLAS_LOG=debug`,
 //! default `warn`).
+//!
+//! Live telemetry (DESIGN.md §14): `serve` answers `watch`
+//! subscriptions (one cumulative registry sample every `--sample-ms`
+//! per subscriber), workers piggyback compact telemetry on each lease
+//! request, and the coordinator answers a pre-`hello` `status` poll
+//! with an aggregate sample. `monitor --serve A,B --coord C
+//! [--interval-ms N] [--iterations N] [--out TS.jsonl] [--slo FILE]`
+//! subscribes to any mix of endpoints, renders the aggregated
+//! per-tier / per-worker cluster table (exact histogram merges) and
+//! appends the time-series log. `loadgen --rate RPS` switches the
+//! load generator to an open-loop arrival schedule (latency charged
+//! from intended send times — no coordinated omission);
+//! `--spike-after K --spike-ms MS` injects a sender stall, and
+//! `--slo FILE` judges the client-observed series as fast/slow burn
+//! rates, emitting `slo.breach` events into the trace. `perfgate OLD
+//! NEW [--tolerance F] [--min-delta F]` compares two perf artifacts
+//! (`BENCH_*.json` reports or time-series logs) under noise
+//! thresholds and exits non-zero on a regression — the CI gate;
+//! `perfgate --reduce FILE` prints the flat reduced metric map.
 
 use std::path::{Path, PathBuf};
 
@@ -142,6 +163,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("loadgen") => loadgen(args),
         Some("worker") => worker(args),
         Some("trace") => trace_cmd(args),
+        Some("monitor") => monitor(args),
+        Some("perfgate") => perfgate(args),
         _ => {
             eprintln!("{}", HELP);
             Ok(())
@@ -149,7 +172,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const HELP: &str = "usage: sxpat <bench-gen|synth|sweep|proxy-study|random-baseline|verify|nn-eval|oplib|serve|loadgen|worker|trace> [--flags]
+const HELP: &str = "usage: sxpat <bench-gen|synth|sweep|proxy-study|random-baseline|verify|nn-eval|oplib|serve|loadgen|worker|trace|monitor|perfgate> [--flags]
 see rust/src/main.rs header or README.md for details";
 
 fn search_config(args: &Args) -> Result<SearchConfig> {
@@ -679,6 +702,7 @@ fn serve(args: &Args) -> Result<()> {
         batch: args.get_usize_or("batch", 8)?,
         batch_wait_ms: args.get_u64("batch-wait-ms")?.unwrap_or(2),
         queue_cap: args.get_usize_or("queue-cap", 1024)?,
+        sample_ms: args.get_u64("sample-ms")?.unwrap_or(1000),
         obs,
     };
     let server = Server::start(&cfg, registry)?;
@@ -716,20 +740,49 @@ fn loadgen(args: &Args) -> Result<()> {
         }
         None => Obs::off(),
     };
+    // --rate RPS: total open-loop arrival rate across all clients.
+    let rate = match args.get("rate") {
+        Some(r) => Some(
+            r.parse::<f64>()
+                .map_err(|_| anyhow!("--rate must be a number (requests/sec), got {r}"))?,
+        ),
+        None if args.has_flag("rate") => bail!("--rate requires a requests/sec argument"),
+        None => None,
+    };
+    // --slo FILE: judge the run's own (client-observed) registry
+    // mirror, so the spec's prefix is forced to the loadgen metrics.
+    let slo = match args.get("slo") {
+        Some(p) => {
+            let mut spec = sxpat::obs::SloSpec::load(Path::new(p))?;
+            spec.prefix = "pallas_loadgen".to_string();
+            Some(spec)
+        }
+        None if args.has_flag("slo") => bail!("--slo requires a file argument"),
+        None => None,
+    };
     let cfg = LoadgenConfig {
         addr: args.get_or("addr", "127.0.0.1:7878"),
         clients: args.get_usize_or("clients", 4)?,
         requests_per_client: args.get_usize_or("requests", 200)?,
         tiers,
         seed: args.get_u64("seed")?.unwrap_or(7),
+        rate,
+        spike_after: args.get_u64("spike-after")?.map(|x| x as usize),
+        spike_ms: args.get_u64("spike-ms")?.unwrap_or(0),
+        slo,
+        sample_ms: args.get_u64("sample-ms")?.unwrap_or(200),
         obs,
     };
     println!(
-        "loadgen: {} clients x {} requests against {} (tiers {})",
+        "loadgen: {} clients x {} requests against {} (tiers {}, {})",
         cfg.clients,
         cfg.requests_per_client,
         cfg.addr,
-        cfg.tiers.join(",")
+        cfg.tiers.join(","),
+        match cfg.rate {
+            Some(r) => format!("open loop at {r} req/s total"),
+            None => "closed loop".to_string(),
+        }
     );
     let stats = run_loadgen(&cfg)?;
     stats.report();
@@ -753,6 +806,102 @@ fn loadgen(args: &Args) -> Result<()> {
             reader.read_line(&mut line)?;
             println!("server acknowledged shutdown");
         }
+    }
+    Ok(())
+}
+
+/// The `monitor` subcommand: live aggregated telemetry over any mix
+/// of serve (`watch` subscription) and coordinator (`status` poll)
+/// endpoints. Endpoint lists are comma-separated because repeated
+/// `--serve` flags collapse in the option map.
+fn monitor(args: &Args) -> Result<()> {
+    use sxpat::monitor::{run_monitor, MonitorConfig};
+
+    fn split_list(v: Option<&str>) -> Vec<String> {
+        v.map(|s| {
+            s.split(',')
+                .map(str::trim)
+                .filter(|a| !a.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default()
+    }
+
+    let obs = match args.get("trace") {
+        Some(p) => Obs::to_file(Path::new(p), "monitor"),
+        None if args.has_flag("trace") => {
+            bail!("--trace requires a file argument");
+        }
+        None => Obs::off(),
+    };
+    let slo = match args.get("slo") {
+        Some(p) => Some(sxpat::obs::SloSpec::load(Path::new(p))?),
+        None if args.has_flag("slo") => bail!("--slo requires a file argument"),
+        None => None,
+    };
+    let cfg = MonitorConfig {
+        serve: split_list(args.get("serve")),
+        coord: split_list(args.get("coord")),
+        interval_ms: args.get_u64("interval-ms")?.unwrap_or(1000).max(1),
+        iterations: args.get_u64("iterations")?,
+        out: args.get("out").map(PathBuf::from),
+        slo,
+        obs,
+    };
+    let summary = run_monitor(&cfg)?;
+    if summary.endpoints_live == 0 {
+        bail!(
+            "no endpoint delivered a sample ({} configured)",
+            summary.endpoints
+        );
+    }
+    Ok(())
+}
+
+/// The `perfgate` subcommand: compare two perf artifacts
+/// (`BENCH_*.json` or time-series JSONL) under noise thresholds,
+/// exiting non-zero on a regression. `--reduce FILE` instead prints
+/// one artifact's flat reduced metric map as a bench-report JSON
+/// object (one key per line — greppable, and itself valid `perfgate`
+/// input).
+fn perfgate(args: &Args) -> Result<()> {
+    use sxpat::obs::perfgate::{compare, load_flat, GateConfig};
+
+    if let Some(path) = args.get("reduce") {
+        let flat = load_flat(Path::new(path))?;
+        let mut report = sxpat::bench_support::JsonReport::new();
+        for (k, v) in &flat {
+            report.push(k, *v);
+        }
+        print!("{}", report.render());
+        return Ok(());
+    }
+    let (old, new) = match (args.positional.get(1), args.positional.get(2)) {
+        (Some(o), Some(n)) => (PathBuf::from(o), PathBuf::from(n)),
+        _ => bail!("usage: perfgate OLD NEW [--tolerance F] [--min-delta F] | perfgate --reduce FILE"),
+    };
+    let parse_f64 = |key: &str, default: f64| -> Result<f64> {
+        match args.get(key) {
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| anyhow!("--{key} must be a number, got {v}")),
+            None if args.has_flag(key) => bail!("--{key} requires a number"),
+            None => Ok(default),
+        }
+    };
+    let cfg = GateConfig {
+        rel_tolerance: parse_f64("tolerance", 0.10)?,
+        min_delta: parse_f64("min-delta", 0.0)?,
+    };
+    let report = compare(&load_flat(&old)?, &load_flat(&new)?, &cfg);
+    print!("{}", report.render());
+    if !report.passed() {
+        bail!(
+            "{} regression(s) against {}",
+            report.regressions.len(),
+            old.display()
+        );
     }
     Ok(())
 }

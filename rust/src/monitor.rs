@@ -1,0 +1,448 @@
+//! The `monitor` subcommand: a live aggregated view over any mix of
+//! serve and coordinator endpoints, plus the durable time-series log
+//! they feed.
+//!
+//! One collector thread per endpoint, each speaking that endpoint's
+//! native telemetry discipline:
+//!
+//! * **serve** endpoints get a `watch` subscription — the server
+//!   pushes one cumulative registry sample per period and the
+//!   collector just reads lines;
+//! * **coordinator** endpoints are polled with the `status` verb
+//!   (strict request/response, allowed before `hello`, so the monitor
+//!   never joins the sweep).
+//!
+//! Collectors feed one mpsc channel; the aggregator keeps a
+//! per-endpoint [`TimeSeries`] (cumulative wire samples become ring
+//! deltas via [`TimeSeries::push_cumulative`]), appends every sample
+//! to the `--out` JSONL log as it arrives (footer on exit, same schema
+//! `perfgate` loads), optionally judges each endpoint's series against
+//! an SLO spec, and renders the cluster table at the end: per-tier
+//! request/error totals and p50/p99 from *exact* histogram merges
+//! across endpoints, plus the coordinator's per-worker liveness view.
+//!
+//! Connection failures are warnings, not errors — a monitor must
+//! outlive the processes it watches, and CI smoke runs race startup.
+//! Everything here is observe-only: collectors hold no locks in the
+//! watched processes and the watched runs' bytes are pinned by
+//! `tests/obs_determinism.rs`.
+
+use std::collections::BTreeMap;
+use std::fs::OpenOptions;
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::dist::protocol::{CoordMsg, WorkerMsg};
+use crate::obs::timeseries::{self, Sample, TimeSeries};
+use crate::obs::{Histogram, Obs, SloEvaluator, SloSpec};
+use crate::serve::protocol as serve_protocol;
+use crate::util::jsonl::{self, LineRead};
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct MonitorConfig {
+    /// Serve endpoints to `watch` (`host:port`).
+    pub serve: Vec<String>,
+    /// Coordinator endpoints to poll with `status` (`host:port`).
+    pub coord: Vec<String>,
+    /// Sampling period, milliseconds.
+    pub interval_ms: u64,
+    /// Samples to collect per endpoint; `None` runs until every
+    /// endpoint hangs up (i.e. until the watched processes exit).
+    pub iterations: Option<u64>,
+    /// Append the collected samples (ring/delta form plus footer) to
+    /// this JSONL log — `perfgate` input.
+    pub out: Option<PathBuf>,
+    /// Judge every endpoint's series against these targets.
+    pub slo: Option<SloSpec>,
+    /// Trace handle; `slo.breach` events land here.
+    pub obs: Obs,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        MonitorConfig {
+            serve: Vec::new(),
+            coord: Vec::new(),
+            interval_ms: 1000,
+            iterations: None,
+            out: None,
+            slo: None,
+            obs: Obs::off(),
+        }
+    }
+}
+
+/// What one finished monitor run saw, for callers and tests.
+#[derive(Debug, Clone)]
+pub struct MonitorSummary {
+    /// Endpoints that delivered at least one sample.
+    pub endpoints_live: usize,
+    /// Endpoints configured.
+    pub endpoints: usize,
+    /// Samples collected across all endpoints.
+    pub samples: usize,
+    /// SLO breach entries observed (0 without a spec).
+    pub breaches: usize,
+}
+
+/// Subscribe to one serve endpoint's `watch` stream and forward every
+/// pushed sample. Returns when `count` samples arrived or the server
+/// hung up.
+fn collect_serve(
+    addr: &str,
+    interval_ms: u64,
+    count: Option<u64>,
+    tx: &Sender<(String, Sample)>,
+    obs: &Obs,
+) {
+    let key = format!("serve:{addr}");
+    let stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(e) => {
+            obs.warn("monitor", &format!("{key}: connect failed: {e}"), &[]);
+            return;
+        }
+    };
+    let _ = stream.set_nodelay(true);
+    // Generous read timeout: the server pushes every `interval_ms`, so
+    // silence for many periods means the stream is dead.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(
+        interval_ms.saturating_mul(20).max(5_000),
+    )));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let req = serve_protocol::render_watch_request(1, Some(interval_ms), count);
+    if jsonl::send_line(&mut writer, &req).is_err() {
+        obs.warn("monitor", &format!("{key}: subscribe failed"), &[]);
+        return;
+    }
+    let mut reader = BufReader::new(stream);
+    loop {
+        match jsonl::read_line(&mut reader) {
+            LineRead::Eof | LineRead::Oversized => return,
+            LineRead::Line(line) => {
+                if line.is_empty() {
+                    continue;
+                }
+                let sample = Json::parse(&line)
+                    .ok()
+                    .and_then(|j| j.get("sample").and_then(|s| Sample::from_json(s).ok()));
+                match sample {
+                    Some(s) => {
+                        if tx.send((key.clone(), s)).is_err() {
+                            return; // aggregator gone
+                        }
+                    }
+                    // Interleaved non-watch responses (or a structured
+                    // error) are not ours to interpret; skip.
+                    None => continue,
+                }
+            }
+        }
+    }
+}
+
+/// Poll one coordinator endpoint with `status` over a single
+/// connection. Returns after `count` polls or when the coordinator
+/// hangs up (sweep finished).
+fn collect_coord(
+    addr: &str,
+    interval_ms: u64,
+    count: Option<u64>,
+    tx: &Sender<(String, Sample)>,
+    obs: &Obs,
+) {
+    let key = format!("coord:{addr}");
+    let stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(e) => {
+            obs.warn("monitor", &format!("{key}: connect failed: {e}"), &[]);
+            return;
+        }
+    };
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(
+        interval_ms.saturating_mul(20).max(5_000),
+    )));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut polls = 0u64;
+    loop {
+        if jsonl::send_line(&mut writer, &WorkerMsg::Status.render()).is_err() {
+            return;
+        }
+        let line = loop {
+            match jsonl::read_line(&mut reader) {
+                LineRead::Eof | LineRead::Oversized => return,
+                LineRead::Line(l) if l.is_empty() => continue,
+                LineRead::Line(l) => break l,
+            }
+        };
+        match CoordMsg::parse(&line) {
+            Ok(CoordMsg::Status { sample }) => {
+                if let Ok(s) = Sample::from_json(&sample) {
+                    if tx.send((key.clone(), s)).is_err() {
+                        return;
+                    }
+                }
+            }
+            Ok(other) => {
+                obs.warn("monitor", &format!("{key}: unexpected {other:?}"), &[]);
+                return;
+            }
+            Err(e) => {
+                obs.warn("monitor", &format!("{key}: bad status line: {e}"), &[]);
+                return;
+            }
+        }
+        polls += 1;
+        if count.is_some_and(|c| polls >= c) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(interval_ms.max(1)));
+    }
+}
+
+/// Extract a label value from the `name{label="v"}`-suffix-in-name
+/// metric convention (None when the label is absent).
+fn label_value<'a>(name: &'a str, label: &str) -> Option<&'a str> {
+    let start = name.find(&format!("{label}=\""))? + label.len() + 2;
+    let rest = &name[start..];
+    Some(&rest[..rest.find('"')?])
+}
+
+/// Per-tier rollup across every endpoint's series: request/error
+/// totals from summed counter deltas, latency quantiles from exact
+/// merges of each endpoint's latest cumulative histogram snapshot.
+fn tier_table(series: &BTreeMap<String, TimeSeries>) -> String {
+    use std::fmt::Write as _;
+
+    struct TierAgg {
+        requests: u64,
+        errors: u64,
+        lat: Histogram,
+    }
+    fn agg<'m>(tiers: &'m mut BTreeMap<String, TierAgg>, tier: &str) -> &'m mut TierAgg {
+        tiers.entry(tier.to_string()).or_insert_with(|| TierAgg {
+            requests: 0,
+            errors: 0,
+            lat: Histogram::new(),
+        })
+    }
+    let mut tiers: BTreeMap<String, TierAgg> = BTreeMap::new();
+    for ts in series.values() {
+        // Counter deltas over the whole retained window.
+        let window = ts.len();
+        let mut names: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+        for s in ts.samples() {
+            names.extend(s.counters.keys().cloned());
+        }
+        for name in &names {
+            let Some(tier) = label_value(name, "tier") else { continue };
+            let total = ts.window_counter(name, window);
+            if name.contains("_request_errors_total") {
+                agg(&mut tiers, tier).errors += total;
+            } else if name.contains("_requests_total") {
+                agg(&mut tiers, tier).requests += total;
+            }
+        }
+        if let Some(latest) = ts.latest() {
+            for (name, snap) in &latest.hists {
+                if !name.contains("_latency_us") {
+                    continue;
+                }
+                if let Some(tier) = label_value(name, "tier") {
+                    agg(&mut tiers, tier).lat.absorb(snap);
+                }
+            }
+        }
+    }
+    let mut out = String::new();
+    for (tier, t) in &tiers {
+        let rate = if t.requests == 0 {
+            0.0
+        } else {
+            t.errors as f64 / t.requests as f64 * 100.0
+        };
+        let _ = writeln!(
+            out,
+            "monitor: tier {tier}: {} req, {} errors ({rate:.2}%), \
+             p50 {} µs, p99 {} µs",
+            t.requests,
+            t.errors,
+            t.lat.quantile(0.50),
+            t.lat.quantile(0.99)
+        );
+    }
+    out
+}
+
+/// The coordinator's per-worker liveness view, read off the latest
+/// sample of every `coord:` series.
+fn worker_table(series: &BTreeMap<String, TimeSeries>) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for (key, ts) in series {
+        if !key.starts_with("coord:") {
+            continue;
+        }
+        let Some(latest) = ts.latest() else { continue };
+        for (name, &jobs) in &latest.gauges {
+            if !name.starts_with("pallas_dist_worker_jobs{") {
+                continue;
+            }
+            let Some(worker) = label_value(name, "worker") else { continue };
+            let gauge = |what: &str| {
+                latest
+                    .gauges
+                    .get(&format!("pallas_dist_worker_{what}{{worker=\"{worker}\"}}"))
+                    .copied()
+                    .unwrap_or(0)
+            };
+            let _ = writeln!(
+                out,
+                "monitor: worker {worker} ({key}): {jobs} jobs, \
+                 tx {} B, rx {} B, last seen {:.1} s ago",
+                gauge("tx_bytes"),
+                gauge("rx_bytes"),
+                gauge("age_us") as f64 / 1e6
+            );
+        }
+    }
+    out
+}
+
+/// Run the monitor to completion (bounded by `iterations`, or by the
+/// watched processes exiting). Prints the cluster table on stdout and
+/// returns the summary.
+pub fn run_monitor(cfg: &MonitorConfig) -> Result<MonitorSummary> {
+    let endpoints = cfg.serve.len() + cfg.coord.len();
+    if endpoints == 0 {
+        anyhow::bail!("monitor needs at least one --serve or --coord endpoint");
+    }
+    let mut log = match &cfg.out {
+        Some(path) => Some(
+            OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .with_context(|| format!("open time-series log {}", path.display()))?,
+        ),
+        None => None,
+    };
+    let (tx, rx) = channel::<(String, Sample)>();
+    let mut collectors = Vec::new();
+    for addr in &cfg.serve {
+        let (addr, tx, obs) = (addr.clone(), tx.clone(), cfg.obs.clone());
+        let (ms, n) = (cfg.interval_ms, cfg.iterations);
+        collectors.push(std::thread::spawn(move || {
+            collect_serve(&addr, ms, n, &tx, &obs);
+        }));
+    }
+    for addr in &cfg.coord {
+        let (addr, tx, obs) = (addr.clone(), tx.clone(), cfg.obs.clone());
+        let (ms, n) = (cfg.interval_ms, cfg.iterations);
+        collectors.push(std::thread::spawn(move || {
+            collect_coord(&addr, ms, n, &tx, &obs);
+        }));
+    }
+    // The aggregator owns no Sender: the loop below ends exactly when
+    // every collector has exited.
+    drop(tx);
+
+    let mut series: BTreeMap<String, TimeSeries> = BTreeMap::new();
+    let mut evals: BTreeMap<String, SloEvaluator> = BTreeMap::new();
+    let mut samples = 0usize;
+    let mut written = 0u64;
+    let mut breaches = 0usize;
+    for (key, mut sample) in rx {
+        samples += 1;
+        // Re-node under the endpoint key: two serve endpoints must not
+        // collapse into one "serve" node in the log (perfgate reduces
+        // per node).
+        sample.node = key.clone();
+        let ts = series
+            .entry(key.clone())
+            .or_insert_with(|| TimeSeries::new(&key, 65_536));
+        let stored = ts.push_cumulative(sample);
+        if let Some(f) = log.as_mut() {
+            // Ring/delta form, one line per sample, footer on exit —
+            // the `timeseries::parse` schema.
+            let line = stored.to_json().render();
+            jsonl::send_line(f, &line).context("append time-series log")?;
+            written += 1;
+        }
+        if let Some(spec) = &cfg.slo {
+            let ev = evals
+                .entry(key.clone())
+                .or_insert_with(|| SloEvaluator::new(spec.clone()));
+            breaches += ev.evaluate(ts, &cfg.obs).len();
+        }
+    }
+    for c in collectors {
+        let _ = c.join();
+    }
+    if let Some(f) = log.as_mut() {
+        jsonl::send_line(f, &timeseries::footer_line(written, 0))
+            .context("append time-series footer")?;
+        f.flush().context("flush time-series log")?;
+    }
+    if let Err(e) = cfg.obs.flush() {
+        cfg.obs.warn("monitor", &format!("trace flush failed: {e:#}"), &[]);
+    }
+
+    print!("{}", tier_table(&series));
+    print!("{}", worker_table(&series));
+    for (key, ts) in &series {
+        println!("monitor: endpoint {key}: {} sample(s)", ts.len());
+    }
+    if breaches > 0 {
+        println!("monitor: {breaches} SLO breach(es) entered");
+    }
+    Ok(MonitorSummary {
+        endpoints_live: series.len(),
+        endpoints,
+        samples,
+        breaches,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_values_parse_the_suffix_convention() {
+        assert_eq!(
+            label_value("pallas_serve_latency_us{tier=\"gold\"}", "tier"),
+            Some("gold")
+        );
+        assert_eq!(
+            label_value("pallas_dist_worker_jobs{worker=\"w1\"}", "worker"),
+            Some("w1")
+        );
+        assert_eq!(label_value("pallas_serve_batches_total", "tier"), None);
+        // First label match wins; values with escapes still terminate
+        // at the first quote (good enough for display rollups).
+        assert_eq!(
+            label_value("m{a=\"x\",b=\"y\"}", "b"),
+            Some("y")
+        );
+    }
+
+    #[test]
+    fn monitor_without_endpoints_is_an_error() {
+        assert!(run_monitor(&MonitorConfig::default()).is_err());
+    }
+}

@@ -37,6 +37,8 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use anyhow::{anyhow, Result};
+
 use crate::util::Json;
 
 /// Sub-bucket resolution: each octave splits into `2^SUB_BITS` linear
@@ -240,6 +242,150 @@ impl Histogram {
         m.insert("p90".to_string(), Json::Num(self.quantile(0.90) as f64));
         m.insert("p99".to_string(), Json::Num(self.quantile(0.99) as f64));
         Json::Obj(m)
+    }
+
+    /// Point-in-time copy of the exact mergeable state. The inverse of
+    /// [`Histogram::absorb`]: `fresh.absorb(&h.snapshot())` reproduces
+    /// `h` exactly, which is what lets the monitor merge per-node
+    /// histograms across the wire without losing quantile precision.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.nonzero_buckets(),
+            count: self.count(),
+            sum: self.sum(),
+            min: self.min(),
+            max: self.max(),
+        }
+    }
+
+    /// Fold a snapshot into `self`, exactly — [`Histogram::merge`] for
+    /// wire-transported state. An empty snapshot is a no-op (its
+    /// `min`/`max` carry no information and must not clobber ours).
+    pub fn absorb(&self, snap: &HistSnapshot) {
+        for &(idx, n) in &snap.buckets {
+            if idx < N_BUCKETS && n > 0 {
+                self.buckets[idx].fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        if snap.count == 0 {
+            return;
+        }
+        self.count.fetch_add(snap.count, Ordering::Relaxed);
+        self.sum.fetch_add(snap.sum, Ordering::Relaxed);
+        self.min.fetch_min(snap.min, Ordering::Relaxed);
+        self.max.fetch_max(snap.max, Ordering::Relaxed);
+    }
+}
+
+/// The exact mergeable state of a [`Histogram`] at one instant:
+/// non-empty buckets plus `count`/`sum`/`min`/`max`. Serializable
+/// (time-series samples, watch/status wire frames) and foldable back
+/// into a live histogram via [`Histogram::absorb`]. Unlike the live
+/// histogram, `min` here is already normalised (0 when empty).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Non-empty buckets as `(index, count)` pairs, ascending index.
+    pub buckets: Vec<(usize, u64)>,
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    /// Samples recorded at or above `threshold`, counted
+    /// conservatively: only buckets whose *entire range* sits above the
+    /// threshold contribute, so the bucket straddling the threshold is
+    /// excluded. Used by the SLO evaluator ("fraction of requests over
+    /// the p99 target"), where undercounting by less than one bucket
+    /// width (1/64 relative) never fabricates a breach.
+    pub fn count_above(&self, threshold: u64) -> u64 {
+        self.buckets
+            .iter()
+            .filter(|&&(idx, _)| bucket_range(idx).0 >= threshold)
+            .map(|&(_, n)| n)
+            .sum()
+    }
+
+    /// Activity between two cumulative snapshots of the same histogram
+    /// (`self` later, `prev` earlier): bucket counts, `count` and `sum`
+    /// subtract (saturating, so a racy reader never underflows).
+    /// `min`/`max` are not recoverable for a window, so the later
+    /// snapshot's values are carried — window quantile logic must use
+    /// the buckets, not the extremes.
+    pub fn delta(&self, prev: &HistSnapshot) -> HistSnapshot {
+        let before: BTreeMap<usize, u64> = prev.buckets.iter().copied().collect();
+        let buckets: Vec<(usize, u64)> = self
+            .buckets
+            .iter()
+            .filter_map(|&(idx, n)| {
+                let d = n.saturating_sub(before.get(&idx).copied().unwrap_or(0));
+                if d > 0 {
+                    Some((idx, d))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        HistSnapshot {
+            buckets,
+            count: self.count.saturating_sub(prev.count),
+            sum: self.sum.saturating_sub(prev.sum),
+            min: self.min,
+            max: self.max,
+        }
+    }
+
+    /// JSON form: `{"buckets":[[idx,count],..],"count":..,"max":..,
+    /// "min":..,"sum":..}` — the time-series / wire representation.
+    pub fn to_json(&self) -> Json {
+        let buckets = self
+            .buckets
+            .iter()
+            .map(|&(idx, n)| {
+                Json::Arr(vec![Json::Num(idx as f64), Json::Num(n as f64)])
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("buckets".to_string(), Json::Arr(buckets));
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("sum".to_string(), Json::Num(self.sum as f64));
+        m.insert("min".to_string(), Json::Num(self.min as f64));
+        m.insert("max".to_string(), Json::Num(self.max as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<HistSnapshot> {
+        let field = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("hist snapshot missing u64 field {k:?}"))
+        };
+        let raw = j
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("hist snapshot missing buckets array"))?;
+        let mut buckets = Vec::with_capacity(raw.len());
+        for pair in raw {
+            let p = pair.as_arr().ok_or_else(|| anyhow!("bucket entry not a pair"))?;
+            let (Some(idx), Some(n)) = (
+                p.first().and_then(Json::as_u64),
+                p.get(1).and_then(Json::as_u64),
+            ) else {
+                return Err(anyhow!("bucket entry not [index, count]"));
+            };
+            if idx as usize >= N_BUCKETS {
+                return Err(anyhow!("bucket index {idx} out of range"));
+            }
+            buckets.push((idx as usize, n));
+        }
+        Ok(HistSnapshot {
+            buckets,
+            count: field("count")?,
+            sum: field("sum")?,
+            min: field("min")?,
+            max: field("max")?,
+        })
     }
 }
 
@@ -453,6 +599,78 @@ mod tests {
         // Mixing a normal sample keeps low quantiles sane.
         h.record(100);
         assert_eq!(h.quantile(0.0), 100);
+    }
+
+    /// Snapshot/absorb is the wire-transport form of `merge`:
+    /// absorbing per-node snapshots into a fresh histogram must equal
+    /// recording every sample into one global histogram — the property
+    /// the monitor's cluster aggregation rests on.
+    #[test]
+    fn absorbing_snapshots_equals_global_histogram() {
+        let mut rng = XorShift(7);
+        let global = Histogram::new();
+        let parts: Vec<Histogram> = (0..3).map(|_| Histogram::new()).collect();
+        for i in 0..1800 {
+            let v = rng.next() % 3_000_000;
+            global.record(v);
+            parts[i % 3].record(v);
+        }
+        let merged = Histogram::new();
+        for p in &parts {
+            // Round-trip each snapshot through JSON, as the wire does.
+            let snap = p.snapshot();
+            let back = HistSnapshot::from_json(&Json::parse(&snap.to_json().render()).unwrap())
+                .unwrap();
+            assert_eq!(back, snap);
+            merged.absorb(&back);
+        }
+        assert_eq!(state(&merged), state(&global));
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(merged.quantile(q), global.quantile(q));
+        }
+    }
+
+    #[test]
+    fn absorbing_empty_snapshot_is_a_no_op() {
+        let h = Histogram::new();
+        h.record(50);
+        let before = state(&h);
+        h.absorb(&Histogram::new().snapshot());
+        assert_eq!(state(&h), before, "empty min/max must not clobber");
+    }
+
+    #[test]
+    fn count_above_is_conservative() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 1000, 2000, 4000] {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count_above(0), 5);
+        assert_eq!(snap.count_above(500), 3);
+        // 1000's bucket straddles a threshold inside it: excluded.
+        let lo1000 = bucket_range(bucket_index(1000)).0;
+        assert_eq!(snap.count_above(lo1000 + 1), 2);
+        assert_eq!(snap.count_above(u64::MAX), 0);
+    }
+
+    #[test]
+    fn snapshot_delta_isolates_window_activity() {
+        let h = Histogram::new();
+        h.record(100);
+        h.record(200);
+        let early = h.snapshot();
+        h.record(5000);
+        h.record(5000);
+        let late = h.snapshot();
+        let d = late.delta(&early);
+        assert_eq!(d.count, 2);
+        assert_eq!(d.sum, 10_000);
+        assert_eq!(d.buckets, vec![(bucket_index(5000), 2)]);
+        assert_eq!(d.count_above(1000), 2, "window excludes pre-window samples");
+        // Self-delta is empty.
+        let z = late.delta(&late);
+        assert_eq!((z.count, z.sum, z.buckets.len()), (0, 0, 0));
     }
 
     #[test]

@@ -146,9 +146,132 @@ pub fn snapshot() -> Json {
     Json::Obj(m)
 }
 
+/// All counters as `(name, value)`, sorted by name — the time-series
+/// sampler's raw feed ([`obs::timeseries`]).
+///
+/// [`obs::timeseries`]: super::timeseries
+pub fn counter_values() -> Vec<(String, u64)> {
+    registry()
+        .counters
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+        .collect()
+}
+
+/// All gauges as `(name, value)`, sorted by name.
+pub fn gauge_values() -> Vec<(String, u64)> {
+    registry()
+        .gauges
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+        .collect()
+}
+
+/// All registered histograms as shared handles, sorted by name.
+pub fn histogram_handles() -> Vec<(String, Arc<Histogram>)> {
+    registry()
+        .histograms
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, h)| (k.clone(), Arc::clone(h)))
+        .collect()
+}
+
+/// Escape one label value per the Prometheus text exposition rules:
+/// `\` -> `\\`, `"` -> `\"`, newline -> `\n`.
+fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// True when the text after a candidate closing quote looks like the
+/// boundary to the next `key="` pair (or the end of the label block) —
+/// the disambiguation rule for raw quotes *inside* a stored value.
+fn is_pair_boundary(rest: &str) -> bool {
+    if rest.is_empty() {
+        return true;
+    }
+    let Some(r) = rest.strip_prefix(',') else {
+        return false;
+    };
+    let Some(eq) = r.find('=') else {
+        return false;
+    };
+    let key = &r[..eq];
+    !key.is_empty()
+        && key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+        && r[eq + 1..].starts_with('"')
+}
+
+/// Re-escape the label block of a `name{k="v",...}` metric name.
+/// Registered names store label values raw (e.g. a hostile tier name
+/// containing `"` or `\`), so the exposition layer must escape them.
+/// Keys come from code and are passed through; a `"` inside a value is
+/// treated as content unless it sits on a pair boundary (a value that
+/// literally contains `",key="` is ambiguous and splits — acceptable,
+/// since the output stays well-formed exposition either way).
+fn escape_labels(labels: &str) -> String {
+    let Some(inner) = labels.strip_prefix('{').and_then(|s| s.strip_suffix('}')) else {
+        return labels.to_string();
+    };
+    let mut out = String::from("{");
+    let mut rest = inner;
+    loop {
+        // Copy `key="` verbatim (keys are code-controlled idents).
+        match rest.find("=\"") {
+            None => {
+                out.push_str(rest);
+                break;
+            }
+            Some(eq) => {
+                out.push_str(&rest[..eq + 2]);
+                rest = &rest[eq + 2..];
+            }
+        }
+        // Scan for the quote that really closes this value.
+        let val_end = rest
+            .char_indices()
+            .find(|&(j, c)| c == '"' && is_pair_boundary(&rest[j + 1..]))
+            .map(|(j, _)| j);
+        match val_end {
+            None => {
+                // Unterminated value: escape the remainder wholesale.
+                out.push_str(&escape_label_value(rest));
+                break;
+            }
+            Some(j) => {
+                out.push_str(&escape_label_value(&rest[..j]));
+                out.push('"');
+                rest = &rest[j + 1..];
+                if rest.is_empty() {
+                    break;
+                }
+                out.push(',');
+                rest = &rest[1..]; // is_pair_boundary guaranteed the ','
+            }
+        }
+    }
+    out.push('}');
+    out
+}
+
 /// Split `name{labels}` into its base and optional label suffix, with
-/// the base sanitised to the Prometheus charset.
-fn prom_parts(name: &str) -> (String, &str) {
+/// the base sanitised to the Prometheus charset and label values
+/// escaped for exposition.
+fn prom_parts(name: &str) -> (String, String) {
     let (base, labels) = match name.find('{') {
         Some(i) => (&name[..i], &name[i..]),
         None => (name, ""),
@@ -157,7 +280,7 @@ fn prom_parts(name: &str) -> (String, &str) {
         .chars()
         .map(|c| if c.is_ascii_alphanumeric() || c == ':' { c } else { '_' })
         .collect();
-    (base, labels)
+    (base, escape_labels(labels))
 }
 
 /// Prometheus-style text exposition of the whole registry. Sorted and
@@ -250,6 +373,75 @@ mod tests {
         assert!(text.contains("# TYPE pallas_test_metrics_hist_us summary"));
         assert!(text.contains("pallas_test_metrics_hist_us{quantile=\"0.5\"} "));
         assert!(text.contains("pallas_test_metrics_hist_us_count "));
+    }
+
+    /// Hostile tier names — quotes, backslashes, newlines, even an
+    /// embedded `",fake="` pair — registered through the raw
+    /// `{label="v"}`-suffix convention must render as well-formed,
+    /// correctly escaped exposition text.
+    #[test]
+    fn prometheus_rendering_escapes_hostile_label_values() {
+        counter("pallas_test_metrics_evil_total{tier=\"a\"b\"}").add(1);
+        counter("pallas_test_metrics_evil_total{tier=\"back\\slash\"}").add(1);
+        counter("pallas_test_metrics_evil_total{tier=\"two\nlines\"}").add(1);
+        counter("pallas_test_metrics_evil_total{tier=\"q\",et=\"4\"}").add(1);
+        let text = render_prometheus();
+        assert!(
+            text.contains("pallas_test_metrics_evil_total{tier=\"a\\\"b\"} 1"),
+            "inner quote escaped: {text}"
+        );
+        assert!(
+            text.contains("pallas_test_metrics_evil_total{tier=\"back\\\\slash\"} 1"),
+            "backslash escaped: {text}"
+        );
+        assert!(
+            text.contains("pallas_test_metrics_evil_total{tier=\"two\\nlines\"} 1"),
+            "newline escaped: {text}"
+        );
+        assert!(
+            text.contains("pallas_test_metrics_evil_total{tier=\"q\",et=\"4\"} 1"),
+            "multi-label names pass through untouched: {text}"
+        );
+        // Every non-comment line is exactly `name{...} value` with no
+        // raw newline smuggled into the middle of a sample.
+        for line in text.lines().filter(|l| l.contains("evil")) {
+            assert!(
+                line.ends_with(" 1") || line.starts_with("# TYPE"),
+                "well-formed exposition line: {line:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn escape_labels_handles_edge_shapes() {
+        assert_eq!(escape_labels(""), "");
+        assert_eq!(escape_labels("{}"), "{}");
+        assert_eq!(escape_labels("{tier=\"g\"}"), "{tier=\"g\"}");
+        assert_eq!(escape_labels("{tier=\"a\"b\"}"), "{tier=\"a\\\"b\"}");
+        assert_eq!(
+            escape_labels("{a=\"x\",b=\"y\"}"),
+            "{a=\"x\",b=\"y\"}"
+        );
+        // Unterminated value inside a block: remainder escaped as-is.
+        assert_eq!(escape_labels("{tier=\"oo\\ps}"), "{tier=\"oo\\\\ps}");
+        // No braces at all: passed through verbatim.
+        assert_eq!(escape_labels("{tier=\"oops"), "{tier=\"oops");
+    }
+
+    #[test]
+    fn registry_accessors_expose_live_values() {
+        counter("pallas_test_metrics_access_total").add(3);
+        gauge("pallas_test_metrics_access_gauge").set(9);
+        histogram("pallas_test_metrics_access_us").record(42);
+        let c = counter_values();
+        assert!(c.iter().any(|(k, v)| k == "pallas_test_metrics_access_total" && *v >= 3));
+        assert!(c.windows(2).all(|w| w[0].0 < w[1].0), "sorted by name");
+        assert!(gauge_values()
+            .iter()
+            .any(|(k, v)| k == "pallas_test_metrics_access_gauge" && *v == 9));
+        assert!(histogram_handles()
+            .iter()
+            .any(|(k, h)| k == "pallas_test_metrics_access_us" && h.count() >= 1));
     }
 
     #[test]

@@ -28,6 +28,12 @@
 //!   bounded relative error, exact merging — the bounded replacement
 //!   for every stored-sample percentile vector.
 //!
+//! On top of the registry sits the live telemetry plane (DESIGN.md
+//! §14): [`timeseries`] samples the registry periodically through an
+//! injectable [`Clock`], [`slo`] judges the series against declarative
+//! per-tier burn-rate targets, and [`perfgate`] compares two runs'
+//! artifacts as a CI regression gate.
+//!
 //! **Determinism contract.** Instrumentation is observe-only: clock
 //! reads happen strictly outside solver/commit decision paths, events
 //! buffer in memory until an explicit flush, and every integration
@@ -40,8 +46,13 @@ pub mod event;
 pub mod hist;
 pub mod log;
 pub mod metrics;
+pub mod perfgate;
+pub mod slo;
+pub mod timeseries;
 pub mod trace;
 
 pub use event::{Event, EventSink, Obs, Recorder, Span, TraceCtx};
-pub use hist::Histogram;
+pub use hist::{HistSnapshot, Histogram};
 pub use log::Level;
+pub use slo::{SloEvaluator, SloSpec};
+pub use timeseries::{Clock, ManualClock, MonotonicClock, Sample, TimeSeries};

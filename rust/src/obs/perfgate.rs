@@ -1,0 +1,327 @@
+//! The perf regression gate: compare two performance artifacts — flat
+//! `BENCH_*.json` reports or time-series logs — with noise thresholds,
+//! and fail (non-zero exit from the `perfgate` subcommand) when a
+//! metric regressed.
+//!
+//! Both inputs reduce to a flat `key -> f64` map first. A BENCH report
+//! is already flat; a time-series log reduces per node to counter
+//! totals (summed deltas), final gauge values, and merged-histogram
+//! `p50`/`p99`/`mean`/`count` derived from the last cumulative
+//! snapshot of each histogram.
+//!
+//! The gate only judges keys whose *direction* it understands from the
+//! name (`latency`/`_us`/`error`/... are lower-is-better,
+//! `per_sec`/`throughput`/... higher-is-better); everything else is
+//! compared for information but never fails the gate, so adding a new
+//! neutral metric can't break CI. A judged key regresses when it moves
+//! the wrong way by more than `rel_tolerance` relative *and* more than
+//! `min_delta` absolute — the absolute floor keeps micro-benchmarks
+//! with tiny magnitudes from tripping on scheduler noise.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::timeseries;
+use crate::obs::Histogram;
+
+/// Noise thresholds for [`compare`].
+#[derive(Debug, Clone, Copy)]
+pub struct GateConfig {
+    /// Relative move (fraction of the old value) tolerated before a
+    /// key counts as changed. Default 0.10.
+    pub rel_tolerance: f64,
+    /// Absolute move tolerated regardless of the relative one.
+    /// Default 0 (identical inputs always pass: a zero move is never a
+    /// regression).
+    pub min_delta: f64,
+}
+
+impl Default for GateConfig {
+    fn default() -> Self {
+        GateConfig { rel_tolerance: 0.10, min_delta: 0.0 }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Direction {
+    Lower,
+    Higher,
+}
+
+/// Infer whether a metric is lower- or higher-is-better from its
+/// name; `None` means "informational only".
+fn direction(key: &str) -> Option<Direction> {
+    let k = key.to_ascii_lowercase();
+    const HIGHER: &[&str] =
+        &["per_sec", "throughput", "speedup", "_rps", "images_per", "jobs_per"];
+    const LOWER: &[&str] = &[
+        "latency", "_us", "_ms", "error", "rejected", "unsound", "dropped", "stale", "expired",
+        "conflicts",
+    ];
+    if HIGHER.iter().any(|p| k.contains(p)) {
+        Some(Direction::Higher)
+    } else if LOWER.iter().any(|p| k.contains(p)) {
+        Some(Direction::Lower)
+    } else {
+        None
+    }
+}
+
+/// One judged key that moved the wrong way past both thresholds.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    pub key: String,
+    pub old: f64,
+    pub new: f64,
+    /// Signed relative move in the *bad* direction (0.25 = 25% worse).
+    pub worse_by: f64,
+}
+
+/// The gate's verdict over two flat metric maps.
+#[derive(Debug, Default)]
+pub struct GateReport {
+    pub regressions: Vec<Regression>,
+    /// Judged keys that moved the *good* way past the tolerance.
+    pub improvements: Vec<(String, f64, f64)>,
+    /// Keys compared under a known direction.
+    pub judged: usize,
+    /// Keys compared for information only (unknown direction or
+    /// non-finite values).
+    pub informational: usize,
+    /// Keys present in only one input.
+    pub unmatched: usize,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.regressions {
+            let _ = writeln!(
+                out,
+                "REGRESSION {}: {} -> {} ({:+.1}% worse)",
+                r.key,
+                r.old,
+                r.new,
+                r.worse_by * 100.0
+            );
+        }
+        for (key, old, new) in &self.improvements {
+            let _ = writeln!(out, "improved   {key}: {old} -> {new}");
+        }
+        let _ = writeln!(
+            out,
+            "perfgate: {} judged, {} informational, {} unmatched -> {}",
+            self.judged,
+            self.informational,
+            self.unmatched,
+            if self.passed() { "PASS" } else { "FAIL" }
+        );
+        out
+    }
+}
+
+/// Compare `new` against the `old` baseline under `cfg`.
+pub fn compare(
+    old: &BTreeMap<String, f64>,
+    new: &BTreeMap<String, f64>,
+    cfg: &GateConfig,
+) -> GateReport {
+    let mut report = GateReport::default();
+    for (key, &old_v) in old {
+        let Some(&new_v) = new.get(key) else {
+            report.unmatched += 1;
+            continue;
+        };
+        let dir = direction(key);
+        if dir.is_none() || !old_v.is_finite() || !new_v.is_finite() {
+            report.informational += 1;
+            continue;
+        }
+        report.judged += 1;
+        let bad_move = match dir {
+            Some(Direction::Lower) => new_v - old_v,
+            Some(Direction::Higher) => old_v - new_v,
+            None => unreachable!(),
+        };
+        // Relative to the baseline magnitude; a zero baseline judges
+        // purely on the absolute floor.
+        let rel = if old_v != 0.0 {
+            bad_move / old_v.abs()
+        } else if bad_move > 0.0 {
+            f64::INFINITY
+        } else {
+            0.0
+        };
+        if rel > cfg.rel_tolerance && bad_move.abs() > cfg.min_delta {
+            report.regressions.push(Regression {
+                key: key.clone(),
+                old: old_v,
+                new: new_v,
+                worse_by: if rel.is_finite() { rel } else { 1.0 },
+            });
+        } else if rel < -cfg.rel_tolerance && bad_move.abs() > cfg.min_delta {
+            report.improvements.push((key.clone(), old_v, new_v));
+        }
+    }
+    report.unmatched += new.keys().filter(|k| !old.contains_key(*k)).count();
+    report
+}
+
+/// Reduce parsed time-series samples to flat derived metrics, keyed
+/// `{node}.{metric}[.{stat}]`.
+pub fn reduce_samples(samples: &[timeseries::Sample]) -> BTreeMap<String, f64> {
+    let mut counters: BTreeMap<String, u64> = BTreeMap::new();
+    let mut gauges: BTreeMap<String, u64> = BTreeMap::new();
+    let mut hists: BTreeMap<String, crate::obs::hist::HistSnapshot> = BTreeMap::new();
+    for s in samples {
+        for (name, d) in &s.counters {
+            *counters.entry(format!("{}.{name}", s.node)).or_default() += d;
+        }
+        for (name, v) in &s.gauges {
+            gauges.insert(format!("{}.{name}", s.node), *v);
+        }
+        for (name, snap) in &s.hists {
+            // Cumulative snapshots: the biggest count is the latest
+            // total, whatever order segments were appended in.
+            let key = format!("{}.{name}", s.node);
+            let keep = hists.get(&key).map_or(true, |prev| snap.count >= prev.count);
+            if keep {
+                hists.insert(key, snap.clone());
+            }
+        }
+    }
+    let mut flat = BTreeMap::new();
+    for (key, v) in counters {
+        flat.insert(key, v as f64);
+    }
+    for (key, v) in gauges {
+        flat.insert(key, v as f64);
+    }
+    for (key, snap) in hists {
+        let h = Histogram::new();
+        h.absorb(&snap);
+        flat.insert(format!("{key}.count"), h.count() as f64);
+        flat.insert(format!("{key}.mean"), h.mean());
+        flat.insert(format!("{key}.p50"), h.quantile(0.50) as f64);
+        flat.insert(format!("{key}.p99"), h.quantile(0.99) as f64);
+    }
+    flat
+}
+
+/// Load either input kind as a flat metric map: a `BENCH_*.json`
+/// report (single JSON object) or a time-series JSONL log (reduced via
+/// [`reduce_samples`]).
+pub fn load_flat(path: &Path) -> Result<BTreeMap<String, f64>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read perf artifact {}", path.display()))?;
+    if let Ok(report) = crate::bench_support::JsonReport::parse(&text) {
+        return Ok(report
+            .entries()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect());
+    }
+    let (samples, _footer) = timeseries::parse(&text)
+        .with_context(|| format!("{} is neither a bench report nor a time-series log", path.display()))?;
+    Ok(reduce_samples(&samples))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map(kvs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        kvs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn identical_inputs_always_pass() {
+        let m = map(&[("serve.lat_us.p99", 1200.0), ("dist.jobs_per_sec", 8.0)]);
+        let r = compare(&m, &m, &GateConfig::default());
+        assert!(r.passed());
+        assert_eq!(r.judged, 2);
+        assert!(r.improvements.is_empty());
+    }
+
+    #[test]
+    fn regressions_respect_direction_and_thresholds() {
+        let old = map(&[
+            ("serve.lat_us.p99", 1000.0),
+            ("dist.jobs_per_sec", 10.0),
+            ("neutral.knob", 5.0),
+        ]);
+        // p99 +50% (bad), throughput -50% (bad), neutral x10 (ignored).
+        let new = map(&[
+            ("serve.lat_us.p99", 1500.0),
+            ("dist.jobs_per_sec", 5.0),
+            ("neutral.knob", 50.0),
+        ]);
+        let r = compare(&old, &new, &GateConfig::default());
+        assert!(!r.passed());
+        let keys: Vec<&str> = r.regressions.iter().map(|x| x.key.as_str()).collect();
+        assert_eq!(keys, vec!["dist.jobs_per_sec", "serve.lat_us.p99"]);
+        assert_eq!(r.informational, 1, "unknown direction never fails the gate");
+
+        // Within tolerance: 5% move on a 10% gate passes.
+        let close = map(&[("serve.lat_us.p99", 1050.0), ("dist.jobs_per_sec", 10.0)]);
+        assert!(compare(&old, &close, &GateConfig::default()).passed());
+
+        // The absolute floor suppresses big-relative/small-absolute noise.
+        let tiny_old = map(&[("a.lat_us.p50", 2.0)]);
+        let tiny_new = map(&[("a.lat_us.p50", 3.0)]);
+        let cfg = GateConfig { rel_tolerance: 0.10, min_delta: 5.0 };
+        assert!(compare(&tiny_old, &tiny_new, &cfg).passed());
+        assert!(!compare(&tiny_old, &tiny_new, &GateConfig::default()).passed());
+    }
+
+    #[test]
+    fn improvements_and_unmatched_are_reported_not_failed() {
+        let old = map(&[("serve.lat_us.p99", 1000.0), ("gone.lat_us", 1.0)]);
+        let new = map(&[("serve.lat_us.p99", 500.0), ("added.lat_us", 1.0)]);
+        let r = compare(&old, &new, &GateConfig::default());
+        assert!(r.passed());
+        assert_eq!(r.improvements.len(), 1);
+        assert_eq!(r.unmatched, 2);
+        assert!(r.render().contains("PASS"));
+    }
+
+    #[test]
+    fn timeseries_reduction_produces_judgeable_keys() {
+        use crate::obs::Histogram;
+        use std::collections::BTreeMap as Map;
+
+        let h = Histogram::new();
+        h.record(500);
+        let early = h.snapshot();
+        h.record(90_000);
+        let late = h.snapshot();
+        let mk = |seq: u64, c: u64, snap| timeseries::Sample {
+            node: "serve".to_string(),
+            seq,
+            ts_us: seq * 1000,
+            counters: [("pallas_serve_requests_total".to_string(), c)].into_iter().collect(),
+            gauges: [("pallas_serve_depth".to_string(), seq)].into_iter().collect(),
+            hists: {
+                let mut m: Map<String, _> = Map::new();
+                m.insert("pallas_serve_latency_us".to_string(), snap);
+                m
+            },
+        };
+        let flat = reduce_samples(&[mk(0, 3, early), mk(1, 4, late)]);
+        assert_eq!(flat["serve.pallas_serve_requests_total"], 7.0);
+        assert_eq!(flat["serve.pallas_serve_depth"], 1.0, "gauges keep the last point");
+        assert_eq!(flat["serve.pallas_serve_latency_us.count"], 2.0);
+        assert!(flat["serve.pallas_serve_latency_us.p99"] > 10_000.0);
+        assert_eq!(
+            direction("serve.pallas_serve_latency_us.p99"),
+            Some(Direction::Lower)
+        );
+    }
+}

@@ -1,0 +1,400 @@
+//! Declarative per-tier SLOs evaluated as burn rates over a
+//! [`TimeSeries`], in the SRE multi-window style: a target is
+//! *breaching* when both a fast (reactive) and a slow (sustained)
+//! trailing window burn at or above the threshold, which keeps a
+//! single slow request from paging while still firing within a few
+//! samples of a real incident.
+//!
+//! Two dimensions per tier:
+//!
+//! * **latency** — target `p99_us`. Window burn = (fraction of the
+//!   window's requests above the target, via the conservative
+//!   [`HistSnapshot::count_above`]) / 0.01, i.e. burn 1.0 means
+//!   exactly the tolerated 1% of requests were slow.
+//! * **error_rate** — target fraction. Window burn =
+//!   (errors/requests) / target. Windows with zero requests burn 0
+//!   (no traffic is not an outage).
+//!
+//! Breaches are **edge-triggered events, level-held gauges**: entering
+//! breach emits one structured `slo.breach` counter event into the
+//! trace stream (`trace --check` passes counters through, so checked
+//! traces account for them) and sets
+//! `pallas_slo_breach{tier="..",slo=".."}` to 1; recovery clears the
+//! gauge to 0 without an event. Evaluation only *reads* the series —
+//! like the rest of `obs`, it cannot perturb the run it watches.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::event::Obs;
+use super::metrics;
+use super::timeseries::TimeSeries;
+use crate::util::Json;
+
+/// Targets for one tier; a missing dimension is simply not evaluated.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TierSlo {
+    pub p99_us: Option<u64>,
+    pub error_rate: Option<f64>,
+}
+
+/// A parsed `--slo FILE` spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSpec {
+    pub tiers: BTreeMap<String, TierSlo>,
+    /// Fast window length, in samples.
+    pub fast_window: usize,
+    /// Slow window length, in samples.
+    pub slow_window: usize,
+    /// Breach when both window burns are `>=` this (exact threshold
+    /// breaches).
+    pub burn_threshold: f64,
+    /// Metric-name prefix the targets refer to: `pallas_serve`
+    /// (server-side) or `pallas_loadgen` (client-observed).
+    pub prefix: String,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec {
+            tiers: BTreeMap::new(),
+            fast_window: 6,
+            slow_window: 30,
+            burn_threshold: 1.0,
+            prefix: "pallas_serve".to_string(),
+        }
+    }
+}
+
+impl SloSpec {
+    /// Parse the JSON spec:
+    /// `{"tiers":{"gold":{"p99_us":5000,"error_rate":0.01}},
+    ///   "fast_window":6,"slow_window":30,"burn_threshold":1.0,
+    ///   "prefix":"pallas_serve"}` — every key except `tiers` optional.
+    pub fn parse(text: &str) -> Result<SloSpec> {
+        let j = Json::parse(text).context("SLO spec is not valid JSON")?;
+        let mut spec = SloSpec::default();
+        let tiers = j
+            .get("tiers")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("SLO spec needs a \"tiers\" object"))?;
+        for (tier, t) in tiers {
+            let slo = TierSlo {
+                p99_us: t.get("p99_us").and_then(Json::as_u64),
+                error_rate: t.get("error_rate").and_then(Json::as_f64),
+            };
+            if slo.p99_us.is_none() && slo.error_rate.is_none() {
+                return Err(anyhow!(
+                    "tier {tier:?} sets neither p99_us nor error_rate"
+                ));
+            }
+            if slo.error_rate.is_some_and(|r| !(r > 0.0)) {
+                return Err(anyhow!("tier {tier:?}: error_rate must be > 0"));
+            }
+            spec.tiers.insert(tier.clone(), slo);
+        }
+        if let Some(v) = j.get("fast_window").and_then(Json::as_u64) {
+            spec.fast_window = v.max(1) as usize;
+        }
+        if let Some(v) = j.get("slow_window").and_then(Json::as_u64) {
+            spec.slow_window = v.max(1) as usize;
+        }
+        if let Some(v) = j.get("burn_threshold").and_then(Json::as_f64) {
+            spec.burn_threshold = v;
+        }
+        if let Some(v) = j.get("prefix").and_then(Json::as_str) {
+            spec.prefix = v.to_string();
+        }
+        if spec.fast_window > spec.slow_window {
+            return Err(anyhow!("fast_window must be <= slow_window"));
+        }
+        Ok(spec)
+    }
+
+    pub fn load(path: &Path) -> Result<SloSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read SLO spec {}", path.display()))?;
+        SloSpec::parse(&text)
+    }
+}
+
+/// A breach *transition* reported by one evaluation pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Breach {
+    pub tier: String,
+    /// `"latency"` or `"error_rate"`.
+    pub dimension: &'static str,
+    pub burn_fast: f64,
+    pub burn_slow: f64,
+}
+
+/// Stateful evaluator: tracks which (tier, dimension) pairs are
+/// currently breaching so events fire on entry and gauges clear on
+/// recovery.
+pub struct SloEvaluator {
+    spec: SloSpec,
+    breached: BTreeMap<(String, &'static str), bool>,
+}
+
+impl SloEvaluator {
+    pub fn new(spec: SloSpec) -> SloEvaluator {
+        SloEvaluator { spec, breached: BTreeMap::new() }
+    }
+
+    pub fn spec(&self) -> &SloSpec {
+        &self.spec
+    }
+
+    fn latency_burn(&self, ts: &TimeSeries, tier: &str, target_us: u64, window: usize) -> f64 {
+        let name = format!("{}_latency_us{{tier=\"{tier}\"}}", self.spec.prefix);
+        let Some(w) = ts.window_hist(&name, window) else {
+            return 0.0;
+        };
+        if w.count == 0 {
+            return 0.0;
+        }
+        let frac = w.count_above(target_us) as f64 / w.count as f64;
+        frac / 0.01
+    }
+
+    fn error_burn(&self, ts: &TimeSeries, tier: &str, target: f64, window: usize) -> f64 {
+        let req = ts.window_counter(
+            &format!("{}_requests_total{{tier=\"{tier}\"}}", self.spec.prefix),
+            window,
+        );
+        if req == 0 {
+            return 0.0;
+        }
+        let err = ts.window_counter(
+            &format!("{}_request_errors_total{{tier=\"{tier}\"}}", self.spec.prefix),
+            window,
+        );
+        (err as f64 / req as f64) / target
+    }
+
+    /// Evaluate every target against the series' trailing windows.
+    /// Returns the breaches *entered* by this pass; emits their
+    /// `slo.breach` events on `obs` and maintains the breach gauges.
+    pub fn evaluate(&mut self, ts: &TimeSeries, obs: &Obs) -> Vec<Breach> {
+        let mut entered = Vec::new();
+        let tiers: Vec<(String, TierSlo)> =
+            self.spec.tiers.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        for (tier, slo) in tiers {
+            if let Some(p99) = slo.p99_us {
+                let fast = self.latency_burn(ts, &tier, p99, self.spec.fast_window);
+                let slow = self.latency_burn(ts, &tier, p99, self.spec.slow_window);
+                self.transition(&tier, "latency", fast, slow, obs, &mut entered);
+            }
+            if let Some(rate) = slo.error_rate {
+                let fast = self.error_burn(ts, &tier, rate, self.spec.fast_window);
+                let slow = self.error_burn(ts, &tier, rate, self.spec.slow_window);
+                self.transition(&tier, "error_rate", fast, slow, obs, &mut entered);
+            }
+        }
+        entered
+    }
+
+    fn transition(
+        &mut self,
+        tier: &str,
+        dimension: &'static str,
+        burn_fast: f64,
+        burn_slow: f64,
+        obs: &Obs,
+        entered: &mut Vec<Breach>,
+    ) {
+        let breaching =
+            burn_fast >= self.spec.burn_threshold && burn_slow >= self.spec.burn_threshold;
+        let was = self
+            .breached
+            .insert((tier.to_string(), dimension), breaching)
+            .unwrap_or(false);
+        metrics::gauge(&format!("pallas_slo_breach{{tier=\"{tier}\",slo=\"{dimension}\"}}"))
+            .set(breaching as u64);
+        if breaching && !was {
+            obs.counter(
+                "slo.breach",
+                1,
+                &[
+                    ("tier", Json::Str(tier.to_string())),
+                    ("slo", Json::Str(dimension.to_string())),
+                    ("burn_fast", Json::Num(burn_fast)),
+                    ("burn_slow", Json::Num(burn_slow)),
+                ],
+            );
+            entered.push(Breach {
+                tier: tier.to_string(),
+                dimension,
+                burn_fast,
+                burn_slow,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use super::*;
+    use crate::obs::timeseries::Sample;
+    use crate::obs::Histogram;
+
+    fn spec(tier: &str) -> SloSpec {
+        SloSpec::parse(&format!(
+            "{{\"tiers\":{{\"{tier}\":{{\"p99_us\":1000,\"error_rate\":0.1}}}},\
+             \"fast_window\":2,\"slow_window\":4,\"burn_threshold\":1.0,\
+             \"prefix\":\"pallas_serve\"}}"
+        ))
+        .unwrap()
+    }
+
+    /// Push one synthetic ring-form sample: `req` requests, `err`
+    /// errors, latencies appended to a cumulative histogram.
+    fn push(ts: &mut TimeSeries, hist: &Histogram, tier: &str, req: u64, err: u64, lats: &[u64]) {
+        for &v in lats {
+            hist.record(v);
+        }
+        let mut counters = BTreeMap::new();
+        if req > 0 {
+            counters.insert(format!("pallas_serve_requests_total{{tier=\"{tier}\"}}"), req);
+        }
+        if err > 0 {
+            counters.insert(format!("pallas_serve_request_errors_total{{tier=\"{tier}\"}}"), err);
+        }
+        let mut hists = BTreeMap::new();
+        hists.insert(format!("pallas_serve_latency_us{{tier=\"{tier}\"}}"), hist.snapshot());
+        ts.push(Sample {
+            node: "t".to_string(),
+            seq: 0,
+            ts_us: 0,
+            counters,
+            gauges: BTreeMap::new(),
+            hists,
+        });
+    }
+
+    fn breach_gauge(tier: &str, dim: &str) -> u64 {
+        metrics::gauge(&format!("pallas_slo_breach{{tier=\"{tier}\",slo=\"{dim}\"}}")).get()
+    }
+
+    #[test]
+    fn spec_parsing_validates_and_defaults() {
+        let s = SloSpec::parse("{\"tiers\":{\"gold\":{\"p99_us\":5000}}}").unwrap();
+        assert_eq!(s.tiers["gold"].p99_us, Some(5000));
+        assert_eq!(s.tiers["gold"].error_rate, None);
+        assert_eq!((s.fast_window, s.slow_window), (6, 30));
+        assert_eq!(s.prefix, "pallas_serve");
+        assert!(SloSpec::parse("{}").is_err(), "tiers required");
+        assert!(SloSpec::parse("{\"tiers\":{\"g\":{}}}").is_err(), "empty tier rejected");
+        assert!(
+            SloSpec::parse("{\"tiers\":{\"g\":{\"error_rate\":0}}}").is_err(),
+            "zero error_rate rejected"
+        );
+        assert!(
+            SloSpec::parse(
+                "{\"tiers\":{\"g\":{\"p99_us\":1}},\"fast_window\":9,\"slow_window\":3}"
+            )
+            .is_err(),
+            "fast window must fit in slow"
+        );
+    }
+
+    #[test]
+    fn empty_window_never_breaches() {
+        let mut ev = SloEvaluator::new(spec("slo_empty"));
+        let ts = TimeSeries::new("t", 8);
+        assert!(ev.evaluate(&ts, &Obs::off()).is_empty());
+        assert_eq!(breach_gauge("slo_empty", "latency"), 0);
+        assert_eq!(breach_gauge("slo_empty", "error_rate"), 0);
+    }
+
+    #[test]
+    fn exact_threshold_counts_as_breach() {
+        // error_rate target 0.1, threshold 1.0: 10 errors in 100
+        // requests burns exactly 1.0 in every window => breach.
+        let mut ev = SloEvaluator::new(spec("slo_exact"));
+        let mut ts = TimeSeries::new("t", 8);
+        let h = Histogram::new();
+        for _ in 0..4 {
+            push(&mut ts, &h, "slo_exact", 100, 10, &[100]);
+        }
+        let breaches = ev.evaluate(&ts, &Obs::off());
+        assert_eq!(breaches.len(), 1);
+        assert_eq!(breaches[0].dimension, "error_rate");
+        assert_eq!(breaches[0].burn_fast, 1.0);
+        assert_eq!(breach_gauge("slo_exact", "error_rate"), 1);
+        // Still breaching on the next pass: gauge holds, no new event.
+        push(&mut ts, &h, "slo_exact", 100, 10, &[100]);
+        assert!(ev.evaluate(&ts, &Obs::off()).is_empty(), "edge-triggered");
+        assert_eq!(breach_gauge("slo_exact", "error_rate"), 1);
+    }
+
+    #[test]
+    fn latency_breach_fires_and_recovery_clears_gauge() {
+        let mut ev = SloEvaluator::new(spec("slo_rec"));
+        let mut ts = TimeSeries::new("t", 16);
+        let h = Histogram::new();
+        // Healthy traffic: everything far below the 1000µs target.
+        for _ in 0..4 {
+            push(&mut ts, &h, "slo_rec", 50, 0, &[100, 200, 300]);
+        }
+        assert!(ev.evaluate(&ts, &Obs::off()).is_empty());
+        // Spike: half the window's requests land above the target —
+        // burn 50x in both windows.
+        for _ in 0..4 {
+            push(&mut ts, &h, "slo_rec", 50, 0, &[100, 50_000, 60_000]);
+        }
+        let breaches = ev.evaluate(&ts, &Obs::off());
+        assert_eq!(breaches.len(), 1);
+        assert_eq!(breaches[0].dimension, "latency");
+        assert!(breaches[0].burn_fast >= 1.0 && breaches[0].burn_slow >= 1.0);
+        assert_eq!(breach_gauge("slo_rec", "latency"), 1);
+        // Recovery: fast traffic pushes the spike out of both windows.
+        for _ in 0..5 {
+            push(&mut ts, &h, "slo_rec", 50, 0, &[100, 110, 120]);
+        }
+        assert!(ev.evaluate(&ts, &Obs::off()).is_empty());
+        assert_eq!(breach_gauge("slo_rec", "latency"), 0, "recovery clears the gauge");
+        // Re-entering breach fires a fresh event.
+        for _ in 0..4 {
+            push(&mut ts, &h, "slo_rec", 50, 0, &[70_000, 80_000, 90_000]);
+        }
+        assert_eq!(ev.evaluate(&ts, &Obs::off()).len(), 1);
+    }
+
+    #[test]
+    fn breach_event_lands_in_trace_as_counter() {
+        use crate::obs::Event;
+
+        let dir = std::env::temp_dir().join(format!("pallas_slo_evt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let _ = std::fs::remove_file(&path);
+
+        let obs = Obs::to_file(&path, "slo-test");
+        let mut ev = SloEvaluator::new(spec("slo_evt"));
+        let mut ts = TimeSeries::new("t", 8);
+        let h = Histogram::new();
+        for _ in 0..4 {
+            // 100% errors, all latencies healthy: exactly one breach.
+            push(&mut ts, &h, "slo_evt", 100, 100, &[100]);
+        }
+        assert_eq!(ev.evaluate(&ts, &obs).len(), 1);
+        obs.flush().unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let events: Vec<Event> = text
+            .lines()
+            .map(|l| Event::from_json_line(l).unwrap())
+            .collect();
+        let breach: Vec<_> = events.iter().filter(|e| e.name == "slo.breach").collect();
+        assert_eq!(breach.len(), 1);
+        assert_eq!(breach[0].kind, "counter");
+        assert_eq!(breach[0].fields.get("tier").and_then(Json::as_str), Some("slo_evt"));
+        assert_eq!(breach[0].fields.get("slo").and_then(Json::as_str), Some("error_rate"));
+        std::fs::remove_file(&path).ok();
+    }
+}

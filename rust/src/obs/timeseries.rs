@@ -1,0 +1,524 @@
+//! Periodic time-series sampling of the metrics registry: the data
+//! plane under `watch`, `monitor`, the SLO evaluator and `perfgate`.
+//!
+//! A [`TimeSeries`] is a fixed-capacity ring of [`Sample`]s. Each
+//! sample holds **counters as deltas** since the previous sample of
+//! the same node (quiet counters are omitted), **gauges as points**,
+//! and **histograms as cumulative [`HistSnapshot`]s** — cumulative
+//! because snapshots merge exactly ([`Histogram::absorb`]) and any
+//! window's activity is recoverable as [`HistSnapshot::delta`] between
+//! the window's edge samples, while per-window bucket deltas would
+//! lose the running totals the monitor's cluster merge needs.
+//!
+//! Sampling is driven by an injectable [`Clock`] so tests get
+//! byte-identical series from a [`ManualClock`] while production uses
+//! the monotonic one; nothing here reads the wall clock directly.
+//!
+//! **Wire vs ring form.** Over the wire (serve `watch` pushes,
+//! coordinator `status` replies) samples travel *cumulative* — a
+//! subscriber may join mid-run, so the producer cannot know the
+//! subscriber's delta baseline. [`TimeSeries::push_cumulative`]
+//! converts an incoming cumulative sample into ring (delta) form using
+//! per-node previous totals, which is how the monitor folds many
+//! endpoints into one log.
+//!
+//! The JSONL export mirrors `event.rs`: one sample per line, then a
+//! schema footer line carrying the sample/drop accounting
+//! ([`TS_SCHEMA`]). [`load`] tolerates several concatenated segments
+//! (appends from multiple endpoints or runs) by summing footers.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::hist::HistSnapshot;
+use super::metrics;
+use crate::util::Json;
+
+/// Time-series line-format version, written into every export footer.
+pub const TS_SCHEMA: u64 = 1;
+
+/// A time source for the sampler. Implementations must be monotone;
+/// the unit is microseconds since the clock's own epoch.
+pub trait Clock: Send + Sync {
+    fn now_us(&self) -> u64;
+}
+
+/// Production clock: microseconds since construction, monotone by
+/// `Instant`'s contract.
+pub struct MonotonicClock {
+    epoch: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        MonotonicClock::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+}
+
+/// Test clock: time moves only when the test says so, making sampled
+/// series reproducible down to the byte.
+pub struct ManualClock(AtomicU64);
+
+impl ManualClock {
+    pub fn new(start_us: u64) -> ManualClock {
+        ManualClock(AtomicU64::new(start_us))
+    }
+
+    pub fn advance(&self, us: u64) {
+        self.0.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, us: u64) {
+        self.0.store(us, Ordering::Relaxed);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_us(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// One periodic observation of a node's metrics registry. In a ring
+/// (and in exports) `counters` are deltas; on the wire they are
+/// cumulative totals — see the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Producing node (`serve`, `coord`, a monitor endpoint label...).
+    pub node: String,
+    /// Ring-local sequence number, assigned on insertion.
+    pub seq: u64,
+    /// Clock timestamp, µs since the producing clock's epoch.
+    pub ts_us: u64,
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+impl Sample {
+    pub fn to_json(&self) -> Json {
+        let nums = |m: &BTreeMap<String, u64>| {
+            Json::Obj(m.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect())
+        };
+        let mut m = BTreeMap::new();
+        m.insert("node".to_string(), Json::Str(self.node.clone()));
+        m.insert("seq".to_string(), Json::Num(self.seq as f64));
+        m.insert("ts_us".to_string(), Json::Num(self.ts_us as f64));
+        m.insert("counters".to_string(), nums(&self.counters));
+        m.insert("gauges".to_string(), nums(&self.gauges));
+        m.insert(
+            "hists".to_string(),
+            Json::Obj(self.hists.iter().map(|(k, h)| (k.clone(), h.to_json())).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Sample> {
+        let node = j
+            .get("node")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("sample missing node"))?
+            .to_string();
+        let num = |k: &str| j.get(k).and_then(Json::as_u64).ok_or_else(|| anyhow!("sample missing {k}"));
+        let nums = |k: &str| -> Result<BTreeMap<String, u64>> {
+            let mut out = BTreeMap::new();
+            if let Some(obj) = j.get(k).and_then(Json::as_obj) {
+                for (name, v) in obj {
+                    let v = v.as_u64().ok_or_else(|| anyhow!("{k}[{name:?}] not a u64"))?;
+                    out.insert(name.clone(), v);
+                }
+            }
+            Ok(out)
+        };
+        let mut hists = BTreeMap::new();
+        if let Some(obj) = j.get("hists").and_then(Json::as_obj) {
+            for (name, h) in obj {
+                hists.insert(
+                    name.clone(),
+                    HistSnapshot::from_json(h).with_context(|| format!("hists[{name:?}]"))?,
+                );
+            }
+        }
+        Ok(Sample {
+            node,
+            seq: num("seq")?,
+            ts_us: num("ts_us")?,
+            counters: nums("counters")?,
+            gauges: nums("gauges")?,
+            hists,
+        })
+    }
+}
+
+/// Build one cumulative sample of the process-global metrics registry.
+/// With a filter, only metric names starting with the prefix are
+/// included — tests use unique prefixes to stay independent of
+/// whatever else the process recorded.
+pub fn cumulative_sample(node: &str, ts_us: u64, filter: Option<&str>) -> Sample {
+    let keep = |name: &str| filter.map_or(true, |p| name.starts_with(p));
+    let counters = metrics::counter_values().into_iter().filter(|(k, _)| keep(k)).collect();
+    let gauges = metrics::gauge_values().into_iter().filter(|(k, _)| keep(k)).collect();
+    let hists = metrics::histogram_handles()
+        .into_iter()
+        .filter(|(k, _)| keep(k))
+        .filter_map(|(k, h)| {
+            let snap = h.snapshot();
+            if snap.count > 0 {
+                Some((k, snap))
+            } else {
+                None
+            }
+        })
+        .collect();
+    Sample { node: node.to_string(), seq: 0, ts_us, counters, gauges, hists }
+}
+
+/// Export footer accounting, summed across segments by [`load`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TsFooter {
+    pub samples: u64,
+    pub dropped: u64,
+    pub schema: u64,
+}
+
+/// A fixed-capacity ring of samples with per-node delta state. When
+/// full, the oldest sample is evicted and counted in `dropped` — the
+/// same overwrite-and-account policy as the trace recorder's ring.
+pub struct TimeSeries {
+    cap: usize,
+    node: String,
+    filter: Option<String>,
+    samples: VecDeque<Sample>,
+    seq: u64,
+    dropped: u64,
+    /// Previous cumulative counter totals, per producing node.
+    prev: BTreeMap<String, BTreeMap<String, u64>>,
+}
+
+impl TimeSeries {
+    pub fn new(node: &str, cap: usize) -> TimeSeries {
+        TimeSeries {
+            cap: cap.max(1),
+            node: node.to_string(),
+            filter: None,
+            samples: VecDeque::new(),
+            seq: 0,
+            dropped: 0,
+            prev: BTreeMap::new(),
+        }
+    }
+
+    /// Restrict locally-taken samples to metrics whose name starts
+    /// with `prefix`.
+    pub fn with_filter(mut self, prefix: &str) -> TimeSeries {
+        self.filter = Some(prefix.to_string());
+        self
+    }
+
+    /// Sample the process-global registry now (per `clock`) and append
+    /// the delta-form result to the ring.
+    pub fn sample(&mut self, clock: &dyn Clock) -> &Sample {
+        let cumulative = cumulative_sample(&self.node, clock.now_us(), self.filter.as_deref());
+        self.push_cumulative(cumulative)
+    }
+
+    /// Fold a cumulative sample (local or from the wire) into the
+    /// ring: counters become deltas against this node's previous
+    /// totals, quiet counters are dropped, and the ring assigns its
+    /// own `seq`.
+    pub fn push_cumulative(&mut self, mut s: Sample) -> &Sample {
+        let prev = self.prev.entry(s.node.clone()).or_default();
+        let mut deltas = BTreeMap::new();
+        for (name, total) in &s.counters {
+            let d = total.saturating_sub(prev.get(name).copied().unwrap_or(0));
+            if d > 0 {
+                deltas.insert(name.clone(), d);
+            }
+        }
+        *prev = std::mem::take(&mut s.counters);
+        s.counters = deltas;
+        self.push(s)
+    }
+
+    /// Append an already-delta-form sample (ring form) verbatim,
+    /// except that the ring assigns `seq`. Evicts and counts a drop
+    /// when full.
+    pub fn push(&mut self, mut s: Sample) -> &Sample {
+        if self.samples.len() == self.cap {
+            self.samples.pop_front();
+            self.dropped += 1;
+        }
+        s.seq = self.seq;
+        self.seq += 1;
+        self.samples.push_back(s);
+        self.samples.back().expect("just pushed")
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Samples in ring order (oldest first).
+    pub fn samples(&self) -> impl Iterator<Item = &Sample> {
+        self.samples.iter()
+    }
+
+    pub fn latest(&self) -> Option<&Sample> {
+        self.samples.back()
+    }
+
+    /// Summed counter deltas over the trailing `window` samples.
+    pub fn window_counter(&self, name: &str, window: usize) -> u64 {
+        self.samples
+            .iter()
+            .rev()
+            .take(window)
+            .map(|s| s.counters.get(name).copied().unwrap_or(0))
+            .sum()
+    }
+
+    /// Histogram activity over the trailing `window` samples: the
+    /// snapshot delta between the window's edge samples (cumulative
+    /// snapshots make this exact). `None` when the metric never
+    /// appeared.
+    pub fn window_hist(&self, name: &str, window: usize) -> Option<HistSnapshot> {
+        let latest = self.samples.back()?.hists.get(name)?;
+        let n = self.samples.len();
+        let baseline = n
+            .checked_sub(window + 1)
+            .and_then(|i| self.samples[i].hists.get(name));
+        match baseline {
+            Some(b) => Some(latest.delta(b)),
+            None => Some(latest.clone()),
+        }
+    }
+
+    /// Append the whole ring plus a schema footer to `path` as JSONL.
+    pub fn export(&self, path: &Path) -> Result<()> {
+        let mut f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open time-series log {}", path.display()))?;
+        for s in &self.samples {
+            writeln!(f, "{}", s.to_json().render())?;
+        }
+        writeln!(f, "{}", footer_line(self.samples.len() as u64, self.dropped))?;
+        f.flush()?;
+        Ok(())
+    }
+}
+
+/// The rendered footer line for `samples`/`dropped` accounting.
+pub fn footer_line(samples: u64, dropped: u64) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("footer".to_string(), Json::Str("timeseries".to_string()));
+    m.insert("samples".to_string(), Json::Num(samples as f64));
+    m.insert("dropped".to_string(), Json::Num(dropped as f64));
+    m.insert("schema".to_string(), Json::Num(TS_SCHEMA as f64));
+    Json::Obj(m).render()
+}
+
+/// Parse a time-series log: samples in file order plus summed footer
+/// accounting. Fails on malformed lines and on samples claimed by no
+/// footer only if the schema is newer than this build understands.
+pub fn load(path: &Path) -> Result<(Vec<Sample>, TsFooter)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read time-series log {}", path.display()))?;
+    parse(&text)
+}
+
+/// [`load`] for in-memory text (tests, perfgate reductions).
+pub fn parse(text: &str) -> Result<(Vec<Sample>, TsFooter)> {
+    let mut samples = Vec::new();
+    let mut footer = TsFooter::default();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).with_context(|| format!("time-series line {}", i + 1))?;
+        if j.get("footer").and_then(Json::as_str) == Some("timeseries") {
+            let num = |k: &str| j.get(k).and_then(Json::as_u64).unwrap_or(0);
+            let schema = num("schema");
+            if schema > TS_SCHEMA {
+                return Err(anyhow!(
+                    "time-series schema {schema} is newer than supported {TS_SCHEMA}"
+                ));
+            }
+            footer.samples += num("samples");
+            footer.dropped += num("dropped");
+            footer.schema = footer.schema.max(schema);
+            continue;
+        }
+        samples.push(Sample::from_json(&j).with_context(|| format!("time-series line {}", i + 1))?);
+    }
+    Ok((samples, footer))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics;
+
+    /// Core satellite property: the same registry evolution observed
+    /// through the same manual clock yields byte-identical samples,
+    /// whichever TimeSeries instance watches it.
+    #[test]
+    fn manual_clock_sampling_is_deterministic() {
+        let prefix = "pallas_test_ts_det_";
+        let c = metrics::counter("pallas_test_ts_det_jobs_total");
+        let g = metrics::gauge("pallas_test_ts_det_depth");
+        let h = metrics::histogram("pallas_test_ts_det_lat_us");
+        let clock = ManualClock::new(1_000);
+        let mut a = TimeSeries::new("n0", 16).with_filter(prefix);
+        let mut b = TimeSeries::new("n0", 16).with_filter(prefix);
+
+        for step in 0..4u64 {
+            c.add(step + 1);
+            g.set(10 * step);
+            h.record(100 * (step + 1));
+            clock.advance(250_000);
+            a.sample(&clock);
+            b.sample(&clock);
+        }
+
+        let render = |ts: &TimeSeries| {
+            ts.samples().map(|s| s.to_json().render()).collect::<Vec<_>>().join("\n")
+        };
+        assert_eq!(render(&a), render(&b));
+        // Counters arrive as the per-step deltas, not running totals.
+        let deltas: Vec<u64> = a
+            .samples()
+            .map(|s| s.counters.get("pallas_test_ts_det_jobs_total").copied().unwrap_or(0))
+            .collect();
+        assert_eq!(deltas, vec![1, 2, 3, 4]);
+        // Timestamps come from the injected clock alone.
+        let ts: Vec<u64> = a.samples().map(|s| s.ts_us).collect();
+        assert_eq!(ts, vec![251_000, 501_000, 751_000, 1_001_000]);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let clock = ManualClock::new(0);
+        let mut ts = TimeSeries::new("n0", 3).with_filter("pallas_test_ts_ring_");
+        let c = metrics::counter("pallas_test_ts_ring_total");
+        for _ in 0..5 {
+            c.inc();
+            clock.advance(1_000);
+            ts.sample(&clock);
+        }
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts.dropped(), 2);
+        let seqs: Vec<u64> = ts.samples().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4], "oldest evicted first");
+    }
+
+    #[test]
+    fn export_load_round_trips_with_footer() {
+        let dir = std::env::temp_dir().join(format!("pallas_ts_rt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ts.jsonl");
+        let _ = std::fs::remove_file(&path);
+
+        let clock = ManualClock::new(5);
+        let mut ts = TimeSeries::new("serve", 8).with_filter("pallas_test_ts_rt_");
+        let h = metrics::histogram("pallas_test_ts_rt_us");
+        h.record(300);
+        ts.sample(&clock);
+        clock.advance(100);
+        h.record(900);
+        ts.sample(&clock);
+        ts.export(&path).unwrap();
+        // A second export segment appends; load sums the footers.
+        ts.export(&path).unwrap();
+
+        let (samples, footer) = load(&path).unwrap();
+        assert_eq!(samples.len(), 4);
+        assert_eq!(footer, TsFooter { samples: 4, dropped: 0, schema: TS_SCHEMA });
+        assert_eq!(samples[0], *ts.samples().next().unwrap());
+        assert_eq!(samples[1].hists["pallas_test_ts_rt_us"].count, 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn push_cumulative_keeps_per_node_delta_state() {
+        let mut ts = TimeSeries::new("monitor", 8);
+        let mk = |node: &str, total: u64| Sample {
+            node: node.to_string(),
+            seq: 0,
+            ts_us: total,
+            counters: [("x_total".to_string(), total)].into_iter().collect(),
+            gauges: BTreeMap::new(),
+            hists: BTreeMap::new(),
+        };
+        ts.push_cumulative(mk("a", 10));
+        ts.push_cumulative(mk("b", 100));
+        ts.push_cumulative(mk("a", 25));
+        ts.push_cumulative(mk("b", 100));
+        let d: Vec<Option<u64>> =
+            ts.samples().map(|s| s.counters.get("x_total").copied()).collect();
+        assert_eq!(d, vec![Some(10), Some(100), Some(15), None]);
+    }
+
+    #[test]
+    fn window_helpers_cover_edges() {
+        let mut ts = TimeSeries::new("n", 8);
+        assert_eq!(ts.window_counter("c", 3), 0);
+        assert!(ts.window_hist("h", 3).is_none());
+
+        let hist_at = |vals: &[u64]| {
+            let h = crate::obs::Histogram::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h.snapshot()
+        };
+        let mk = |c: u64, hist: HistSnapshot| Sample {
+            node: "n".to_string(),
+            seq: 0,
+            ts_us: 0,
+            counters: [("c".to_string(), c)].into_iter().collect(),
+            gauges: BTreeMap::new(),
+            hists: [("h".to_string(), hist)].into_iter().collect(),
+        };
+        ts.push(mk(1, hist_at(&[100])));
+        ts.push(mk(2, hist_at(&[100, 200])));
+        ts.push(mk(4, hist_at(&[100, 200, 5000])));
+        assert_eq!(ts.window_counter("c", 2), 6);
+        assert_eq!(ts.window_counter("c", 10), 7, "window larger than ring");
+        // Trailing-2 window: activity after the first sample.
+        let w = ts.window_hist("h", 2).unwrap();
+        assert_eq!(w.count, 2);
+        assert_eq!(w.count_above(1000), 1);
+        // Window covering everything: the full cumulative snapshot.
+        let all = ts.window_hist("h", 10).unwrap();
+        assert_eq!(all.count, 3);
+    }
+}

@@ -1,27 +1,50 @@
-//! Closed-loop load generator: N client threads, each holding one TCP
-//! connection and issuing one request at a time (send, wait for the
-//! response, repeat) over the synthetic-digits workload with a
-//! round-robin QoS-tier rotation. Closed-loop clients measure the
-//! latency a real caller would see — including micro-batching delay —
-//! and requests/sec at a fixed concurrency, the serve bench's headline
-//! number.
+//! Load generator with two loop disciplines:
+//!
+//! * **Closed-loop** (default): N client threads, each holding one TCP
+//!   connection and issuing one request at a time (send, wait for the
+//!   response, repeat) over the synthetic-digits workload with a
+//!   round-robin QoS-tier rotation. Closed-loop clients measure the
+//!   latency a real caller would see — including micro-batching delay —
+//!   and requests/sec at a fixed concurrency, the serve bench's
+//!   headline number.
+//! * **Open-loop** (`--rate RPS`): each client paces request `k` to an
+//!   *intended* send time `start + k * interval` regardless of how the
+//!   server is doing, and latency is measured **from the intended send
+//!   time**, not the actual one. This avoids coordinated omission: a
+//!   closed-loop client that stalls (or a sender that falls behind)
+//!   silently stops sampling exactly when the server is slowest, so a
+//!   server-side pause shows up in at most one closed-loop sample —
+//!   the open-loop numbers charge the whole queue of delayed requests
+//!   for it. `--spike-after K --spike-ms M` injects a sender stall for
+//!   exactly this demonstration: closed-loop latency barely moves,
+//!   open-loop p99 eats the full stall.
 //!
 //! Latency aggregation uses fixed-size log2-bucketed histograms
 //! ([`obs::hist`](crate::obs::hist)) — per-client histograms merge
 //! exactly into global and per-tier rollups, so memory stays bounded
-//! no matter how many requests a run issues. With `loadgen --trace`
-//! each client runs under a `loadgen.client` span whose
-//! `loadgen.request` children time individual round trips.
+//! no matter how many requests a run issues. Every outcome is also
+//! mirrored into the process-wide registry
+//! (`pallas_loadgen_{requests_total,request_errors_total,latency_us}`
+//! labelled by tier), which is what the `--slo` sampler and any
+//! `monitor` watching this process judge. With `loadgen --trace` each
+//! client runs under a `loadgen.client` span; closed-loop round trips
+//! additionally get `loadgen.request` child spans (open-loop readers
+//! decouple send from receive, so per-request spans would have no
+//! single thread to live on — the client span plus the registry mirror
+//! carry the signal instead).
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::nn::synthetic_digits;
-use crate::obs::{Histogram, Obs};
+use crate::obs::timeseries::{MonotonicClock, TimeSeries};
+use crate::obs::{metrics, Histogram, Obs, SloEvaluator, SloSpec};
 use crate::util::Json;
 
 use super::protocol::{self, ParsedResponse};
@@ -30,7 +53,7 @@ use super::protocol::{self, ParsedResponse};
 pub struct LoadgenConfig {
     /// Server address, e.g. `127.0.0.1:7878`.
     pub addr: String,
-    /// Concurrent closed-loop clients.
+    /// Concurrent clients.
     pub clients: usize,
     /// Requests each client issues.
     pub requests_per_client: usize,
@@ -39,6 +62,21 @@ pub struct LoadgenConfig {
     pub tiers: Vec<String>,
     /// Seed for the image workload.
     pub seed: u64,
+    /// `Some(rps)` switches to open-loop mode: the target *total*
+    /// arrival rate, split evenly across clients, with latency charged
+    /// from intended send times (no coordinated omission).
+    pub rate: Option<f64>,
+    /// Stall the sender for [`spike_ms`](Self::spike_ms) just before
+    /// each client's request with this index — the injected incident
+    /// the SLO watcher should catch.
+    pub spike_after: Option<usize>,
+    /// Injected stall length, milliseconds.
+    pub spike_ms: u64,
+    /// Judge the run's own registry mirror against these targets while
+    /// it runs, counting breach entries into the stats.
+    pub slo: Option<SloSpec>,
+    /// SLO sampling period, milliseconds.
+    pub sample_ms: u64,
     /// Tracing handle (`loadgen --trace`); [`Obs::off`] runs untraced.
     pub obs: Obs,
 }
@@ -51,13 +89,18 @@ impl Default for LoadgenConfig {
             requests_per_client: 200,
             tiers: vec!["gold".to_string(), "silver".to_string(), "bronze".to_string()],
             seed: 7,
+            rate: None,
+            spike_after: None,
+            spike_ms: 0,
+            slo: None,
+            sample_ms: 200,
             obs: Obs::off(),
         }
     }
 }
 
-/// Aggregates for one QoS tier: a closed-loop client answers for the
-/// tier it asked, so per-tier rollups need no server cooperation.
+/// Aggregates for one QoS tier: a client answers for the tier it
+/// asked, so per-tier rollups need no server cooperation.
 #[derive(Debug, Clone, Default)]
 pub struct TierLoadStats {
     pub ok: usize,
@@ -78,6 +121,9 @@ pub struct LoadgenStats {
     pub p50_us: u64,
     pub p99_us: u64,
     pub max_us: u64,
+    /// SLO breach *entries* observed by the `--slo` sampler (0 when no
+    /// spec was given).
+    pub breaches: usize,
     /// Per-tier rollups, sorted by tier name.
     pub tiers: BTreeMap<String, TierLoadStats>,
 }
@@ -97,6 +143,9 @@ impl LoadgenStats {
                 t.ok, t.errors, t.p50_us, t.p99_us, t.max_us
             );
         }
+        if self.breaches > 0 {
+            println!("loadgen: {} SLO breach(es) entered during the run", self.breaches);
+        }
     }
 }
 
@@ -108,26 +157,90 @@ struct ClientStats {
     tiers: BTreeMap<String, (usize, usize, Histogram)>,
 }
 
-fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientStats> {
-    let span = cfg.obs.span("loadgen.client", &[("client", Json::Num(client as f64))]);
-    let obs = cfg.obs.child_of(&span);
-    let stream = TcpStream::connect(&cfg.addr)
-        .with_context(|| format!("client {client}: connecting {}", cfg.addr))?;
+impl ClientStats {
+    fn new() -> ClientStats {
+        ClientStats { ok: 0, errors: 0, lat: Histogram::new(), tiers: BTreeMap::new() }
+    }
+}
+
+/// Cached registry handles for one tier's mirror metrics — the hot
+/// path stays a few relaxed atomic ops per response.
+struct TierMirror {
+    requests: metrics::Counter,
+    errors: metrics::Counter,
+    lat: Arc<Histogram>,
+}
+
+fn tier_mirrors(tiers: &[String]) -> BTreeMap<String, TierMirror> {
+    tiers
+        .iter()
+        .map(|t| {
+            (
+                t.clone(),
+                TierMirror {
+                    requests: metrics::counter(&format!(
+                        "pallas_loadgen_requests_total{{tier=\"{t}\"}}"
+                    )),
+                    errors: metrics::counter(&format!(
+                        "pallas_loadgen_request_errors_total{{tier=\"{t}\"}}"
+                    )),
+                    lat: metrics::histogram(&format!(
+                        "pallas_loadgen_latency_us{{tier=\"{t}\"}}"
+                    )),
+                },
+            )
+        })
+        .collect()
+}
+
+/// Fold one response into the client-local stats and the registry
+/// mirror (both loop modes go through here).
+fn record_outcome(
+    stats: &mut ClientStats,
+    mirrors: &BTreeMap<String, TierMirror>,
+    tier: &str,
+    ok: bool,
+    us: u64,
+) {
+    stats.lat.record(us);
+    let per_tier = stats.tiers.entry(tier.to_string()).or_default();
+    per_tier.2.record(us);
+    if let Some(m) = mirrors.get(tier) {
+        m.requests.inc();
+        m.lat.record(us);
+        if !ok {
+            m.errors.inc();
+        }
+    }
+    if ok {
+        stats.ok += 1;
+        per_tier.0 += 1;
+    } else {
+        stats.errors += 1;
+        per_tier.1 += 1;
+    }
+}
+
+fn connect(addr: &str, client: usize) -> Result<(TcpStream, BufReader<TcpStream>)> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("client {client}: connecting {addr}"))?;
     let _ = stream.set_nodelay(true);
     stream
         .set_read_timeout(Some(Duration::from_secs(60)))
         .context("setting read timeout")?;
-    let mut writer = stream.try_clone().context("cloning stream")?;
-    let mut reader = BufReader::new(stream);
+    let writer = stream.try_clone().context("cloning stream")?;
+    Ok((writer, BufReader::new(stream)))
+}
+
+fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientStats> {
+    let span = cfg.obs.span("loadgen.client", &[("client", Json::Num(client as f64))]);
+    let obs = cfg.obs.child_of(&span);
+    let (mut writer, mut reader) = connect(&cfg.addr, client)?;
     // Per-client image pool; different seeds keep clients from sending
     // identical byte streams.
     let pool = synthetic_digits(64, cfg.seed.wrapping_add(client as u64));
-    let mut stats = ClientStats {
-        ok: 0,
-        errors: 0,
-        lat: Histogram::new(),
-        tiers: BTreeMap::new(),
-    };
+    let mirrors = tier_mirrors(&cfg.tiers);
+    let mut stats = ClientStats::new();
     let mut line = String::new();
     for k in 0..cfg.requests_per_client {
         let tier = &cfg.tiers[(client + k) % cfg.tiers.len()];
@@ -142,6 +255,12 @@ fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientStats> {
         } else {
             None
         };
+        if cfg.spike_after == Some(k) && cfg.spike_ms > 0 {
+            // Closed-loop spike: the stall happens *before* the clock
+            // starts, so the measurement omits it — the coordinated
+            // omission the open-loop mode exists to avoid.
+            std::thread::sleep(Duration::from_millis(cfg.spike_ms));
+        }
         let start = Instant::now();
         writer.write_all(req.as_bytes()).context("sending request")?;
         writer.write_all(b"\n").context("sending request")?;
@@ -160,19 +279,87 @@ fn run_client(cfg: &LoadgenConfig, client: usize) -> Result<ClientStats> {
             s.field("status", Json::Str(if resp.ok { "ok" } else { "error" }.to_string()));
         }
         drop(req_span);
-        stats.lat.record(us);
-        let per_tier = stats.tiers.entry(tier.clone()).or_default();
-        per_tier.2.record(us);
-        if resp.ok {
-            stats.ok += 1;
-            per_tier.0 += 1;
-        } else {
-            stats.errors += 1;
-            per_tier.1 += 1;
-        }
+        record_outcome(&mut stats, &mirrors, tier, resp.ok, us);
     }
     span.finish();
     Ok(stats)
+}
+
+/// Open-loop client: a sender thread paces requests to their intended
+/// times while this thread drains responses, charging each one from
+/// its *intended* send time. The request id encodes `k`
+/// (`(client << 32) | k`), so the reader recovers the intended time
+/// and tier for any response without shared mutable state — responses
+/// may arrive out of order (micro-batching reorders across tiers) and
+/// still charge the right schedule slot.
+fn run_client_open(cfg: &LoadgenConfig, client: usize, rate: f64) -> Result<ClientStats> {
+    let span = cfg.obs.span(
+        "loadgen.client",
+        &[
+            ("client", Json::Num(client as f64)),
+            ("mode", Json::Str("open".to_string())),
+        ],
+    );
+    let (mut writer, mut reader) = connect(&cfg.addr, client)?;
+    let pool = synthetic_digits(64, cfg.seed.wrapping_add(client as u64));
+    // The total target rate splits evenly: each of C clients sends
+    // every C/rate seconds.
+    let interval_s = cfg.clients as f64 / rate;
+    let n = cfg.requests_per_client;
+    let tiers = cfg.tiers.clone();
+    let start = Instant::now();
+    let read_side = std::thread::spawn(move || -> Result<ClientStats> {
+        let mirrors = tier_mirrors(&tiers);
+        let mut stats = ClientStats::new();
+        let mut line = String::new();
+        for _ in 0..n {
+            line.clear();
+            let got = reader.read_line(&mut line).context("reading response")?;
+            if got == 0 {
+                bail!("client {client}: server closed the connection");
+            }
+            let resp: ParsedResponse = protocol::parse_response(line.trim())
+                .map_err(|e| anyhow::anyhow!("client {client}: {e}"))?;
+            let k = (resp.id & 0xffff_ffff) as usize;
+            let intended = start + Duration::from_secs_f64(interval_s * k as f64);
+            let us = Instant::now().saturating_duration_since(intended).as_micros() as u64;
+            let tier = &tiers[(client + k) % tiers.len()];
+            record_outcome(&mut stats, &mirrors, tier, resp.ok, us);
+        }
+        Ok(stats)
+    });
+    let mut send_err: Option<anyhow::Error> = None;
+    for k in 0..n {
+        let intended = start + Duration::from_secs_f64(interval_s * k as f64);
+        if let Some(wait) = intended.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        if cfg.spike_after == Some(k) && cfg.spike_ms > 0 {
+            // Open-loop spike: the schedule does not move, so every
+            // request delayed behind this stall is charged for it.
+            std::thread::sleep(Duration::from_millis(cfg.spike_ms));
+        }
+        let tier = &cfg.tiers[(client + k) % cfg.tiers.len()];
+        let img = &pool[k % pool.len()];
+        let id = ((client as u64) << 32) | k as u64;
+        let req = protocol::render_infer_request(id, tier, &img.pixels);
+        if let Err(e) = writer
+            .write_all(req.as_bytes())
+            .and_then(|()| writer.write_all(b"\n"))
+        {
+            send_err = Some(anyhow::Error::from(e).context("sending request"));
+            break;
+        }
+    }
+    let stats = read_side
+        .join()
+        .map_err(|_| anyhow::anyhow!("client {client}: reader panicked"));
+    span.finish();
+    // A send failure explains the reader's failure; report it first.
+    if let Some(e) = send_err {
+        return Err(e);
+    }
+    stats?
 }
 
 /// Quantile rollup of a latency histogram into the stats shape
@@ -182,16 +369,57 @@ fn rollup(h: &Histogram) -> (u64, u64, u64) {
     (h.quantile(0.50), h.quantile(0.99), h.max())
 }
 
-/// Run the closed-loop workload; blocks until every client finishes.
+/// While clients run, sample the registry's `{prefix}_*` mirror into a
+/// private [`TimeSeries`] and judge it against the spec; returns the
+/// count of breach entries when stopped.
+fn slo_watch(
+    spec: SloSpec,
+    sample_ms: u64,
+    obs: Obs,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<usize> {
+    std::thread::spawn(move || {
+        let clock = MonotonicClock::default();
+        let mut ts = TimeSeries::new("loadgen", 4096).with_filter(&spec.prefix);
+        let mut ev = SloEvaluator::new(spec);
+        let period = Duration::from_millis(sample_ms.max(1));
+        let mut breaches = 0usize;
+        loop {
+            // Check-then-sample so the pass after `stop` still judges
+            // the final state of the run.
+            let stopping = stop.load(Ordering::SeqCst);
+            ts.sample(&clock);
+            breaches += ev.evaluate(&ts, &obs).len();
+            if stopping {
+                return breaches;
+            }
+            std::thread::sleep(period);
+        }
+    })
+}
+
+/// Run the workload (closed-loop, or open-loop when `rate` is set);
+/// blocks until every client finishes.
 pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenStats> {
     if cfg.clients == 0 || cfg.requests_per_client == 0 || cfg.tiers.is_empty() {
         bail!("loadgen needs at least one client, one request and one tier");
     }
+    if cfg.rate.is_some_and(|r| !(r > 0.0)) {
+        bail!("loadgen --rate must be > 0");
+    }
+    let slo = cfg.slo.clone().map(|spec| {
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = slo_watch(spec, cfg.sample_ms, cfg.obs.clone(), stop.clone());
+        (stop, handle)
+    });
     let start = Instant::now();
     let handles: Vec<_> = (0..cfg.clients)
         .map(|c| {
             let cfg = cfg.clone();
-            std::thread::spawn(move || run_client(&cfg, c))
+            std::thread::spawn(move || match cfg.rate {
+                Some(rate) => run_client_open(&cfg, c, rate),
+                None => run_client(&cfg, c),
+            })
         })
         .collect();
     let mut ok = 0usize;
@@ -213,6 +441,13 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenStats> {
         }
     }
     let elapsed = start.elapsed().as_secs_f64();
+    let breaches = match slo {
+        Some((stop, handle)) => {
+            stop.store(true, Ordering::SeqCst);
+            handle.join().unwrap_or(0)
+        }
+        None => 0,
+    };
     if let Err(e) = cfg.obs.flush() {
         cfg.obs.warn("loadgen", &format!("trace flush failed: {e:#}"), &[]);
     }
@@ -233,6 +468,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenStats> {
         p50_us,
         p99_us,
         max_us,
+        breaches,
         tiers,
     })
 }

@@ -21,10 +21,12 @@
 //!   (`serve --scalar-path`). See DESIGN.md §12.
 //! - [`batcher`] — bounded sharded queue with micro-batching (flush at
 //!   `--batch` requests or a deadline).
-//! - [`server`] — accept loop, worker pool, per-tier metrics, graceful
-//!   shutdown.
-//! - [`loadgen`] — closed-loop load generator (the serve bench's
-//!   client half).
+//! - [`server`] — accept loop, worker pool, per-tier metrics, `watch`
+//!   telemetry subscriptions, graceful shutdown.
+//! - [`loadgen`] — load generator (the serve bench's client half):
+//!   closed-loop by default, open-loop with `--rate` (latency charged
+//!   from intended send times, avoiding coordinated omission), with
+//!   optional in-run SLO judging.
 //!
 //! See DESIGN.md §10 for the architecture and the determinism
 //! argument.

@@ -13,8 +13,10 @@
 //!                                                               (incl. per-tier
 //!                                                               "tier.NAME.path":
 //!                                                               "compiled"/"scalar")
-//! {"type":"reload","id":9}                                      re-resolve tiers from the store
-//! {"type":"shutdown","id":10}                                   graceful shutdown
+//! {"type":"watch","id":9,"sample_ms":500,"count":10}            subscribe to pushed
+//!                                                               registry samples
+//! {"type":"reload","id":10}                                     re-resolve tiers from the store
+//! {"type":"shutdown","id":11}                                   graceful shutdown
 //! ```
 //!
 //! An `infer` request may also name a `"bench"`; the server answers
@@ -54,6 +56,16 @@ pub enum Request {
     /// Process-wide metrics-registry snapshot (`obs::metrics`), as
     /// opposed to `stats`, which reports this server's own counters.
     Metrics { id: u64 },
+    /// Subscribe to pushed registry samples: the server streams one
+    /// `{"id":..,"ok":true,"sample":{..}}` line per period onto this
+    /// connection (cumulative counters — the subscriber deltas them).
+    /// `sample_ms` overrides the server's `--sample-ms`; `count` bounds
+    /// the stream, else it runs until disconnect or shutdown.
+    Watch {
+        id: u64,
+        sample_ms: Option<u64>,
+        count: Option<u64>,
+    },
     Reload { id: u64 },
     Shutdown { id: u64 },
 }
@@ -77,6 +89,11 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
     match ty {
         "stats" => Ok(Request::Stats { id }),
         "metrics" => Ok(Request::Metrics { id }),
+        "watch" => Ok(Request::Watch {
+            id,
+            sample_ms: j.get("sample_ms").and_then(Json::as_u64),
+            count: j.get("count").and_then(Json::as_u64),
+        }),
         "reload" => Ok(Request::Reload { id }),
         "shutdown" => Ok(Request::Shutdown { id }),
         "infer" => {
@@ -129,6 +146,9 @@ pub enum Response {
     Stats { id: u64, stats: Json },
     /// The process-wide metrics-registry snapshot.
     Metrics { id: u64, metrics: Json },
+    /// One pushed time-series sample on a `watch` subscription
+    /// (`obs::timeseries::Sample`, cumulative counters).
+    Watch { id: u64, sample: Json },
     /// Acknowledgement for `reload` / `shutdown`.
     Ack { id: u64, info: String },
     Error { id: u64, error: String },
@@ -158,6 +178,11 @@ impl Response {
                 m.insert("id".to_string(), Json::Num(*id as f64));
                 m.insert("ok".to_string(), Json::Bool(true));
                 m.insert("metrics".to_string(), metrics.clone());
+            }
+            Response::Watch { id, sample } => {
+                m.insert("id".to_string(), Json::Num(*id as f64));
+                m.insert("ok".to_string(), Json::Bool(true));
+                m.insert("sample".to_string(), sample.clone());
             }
             Response::Ack { id, info } => {
                 m.insert("id".to_string(), Json::Num(*id as f64));
@@ -192,6 +217,21 @@ pub fn render_control_request(ty: &str, id: u64) -> String {
     let mut m = BTreeMap::new();
     m.insert("type".to_string(), Json::Str(ty.to_string()));
     m.insert("id".to_string(), Json::Num(id as f64));
+    Json::Obj(m).render()
+}
+
+/// Render a `watch` subscription request line — the monitor's client
+/// half.
+pub fn render_watch_request(id: u64, sample_ms: Option<u64>, count: Option<u64>) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("type".to_string(), Json::Str("watch".to_string()));
+    m.insert("id".to_string(), Json::Num(id as f64));
+    if let Some(ms) = sample_ms {
+        m.insert("sample_ms".to_string(), Json::Num(ms as f64));
+    }
+    if let Some(n) = count {
+        m.insert("count".to_string(), Json::Num(n as f64));
+    }
     Json::Obj(m).render()
 }
 
@@ -260,6 +300,36 @@ mod tests {
             };
             assert_eq!(id, 9);
         }
+    }
+
+    #[test]
+    fn watch_requests_round_trip() {
+        let line = render_watch_request(11, Some(250), Some(4));
+        match parse_request(&line).unwrap() {
+            Request::Watch { id, sample_ms, count } => {
+                assert_eq!((id, sample_ms, count), (11, Some(250), Some(4)));
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        // Both knobs optional: server defaults apply, stream unbounded.
+        match parse_request(&render_watch_request(12, None, None)).unwrap() {
+            Request::Watch { id, sample_ms, count } => {
+                assert_eq!((id, sample_ms, count), (12, None, None));
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        // Pushed samples parse as ordinary ok-responses with a payload.
+        let push = Response::Watch {
+            id: 11,
+            sample: Json::parse("{\"counters\":{},\"node\":\"serve\"}").unwrap(),
+        };
+        let parsed = parse_response(&push.render()).unwrap();
+        assert!(parsed.ok);
+        assert_eq!(parsed.id, 11);
+        assert_eq!(
+            parsed.raw.get("sample").and_then(|s| s.get("node")).and_then(Json::as_str),
+            Some("serve")
+        );
     }
 
     #[test]

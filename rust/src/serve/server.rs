@@ -42,6 +42,14 @@
 //! Per-tier latency lives in fixed-size log2-bucketed histograms
 //! ([`obs::hist`](crate::obs::hist)) — bounded memory on arbitrarily
 //! long runs, with a registry mirror for metrics scrapes.
+//!
+//! Live telemetry (`watch`): a subscription spawns a sampler thread
+//! that pushes one cumulative registry sample per period through the
+//! connection's writer channel (`Response::Watch` lines interleaved
+//! with ordinary responses — clients match by `id`). Teardown rides
+//! the jsonl writer contract: when the subscriber disconnects the
+//! writer thread exits, the sampler's `send` fails, and the sampler
+//! stops — no leaked threads, no dead-socket spins. See DESIGN.md §14.
 
 use std::collections::BTreeMap;
 use std::io::BufReader;
@@ -58,6 +66,7 @@ use crate::bench_support::JsonReport;
 use crate::nn::digits::IMG;
 #[allow(unused_imports)] // CompiledMlp: doc link target
 use crate::nn::{synthetic_digits, CompiledMlp, QuantMlp};
+use crate::obs::timeseries::{self, Clock, MonotonicClock};
 use crate::obs::{metrics, Histogram, Obs, Span};
 use crate::util::jsonl::{self, LineRead};
 use crate::util::Json;
@@ -86,6 +95,9 @@ pub struct ServeConfig {
     pub batch_wait_ms: u64,
     /// Queued-request bound per worker shard (backpressure).
     pub queue_cap: usize,
+    /// Default period for `watch` subscriptions (`serve --sample-ms`);
+    /// a watch request may override it per subscription.
+    pub sample_ms: u64,
     /// Tracing handle (`serve --trace`); [`Obs::off`] serves untraced.
     pub obs: Obs,
 }
@@ -98,6 +110,7 @@ impl Default for ServeConfig {
             batch: 8,
             batch_wait_ms: 2,
             queue_cap: 1024,
+            sample_ms: 1000,
             obs: Obs::off(),
         }
     }
@@ -186,6 +199,17 @@ impl Metrics {
         metrics::counter("pallas_serve_request_errors_total").add(n as u64);
     }
 
+    /// An error attributable to a specific tier also bumps the
+    /// per-tier labelled counter, so SLO error-rate targets can judge
+    /// tiers independently (DESIGN.md §14).
+    fn note_tier_errors(&self, tier: &str, n: usize) {
+        self.note_errors(n);
+        metrics::counter(&format!(
+            "pallas_serve_request_errors_total{{tier=\"{tier}\"}}"
+        ))
+        .add(n as u64);
+    }
+
     /// (requests, p50_us, p99_us) per tier, sorted by tier name.
     fn tier_rows(&self) -> Vec<(String, u64, u64, u64)> {
         let tiers = self.tiers.lock().unwrap();
@@ -233,6 +257,7 @@ struct Shared {
     metrics: Metrics,
     shutting_down: AtomicBool,
     addr: SocketAddr,
+    sample_ms: u64,
     obs: Obs,
 }
 
@@ -276,6 +301,7 @@ impl Server {
             metrics: Metrics::default(),
             shutting_down: AtomicBool::new(false),
             addr,
+            sample_ms: cfg.sample_ms.max(1),
             obs: cfg.obs.clone(),
         });
         let workers = (0..workers_n)
@@ -409,10 +435,31 @@ fn handle_request(shared: &Arc<Shared>, line: &str, tx: &Sender<String>) {
             send(tx, Response::Ack { id, info: "shutting down".to_string() });
             shared.initiate_shutdown();
         }
+        Request::Watch { id, sample_ms, count } => {
+            // Subscription: a sampler thread pushes registry samples
+            // through the connection's writer channel until the
+            // subscriber disconnects (the writer thread dies, so
+            // `tx.send` starts failing — the jsonl teardown contract),
+            // the server shuts down, or `count` samples were pushed.
+            let period =
+                Duration::from_millis(sample_ms.unwrap_or(shared.sample_ms).max(1));
+            let sub_tx = tx.clone();
+            let sh = shared.clone();
+            std::thread::spawn(move || watch_loop(sh, sub_tx, id, period, count));
+        }
         Request::Infer { id, tier, bench, pixels } => {
+            // Errors are attributed to the tier's labelled counter only
+            // when the tier actually exists — labelling by arbitrary
+            // client-supplied names would let a hostile client grow the
+            // registry without bound.
+            let known_tier = shared.registry.resolve(&tier).is_some();
             if let Some(b) = &bench {
                 if b != shared.registry.bench() {
-                    shared.metrics.note_errors(1);
+                    if known_tier {
+                        shared.metrics.note_tier_errors(&tier, 1);
+                    } else {
+                        shared.metrics.note_errors(1);
+                    }
                     send(
                         tx,
                         Response::Error {
@@ -427,7 +474,11 @@ fn handle_request(shared: &Arc<Shared>, line: &str, tx: &Sender<String>) {
                 }
             }
             if pixels.len() != IMG * IMG {
-                shared.metrics.note_errors(1);
+                if known_tier {
+                    shared.metrics.note_tier_errors(&tier, 1);
+                } else {
+                    shared.metrics.note_errors(1);
+                }
                 send(
                     tx,
                     Response::Error {
@@ -441,7 +492,7 @@ fn handle_request(shared: &Arc<Shared>, line: &str, tx: &Sender<String>) {
                 );
                 return;
             }
-            if shared.registry.resolve(&tier).is_none() {
+            if !known_tier {
                 shared.metrics.note_errors(1);
                 send(
                     tx,
@@ -512,6 +563,39 @@ fn handle_request(shared: &Arc<Shared>, line: &str, tx: &Sender<String>) {
     }
 }
 
+/// The `watch` sampler: one thread per subscription, pushing one
+/// cumulative registry sample per period as a `Response::Watch` line.
+/// Cumulative (not delta) so a subscriber joining mid-run sees full
+/// totals immediately; the receiving side ([`TimeSeries::
+/// push_cumulative`](crate::obs::TimeSeries::push_cumulative)) turns
+/// consecutive pushes into window deltas. Observe-only by
+/// construction: it reads atomics the hot path was already bumping
+/// and never touches the registry, batcher or sockets directly.
+fn watch_loop(
+    shared: Arc<Shared>,
+    tx: Sender<String>,
+    id: u64,
+    period: Duration,
+    count: Option<u64>,
+) {
+    let clock = MonotonicClock::default();
+    let mut sent = 0u64;
+    loop {
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            break;
+        }
+        let sample = timeseries::cumulative_sample("serve", clock.now_us(), None);
+        if tx.send(Response::Watch { id, sample: sample.to_json() }.render()).is_err() {
+            break; // subscriber gone: the writer thread dropped `rx`.
+        }
+        sent += 1;
+        if count.is_some_and(|c| sent >= c) {
+            break;
+        }
+        std::thread::sleep(period);
+    }
+}
+
 fn worker_loop(shared: Arc<Shared>, shard: usize) {
     while let Some(mut batch) = shared.batcher.pop_batch(shard) {
         if batch.is_empty() {
@@ -527,8 +611,8 @@ fn worker_loop(shared: Arc<Shared>, shard: usize) {
             // a duplicate id, which beats a silent drop. Any spans the
             // panicking half left in place end when `batch` drops — the
             // trace stays balanced.
-            shared.metrics.note_errors(batch.len());
             for item in &mut batch {
+                shared.metrics.note_tier_errors(&item.tier, 1);
                 if let Some(s) = item.span.as_mut() {
                     s.field("status", Json::Str("panic".to_string()));
                 }
@@ -625,7 +709,7 @@ fn process_batch(shared: &Shared, batch: &mut [WorkItem]) {
         let labels = match labels {
             Ok(labels) => labels,
             Err(e) => {
-                shared.metrics.note_errors(idxs.len());
+                shared.metrics.note_tier_errors(tier, idxs.len());
                 for &i in &idxs {
                     let item = &mut batch[i];
                     let resp = Response::Error {

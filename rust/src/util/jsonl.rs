@@ -74,19 +74,32 @@ pub fn send_line<W: Write>(w: &mut W, line: &str) -> std::io::Result<()> {
 }
 
 /// Spawn the per-connection writer thread: drains `rx` onto `sink`
-/// until every `Sender` clone is gone (reader thread plus any in-flight
-/// work items), so concurrent producers never interleave bytes on a
-/// shared socket. A dead peer just ends the loop.
+/// until every `Sender` clone is gone (reader thread plus any
+/// in-flight work items or `watch` samplers), so concurrent producers
+/// never interleave bytes on a shared socket.
+///
+/// **Teardown contract.** When the peer dies (a write fails) or the
+/// sink panics, the thread exits and `rx` is dropped with it — from
+/// that moment every producer's `Sender::send` returns `Err`, which is
+/// how long-lived producers (the serve `watch` sampler in particular)
+/// learn the subscriber is gone and stop. Panics from the sink are
+/// contained here so `JoinHandle::join` on the connection path never
+/// sees one; nothing is drained after exit, because a silently
+/// draining receiver would keep producers alive forever.
 pub fn spawn_writer<W: Write + Send + 'static>(
     mut sink: W,
     rx: Receiver<String>,
 ) -> JoinHandle<()> {
     std::thread::spawn(move || {
-        while let Ok(line) = rx.recv() {
-            if send_line(&mut sink, &line).is_err() {
-                break;
+        // `rx` stays owned by this outer closure, so it is dropped (and
+        // producers start seeing send errors) even on a panic exit.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            while let Ok(line) = rx.recv() {
+                if send_line(&mut sink, &line).is_err() {
+                    break;
+                }
             }
-        }
+        }));
     })
 }
 
@@ -174,6 +187,59 @@ mod tests {
         drop(tx);
         h.join().unwrap();
         assert_eq!(&*shared.lock().unwrap(), b"one\ntwo\n");
+    }
+
+    /// The watch-teardown contract: a sink that dies mid-stream ends
+    /// the writer thread, and from then on every producer's `send`
+    /// fails — the signal long-lived samplers stop on.
+    #[test]
+    fn writer_death_propagates_to_producers() {
+        struct FailAfter(usize);
+        impl Write for FailAfter {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                if self.0 == 0 {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::BrokenPipe,
+                        "peer gone",
+                    ));
+                }
+                self.0 -= 1;
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let (tx, rx) = std::sync::mpsc::channel::<String>();
+        // Two writes per line (content + newline): allow exactly one line.
+        let h = spawn_writer(FailAfter(2), rx);
+        tx.send("ok".to_string()).unwrap();
+        tx.send("dies".to_string()).unwrap();
+        h.join().expect("writer thread exits cleanly, not by panic");
+        assert!(
+            tx.send("after death".to_string()).is_err(),
+            "rx dropped with the thread => producers see Err"
+        );
+    }
+
+    /// A panicking sink must not poison the connection path: join()
+    /// still returns Ok, and producers still get the Err signal.
+    #[test]
+    fn writer_panic_is_contained() {
+        struct PanicSink;
+        impl Write for PanicSink {
+            fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
+                panic!("sink exploded");
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let (tx, rx) = std::sync::mpsc::channel::<String>();
+        let h = spawn_writer(PanicSink, rx);
+        tx.send("boom".to_string()).unwrap();
+        h.join().expect("panic contained inside the writer thread");
+        assert!(tx.send("later".to_string()).is_err());
     }
 
     #[test]

@@ -146,7 +146,7 @@ impl RawClient {
     }
 
     fn take_lease(&mut self) -> (usize, Job) {
-        match self.exchange(&WorkerMsg::LeaseRequest) {
+        match self.exchange(&WorkerMsg::LeaseRequest { telemetry: None }) {
             Some(CoordMsg::Lease { job, bench, method, et, search, .. }) => (
                 job,
                 Job { bench: benchmark_by_name(&bench).unwrap(), method, et, search },

@@ -456,3 +456,84 @@ fn traced_serve_responses_match_untraced_baseline() {
 
     std::fs::remove_dir_all(&dir).unwrap();
 }
+
+/// The live-telemetry extension of the observe-only contract
+/// (DESIGN.md §14): a server with an active `watch` subscriber
+/// answers the exact same byte stream an unwatched one does — the
+/// sampler thread only ever *reads* the registry.
+#[test]
+fn watched_serve_responses_match_unwatched_baseline() {
+    use sxpat::serve::protocol::render_watch_request;
+
+    let start = || -> Server {
+        let registry = Registry::open(
+            "mult_i8",
+            parse_tiers("gold=0,silver=4").unwrap(),
+            None,
+            std::sync::Arc::new(serving_mlp()),
+            true,
+        )
+        .unwrap();
+        Server::start(
+            &ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                workers: 2,
+                batch: 4,
+                batch_wait_ms: 2,
+                queue_cap: 64,
+                sample_ms: 5,
+                ..Default::default()
+            },
+            registry,
+        )
+        .unwrap()
+    };
+    // Same strictly-sequential discipline as the traced test: one
+    // connection, one round trip at a time.
+    let drive = |server: &Server| -> Vec<String> {
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let pixels: Vec<u8> = (0..64).map(|i| (i * 3 % 16) as u8).collect();
+        let mut lines = Vec::new();
+        for k in 0..8u64 {
+            let tier = if k % 2 == 0 { "gold" } else { "silver" };
+            writer
+                .write_all(render_infer_request(k, tier, &pixels).as_bytes())
+                .unwrap();
+            writer.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0);
+            lines.push(line.trim().to_string());
+        }
+        lines
+    };
+
+    let baseline_server = start();
+    let base = drive(&baseline_server);
+    baseline_server.shutdown();
+    baseline_server.join();
+
+    let watched_server = start();
+    // A live watch subscription on its own connection, pushing every
+    // 5 ms for the whole workload.
+    let watcher = TcpStream::connect(watched_server.addr()).unwrap();
+    watcher.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut wtx = watcher.try_clone().unwrap();
+    wtx.write_all(render_watch_request(1, Some(5), None).as_bytes()).unwrap();
+    wtx.write_all(b"\n").unwrap();
+    let mut wrx = BufReader::new(watcher);
+    let mut first_push = String::new();
+    assert!(wrx.read_line(&mut first_push).unwrap() > 0, "stream started");
+
+    let watched = drive(&watched_server);
+    assert_eq!(
+        base, watched,
+        "an active watch subscription must not change a single response byte"
+    );
+    drop(wtx);
+    drop(wrx);
+    watched_server.shutdown();
+    watched_server.join();
+}

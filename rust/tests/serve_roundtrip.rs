@@ -285,6 +285,63 @@ fn malformed_traffic_gets_structured_errors_and_serving_survives() {
 }
 
 #[test]
+fn watch_streams_samples_and_survives_subscriber_disconnect() {
+    use sxpat::obs::timeseries::Sample;
+    use sxpat::serve::protocol::render_watch_request;
+
+    // No store: exact fallback on every tier, fast startup.
+    let server = start_server(None, "gold=0,silver=4", 2, 2);
+    let img = &synthetic_digits(1, 11)[0];
+
+    // A bounded subscription delivers exactly `count` samples, each a
+    // parseable cumulative registry sample, then the connection keeps
+    // answering ordinary requests (the sampler thread retired).
+    let mut c = Client::connect(server.addr());
+    let infer = c.roundtrip(&render_infer_request(1, "gold", &img.pixels));
+    assert!(infer.ok);
+    c.send(&render_watch_request(7, Some(10), Some(2)));
+    let mut last_requests = 0;
+    for _ in 0..2 {
+        let push = c.recv();
+        assert!(push.ok);
+        assert_eq!(push.id, 7);
+        let sample =
+            Sample::from_json(push.raw.get("sample").expect("sample payload")).unwrap();
+        assert_eq!(sample.node, "serve");
+        // Counters on the wire are cumulative: the infer above is
+        // visible, and successive pushes never go backwards.
+        let req = sample
+            .counters
+            .get("pallas_serve_requests_total{tier=\"gold\"}")
+            .copied()
+            .unwrap_or(0);
+        assert!(req >= 1, "cumulative sample missing the prior request");
+        assert!(req >= last_requests);
+        last_requests = req;
+    }
+    let stats = c.roundtrip(&render_control_request("stats", 8));
+    assert!(stats.ok, "connection serves normally after the stream ends");
+
+    // An *unbounded* subscriber that vanishes mid-stream must tear
+    // down silently: the writer thread dies on the broken socket, the
+    // sampler notices its channel is gone and exits, and the server
+    // keeps serving everyone else.
+    let mut doomed = Client::connect(server.addr());
+    doomed.send(&render_watch_request(9, Some(5), None));
+    let first = doomed.recv();
+    assert!(first.ok, "stream started");
+    drop(doomed); // disconnect with the subscription live
+
+    // Give the teardown a moment, then prove the server is healthy.
+    std::thread::sleep(Duration::from_millis(50));
+    let resp = c.roundtrip(&render_infer_request(10, "silver", &img.pixels));
+    assert!(resp.ok, "{:?}", resp.error);
+
+    server.shutdown();
+    server.join();
+}
+
+#[test]
 fn reload_serves_new_operator_without_dropping_in_flight_requests() {
     let dir = tmp_dir("reload");
     build_store(&dir, &[8]);
